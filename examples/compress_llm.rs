@@ -1,0 +1,55 @@
+//! Compress a trained model at a chosen ratio preset and measure the damage.
+//!
+//!     cargo run --release --example compress_llm -- [preset] [steps]
+//!
+//! Trains (or loads the cached) base model, compresses every linear layer
+//! group, packs the pocket file, and reports perplexity before/after plus
+//! the exact Eq. 14 storage accounting per group.
+
+use pocketllm::coordinator::{compress_model, PipelineOpts};
+use pocketllm::eval::perplexity;
+use pocketllm::report::ExpContext;
+use pocketllm::util::benchlib::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let preset = args.get(1).cloned().unwrap_or_else(|| "p8x".to_string());
+    let steps: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(200);
+
+    let ctx = ExpContext::new("tiny")?;
+    let ppl_base = perplexity(&ctx.rt, &ctx.base, &ctx.corpus, 4)?;
+    println!("base perplexity: {ppl_base:.3}");
+
+    let mut opts = PipelineOpts { preset: preset.clone(), ..Default::default() };
+    opts.job.train_steps = steps;
+    let res = compress_model(&ctx.rt, &ctx.base, &opts)?;
+
+    let mut t = Table::new(
+        &format!("per-group storage at {preset}"),
+        &["group", "avg_bits", "codebook", "indices", "decoder", "scales", "mse"],
+    );
+    for (g, m) in &res.report.per_group {
+        let rec = &res.pocket.groups[g];
+        let r = rec.ratio(&ctx.rt.manifest.meta[&rec.meta_cfg]);
+        t.row(vec![
+            g.clone(),
+            format!("{:.2}", r.avg_bits),
+            format!("{}b", r.codebook_bits / 8),
+            format!("{}b", r.index_bits / 8),
+            format!("{}b", r.decoder_bits / 8),
+            format!("{}b", r.scale_bits / 8),
+            format!("{:.2e}", m.mse_loss),
+        ]);
+    }
+    t.emit(None);
+
+    let ppl_comp = perplexity(&ctx.rt, &res.reconstructed, &ctx.corpus, 4)?;
+    println!(
+        "compressed: avg {:.2} bits ({:.1}x vs fp32), pocket file {} KiB",
+        res.report.avg_bits,
+        res.report.ratio_fp32,
+        res.pocket.file_bytes() / 1024
+    );
+    println!("perplexity: {ppl_base:.3} -> {ppl_comp:.3}");
+    Ok(())
+}

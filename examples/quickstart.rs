@@ -1,0 +1,56 @@
+//! Quickstart: compress one layer group of a (briefly trained) tiny LM with
+//! PocketLLM and inspect the result.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Walks the whole public API surface in ~1 minute: runtime -> corpus ->
+//! LM training -> group compression -> pocket packing -> device decode.
+
+use pocketllm::coordinator::job::{compress_group, decode_group, decoder_slice, JobOpts};
+use pocketllm::coordinator::lm::train_lm;
+use pocketllm::data::Corpus;
+use pocketllm::model::group_rows;
+use pocketllm::packfmt::ratio_for;
+use pocketllm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. PJRT runtime over the AOT artifacts (run `make artifacts` first).
+    let rt = Runtime::from_repo_root()?;
+    println!("loaded manifest: {} artifacts", rt.manifest.artifacts.len());
+
+    // 2. a synthetic corpus and a briefly trained substrate model
+    let corpus = Corpus::new(512, 1001);
+    let (ws, losses) = train_lm(&rt, "tiny", &corpus, 30, 7, 10)?;
+    println!("LM loss: {:.3} -> {:.3}", losses[0], losses.last().unwrap());
+
+    // 3. compress the value-projection group at the ~16x preset
+    let rows = group_rows(&ws, "v")?;
+    let mc = rt.manifest.meta_for_preset(rows.cols(), "p16x")?.clone();
+    let opts = JobOpts { train_steps: 120, kmeans_iters: 1, post_steps: 20, ..Default::default() };
+    let res = compress_group(&rt, &mc, &rows, &opts)?;
+    let ratio = ratio_for(&mc, res.indices.len(), rows.rows());
+    println!(
+        "group v: {} rows x {} -> {} codewords, avg {:.2} bits/weight ({:.1}x), \
+         mse {:.2e}, codebook util {:.0}%",
+        rows.rows(),
+        rows.cols(),
+        mc.k,
+        ratio.avg_bits,
+        ratio.ratio_fp32,
+        res.metrics.mse_loss,
+        res.metrics.codebook_utilization * 100.0
+    );
+
+    // 4. device-side decode from (decoder, codebook, indices, scales) only
+    let rec = decode_group(
+        &rt,
+        &mc,
+        &decoder_slice(&mc, &res.theta),
+        &res.codebook,
+        &res.indices,
+        &res.row_scales,
+        rows.rows(),
+    )?;
+    println!("device decode matches coordinator: mse {:.2e}", rec.mse(&res.recon));
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""PocketLLM build-time compute: JAX model + Pallas kernels + AOT lowering."""

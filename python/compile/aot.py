@@ -1,0 +1,183 @@
+"""AOT lowering: every L2 entry point -> HLO *text* + a JSON manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts [--only sub]
+
+The manifest records, for every artifact, its file plus input/output
+shapes+dtypes, and the full parameter layouts of every model/meta config —
+the Rust side reads the manifest and never re-derives a shape.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+from .configs import LM_CONFIGS, META_CONFIGS, LMConfig, MetaConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _sig(avals):
+    out = []
+    for a in avals:
+        out.append({"shape": [int(s) for s in a.shape], "dtype": str(a.dtype)})
+    return out
+
+
+class Builder:
+    def __init__(self, out_dir: str, only: str | None):
+        self.out_dir = out_dir
+        self.only = only
+        self.artifacts: dict[str, dict] = {}
+
+    def add(self, name: str, fn, in_specs, meta=None):
+        if self.only and self.only not in name:
+            return
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *in_specs)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        self.artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _sig(in_specs),
+            "outputs": _sig(out_avals),
+            **(meta or {}),
+        }
+        print(f"  [{time.time() - t0:6.2f}s] {name}")
+
+
+def build_lm(b: Builder, cfg: LMConfig):
+    P = cfg.layout().total
+    LP = cfg.lora_layout().total
+    S1 = cfg.seq_len + 1
+    f32, i32 = jnp.float32, jnp.int32
+
+    b.add(
+        f"lm_train_step_{cfg.name}",
+        functools.partial(model.lm_train_step, cfg),
+        (_spec((P,)), _spec((P,)), _spec((P,)), _spec((), f32),
+         _spec((cfg.train_batch, S1), i32)),
+    )
+    b.add(
+        f"lm_eval_nll_{cfg.name}",
+        functools.partial(model.lm_eval_nll, cfg),
+        (_spec((P,)), _spec((cfg.eval_batch, S1), i32)),
+    )
+    b.add(
+        f"lm_seq_nll_{cfg.name}",
+        functools.partial(model.lm_seq_nll, cfg),
+        (_spec((P,)), _spec((cfg.eval_batch, S1), i32),
+         _spec((cfg.eval_batch, cfg.seq_len))),
+    )
+    b.add(
+        f"lora_train_step_{cfg.name}",
+        functools.partial(model.lora_train_step, cfg),
+        (_spec((P,)), _spec((LP,)), _spec((LP,)), _spec((LP,)),
+         _spec((), f32), _spec((cfg.train_batch, S1), i32)),
+    )
+    b.add(
+        f"lora_merge_{cfg.name}",
+        functools.partial(model.lora_merge, cfg),
+        (_spec((P,)), _spec((LP,))),
+    )
+
+
+def build_meta(b: Builder, mc: MetaConfig, encode_done: set):
+    T = mc.theta_layout().total
+    R, W, K, d, L = mc.R, mc.W, mc.K, mc.d, mc.L
+    f32, i32 = jnp.float32, jnp.int32
+
+    b.add(
+        f"meta_train_{mc.name}",
+        functools.partial(model.meta_train_step, mc),
+        (_spec((T,)), _spec((T,)), _spec((T,)), _spec((), f32),
+         _spec((K, d)), _spec((K, d)), _spec((K, d)), _spec((R, W))),
+    )
+    b.add(
+        f"meta_assign_{mc.name}",
+        functools.partial(model.meta_assign, mc),
+        (_spec((T,)), _spec((K, d)), _spec((R, W))),
+    )
+    b.add(
+        f"meta_decode_{mc.name}",
+        functools.partial(model.meta_decode, mc),
+        (_spec((T,)), _spec((K, d)), _spec((R, L), i32), _spec((R, 2))),
+    )
+    b.add(
+        f"meta_kmeans_{mc.name}",
+        functools.partial(model.meta_kmeans_accum, mc),
+        (_spec((T,)), _spec((K, d)), _spec((R, W))),
+    )
+    if mc.encode_name not in encode_done:
+        encode_done.add(mc.encode_name)
+        b.add(
+            f"meta_encode_{mc.encode_name}",
+            functools.partial(model.meta_encode_entry, mc),
+            (_spec((T,)), _spec((R, W))),
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    b = Builder(args.out_dir, args.only)
+    t0 = time.time()
+    for cfg in LM_CONFIGS.values():
+        build_lm(b, cfg)
+    encode_done: set = set()
+    for mc in META_CONFIGS.values():
+        build_meta(b, mc, encode_done)
+
+    manifest = {
+        "version": 1,
+        "adam": {
+            "b1": configs.ADAM_B1, "b2": configs.ADAM_B2, "eps": configs.ADAM_EPS,
+            "meta_lr": configs.META_LR, "lm_lr": configs.LM_LR,
+            "lora_lr": configs.LORA_LR,
+        },
+        "vq": {"lambda": configs.VQ_LAMBDA, "commit_beta": configs.VQ_COMMIT_BETA},
+        "lm_configs": {k: v.manifest() for k, v in LM_CONFIGS.items()},
+        "meta_configs": {k: v.manifest() for k, v in META_CONFIGS.items()},
+        "ratio_presets": {k: list(v) for k, v in configs.RATIO_PRESETS.items()},
+        "artifacts": b.artifacts,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(b.artifacts)} artifacts in {time.time() - t0:.1f}s "
+          f"-> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,327 @@
+"""Shape/layout configuration shared between the JAX build path and the Rust
+runtime.
+
+Everything the Rust coordinator needs to know about an AOT artifact — input
+shapes, parameter flattening offsets, init scales — is derived here and
+exported into ``artifacts/manifest.json`` by ``aot.py``.  Rust never re-derives
+a layout; it reads this manifest.
+
+Two model families stand in for the paper's base models (see DESIGN.md §4):
+
+* ``tiny``   — Llama-2-7B stand-in  (d_model 256, 4 blocks, SwiGLU 512)
+* ``tinyl``  — Qwen-3-14B stand-in  (d_model 384, 6 blocks, SwiGLU 768)
+
+Meta-network configs (``MetaConfig``) follow the paper's (d, K) grid scaled to
+our layer sizes; the achieved average bits are computed by the Rust side with
+Eq. 14 and reported next to every result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+# ---------------------------------------------------------------------------
+# Parameter layouts (flat f32 vector <-> named tensors)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamEntry:
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+    init_std: float
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+class Layout:
+    """Ordered flat layout of named f32 tensors inside one 1-D buffer."""
+
+    def __init__(self, entries: List[Tuple[str, Tuple[int, ...], float]]):
+        self.entries: List[ParamEntry] = []
+        off = 0
+        for name, shape, std in entries:
+            e = ParamEntry(name, tuple(int(s) for s in shape), off, float(std))
+            self.entries.append(e)
+            off += e.size
+        self.total = off
+        self.by_name: Dict[str, ParamEntry] = {e.name: e for e in self.entries}
+
+    def unpack(self, vec):
+        """Slice a flat jnp/np vector into a dict of shaped arrays (static)."""
+        out = {}
+        for e in self.entries:
+            out[e.name] = vec[e.offset : e.offset + e.size].reshape(e.shape)
+        return out
+
+    def manifest(self) -> List[dict]:
+        return [
+            {
+                "name": e.name,
+                "shape": list(e.shape),
+                "offset": e.offset,
+                "size": e.size,
+                "init_std": e.init_std,
+            }
+            for e in self.entries
+        ]
+
+
+# ---------------------------------------------------------------------------
+# LM configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    ffn_hidden: int
+    seq_len: int
+    train_batch: int
+    eval_batch: int
+    lora_rank: int = 4
+    lora_alpha: float = 8.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def layout(self) -> Layout:
+        D, H, V, S = self.d_model, self.ffn_hidden, self.vocab, self.seq_len
+        std = 0.04  # matched to the Fig.2-style near-normal weight histogram
+        entries: List[Tuple[str, Tuple[int, ...], float]] = [
+            ("embed", (V, D), std),
+            ("pos", (S, D), std),
+        ]
+        for b in range(self.n_layers):
+            p = f"b{b}."
+            entries += [
+                (p + "wq", (D, D), std),
+                (p + "wk", (D, D), std),
+                (p + "wv", (D, D), std),
+                (p + "wo", (D, D), std),
+                (p + "wgate", (D, H), std),
+                (p + "wup", (D, H), std),
+                (p + "wdown", (H, D), std),
+                (p + "norm1", (D,), 0.0),  # RMSNorm scales init to 1 (std 0 => const)
+                (p + "norm2", (D,), 0.0),
+            ]
+        entries.append(("final_norm", (D,), 0.0))
+        return Layout(entries)
+
+    def lora_layout(self) -> Layout:
+        D, H, r = self.d_model, self.ffn_hidden, self.lora_rank
+        dims = {
+            "wq": (D, D),
+            "wk": (D, D),
+            "wv": (D, D),
+            "wo": (D, D),
+            "wgate": (D, H),
+            "wup": (D, H),
+            "wdown": (H, D),
+        }
+        entries: List[Tuple[str, Tuple[int, ...], float]] = []
+        for b in range(self.n_layers):
+            for lname, (din, dout) in dims.items():
+                # A ~ N(0, 0.02), B = 0  (standard LoRA init)
+                entries.append((f"b{b}.{lname}.A", (din, r), 0.02))
+                entries.append((f"b{b}.{lname}.B", (r, dout), 0.0))
+        return Layout(entries)
+
+    # Linear layer groups: the unit of PocketLLM compression.  Each group is a
+    # layer *type* across all blocks (amortizes the codebook, DESIGN.md §4).
+    def groups(self) -> Dict[str, dict]:
+        D, H = self.d_model, self.ffn_hidden
+        g = {
+            "q": dict(width=D, rows_per_block=D, tensors=["wq"]),
+            "k": dict(width=D, rows_per_block=D, tensors=["wk"]),
+            "v": dict(width=D, rows_per_block=D, tensors=["wv"]),
+            "o": dict(width=D, rows_per_block=D, tensors=["wo"]),
+            "gate": dict(width=H, rows_per_block=D, tensors=["wgate"]),
+            "up": dict(width=H, rows_per_block=D, tensors=["wup"]),
+            "down": dict(width=D, rows_per_block=H, tensors=["wdown"]),
+        }
+        for name, info in g.items():
+            info["rows_total"] = info["rows_per_block"] * self.n_layers
+            info["params"] = info["rows_total"] * info["width"]
+        return g
+
+    def manifest(self) -> dict:
+        return {
+            "name": self.name,
+            "vocab": self.vocab,
+            "d_model": self.d_model,
+            "n_layers": self.n_layers,
+            "n_heads": self.n_heads,
+            "ffn_hidden": self.ffn_hidden,
+            "seq_len": self.seq_len,
+            "train_batch": self.train_batch,
+            "eval_batch": self.eval_batch,
+            "lora_rank": self.lora_rank,
+            "lora_alpha": self.lora_alpha,
+            "params": self.layout().manifest(),
+            "total_params": self.layout().total,
+            "lora_params": self.lora_layout().manifest(),
+            "total_lora_params": self.lora_layout().total,
+            "groups": self.groups(),
+        }
+
+
+LM_CONFIGS: Dict[str, LMConfig] = {
+    "tiny": LMConfig(
+        name="tiny", vocab=512, d_model=256, n_layers=4, n_heads=4,
+        ffn_hidden=512, seq_len=128, train_batch=16, eval_batch=16,
+    ),
+    "tinyl": LMConfig(
+        name="tinyl", vocab=512, d_model=384, n_layers=6, n_heads=6,
+        ffn_hidden=768, seq_len=128, train_batch=8, eval_batch=16,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Meta-network configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MetaConfig:
+    """One (row-width, subvector-dim, codebook, depth, norm) combination.
+
+    ``W``     row width (= d_out of the weight matrices in the group)
+    ``d``     subvector length (paper's d, 4 or 8)
+    ``K``     codebook size
+    ``m``     MLP depth of encoder and decoder (paper's 3-layer default)
+    ``norm``  "rln" (the paper's Reshaped LayerNorm) or "ln" (per-subvector)
+    ``R``     rows per AOT dispatch (fixed at lowering time)
+    """
+
+    W: int
+    d: int
+    K: int
+    m: int
+    norm: str = "rln"
+    R: int = 64
+
+    def __post_init__(self):
+        assert self.W % self.d == 0, "row width must be divisible by d"
+        assert self.norm in ("rln", "ln")
+
+    @property
+    def L(self) -> int:
+        return self.W // self.d
+
+    @property
+    def hidden(self) -> int:
+        """Hidden width of the meta-net MLPs.
+
+        A d->d GELU stack is information-destroying (the activation crushes
+        the negative half-space and with only d channels nothing recovers
+        it); an overcomplete 4d hidden layer restores invertibility.  The
+        paper's own N_fd = 768 for d = 8 likewise implies hidden > d.
+        """
+        return 4 * self.d
+
+    @property
+    def name(self) -> str:
+        return f"w{self.W}_d{self.d}_k{self.K}_m{self.m}_{self.norm}"
+
+    @property
+    def encode_name(self) -> str:
+        return f"w{self.W}_d{self.d}_m{self.m}_{self.norm}"
+
+    def layer_dims(self) -> List[Tuple[int, int]]:
+        """(in, out) per MLP layer: d -> h -> ... -> h -> d."""
+        d, h, m = self.d, self.hidden, self.m
+        if m == 1:
+            return [(d, d)]
+        dims = [(d, h)]
+        dims += [(h, h)] * (m - 2)
+        dims.append((h, d))
+        return dims
+
+    def theta_layout(self) -> Layout:
+        entries: List[Tuple[str, Tuple[int, ...], float]] = []
+        for net in ("enc", "dec"):
+            for i, (din, dout) in enumerate(self.layer_dims()):
+                std = math.sqrt(2.0 / (din + dout))
+                entries.append((f"{net}.w{i}", (din, dout), std))
+                entries.append((f"{net}.b{i}", (dout,), 0.0))
+        return Layout(entries)
+
+    def decoder_param_count(self) -> int:
+        """N_fd in Eq. 13/14 — only the decoder ships to the device."""
+        return sum(din * dout + dout for din, dout in self.layer_dims())
+
+    def manifest(self) -> dict:
+        return {
+            "name": self.name,
+            "encode_name": self.encode_name,
+            "W": self.W,
+            "d": self.d,
+            "K": self.K,
+            "m": self.m,
+            "norm": self.norm,
+            "R": self.R,
+            "L": self.L,
+            "theta": self.theta_layout().manifest(),
+            "theta_len": self.theta_layout().total,
+            "decoder_params": self.decoder_param_count(),
+        }
+
+
+# Paper ratio presets scaled to our dims (DESIGN.md §4): (d, K) per target.
+RATIO_PRESETS: Dict[str, Tuple[int, int]] = {
+    "p8x": (4, 4096),
+    "p10x": (4, 1024),
+    "p16x": (8, 1024),
+    "p20x": (8, 512),
+}
+
+
+def _build_meta_configs() -> Dict[str, MetaConfig]:
+    cfgs: Dict[str, MetaConfig] = {}
+
+    def add(c: MetaConfig):
+        cfgs.setdefault(c.name, c)
+
+    # Pipeline presets for the tiny model (row widths 256 and 512).
+    for W in (256, 512):
+        for d, K in RATIO_PRESETS.values():
+            add(MetaConfig(W=W, d=d, K=K, m=3))
+    # Pipeline presets (8x, 10x only, as in Table 2) for tinyl (384 / 768).
+    for W in (384, 768):
+        for preset in ("p8x", "p10x"):
+            d, K = RATIO_PRESETS[preset]
+            add(MetaConfig(W=W, d=d, K=K, m=3))
+    # Table 5: encoder/decoder depth sweep.
+    for m in (1, 2, 5):
+        add(MetaConfig(W=512, d=8, K=1024, m=m))
+    # Table 6: codebook-size sweep.
+    for K in (256, 4096, 16384):
+        add(MetaConfig(W=512, d=8, K=K, m=3))
+    # Table 7: plain LN ablation.
+    add(MetaConfig(W=512, d=8, K=1024, m=3, norm="ln"))
+    return cfgs
+
+
+META_CONFIGS: Dict[str, MetaConfig] = _build_meta_configs()
+
+# Optimizer constants (shared L2/L3; exported in the manifest)
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+META_LR = 2e-3
+LM_LR = 1e-3
+LORA_LR = 1e-3
+VQ_LAMBDA = 1.0
+VQ_COMMIT_BETA = 0.25

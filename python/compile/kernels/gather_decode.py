@@ -1,0 +1,51 @@
+"""Pallas kernel: codebook lookup (the decompression entry point).
+
+Maps an index tile [RB, L] plus the codebook [K, d] to quantized latent rows
+[RB, L*d].  This is the first step of on-device weight reconstruction; the
+decoder MLP layers (mlp_block) run on its output.
+
+The gather is expressed with ``jnp.take`` inside the kernel; on TPU the
+codebook tile lives in VMEM and the gather becomes a dynamic-slice stream.
+For K beyond VMEM capacity the production variant would shard the codebook
+over grid steps and select with masked accumulation — at our K <= 16384 and
+d <= 8 the whole codebook is ~512 KB and fits comfortably.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_RB = 32
+
+
+def _gather_kernel(idx_ref, c_ref, o_ref):
+    idx = idx_ref[...]  # [RB, L] int32
+    c = c_ref[...]  # [K, d]
+    rb, l = idx.shape
+    d = c.shape[1]
+    rows = jnp.take(c, idx.reshape(-1), axis=0)  # [RB*L, d]
+    o_ref[...] = rows.reshape(rb, l * d)
+
+
+@functools.partial(jax.jit, static_argnames=("rb",))
+def gather_rows(c: jnp.ndarray, idx: jnp.ndarray, rb: int = DEFAULT_RB) -> jnp.ndarray:
+    """idx [R, L] int32 + codebook [K, d] -> quantized latent rows [R, L*d]."""
+    r, l = idx.shape
+    k, d = c.shape
+    rb = min(rb, r)
+    assert r % rb == 0, (r, rb)
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(r // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, l), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, l * d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, l * d), jnp.float32),
+        interpret=True,
+    )(idx, c)

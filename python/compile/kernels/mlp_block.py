@@ -1,0 +1,78 @@
+"""Pallas kernel: one fused meta-network layer.
+
+Fuses pre-norm (RLN or per-subvector LN) -> per-subvector d x d linear ->
+GELU -> optional residual into a single VMEM round-trip.  This is the body
+of both the meta encoder and the meta decoder; the full nets are m chained
+calls (see model.py), so fusing one layer removes 3 of the 4 HBM round-trips
+a naive op-by-op lowering would make.
+
+The d x d weight is broadcast to every grid step (index_map pins it to block
+0) — on real TPU it would stay VMEM-resident across the whole grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .rln import _ln_math, _rln_math
+
+DEFAULT_RB = 32
+
+
+def _mlp_kernel(
+    x_ref, w_ref, b_ref, o_ref, *, norm: str, residual: bool, activate: bool
+):
+    x = x_ref[...]  # [RB, L*din]
+    w = w_ref[...]  # [din, dout]
+    b = b_ref[...]  # [dout]
+    rb, wd = x.shape
+    din, dout = w.shape
+    l = wd // din
+    xn = _rln_math(x) if norm == "rln" else _ln_math(x, din)
+    pre = jnp.dot(
+        xn.reshape(-1, din), w, preferred_element_type=jnp.float32
+    ).reshape(rb, l, dout) + b
+    h = jax.nn.gelu(pre, approximate=True) if activate else pre
+    out = h.reshape(rb, l * dout)
+    if residual:
+        out = out + x
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("norm", "residual", "activate", "rb"))
+def mlp_block(
+    x_rows: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    norm: str = "rln",
+    residual: bool = True,
+    activate: bool = True,
+    rb: int = DEFAULT_RB,
+) -> jnp.ndarray:
+    """Apply one fused meta-net layer to [R, L*din] rows; matches
+    mlp_block_ref (non-square weights map L*din -> L*dout per row)."""
+    r, wd = x_rows.shape
+    din, dout = w.shape
+    l = wd // din
+    rb = min(rb, r)
+    assert r % rb == 0, (r, rb)
+    if residual:
+        assert din == dout, "residual needs matching widths"
+    return pl.pallas_call(
+        functools.partial(
+            _mlp_kernel, norm=norm, residual=residual, activate=activate
+        ),
+        grid=(r // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, wd), lambda i: (i, 0)),
+            pl.BlockSpec((din, dout), lambda i: (0, 0)),
+            pl.BlockSpec((dout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rb, l * dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, l * dout), jnp.float32),
+        interpret=True,
+    )(x_rows, w, b)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: ``python/tests/test_kernels.py``
+sweeps shapes/dtypes with hypothesis and asserts the Pallas implementations
+match these to tight tolerances.  The L2 training path also uses these
+(autodiff needs plain jnp), so kernel==ref is what guarantees the train and
+serve paths compute the same function.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+RLN_EPS = 1e-5
+
+
+def rln_ref(x_rows: jnp.ndarray) -> jnp.ndarray:
+    """Reshaped Layer Normalization (paper §Approach).
+
+    ``x_rows`` is [R, W]: subvectors re-assembled into full weight rows.
+    Normalize over the *entire row* (the paper's key fix over per-subvector
+    LN), no affine parameters.
+    """
+    mu = jnp.mean(x_rows, axis=-1, keepdims=True)
+    var = jnp.var(x_rows, axis=-1, keepdims=True)
+    return (x_rows - mu) * jax.lax.rsqrt(var + RLN_EPS)
+
+
+def ln_ref(x_rows: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Per-subvector LayerNorm baseline (the ablation arm of Table 7).
+
+    ``d`` is the current per-subvector channel width at this layer.
+    """
+    R, W = x_rows.shape
+    x = x_rows.reshape(R, W // d, d)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + RLN_EPS)).reshape(R, W)
+
+
+def mlp_block_ref(
+    x_rows: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    norm: str,
+    residual: bool,
+    activate: bool = True,
+) -> jnp.ndarray:
+    """One meta-net layer: pre-norm -> per-subvector linear -> GELU -> (+res).
+
+    ``x_rows`` [R, L*din]; ``w`` [din, dout]; ``b`` [dout].  The linear acts
+    on each subvector independently (width din -> dout); the norm acts on the
+    full row (rln) or the subvector (ln).  ``activate=False`` on each net's
+    output layer — a GELU there would clip the decoder's range at -0.17 and
+    destroy symmetric weight reconstruction.  ``residual`` requires
+    din == dout.
+    """
+    R, W = x_rows.shape
+    din, dout = w.shape
+    L = W // din
+    xn = rln_ref(x_rows) if norm == "rln" else ln_ref(x_rows, din)
+    pre = xn.reshape(R, L, din) @ w + b
+    h = jax.nn.gelu(pre, approximate=True) if activate else pre
+    out = h.reshape(R, L * dout)
+    if residual:
+        assert din == dout, "residual needs matching widths"
+        out = out + x_rows
+    return out
+
+
+def vq_assign_ref(z: jnp.ndarray, c: jnp.ndarray):
+    """Nearest-codeword assignment (Eq. 8).
+
+    ``z`` [N, d] latent subvectors, ``c`` [K, d] codebook.
+    Returns (idx [N] int32, sqdist [N] f32) with exact squared L2 distance.
+    """
+    # ||z - c||^2 = ||z||^2 - 2 z.c + ||c||^2
+    zn = jnp.sum(z * z, axis=1, keepdims=True)
+    cn = jnp.sum(c * c, axis=1)
+    d2 = zn - 2.0 * (z @ c.T) + cn[None, :]
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    sq = jnp.take_along_axis(d2, idx[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return idx, jnp.maximum(sq, 0.0)
+
+
+def gather_rows_ref(c: jnp.ndarray, idx: jnp.ndarray, W: int) -> jnp.ndarray:
+    """Codebook lookup: idx [R, L] -> quantized latent rows [R, W]."""
+    R, L = idx.shape
+    d = c.shape[1]
+    assert L * d == W
+    return c[idx.reshape(-1)].reshape(R, L * d)

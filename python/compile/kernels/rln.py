@@ -1,0 +1,52 @@
+"""Pallas kernel: Reshaped Layer Normalization (paper §Approach).
+
+The subvectors of one weight row are re-assembled ([R, W] layout), the whole
+row is standardized, and downstream ops re-split into [R, L, d].  Keeping the
+row-major [R, W] layout through the meta-net means RLN is a single
+VMEM-resident row reduction — no data movement at all versus per-subvector LN
+(the BlockSpec tiles rows, and W*4 bytes per row is tiny next to VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import RLN_EPS
+
+DEFAULT_RB = 32  # rows per grid step
+
+
+def _rln_math(x):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + RLN_EPS)
+
+
+def _ln_math(x_rows, d):
+    rb, w = x_rows.shape
+    x = x_rows.reshape(rb, w // d, d)
+    return _rln_math(x).reshape(rb, w)
+
+
+def _rln_kernel(x_ref, o_ref):
+    o_ref[...] = _rln_math(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("rb",))
+def rln(x_rows: jnp.ndarray, rb: int = DEFAULT_RB) -> jnp.ndarray:
+    """Row-wise standardization of [R, W] weight rows (no affine)."""
+    r, w = x_rows.shape
+    rb = min(rb, r)
+    assert r % rb == 0, (r, rb)
+    return pl.pallas_call(
+        _rln_kernel,
+        grid=(r // rb,),
+        in_specs=[pl.BlockSpec((rb, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, w), jnp.float32),
+        interpret=True,
+    )(x_rows)

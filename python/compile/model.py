@@ -1,0 +1,377 @@
+"""L2: the PocketLLM compute graphs, written in JAX.
+
+Everything here is lowered once by ``aot.py`` to HLO text and executed from
+the Rust coordinator — Python never runs on the request path.
+
+Contents:
+
+* Meta-network encoder/decoder (paper §Approach): m-layer MLPs over length-d
+  subvectors with RLN pre-norm, GELU, residual links on every layer except
+  the first.  Two implementations of the forward body share one weight
+  layout: ``*_jnp`` (differentiable, used inside the training step) and
+  ``*_pallas`` (fused L1 kernels, used in the inference/serving artifacts).
+  pytest asserts they agree.
+* VQ against the codebook with straight-through estimator (Eq. 8/9) and the
+  combined loss RMSE + lambda * MSE (Eq. 10/12).
+* Adam, the meta training step, the Lloyd (k-means) accumulation step, and
+  the assign/decode/encode serving entry points.
+* A llama-style tiny transformer LM (the substrate model that gets
+  compressed): forward, LM loss, Adam train step, per-sequence NLL scoring
+  (zero-shot tasks), LoRA fine-tune step and LoRA merge (paper's recovery
+  stage).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .configs import LMConfig, MetaConfig
+from .kernels import gather_decode, mlp_block, ref, vq_assign
+
+# ---------------------------------------------------------------------------
+# Adam (shared by LM, LoRA and meta-net training)
+# ---------------------------------------------------------------------------
+
+
+def adam_update(p, g, m, v, step, lr):
+    """One Adam step on flat f32 vectors. ``step`` is the 1-based step scalar."""
+    b1, b2, eps = configs.ADAM_B1, configs.ADAM_B2, configs.ADAM_EPS
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    mhat = m / (1.0 - b1**step)
+    vhat = v / (1.0 - b2**step)
+    return p - lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+# ---------------------------------------------------------------------------
+# Meta networks
+# ---------------------------------------------------------------------------
+
+
+def _norm_rows(x_rows, d, norm):
+    return ref.rln_ref(x_rows) if norm == "rln" else ref.ln_ref(x_rows, d)
+
+
+def meta_apply_jnp(mc: MetaConfig, weights: Dict[str, jnp.ndarray], net: str, x_rows):
+    """Differentiable meta-net forward on [R, W] rows.
+
+    ``net`` is "enc" or "dec".  Layer widths d -> h -> ... -> h -> d
+    (overcomplete hidden, see MetaConfig.hidden); residual links on the
+    width-preserving middle layers; no activation on the output layer (a
+    GELU there would clip the symmetric weight range).
+    """
+    r = x_rows.shape[0]
+    dims = mc.layer_dims()
+    x = x_rows
+    for i, (din, dout) in enumerate(dims):
+        w = weights[f"{net}.w{i}"]
+        b = weights[f"{net}.b{i}"]
+        xn = _norm_rows(x, din, mc.norm)
+        pre = xn.reshape(r, -1, din) @ w + b
+        h = jax.nn.gelu(pre, approximate=True) if i < mc.m - 1 else pre
+        h = h.reshape(r, mc.L * dout)
+        x = x + h if (i > 0 and din == dout) else h
+    return x
+
+
+def meta_apply_pallas(mc: MetaConfig, weights: Dict[str, jnp.ndarray], net: str, x_rows):
+    """Fused-kernel meta-net forward; same math as meta_apply_jnp."""
+    x = x_rows
+    for i, (din, dout) in enumerate(mc.layer_dims()):
+        x = mlp_block.mlp_block(
+            x, weights[f"{net}.w{i}"], weights[f"{net}.b{i}"],
+            norm=mc.norm, residual=(i > 0 and din == dout),
+            activate=(i < mc.m - 1),
+        )
+    return x
+
+
+def _unpack_theta(mc: MetaConfig, theta):
+    return mc.theta_layout().unpack(theta)
+
+
+def row_stats(rows):
+    """Per-row (mean, std) side information, [R, 2].
+
+    The meta-nets operate on standardized rows: per-row scale/offset is
+    shipped as f16 side info in the pocket format (0.06-0.12 bits/weight,
+    included in the Eq. 14 accounting) exactly like the per-group scales of
+    scalar quantizers.  Without it, RLN's scale stripping puts a hard floor
+    under reconstruction error and wrecks optimizer conditioning at 0.04-
+    scale inputs.
+    """
+    mu = jnp.mean(rows, axis=1, keepdims=True)
+    sd = jnp.std(rows, axis=1, keepdims=True) + 1e-8
+    return jnp.concatenate([mu, sd], axis=1)
+
+
+def normalize_rows(rows, stats):
+    return (rows - stats[:, 0:1]) / stats[:, 1:2]
+
+
+def denormalize_rows(rows_n, stats):
+    return rows_n * stats[:, 1:2] + stats[:, 0:1]
+
+
+def meta_encode(mc: MetaConfig, theta, rows, pallas: bool):
+    wts = _unpack_theta(mc, theta)
+    f = meta_apply_pallas if pallas else meta_apply_jnp
+    return f(mc, wts, "enc", rows)  # latent rows [R, W]
+
+
+def meta_decode_rows(mc: MetaConfig, theta, zq_rows, pallas: bool):
+    wts = _unpack_theta(mc, theta)
+    f = meta_apply_pallas if pallas else meta_apply_jnp
+    return f(mc, wts, "dec", zq_rows)  # reconstructed rows [R, W]
+
+
+# ---------------------------------------------------------------------------
+# Meta training step (Algorithm 1, one minibatch of rows)
+# ---------------------------------------------------------------------------
+
+
+def meta_train_step(mc: MetaConfig, theta, tm, tv, step, C, Cm, Cv, rows):
+    """One optimization step of encoder+decoder+codebook on [R, W] rows.
+
+    The nearest-neighbour indices come from the Pallas vq_assign kernel and
+    are treated as constants for the step (Eq. 9 straight-through); gradients
+    flow to the codebook through the differentiable gather C[idx].
+
+    Returns (theta', tm', tv', C', Cm', Cv', vq_loss, mse_loss); the
+    mse_loss metric is reported in the *raw* weight scale.
+    """
+    d = mc.d
+    stats = row_stats(rows)
+    rows_n = normalize_rows(rows, stats)
+
+    # Indices under current parameters (non-differentiable path, L1 kernel).
+    z0 = meta_encode(mc, theta, rows_n, pallas=False)
+    idx = jax.lax.stop_gradient(
+        vq_assign.vq_assign(z0.reshape(-1, d), C)[0]
+    )  # [R*L]
+
+    s3 = rows_n.reshape(rows.shape[0], -1, d)
+
+    def loss_fn(theta_, C_):
+        z = meta_encode(mc, theta_, rows_n, pallas=False)  # [R, W]
+        z3 = z.reshape(s3.shape)
+        csel = C_[idx].reshape(s3.shape)
+        # Straight-through: decoder sees quantized latents, encoder gets
+        # the identity gradient (Eq. 9).
+        zq = z3 + jax.lax.stop_gradient(csel - z3)
+        s_hat = meta_decode_rows(mc, theta_, zq.reshape(rows.shape), pallas=False)
+        s_hat3 = s_hat.reshape(s3.shape)
+
+        # Eq. 12, scale-normalized: the raw weights are O(0.04) while the
+        # latent VQ terms are O(1); dividing by the signal energy keeps the
+        # reconstruction gradient competitive at every weight scale.
+        err = jnp.sum((s3 - s_hat3) ** 2)
+        sig = jnp.sum(s3**2) + 1e-8
+        rmse = jnp.sqrt(err / sig + 1e-12)
+        # report mse at the raw weight scale (the paper's convention)
+        raw_err = denormalize_rows(s_hat, stats) - rows
+        mse_metric = jnp.mean(raw_err**2)
+        # Eq. 10, split VQ-VAE style: codebook term + commitment term.
+        codebook_l = jnp.mean((jax.lax.stop_gradient(z3) - csel) ** 2)
+        commit_l = jnp.mean((z3 - jax.lax.stop_gradient(csel)) ** 2)
+        # Reported vq metric is the *relative* latent distortion — the
+        # encoder is free to rescale its latent space, so the absolute
+        # distance is not comparable across runs/ablations.
+        vq_metric = jnp.sum((z3 - csel) ** 2) / (jnp.sum(z3**2) + 1e-8)
+        total = rmse + configs.VQ_LAMBDA * (
+            codebook_l + configs.VQ_COMMIT_BETA * commit_l
+        )
+        return total, (vq_metric, mse_metric)
+
+    (_, (vq_l, mse_l)), (g_theta, g_C) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1), has_aux=True
+    )(theta, C)
+
+    theta2, tm2, tv2 = adam_update(theta, g_theta, tm, tv, step, configs.META_LR)
+    Cf, gCf, Cmf, Cvf = C.reshape(-1), g_C.reshape(-1), Cm.reshape(-1), Cv.reshape(-1)
+    C2, Cm2, Cv2 = adam_update(Cf, gCf, Cmf, Cvf, step, configs.META_LR)
+    return (
+        theta2, tm2, tv2,
+        C2.reshape(C.shape), Cm2.reshape(C.shape), Cv2.reshape(C.shape),
+        vq_l, mse_l,
+    )
+
+
+def meta_kmeans_accum(mc: MetaConfig, theta, C, rows):
+    """Lloyd accumulation for one row chunk: per-codeword latent sums+counts.
+
+    Rust accumulates (sums, counts) across chunks and sets
+    C_k <- sums_k / counts_k for non-empty clusters (Algorithm 1's K-means
+    refinement, decoupled from decoding as the paper describes).
+    """
+    d = mc.d
+    rows_n = normalize_rows(rows, row_stats(rows))
+    z = meta_encode(mc, theta, rows_n, pallas=True).reshape(-1, d)
+    idx, _ = vq_assign.vq_assign(z, C)
+    sums = jnp.zeros(C.shape, jnp.float32).at[idx].add(z)
+    counts = jnp.zeros((C.shape[0],), jnp.float32).at[idx].add(1.0)
+    return sums, counts
+
+
+def meta_assign(mc: MetaConfig, theta, C, rows):
+    """Serving-path quantization of one row chunk (L1 kernels throughout).
+
+    Returns (idx [R, L] i32, s_hat [R, W] raw-scale, sq_err_s [R, L],
+    sq_err_z [R, L], z_sq [R, L], stats [R, 2]): indices, reconstruction,
+    per-subvector squared reconstruction error in raw weight space (for
+    mse / mse_top100 in Tables 5-7), squared latent distance, squared
+    latent norm (for the scale-invariant relative vq metric), and the
+    per-row (mean, std) side info that ships in the pocket file.
+    """
+    r = rows.shape[0]
+    d = mc.d
+    stats = row_stats(rows)
+    rows_n = normalize_rows(rows, stats)
+    z = meta_encode(mc, theta, rows_n, pallas=True)
+    idx_flat, zdist = vq_assign.vq_assign(z.reshape(-1, d), C)
+    idx = idx_flat.reshape(r, mc.L)
+    zq_rows = gather_decode.gather_rows(C, idx)
+    s_hat = denormalize_rows(
+        meta_decode_rows(mc, theta, zq_rows, pallas=True), stats
+    )
+    sq_s = jnp.sum(
+        (rows.reshape(r, mc.L, d) - s_hat.reshape(r, mc.L, d)) ** 2, axis=-1
+    )
+    z_sq = jnp.sum(z.reshape(r, mc.L, d) ** 2, axis=-1)
+    return idx, s_hat, sq_s, zdist.reshape(r, mc.L), z_sq, stats
+
+
+def meta_decode(mc: MetaConfig, theta, C, idx, stats):
+    """Device-side reconstruction: indices + codebook + decoder + per-row
+    (mean, std) side info -> raw-scale rows."""
+    zq_rows = gather_decode.gather_rows(C, idx)
+    return denormalize_rows(meta_decode_rows(mc, theta, zq_rows, pallas=True), stats)
+
+
+def meta_encode_entry(mc: MetaConfig, theta, rows):
+    """Latent projection of one row chunk (codebook initialization stats)."""
+    rows_n = normalize_rows(rows, row_stats(rows))
+    return meta_encode(mc, theta, rows_n, pallas=True).reshape(-1, mc.d)
+
+
+# ---------------------------------------------------------------------------
+# Tiny llama-style LM (substrate model)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * scale
+
+
+def lm_forward(cfg: LMConfig, p: Dict[str, jnp.ndarray], tokens):
+    """Causal LM forward. tokens [B, S] int32 -> logits [B, S, V]."""
+    B, S = tokens.shape
+    D, nh, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    h = p["embed"][tokens] + p["pos"][None, :S]
+    mask = jnp.where(
+        jnp.tril(jnp.ones((S, S), jnp.bool_)), 0.0, -1e9
+    )[None, None]
+    for b in range(cfg.n_layers):
+        pre = f"b{b}."
+        x = rmsnorm(h, 1.0 + p[pre + "norm1"])
+        q = (x @ p[pre + "wq"]).reshape(B, S, nh, hd).transpose(0, 2, 1, 3)
+        k = (x @ p[pre + "wk"]).reshape(B, S, nh, hd).transpose(0, 2, 1, 3)
+        v = (x @ p[pre + "wv"]).reshape(B, S, nh, hd).transpose(0, 2, 1, 3)
+        att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / jnp.sqrt(float(hd)) + mask)
+        o = (att @ v).transpose(0, 2, 1, 3).reshape(B, S, D)
+        h = h + o @ p[pre + "wo"]
+        x = rmsnorm(h, 1.0 + p[pre + "norm2"])
+        ff = (jax.nn.silu(x @ p[pre + "wgate"]) * (x @ p[pre + "wup"])) @ p[pre + "wdown"]
+        h = h + ff
+    h = rmsnorm(h, 1.0 + p["final_norm"])
+    return h @ p["embed"].T  # tied LM head
+
+
+def _token_nll(cfg: LMConfig, p, tokens_ext):
+    """tokens_ext [B, S+1] -> per-position NLL [B, S]."""
+    inp = tokens_ext[:, :-1]
+    tgt = tokens_ext[:, 1:]
+    logits = lm_forward(cfg, p, inp)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+def lm_loss(cfg: LMConfig, params_flat, tokens_ext):
+    p = cfg.layout().unpack(params_flat)
+    return jnp.mean(_token_nll(cfg, p, tokens_ext))
+
+
+def lm_train_step(cfg: LMConfig, params, m, v, step, tokens_ext):
+    """One Adam step of next-token training. Returns (params', m', v', loss)."""
+    loss, g = jax.value_and_grad(lm_loss, argnums=1)(cfg, params, tokens_ext)
+    p2, m2, v2 = adam_update(params, g, m, v, step, configs.LM_LR)
+    return p2, m2, v2, loss
+
+
+def lm_eval_nll(cfg: LMConfig, params, tokens_ext):
+    """Held-out scoring: (sum NLL, token count) over the batch (perplexity)."""
+    p = cfg.layout().unpack(params)
+    nll = _token_nll(cfg, p, tokens_ext)
+    return jnp.sum(nll), jnp.float32(nll.size)
+
+
+def lm_seq_nll(cfg: LMConfig, params, tokens_ext, mask):
+    """Per-sequence mean NLL over masked (continuation) positions.
+
+    tokens_ext [B, S+1], mask [B, S] f32 (1 where the *target* position
+    belongs to the scored continuation).  Zero-shot tasks: Rust picks the
+    choice with the lowest masked NLL.
+    """
+    p = cfg.layout().unpack(params)
+    nll = _token_nll(cfg, p, tokens_ext)
+    tot = jnp.sum(nll * mask, axis=1)
+    cnt = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    return tot / cnt
+
+
+# ---------------------------------------------------------------------------
+# LoRA fine-tuning (paper's post-compression recovery)
+# ---------------------------------------------------------------------------
+
+_LORA_TARGETS = ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown")
+
+
+def _lora_effective(cfg: LMConfig, p: Dict[str, jnp.ndarray], lw: Dict[str, jnp.ndarray]):
+    scale = cfg.lora_alpha / cfg.lora_rank
+    eff = dict(p)
+    for b in range(cfg.n_layers):
+        for t in _LORA_TARGETS:
+            key = f"b{b}.{t}"
+            eff[key] = p[key] + scale * (lw[key + ".A"] @ lw[key + ".B"])
+    return eff
+
+
+def lora_train_step(cfg: LMConfig, params_frozen, lora, lm, lv, step, tokens_ext):
+    """One Adam step on LoRA params only (base weights frozen).
+
+    Returns (lora', lm', lv', loss)."""
+    p = cfg.layout().unpack(params_frozen)
+
+    def loss_fn(lora_flat):
+        lw = cfg.lora_layout().unpack(lora_flat)
+        eff = _lora_effective(cfg, p, lw)
+        return jnp.mean(_token_nll(cfg, eff, tokens_ext))
+
+    loss, g = jax.value_and_grad(loss_fn)(lora)
+    l2, m2, v2 = adam_update(lora, g, lm, lv, step, configs.LORA_LR)
+    return l2, m2, v2, loss
+
+
+def lora_merge(cfg: LMConfig, params, lora):
+    """Fold trained LoRA deltas into the flat parameter vector."""
+    p = cfg.layout().unpack(params)
+    lw = cfg.lora_layout().unpack(lora)
+    eff = _lora_effective(cfg, p, lw)
+    lay = cfg.layout()
+    return jnp.concatenate([eff[e.name].reshape(-1) for e in lay.entries])

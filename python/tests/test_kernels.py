@@ -1,0 +1,177 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the f32/f64->f32 input ranges); assertions are
+assert_allclose against ref.py.  These tests are the core correctness signal
+for the serving path — the Rust runtime executes exactly these kernels after
+AOT lowering.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gather_decode, mlp_block, ref, rln, vq_assign
+
+RNG = np.random.default_rng(1234)
+
+
+def _rows(r, w, scale=1.0, rng=RNG):
+    return jnp.asarray(rng.normal(size=(r, w)).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# vq_assign
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n_blocks=st.integers(1, 4),
+    k_pow=st.integers(3, 11),
+    d=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vq_assign_matches_ref(n_blocks, k_pow, d, seed):
+    rng = np.random.default_rng(seed)
+    n, k = 256 * n_blocks, 2**k_pow
+    z = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    idx_p, sq_p = vq_assign.vq_assign(z, c)
+    idx_r, sq_r = ref.vq_assign_ref(z, c)
+    # Distances must agree tightly; indices may differ only on exact ties.
+    np.testing.assert_allclose(np.array(sq_p), np.array(sq_r), rtol=1e-4, atol=1e-5)
+    diff = np.array(idx_p) != np.array(idx_r)
+    if diff.any():
+        # tie case: both codewords equally near
+        zd = np.array(z)[diff]
+        cd = np.array(c)
+        a = np.sum((zd - cd[np.array(idx_p)[diff]]) ** 2, axis=1)
+        b = np.sum((zd - cd[np.array(idx_r)[diff]]) ** 2, axis=1)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_vq_assign_exact_on_codewords():
+    """A latent equal to a codeword must map to it with ~zero distance."""
+    c = _rows(64, 8)
+    idx, sq = vq_assign.vq_assign(c, c)
+    assert (np.array(idx) == np.arange(64)).all()
+    np.testing.assert_allclose(np.array(sq), 0.0, atol=1e-4)
+
+
+def test_vq_assign_scale_invariance_of_argmin():
+    z = _rows(256, 4)
+    c = _rows(512, 4)
+    i1, _ = vq_assign.vq_assign(z, c)
+    i2, _ = vq_assign.vq_assign(z * 4.0, c * 4.0)
+    assert (np.array(i1) == np.array(i2)).mean() > 0.99
+
+
+@pytest.mark.parametrize("kb", [128, 256, 512])
+def test_vq_assign_k_tiling_invariant(kb):
+    """Result must not depend on the K-tile size (grid carry correctness)."""
+    z = _rows(256, 8)
+    c = _rows(1024, 8)
+    i_ref, d_ref = vq_assign.vq_assign(z, c, kb=1024)
+    i_t, d_t = vq_assign.vq_assign(z, c, kb=kb)
+    assert (np.array(i_ref) == np.array(i_t)).all()
+    np.testing.assert_allclose(np.array(d_ref), np.array(d_t), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rln
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    rb_mult=st.integers(1, 4),
+    w=st.sampled_from([64, 128, 256, 384, 512, 768]),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rln_matches_ref(rb_mult, w, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(32 * rb_mult, w)).astype(np.float32) * scale)
+    np.testing.assert_allclose(
+        np.array(rln.rln(x)), np.array(ref.rln_ref(x)), rtol=2e-3, atol=2e-5
+    )
+
+
+def test_rln_output_standardized():
+    x = _rows(64, 512, scale=7.0)
+    y = np.array(rln.rln(x))
+    np.testing.assert_allclose(y.mean(axis=1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.std(axis=1), 1.0, atol=1e-3)
+
+
+def test_rln_differs_from_per_subvector_ln():
+    """The paper's point: RLN normalizes over the full row, not length-d."""
+    x = _rows(32, 256)
+    y_rln = np.array(ref.rln_ref(x))
+    y_ln = np.array(ref.ln_ref(x, 8))
+    assert np.abs(y_rln - y_ln).max() > 1e-2
+
+
+# ---------------------------------------------------------------------------
+# mlp_block
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    r_mult=st.integers(1, 3),
+    l=st.sampled_from([8, 32, 64]),
+    d=st.sampled_from([4, 8]),
+    norm=st.sampled_from(["rln", "ln"]),
+    residual=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlp_block_matches_ref(r_mult, l, d, norm, residual, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(32 * r_mult, l * d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(d, d)).astype(np.float32) * 0.5)
+    b = jnp.asarray(rng.normal(size=(d,)).astype(np.float32) * 0.1)
+    got = mlp_block.mlp_block(x, w, b, norm=norm, residual=residual)
+    want = ref.mlp_block_ref(x, w, b, norm, residual)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-4, atol=2e-5)
+
+
+def test_mlp_block_residual_identity_at_zero_weights():
+    """With w=0, b=0: gelu(0)=0, so residual output == input exactly."""
+    x = _rows(32, 64)
+    w = jnp.zeros((8, 8), jnp.float32)
+    b = jnp.zeros((8,), jnp.float32)
+    got = np.array(mlp_block.mlp_block(x, w, b, residual=True))
+    np.testing.assert_allclose(got, np.array(x), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# gather_decode
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    r_mult=st.integers(1, 3),
+    l=st.sampled_from([16, 64]),
+    d=st.sampled_from([4, 8]),
+    k=st.sampled_from([64, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_rows_matches_ref(r_mult, l, d, k, seed):
+    rng = np.random.default_rng(seed)
+    r = 32 * r_mult
+    c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, k, size=(r, l)).astype(np.int32))
+    got = gather_decode.gather_rows(c, idx)
+    want = ref.gather_rows_ref(c, idx, l * d)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=0)
+
+
+def test_gather_rows_uniform_index():
+    c = _rows(16, 8)
+    idx = jnp.full((32, 4), 5, jnp.int32)
+    out = np.array(gather_decode.gather_rows(c, idx))
+    want = np.tile(np.array(c)[5], (32, 4))
+    np.testing.assert_allclose(out, want, atol=0)

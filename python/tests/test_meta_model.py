@@ -1,0 +1,216 @@
+"""L2 correctness for the meta-network pipeline.
+
+Covers: jnp-vs-pallas forward equivalence (the train path and the serve path
+compute the same function), STE/VQ semantics, the training step actually
+reducing the loss, k-means accumulation invariants, and decode/assign
+consistency (decode(assign(x).idx) == assign(x).s_hat).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, model
+from compile.configs import MetaConfig
+
+RNG = np.random.default_rng(7)
+
+
+def _mc(W=256, d=8, K=256, m=3, norm="rln", R=64):
+    return MetaConfig(W=W, d=d, K=K, m=m, norm=norm, R=R)
+
+
+def _init_theta(mc, rng=RNG):
+    lay = mc.theta_layout()
+    v = np.zeros(lay.total, np.float32)
+    for e in lay.entries:
+        if e.init_std > 0:
+            v[e.offset : e.offset + e.size] = rng.normal(
+                size=e.size
+            ).astype(np.float32) * e.init_std
+    return jnp.asarray(v)
+
+
+def _rows(mc, rng=RNG, scale=0.04):
+    return jnp.asarray(rng.normal(size=(mc.R, mc.W)).astype(np.float32) * scale)
+
+
+def _codebook(mc, rng=RNG):
+    return jnp.asarray(rng.normal(size=(mc.K, mc.d)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# jnp vs pallas forward equivalence
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=8)
+@given(
+    W=st.sampled_from([64, 256, 512]),
+    d=st.sampled_from([4, 8]),
+    m=st.sampled_from([1, 2, 3]),
+    norm=st.sampled_from(["rln", "ln"]),
+    net=st.sampled_from(["enc", "dec"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_meta_apply_jnp_equals_pallas(W, d, m, norm, net, seed):
+    rng = np.random.default_rng(seed)
+    mc = _mc(W=W, d=d, m=m, norm=norm)
+    theta = _init_theta(mc, rng)
+    rows = _rows(mc, rng)
+    wts = mc.theta_layout().unpack(theta)
+    a = model.meta_apply_jnp(mc, wts, net, rows)
+    b = model.meta_apply_pallas(mc, wts, net, rows)
+    np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-4, atol=2e-5)
+
+
+def test_encode_entry_shape():
+    mc = _mc()
+    z = model.meta_encode_entry(mc, _init_theta(mc), _rows(mc))
+    assert z.shape == (mc.R * mc.L, mc.d)
+
+
+# ---------------------------------------------------------------------------
+# assign / decode consistency
+# ---------------------------------------------------------------------------
+
+
+def test_decode_of_assign_indices_reproduces_s_hat():
+    mc = _mc(W=256, d=8, K=128)
+    theta, C, rows = _init_theta(mc), _codebook(mc), _rows(mc)
+    idx, s_hat, sq_s, sq_z, z_sq, stats = model.meta_assign(mc, theta, C, rows)
+    s_hat2 = model.meta_decode(mc, theta, C, idx, stats)
+    np.testing.assert_allclose(np.array(s_hat), np.array(s_hat2), rtol=1e-5, atol=1e-6)
+
+
+def test_assign_error_metrics_consistent():
+    mc = _mc(W=256, d=4, K=64)
+    theta, C, rows = _init_theta(mc), _codebook(mc), _rows(mc)
+    idx, s_hat, sq_s, sq_z, z_sq, stats = model.meta_assign(mc, theta, C, rows)
+    want = np.sum(
+        (np.array(rows).reshape(mc.R, mc.L, mc.d)
+         - np.array(s_hat).reshape(mc.R, mc.L, mc.d)) ** 2, axis=-1)
+    np.testing.assert_allclose(np.array(sq_s), want, rtol=1e-4, atol=1e-6)
+    assert (np.array(sq_z) >= 0).all()
+    assert np.array(idx).min() >= 0 and np.array(idx).max() < mc.K
+
+
+# ---------------------------------------------------------------------------
+# k-means accumulation
+# ---------------------------------------------------------------------------
+
+
+def test_kmeans_accum_counts_and_sums():
+    mc = _mc(W=256, d=8, K=64)
+    theta, C, rows = _init_theta(mc), _codebook(mc), _rows(mc)
+    sums, counts = model.meta_kmeans_accum(mc, theta, C, rows)
+    sums, counts = np.array(sums), np.array(counts)
+    assert counts.sum() == mc.R * mc.L  # every subvector assigned exactly once
+    # total latent mass is preserved
+    z = np.array(model.meta_encode_entry(mc, theta, rows))
+    np.testing.assert_allclose(sums.sum(axis=0), z.sum(axis=0), rtol=1e-3, atol=1e-3)
+
+
+def test_kmeans_lloyd_objective_monotone():
+    """Lloyd iterations via meta_kmeans_accum never increase the VQ objective."""
+    from compile.kernels import vq_assign as vqk
+
+    mc = _mc(W=64, d=8, K=16)
+    theta, rows = _init_theta(mc), _rows(mc)
+    C = _codebook(mc)
+    z = model.meta_encode_entry(mc, theta, rows)
+
+    def objective(Cnow):
+        _, sq = vqk.vq_assign(z, Cnow)
+        return float(np.mean(np.array(sq)))
+
+    prev = objective(C)
+    for _ in range(6):
+        sums, counts = model.meta_kmeans_accum(mc, theta, C, rows)
+        sums, counts = np.array(sums), np.array(counts)
+        nz = counts > 0
+        C2 = np.array(C).copy()
+        C2[nz] = sums[nz] / counts[nz, None]
+        C = jnp.asarray(C2)
+        cur = objective(C)
+        assert cur <= prev * (1 + 1e-5), (prev, cur)
+        prev = cur
+
+
+# ---------------------------------------------------------------------------
+# training step semantics
+# ---------------------------------------------------------------------------
+
+
+def _train_state(mc, rng=RNG):
+    theta = _init_theta(mc, rng)
+    T = mc.theta_layout().total
+    zeros_t = jnp.zeros((T,), jnp.float32)
+    C = _codebook(mc, rng) * 0.04
+    zeros_c = jnp.zeros_like(C)
+    return theta, zeros_t, zeros_t, C, zeros_c, zeros_c
+
+
+def test_meta_train_step_shapes_and_finiteness():
+    mc = _mc(W=256, d=8, K=128)
+    theta, tm, tv, C, Cm, Cv = _train_state(mc)
+    rows = _rows(mc)
+    out = model.meta_train_step(mc, theta, tm, tv, jnp.float32(1.0), C, Cm, Cv, rows)
+    theta2, tm2, tv2, C2, Cm2, Cv2, vq_l, mse_l = out
+    assert theta2.shape == theta.shape and C2.shape == C.shape
+    for a in out:
+        assert np.isfinite(np.array(a)).all()
+    assert float(vq_l) >= 0 and float(mse_l) >= 0
+
+
+def test_meta_train_reduces_losses():
+    """A few hundred steps on a fixed batch must reduce both loss terms."""
+    rng = np.random.default_rng(42)
+    mc = _mc(W=256, d=8, K=128)
+    theta, tm, tv, C, Cm, Cv = _train_state(mc, rng)
+    rows = _rows(mc, rng)
+    step_fn = jax.jit(
+        lambda th, a, b, s, c, d_, e, r: model.meta_train_step(mc, th, a, b, s, c, d_, e, r)
+    )
+    first = last = None
+    for i in range(1, 201):
+        theta, tm, tv, C, Cm, Cv, vq_l, mse_l = step_fn(
+            theta, tm, tv, jnp.float32(i), C, Cm, Cv, rows
+        )
+        if i == 1:
+            first = (float(vq_l), float(mse_l))
+        last = (float(vq_l), float(mse_l))
+    # Reconstruction error (the paper's headline metric) must drop
+    # substantially.  (Row normalization makes even step 1 non-degenerate,
+    # so the improvement factor is bounded; require 4x.)
+    assert last[1] < first[1] * 0.25, f"mse did not improve: {first} -> {last}"
+    # and beat the predict-zero floor (input std 0.04 -> var 1.6e-3)
+    assert last[1] < 1.6e-3, f"worse than zero predictor: {last}"
+    # On pure-gaussian (incompressible) rows the latent VQ distortion is
+    # rate-distortion bounded; require stability, not a large drop.
+    assert last[0] < first[0] * 1.5, f"vq diverged: {first} -> {last}"
+
+
+def test_rln_beats_ln_on_structured_rows():
+    """Table 7's direction: with row-level structure, RLN reconstructs better."""
+    rng = np.random.default_rng(3)
+    base = rng.normal(size=(1, 256)).astype(np.float32)  # shared row structure
+    rows_np = (base * rng.normal(1.0, 0.3, size=(64, 1)).astype(np.float32)
+               + 0.02 * rng.normal(size=(64, 256)).astype(np.float32))
+    results = {}
+    for norm in ("rln", "ln"):
+        mc = _mc(W=256, d=8, K=64, norm=norm)
+        theta, tm, tv, C, Cm, Cv = _train_state(mc, np.random.default_rng(5))
+        rows = jnp.asarray(rows_np)
+        step_fn = jax.jit(
+            lambda th, a, b, s, c, d_, e, r: model.meta_train_step(
+                mc, th, a, b, s, c, d_, e, r)
+        )
+        for i in range(1, 151):
+            theta, tm, tv, C, Cm, Cv, vq_l, mse_l = step_fn(
+                theta, tm, tv, jnp.float32(i), C, Cm, Cv, rows
+            )
+        results[norm] = float(mse_l)
+    assert results["rln"] < results["ln"] * 1.25, results

@@ -1,0 +1,47 @@
+//! Figure 2 — the numerical distribution of value-projection weights within
+//! the 99.9% central range, with a quantitative gaussian-fit check (the
+//! paper's justification for normal-distribution codebook initialization).
+//!
+//!     cargo bench --bench fig2_weight_distribution
+
+use pocketllm::eval::{gaussian_fit_error, weight_histogram};
+use pocketllm::model::group_rows;
+use pocketllm::report::{results_path, ExpContext};
+use pocketllm::util::json::{arr, num, obj, s};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ExpContext::new("tiny")?;
+    let rows = group_rows(&ctx.base, "v")?;
+    let (h, (lo, hi)) = weight_histogram(&rows.data, 0.999, 64);
+    let fit = gaussian_fit_error(&rows.data, &h);
+
+    println!("\n== Figure 2 — W_v value distribution (99.9% range) ==");
+    println!("range [{lo:.4}, {hi:.4}], {} samples, gaussian-fit RMS {fit:.5}", h.total());
+    let max = *h.counts().iter().max().unwrap() as f64;
+    for i in (0..h.counts().len()).step_by(2) {
+        let bar = "#".repeat((h.counts()[i] as f64 / max * 60.0) as usize);
+        println!("{:>8.4} | {bar}", h.bin_center(i));
+    }
+    println!(
+        "(outliers: {} below, {} above — the paper's 'few outliers')",
+        h.underflow, h.overflow
+    );
+
+    let j = obj(vec![
+        ("lo", num(lo as f64)),
+        ("hi", num(hi as f64)),
+        ("gaussian_fit_rms", num(fit)),
+        (
+            "counts",
+            arr(h.counts().iter().map(|&c| num(c as f64)).collect()),
+        ),
+        (
+            "centers",
+            arr((0..h.counts().len()).map(|i| num(h.bin_center(i))).collect()),
+        ),
+        ("group", s("v")),
+    ]);
+    pocketllm::util::benchlib::write_report(&results_path("fig2_distribution.json"), &j);
+    println!("[json -> bench_results/fig2_distribution.json]");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Figure 3 — original vs reconstructed weight subvectors for the q, up and
+//! down groups at the 8x / 16x / 20x presets (the paper visualizes 1x4 and
+//! 1x8 subvectors; we print a sample and dump full series for plotting).
+//!
+//!     cargo bench --bench fig3_reconstruction
+
+use pocketllm::coordinator::job::{compress_group, JobOpts};
+use pocketllm::model::group_rows;
+use pocketllm::report::{results_path, ExpContext};
+use pocketllm::util::json::{arr, num, obj, s, Json};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ExpContext::new("tiny")?;
+    let steps = ExpContext::steps(150);
+    let mut series: Vec<Json> = Vec::new();
+
+    for (group, preset) in [("q", "p8x"), ("up", "p16x"), ("down", "p20x")] {
+        let rows = group_rows(&ctx.base, group)?;
+        let mc = ctx.rt.manifest.meta_for_preset(rows.cols(), preset)?.clone();
+        let opts = JobOpts {
+            train_steps: steps,
+            kmeans_iters: 1,
+            post_steps: steps / 8,
+            ..Default::default()
+        };
+        let res = compress_group(&ctx.rt, &mc, &rows, &opts)?;
+        let n_show = 2 * mc.d; // a couple of subvectors
+        println!(
+            "\n== Fig 3 — {group} at {preset} (d={}, {:.1} bits/w) ==",
+            mc.d,
+            res.metrics.mse_loss.log10()
+        );
+        println!(
+            "orig:  {:?}",
+            &rows.data[..n_show].iter().map(|x| (x * 1000.0).round() / 1000.0).collect::<Vec<_>>()
+        );
+        println!(
+            "recon: {:?}",
+            &res.recon.data[..n_show]
+                .iter()
+                .map(|x| (x * 1000.0).round() / 1000.0)
+                .collect::<Vec<_>>()
+        );
+        println!("group mse {:.2e}", res.metrics.mse_loss);
+
+        let take = 16 * mc.d; // 16 subvectors per panel, as in the paper
+        series.push(obj(vec![
+            ("group", s(group)),
+            ("preset", s(preset)),
+            ("d", num(mc.d as f64)),
+            ("mse", num(res.metrics.mse_loss)),
+            (
+                "original",
+                arr(rows.data[..take].iter().map(|&x| num(x as f64)).collect()),
+            ),
+            (
+                "reconstructed",
+                arr(res.recon.data[..take].iter().map(|&x| num(x as f64)).collect()),
+            ),
+        ]));
+    }
+
+    pocketllm::util::benchlib::write_report(
+        &results_path("fig3_reconstruction.json"),
+        &Json::Arr(series),
+    );
+    println!("\n[json -> bench_results/fig3_reconstruction.json]");
+    Ok(())
+}

@@ -1,0 +1,130 @@
+//! Performance benchmarks of the hot paths (the §Perf deliverable):
+//!
+//! * L3: bit-pack/unpack throughput, pocket serialization, literal
+//!   marshalling (gather_rows), linear k-means baseline;
+//! * runtime: per-dispatch latency of the meta train/assign/decode
+//!   executables and the LM step (XLA-CPU), plus the per-artifact dispatch
+//!   totals the coordinator accumulated.
+//!
+//!     cargo bench --bench perf_hotpath
+
+use pocketllm::data::Corpus;
+use pocketllm::quant::vq_linear::VqLinear;
+use pocketllm::quant::Baseline;
+use pocketllm::runtime::{Arg, Runtime};
+use pocketllm::tensor::{TensorF32, TensorI32};
+use pocketllm::util::benchlib::{bench, Measurement};
+use pocketllm::util::bitpack::BitPacked;
+use pocketllm::util::prng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let mut results: Vec<Measurement> = Vec::new();
+    let mut rng = Pcg32::seeded(1);
+
+    // --- L3 CPU paths -------------------------------------------------------
+    let vals: Vec<u32> = (0..1_000_000).map(|_| rng.below(1 << 12)).collect();
+    let packed = BitPacked::pack(&vals, 12);
+    results.push(bench("bitpack::pack 1M x 12b", 2, 10, || {
+        std::hint::black_box(BitPacked::pack(&vals, 12));
+    }));
+    results.push(bench("bitpack::unpack 1M x 12b", 2, 10, || {
+        std::hint::black_box(packed.unpack());
+    }));
+
+    let mut big = vec![0.0f32; 1024 * 512];
+    rng.fill_normal(&mut big, 0.04);
+    let rows = TensorF32::new(vec![1024, 512], big);
+    let idx: Vec<usize> = (0..64).map(|_| rng.below(1024) as usize).collect();
+    results.push(bench("tensor::gather_rows 64x512", 5, 50, || {
+        std::hint::black_box(rows.gather_rows(&idx));
+    }));
+
+    let f16_src: Vec<f32> = rows.data[..65536].to_vec();
+    results.push(bench("f16::encode 64k", 2, 20, || {
+        std::hint::black_box(pocketllm::util::f16::encode_f16(&f16_src));
+    }));
+
+    let vq = VqLinear::new(8, 256, 4, 7);
+    let small_rows = TensorF32::new(vec![128, 512], rows.data[..65536].to_vec());
+    results.push(bench("vq_linear kmeans 8k subvecs K=256", 0, 3, || {
+        std::hint::black_box(vq.reconstruct(&small_rows));
+    }));
+
+    // --- PJRT dispatch latency ----------------------------------------------
+    let rt = Runtime::from_repo_root()?;
+    let mc = rt.manifest.meta_cfg("w512_d8_k1024_m3_rln")?.clone();
+    let theta = TensorF32::zeros(vec![mc.theta.total]);
+    let c = TensorF32::zeros(vec![mc.k, mc.d]);
+    let chunk = rows.gather_rows(&(0..64).collect::<Vec<_>>());
+    let assign_name = format!("meta_assign_{}", mc.name);
+    rt.warm(&[&assign_name])?;
+    results.push(bench("dispatch meta_assign w512 k1024", 2, 10, || {
+        rt.exec(
+            &assign_name,
+            &[Arg::F32(theta.clone()), Arg::F32(c.clone()), Arg::F32(chunk.clone())],
+        )
+        .unwrap();
+    }));
+
+    let decode_name = format!("meta_decode_{}", mc.name);
+    rt.warm(&[&decode_name])?;
+    let didx = TensorI32::zeros(vec![mc.r, mc.l]);
+    let stats = TensorF32::new(vec![mc.r, 2], vec![0.0, 1.0].repeat(mc.r));
+    results.push(bench("dispatch meta_decode w512 k1024", 2, 10, || {
+        rt.exec(
+            &decode_name,
+            &[
+                Arg::F32(theta.clone()),
+                Arg::F32(c.clone()),
+                Arg::I32(didx.clone()),
+                Arg::F32(stats.clone()),
+            ],
+        )
+        .unwrap();
+    }));
+
+    let cfg = rt.manifest.lm_cfg("tiny")?.clone();
+    let corpus = Corpus::new(cfg.vocab, 1);
+    let params = TensorF32::zeros(vec![cfg.layout.total]);
+    let m = TensorF32::zeros(vec![cfg.layout.total]);
+    let v = TensorF32::zeros(vec![cfg.layout.total]);
+    let toks = corpus.batch(cfg.train_batch, cfg.seq_len, 1);
+    rt.warm(&["lm_train_step_tiny"])?;
+    results.push(bench("dispatch lm_train_step tiny", 1, 5, || {
+        rt.exec(
+            "lm_train_step_tiny",
+            &[
+                Arg::F32(params.clone()),
+                Arg::F32(m.clone()),
+                Arg::F32(v.clone()),
+                Arg::Scalar(1.0),
+                Arg::I32(toks.clone()),
+            ],
+        )
+        .unwrap();
+    }));
+
+    println!("\n== perf_hotpath ==");
+    for r in &results {
+        println!("{r}");
+    }
+    // derived throughputs
+    for r in &results {
+        if r.name.starts_with("bitpack::unpack") {
+            println!(
+                "bitpack unpack throughput: {:.1} M values/s",
+                r.throughput(1e6) / 1e6
+            );
+        }
+    }
+    println!("\nper-artifact dispatch totals:");
+    for (name, s) in rt.dispatch_stats() {
+        println!(
+            "  {name:42} calls {:5}  total {:.3}s  mean {:.3}ms",
+            s.calls,
+            s.total_secs,
+            s.total_secs / s.calls as f64 * 1e3
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Table 2 — the second (larger) base model, tinyl (the Qwen 3-14B stand-in),
+//! at the 8x and 10x presets against RTN at 4 and 3 bits.
+//!
+//!     cargo bench --bench table2_second_model
+
+use pocketllm::data::tasks::ZERO_SHOT_SUITES;
+use pocketllm::eval::zero_shot_accuracy;
+use pocketllm::model::{group_rows, scatter_group_rows, GROUPS};
+use pocketllm::quant::rtn::Rtn;
+use pocketllm::quant::Baseline;
+use pocketllm::report::{results_path, ExpContext};
+use pocketllm::util::benchlib::{pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ExpContext::new("tinyl")?;
+    let n_inst = ExpContext::instances(80);
+    let steps = ExpContext::steps(120);
+
+    let mut t = Table::new(
+        "Table 2 — zero-shot accuracy, compressed tinyl (Qwen-3-14B stand-in)",
+        &["method", "avg_bits", "WinoG", "PiQA", "HellaS", "ArcE", "ArcC", "avg_acc"],
+    );
+
+    let mut eval_row = |name: &str, bits: f64, ws: &pocketllm::model::WeightStore,
+                        t: &mut Table|
+     -> anyhow::Result<()> {
+        let mut accs = Vec::new();
+        for spec in &ZERO_SHOT_SUITES {
+            accs.push(zero_shot_accuracy(&ctx.rt, ws, &ctx.corpus, spec, n_inst, 13)?);
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        let mut row = vec![name.to_string(), format!("{bits:.2}")];
+        row.extend(accs.iter().map(|a| pct(*a)));
+        row.push(pct(avg));
+        t.row(row);
+        eprintln!("[table2] {name}: avg {:.2}", avg * 100.0);
+        Ok(())
+    };
+
+    eval_row("tinyl fp32", 32.0, &ctx.base, &mut t)?;
+
+    for bits in [4u32, 3] {
+        let b = Rtn::new(bits, 64);
+        let mut ws = ctx.base.clone();
+        let mut acc_bits = 0.0;
+        let mut params = 0usize;
+        for g in GROUPS {
+            let rows = group_rows(&ctx.base, g)?;
+            acc_bits += b.avg_bits(&rows) * rows.len() as f64;
+            params += rows.len();
+            scatter_group_rows(&mut ws, g, &b.reconstruct(&rows))?;
+        }
+        eval_row(&b.name(), acc_bits / params as f64, &ws, &mut t)?;
+    }
+
+    for preset in ["p8x", "p10x"] {
+        let (ws, bits) = ctx.cached_compressed(preset, steps)?;
+        eval_row(&format!("PocketLLM {preset}"), bits, &ws, &mut t)?;
+    }
+
+    t.emit(Some(&results_path("table2_second_model.json")));
+    Ok(())
+}

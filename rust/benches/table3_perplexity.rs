@@ -1,0 +1,69 @@
+//! Table 3 — perplexity of the 8x-compressed model on two held-out corpora
+//! (the WikiText-2 / C4 stand-ins: the training-seed corpus in-domain, a
+//! second corpus seed out-of-domain), with and without fine-tuning, vs the
+//! RTN / pruning baselines.
+//!
+//!     cargo bench --bench table3_perplexity
+
+use pocketllm::coordinator::lm::lora_finetune;
+use pocketllm::data::Corpus;
+use pocketllm::eval::perplexity;
+use pocketllm::model::{group_rows, scatter_group_rows, GROUPS};
+use pocketllm::quant::prune::MagnitudePrune;
+use pocketllm::quant::rtn::Rtn;
+use pocketllm::quant::Baseline;
+use pocketllm::report::{results_path, ExpContext, CORPUS_SEED_C4};
+use pocketllm::util::benchlib::Table;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ExpContext::new("tiny")?;
+    let corpus2 = Corpus::new(ctx.base.cfg.vocab, CORPUS_SEED_C4);
+    let steps = ExpContext::steps(150);
+    let ft_steps = ExpContext::steps(40);
+    let nb = 6;
+
+    let mut t = Table::new(
+        "Table 3 — perplexity at ~8x compression (* = no fine-tune)",
+        &["method", "avg_bits", "wt2-syn ppl", "c4-syn ppl"],
+    );
+    let mut row = |name: &str, bits: f64, ws: &pocketllm::model::WeightStore,
+                   t: &mut Table|
+     -> anyhow::Result<()> {
+        let p1 = perplexity(&ctx.rt, ws, &ctx.corpus, nb)?;
+        let p2 = perplexity(&ctx.rt, ws, &corpus2, nb)?;
+        t.row(vec![
+            name.into(),
+            format!("{bits:.2}"),
+            format!("{p1:.3}"),
+            format!("{p2:.3}"),
+        ]);
+        eprintln!("[table3] {name}: {p1:.3} / {p2:.3}");
+        Ok(())
+    };
+
+    row("tiny fp32", 32.0, &ctx.base, &mut t)?;
+
+    for b in [
+        Box::new(Rtn::new(4, 64)) as Box<dyn Baseline>,
+        Box::new(MagnitudePrune::new(0.5)),
+    ] {
+        let mut ws = ctx.base.clone();
+        let mut bits = 0.0;
+        let mut params = 0usize;
+        for g in GROUPS {
+            let rows = group_rows(&ctx.base, g)?;
+            bits += b.avg_bits(&rows) * rows.len() as f64;
+            params += rows.len();
+            scatter_group_rows(&mut ws, g, &b.reconstruct(&rows))?;
+        }
+        row(&format!("{}*", b.name()), bits / params as f64, &ws, &mut t)?;
+    }
+
+    let (ws, bits) = ctx.cached_compressed("p8x", steps)?;
+    row("PocketLLM*", bits, &ws, &mut t)?;
+    let rec = lora_finetune(&ctx.rt, &ws, &ctx.corpus, ft_steps, 23)?;
+    row("PocketLLM+FT", bits, &rec, &mut t)?;
+
+    t.emit(Some(&results_path("table3_perplexity.json")));
+    Ok(())
+}

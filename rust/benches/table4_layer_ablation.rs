@@ -1,0 +1,69 @@
+//! Table 4 — which layer types tolerate compression: compress each group
+//! (q, k, q+k, v, o, all-attention, gate, up, down, all-FFN, all) at ~8x and
+//! probe with the MMLU-like hard suite plus the HellaSwag-like suite.
+//!
+//!     cargo bench --bench table4_layer_ablation
+
+use pocketllm::coordinator::{compress_model, PipelineOpts};
+use pocketllm::data::tasks::{MMLU_SUITE, ZERO_SHOT_SUITES};
+use pocketllm::eval::zero_shot_accuracy;
+use pocketllm::report::{results_path, ExpContext};
+use pocketllm::util::benchlib::{pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ExpContext::new("tiny")?;
+    let n_inst = ExpContext::instances(120);
+    let steps = ExpContext::steps(120);
+
+    let arms: Vec<(&str, Vec<&str>)> = vec![
+        ("q", vec!["q"]),
+        ("k", vec!["k"]),
+        ("q,k", vec!["q", "k"]),
+        ("v", vec!["v"]),
+        ("o", vec!["o"]),
+        ("q,k,v,o", vec!["q", "k", "v", "o"]),
+        ("gate", vec!["gate"]),
+        ("up", vec!["up"]),
+        ("down", vec!["down"]),
+        ("gate,up,down", vec!["gate", "up", "down"]),
+        ("all", vec!["q", "k", "v", "o", "gate", "up", "down"]),
+    ];
+
+    let total_linear: usize = ctx.base.cfg.groups.values().map(|g| g.params).sum();
+    let mut t = Table::new(
+        "Table 4 — per-layer-type compression damage at ~8x",
+        &["layers", "rate", "MMLU-syn", "HellaS-syn"],
+    );
+
+    // reference row
+    let mmlu0 = zero_shot_accuracy(&ctx.rt, &ctx.base, &ctx.corpus, &MMLU_SUITE, n_inst, 31)?;
+    let hs0 =
+        zero_shot_accuracy(&ctx.rt, &ctx.base, &ctx.corpus, &ZERO_SHOT_SUITES[2], n_inst, 13)?;
+    t.row(vec!["tiny fp32".into(), "-".into(), pct(mmlu0), pct(hs0)]);
+
+    for (label, groups) in arms {
+        let covered: usize = groups.iter().map(|g| ctx.base.cfg.groups[*g].params).sum();
+        let mut opts = PipelineOpts { preset: "p8x".into(), ..Default::default() };
+        opts.groups = Some(groups.iter().map(|s| s.to_string()).collect());
+        opts.job.train_steps = steps;
+        opts.job.kmeans_iters = 1;
+        opts.job.post_steps = steps / 8;
+        let res = compress_model(&ctx.rt, &ctx.base, &opts)?;
+        let mmlu = zero_shot_accuracy(
+            &ctx.rt, &res.reconstructed, &ctx.corpus, &MMLU_SUITE, n_inst, 31,
+        )?;
+        let hs = zero_shot_accuracy(
+            &ctx.rt, &res.reconstructed, &ctx.corpus, &ZERO_SHOT_SUITES[2], n_inst, 13,
+        )?;
+        t.row(vec![
+            label.into(),
+            format!("{:.1}%", covered as f64 / total_linear as f64 * 100.0),
+            pct(mmlu),
+            pct(hs),
+        ]);
+        eprintln!("[table4] {label}: mmlu {:.1} hs {:.1}", mmlu * 100.0, hs * 100.0);
+    }
+
+    t.emit(Some(&results_path("table4_layer_ablation.json")));
+    Ok(())
+}

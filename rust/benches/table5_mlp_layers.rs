@@ -1,0 +1,42 @@
+//! Table 5 — meta-net depth (1/2/3/5 layers) vs the vq / mse / mse_top100
+//! metrics on the `up` projection group.
+//!
+//!     cargo bench --bench table5_mlp_layers
+
+use pocketllm::coordinator::job::{compress_group, JobOpts};
+use pocketllm::model::group_rows;
+use pocketllm::report::{results_path, ExpContext};
+use pocketllm::util::benchlib::Table;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ExpContext::new("tiny")?;
+    let rows = group_rows(&ctx.base, "up")?;
+    let steps = ExpContext::steps(200);
+
+    let mut t = Table::new(
+        "Table 5 — encoder/decoder depth (up group, d=8, K=1024)",
+        &["mlp_layers", "vq", "mse", "mse_top100"],
+    );
+    for m in [1usize, 2, 3, 5] {
+        let mc = ctx.rt.manifest.meta_cfg(&format!("w512_d8_k1024_m{m}_rln"))?.clone();
+        let opts = JobOpts {
+            train_steps: steps,
+            kmeans_iters: 1,
+            post_steps: steps / 8,
+            ..Default::default()
+        };
+        let res = compress_group(&ctx.rt, &mc, &rows, &opts)?;
+        t.row(vec![
+            m.to_string(),
+            format!("{:.4}", res.metrics.vq_loss),
+            format!("{:.2e}", res.metrics.mse_loss),
+            format!("{:.3}", res.metrics.mse_top100),
+        ]);
+        eprintln!(
+            "[table5] m={m}: vq {:.4} mse {:.2e}",
+            res.metrics.vq_loss, res.metrics.mse_loss
+        );
+    }
+    t.emit(Some(&results_path("table5_mlp_layers.json")));
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Table 6 — codebook size (256 … 16384) vs vq / mse / mse_top100 on the
+//! `up` projection group.
+//!
+//!     cargo bench --bench table6_codebook_size
+
+use pocketllm::coordinator::job::{compress_group, JobOpts};
+use pocketllm::model::group_rows;
+use pocketllm::report::{results_path, ExpContext};
+use pocketllm::util::benchlib::Table;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ExpContext::new("tiny")?;
+    let rows = group_rows(&ctx.base, "up")?;
+    let steps = ExpContext::steps(200);
+
+    let mut t = Table::new(
+        "Table 6 — codebook size (up group, d=8, m=3)",
+        &["codebook_size", "vq", "mse", "mse_top100"],
+    );
+    for k in [256usize, 1024, 4096, 16384] {
+        let mc = ctx.rt.manifest.meta_cfg(&format!("w512_d8_k{k}_m3_rln"))?.clone();
+        let opts = JobOpts {
+            train_steps: steps,
+            kmeans_iters: 1,
+            post_steps: steps / 8,
+            ..Default::default()
+        };
+        let res = compress_group(&ctx.rt, &mc, &rows, &opts)?;
+        t.row(vec![
+            k.to_string(),
+            format!("{:.4}", res.metrics.vq_loss),
+            format!("{:.2e}", res.metrics.mse_loss),
+            format!("{:.3}", res.metrics.mse_top100),
+        ]);
+        eprintln!(
+            "[table6] K={k}: vq {:.4} mse {:.2e}",
+            res.metrics.vq_loss, res.metrics.mse_loss
+        );
+    }
+    t.emit(Some(&results_path("table6_codebook_size.json")));
+    Ok(())
+}

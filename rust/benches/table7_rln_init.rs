@@ -1,0 +1,50 @@
+//! Table 7 — 2x2 ablation of RLN (vs per-subvector LN) and codebook
+//! initialization (latent-matched vs N(0,1)) on the `up` projection group.
+//!
+//!     cargo bench --bench table7_rln_init
+
+use pocketllm::coordinator::job::{compress_group, CodebookInit, JobOpts};
+use pocketllm::model::group_rows;
+use pocketllm::report::{results_path, ExpContext};
+use pocketllm::util::benchlib::Table;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ExpContext::new("tiny")?;
+    let rows = group_rows(&ctx.base, "up")?;
+    let steps = ExpContext::steps(200);
+
+    let mut t = Table::new(
+        "Table 7 — RLN x codebook-init (up group, d=8, K=1024, m=3)",
+        &["RLN", "init", "vq", "mse", "mse_top100"],
+    );
+    for (rln, init) in [
+        (false, CodebookInit::Unmatched),
+        (false, CodebookInit::LatentMatched),
+        (true, CodebookInit::Unmatched),
+        (true, CodebookInit::LatentMatched),
+    ] {
+        let cfg = if rln { "w512_d8_k1024_m3_rln" } else { "w512_d8_k1024_m3_ln" };
+        let mc = ctx.rt.manifest.meta_cfg(cfg)?.clone();
+        let opts = JobOpts {
+            train_steps: steps,
+            kmeans_iters: 1,
+            post_steps: steps / 8,
+            codebook_init: init,
+            ..Default::default()
+        };
+        let res = compress_group(&ctx.rt, &mc, &rows, &opts)?;
+        t.row(vec![
+            if rln { "yes" } else { "no" }.into(),
+            if init == CodebookInit::LatentMatched { "yes" } else { "no" }.into(),
+            format!("{:.4}", res.metrics.vq_loss),
+            format!("{:.2e}", res.metrics.mse_loss),
+            format!("{:.3}", res.metrics.mse_top100),
+        ]);
+        eprintln!(
+            "[table7] rln={rln} init={init:?}: vq {:.4} mse {:.2e}",
+            res.metrics.vq_loss, res.metrics.mse_loss
+        );
+    }
+    t.emit(Some(&results_path("table7_rln_init.json")));
+    Ok(())
+}

@@ -1,0 +1,432 @@
+//! One layer-group compression job — Algorithm 1 of the paper, driven from
+//! Rust against the AOT executables:
+//!
+//! 1. initialize meta-nets theta (manifest init_std) and the codebook
+//!    (normal distribution matched to the latent statistics — the paper's
+//!    "codebook initialization", ablated in Table 7);
+//! 2. minibatch-train (encoder, decoder, codebook) with `meta_train_*`
+//!    (straight-through VQ + RMSE/MSE loss, Adam);
+//! 3. refine the codebook with Lloyd iterations via `meta_kmeans_*`
+//!    (decoupled from decoding, as the paper describes);
+//! 4. final `meta_assign_*` sweep to produce indices, the reconstruction,
+//!    and the vq/mse/mse_top100 metrics of Tables 5-7.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::GroupMetrics;
+use crate::runtime::manifest::MetaCfg;
+use crate::runtime::{Arg, Out, Runtime};
+use crate::tensor::{TensorF32, TensorI32};
+use crate::util::prng::Pcg32;
+use crate::util::stats::top_k_sum;
+
+/// Codebook initialization strategy (Table 7 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodebookInit {
+    /// N(mean, std) matched per-dimension to encoded latents (paper's init).
+    LatentMatched,
+    /// Plain N(0, 1) (the ablation's "no init" arm).
+    Unmatched,
+}
+
+/// Options of one compression job.
+#[derive(Clone, Debug)]
+pub struct JobOpts {
+    pub train_steps: usize,
+    pub kmeans_iters: usize,
+    /// Gradient steps after the Lloyd refinement so the decoder re-adapts
+    /// to the refined codebook (Lloyd alone improves vq but leaves the
+    /// decoder stale).
+    pub post_steps: usize,
+    pub codebook_init: CodebookInit,
+    pub seed: u64,
+    /// Record (vq, mse) every this many steps into the history.
+    pub log_every: usize,
+}
+
+impl Default for JobOpts {
+    fn default() -> Self {
+        JobOpts {
+            train_steps: 400,
+            kmeans_iters: 2,
+            post_steps: 60,
+            codebook_init: CodebookInit::LatentMatched,
+            seed: 0xC0DE,
+            log_every: 25,
+        }
+    }
+}
+
+/// Everything a job produces.
+#[derive(Clone, Debug)]
+pub struct GroupResult {
+    pub meta_cfg: String,
+    /// One codeword index per subvector, row-major over [rows, L].
+    pub indices: Vec<u32>,
+    /// Final codebook [K, d].
+    pub codebook: TensorF32,
+    /// Full meta parameters (encoder + decoder).
+    pub theta: TensorF32,
+    /// Reconstructed rows [rows, W].
+    pub recon: TensorF32,
+    /// Per-row (mean, std) side info, 2 values per row.
+    pub row_scales: Vec<f32>,
+    pub metrics: GroupMetrics,
+}
+
+/// Initialize theta from the manifest layout's init_std entries.
+pub fn init_theta(mc: &MetaCfg, rng: &mut Pcg32) -> TensorF32 {
+    let mut flat = vec![0.0f32; mc.theta.total];
+    for e in &mc.theta.entries {
+        if e.init_std > 0.0 {
+            rng.fill_normal(&mut flat[e.offset..e.offset + e.size], e.init_std);
+        }
+    }
+    TensorF32::new(vec![mc.theta.total], flat)
+}
+
+/// Slice the decoder half out of theta (what ships in the pocket file).
+pub fn decoder_slice(mc: &MetaCfg, theta: &TensorF32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(mc.decoder_params);
+    for e in &mc.theta.entries {
+        if e.name.starts_with("dec.") {
+            out.extend_from_slice(&theta.data[e.offset..e.offset + e.size]);
+        }
+    }
+    debug_assert_eq!(out.len(), mc.decoder_params);
+    out
+}
+
+/// Rebuild a full theta vector from a decoder slice (encoder zeroed — the
+/// encoder is discarded after training, exactly as the paper says).
+pub fn theta_from_decoder(mc: &MetaCfg, decoder: &[f32]) -> TensorF32 {
+    let mut flat = vec![0.0f32; mc.theta.total];
+    let mut off = 0usize;
+    for e in &mc.theta.entries {
+        if e.name.starts_with("dec.") {
+            flat[e.offset..e.offset + e.size].copy_from_slice(&decoder[off..off + e.size]);
+            off += e.size;
+        }
+    }
+    TensorF32::new(vec![mc.theta.total], flat)
+}
+
+/// Initialize the codebook (Table 7's second ablation axis).
+pub fn init_codebook(
+    rt: &Runtime,
+    mc: &MetaCfg,
+    theta: &TensorF32,
+    rows: &TensorF32,
+    init: CodebookInit,
+    rng: &mut Pcg32,
+) -> Result<TensorF32> {
+    let mut c = vec![0.0f32; mc.k * mc.d];
+    match init {
+        CodebookInit::Unmatched => {
+            rng.fill_normal(&mut c, 1.0);
+        }
+        CodebookInit::LatentMatched => {
+            // Encode a few chunks of rows and seed the codebook from the
+            // *actual* latent vectors (k-means style seeding, jittered by
+            // the empirical per-dim std) — this is the distribution-matched
+            // initialization the paper ablates in Table 7, done on the
+            // latent sample rather than a fitted gaussian.
+            let mut all: Vec<usize> = (0..rows.rows()).collect();
+            rng.shuffle(&mut all);
+            let n_chunks = (mc.k * mc.d / (mc.r * mc.w) + 1).clamp(1, rows.rows() / mc.r);
+            let mut latents: Vec<f32> = Vec::new();
+            for ci in 0..n_chunks {
+                let idx: Vec<usize> =
+                    all.iter().cycle().skip(ci * mc.r).take(mc.r).copied().collect();
+                let chunk = rows.gather_rows(&idx);
+                let z = rt
+                    .exec(
+                        &format!("meta_encode_{}", mc.encode_name),
+                        &[Arg::F32(theta.clone()), Arg::F32(chunk)],
+                    )?
+                    .remove(0)
+                    .f32()?;
+                latents.extend_from_slice(&z.data);
+            }
+            let n = latents.len() / mc.d;
+            // per-dim std for the jitter
+            let mut std = vec![0.0f32; mc.d];
+            for dim in 0..mc.d {
+                let mean: f64 = (0..n).map(|i| latents[i * mc.d + dim] as f64).sum::<f64>()
+                    / n as f64;
+                let var: f64 = (0..n)
+                    .map(|i| {
+                        let e = latents[i * mc.d + dim] as f64 - mean;
+                        e * e
+                    })
+                    .sum::<f64>()
+                    / n as f64;
+                std[dim] = var.sqrt().max(1e-4) as f32;
+            }
+            for k in 0..mc.k {
+                let src = rng.below(n as u32) as usize;
+                for dim in 0..mc.d {
+                    // small jitter splits duplicate seeds
+                    c[k * mc.d + dim] = latents[src * mc.d + dim]
+                        + 0.05 * std[dim] * rng.normal();
+                }
+            }
+        }
+    }
+    Ok(TensorF32::new(vec![mc.k, mc.d], c))
+}
+
+/// Full-group Lloyd (k-means) sweeps in latent space via `meta_kmeans_*`.
+fn lloyd(
+    rt: &Runtime,
+    mc: &MetaCfg,
+    theta: &TensorF32,
+    c: &mut TensorF32,
+    rows: &TensorF32,
+    iters: usize,
+) -> Result<()> {
+    let kmeans_name = format!("meta_kmeans_{}", mc.name);
+    let n_rows = rows.rows();
+    for _ in 0..iters {
+        let mut sums = vec![0.0f64; mc.k * mc.d];
+        let mut counts = vec![0.0f64; mc.k];
+        for chunk_i in 0..n_rows / mc.r {
+            let idx: Vec<usize> = (chunk_i * mc.r..(chunk_i + 1) * mc.r).collect();
+            let chunk = rows.gather_rows(&idx);
+            let outs = rt.exec(
+                &kmeans_name,
+                &[Arg::F32(theta.clone()), Arg::F32(c.clone()), Arg::F32(chunk)],
+            )?;
+            let s = outs[0].clone().f32()?;
+            let n = outs[1].clone().f32()?;
+            for (acc, v) in sums.iter_mut().zip(&s.data) {
+                *acc += *v as f64;
+            }
+            for (acc, v) in counts.iter_mut().zip(&n.data) {
+                *acc += *v as f64;
+            }
+        }
+        for k in 0..mc.k {
+            if counts[k] > 0.0 {
+                for dch in 0..mc.d {
+                    c.data[k * mc.d + dch] = (sums[k * mc.d + dch] / counts[k]) as f32;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run one full compression job over `rows` ([rows_total, W], rows_total
+/// divisible by the dispatch size R).
+pub fn compress_group(
+    rt: &Runtime,
+    mc: &MetaCfg,
+    rows: &TensorF32,
+    opts: &JobOpts,
+) -> Result<GroupResult> {
+    let t0 = Instant::now();
+    anyhow::ensure!(
+        rows.cols() == mc.w,
+        "rows width {} != meta config W {}",
+        rows.cols(),
+        mc.w
+    );
+    anyhow::ensure!(
+        rows.rows() % mc.r == 0,
+        "rows_total {} not divisible by dispatch R {}",
+        rows.rows(),
+        mc.r
+    );
+    let mut rng = Pcg32::seeded(opts.seed ^ mc.k as u64 ^ (mc.w as u64) << 20);
+
+    // 1. init (+ a Lloyd warm start so gradient training begins from a
+    //    codebook that already tessellates the initial latent cloud)
+    let mut theta = init_theta(mc, &mut rng);
+    let mut c = init_codebook(rt, mc, &theta, rows, opts.codebook_init, &mut rng)?;
+    if opts.codebook_init == CodebookInit::LatentMatched && opts.kmeans_iters > 0 {
+        lloyd(rt, mc, &theta, &mut c, rows, 2)?;
+    }
+    let zeros_t = TensorF32::zeros(vec![mc.theta.total]);
+    let zeros_c = TensorF32::zeros(vec![mc.k, mc.d]);
+    let (mut tm, mut tv) = (zeros_t.clone(), zeros_t);
+    let (mut cm, mut cv) = (zeros_c.clone(), zeros_c);
+
+    // 2. minibatch training (+ 5. post-Lloyd re-adaptation, same loop)
+    let train_name = format!("meta_train_{}", mc.name);
+    let mut history = Vec::new();
+    let n_rows = rows.rows();
+    let mut order: Vec<usize> = (0..n_rows).collect();
+    let mut run_steps = |theta: &mut TensorF32,
+                         tm: &mut TensorF32,
+                         tv: &mut TensorF32,
+                         c: &mut TensorF32,
+                         cm: &mut TensorF32,
+                         cv: &mut TensorF32,
+                         rng: &mut Pcg32,
+                         from: usize,
+                         count: usize,
+                         history: &mut Vec<(usize, f64, f64)>|
+     -> Result<()> {
+        for step in from..from + count {
+            // sample R distinct rows (reshuffle when the epoch is exhausted)
+            let base = ((step - 1) * mc.r) % n_rows;
+            if base == 0 {
+                rng.shuffle(&mut order);
+            }
+            let idx: Vec<usize> = (0..mc.r).map(|i| order[(base + i) % n_rows]).collect();
+            let chunk = rows.gather_rows(&idx);
+
+            let outs = rt.exec(
+                &train_name,
+                &[
+                    Arg::F32(std::mem::replace(theta, TensorF32::zeros(vec![0]))),
+                    Arg::F32(std::mem::replace(tm, TensorF32::zeros(vec![0]))),
+                    Arg::F32(std::mem::replace(tv, TensorF32::zeros(vec![0]))),
+                    Arg::Scalar(step as f32),
+                    Arg::F32(std::mem::replace(c, TensorF32::zeros(vec![0]))),
+                    Arg::F32(std::mem::replace(cm, TensorF32::zeros(vec![0]))),
+                    Arg::F32(std::mem::replace(cv, TensorF32::zeros(vec![0]))),
+                    Arg::F32(chunk),
+                ],
+            )?;
+            let mut it = outs.into_iter();
+            *theta = it.next().unwrap().f32()?;
+            *tm = it.next().unwrap().f32()?;
+            *tv = it.next().unwrap().f32()?;
+            *c = it.next().unwrap().f32()?;
+            *cm = it.next().unwrap().f32()?;
+            *cv = it.next().unwrap().f32()?;
+            let vq = it.next().unwrap().scalar()? as f64;
+            let mse = it.next().unwrap().scalar()? as f64;
+            if step % opts.log_every == 0 || step == 1 || step == from + count - 1 {
+                history.push((step, vq, mse));
+            }
+        }
+        Ok(())
+    };
+    run_steps(
+        &mut theta, &mut tm, &mut tv, &mut c, &mut cm, &mut cv, &mut rng, 1,
+        opts.train_steps, &mut history,
+    )?;
+
+    // 3. Lloyd refinement over the full group (latent-space k-means,
+    //    decoupled from decoding as the paper describes)
+    lloyd(rt, mc, &theta, &mut c, rows, opts.kmeans_iters)?;
+
+    // 5. decoder re-adaptation to the refined codebook
+    if opts.kmeans_iters > 0 && opts.post_steps > 0 {
+        // fresh codebook Adam state: its momentum refers to the old C
+        cm = TensorF32::zeros(vec![mc.k, mc.d]);
+        cv = TensorF32::zeros(vec![mc.k, mc.d]);
+        run_steps(
+            &mut theta, &mut tm, &mut tv, &mut c, &mut cm, &mut cv, &mut rng,
+            opts.train_steps + 1, opts.post_steps, &mut history,
+        )?;
+    }
+
+    // 4. final assignment sweep
+    let assign_name = format!("meta_assign_{}", mc.name);
+    let mut indices = Vec::with_capacity(n_rows * mc.l);
+    let mut recon = TensorF32::zeros(vec![n_rows, mc.w]);
+    let mut sq_s_all: Vec<f32> = Vec::with_capacity(n_rows * mc.l);
+    let mut row_scales = vec![0.0f32; 2 * n_rows];
+    let mut vq_sum = 0.0f64;
+    let mut z_energy = 0.0f64;
+    for chunk_i in 0..n_rows / mc.r {
+        let idx: Vec<usize> = (chunk_i * mc.r..(chunk_i + 1) * mc.r).collect();
+        let chunk = rows.gather_rows(&idx);
+        let outs = rt.exec(
+            &assign_name,
+            &[Arg::F32(theta.clone()), Arg::F32(c.clone()), Arg::F32(chunk)],
+        )?;
+        let got_idx: TensorI32 = outs[0].clone().i32()?;
+        let s_hat = outs[1].clone().f32()?;
+        let sq_s = outs[2].clone().f32()?;
+        let sq_z = outs[3].clone().f32()?;
+        let z_sq = outs[4].clone().f32()?;
+        let stats = outs[5].clone().f32()?;
+        indices.extend(got_idx.data.iter().map(|&v| v as u32));
+        recon.scatter_rows(&idx, &s_hat);
+        sq_s_all.extend_from_slice(&sq_s.data);
+        row_scales[2 * chunk_i * mc.r..2 * (chunk_i + 1) * mc.r]
+            .copy_from_slice(&stats.data);
+        vq_sum += sq_z.data.iter().map(|&v| v as f64).sum::<f64>();
+        z_energy += z_sq.data.iter().map(|&v| v as f64).sum::<f64>();
+    }
+
+    let n_sub = indices.len();
+    let mse_loss = sq_s_all.iter().map(|&v| v as f64).sum::<f64>() / (n_sub * mc.d) as f64;
+    // relative latent distortion (scale-invariant, matches the train metric)
+    let vq_loss = vq_sum / z_energy.max(1e-12);
+    let mse_top100 = top_k_sum(&sq_s_all, 100);
+    let mut used = vec![false; mc.k];
+    for &i in &indices {
+        used[i as usize] = true;
+    }
+    let utilization = used.iter().filter(|&&u| u).count() as f64 / mc.k as f64;
+
+    Ok(GroupResult {
+        meta_cfg: mc.name.clone(),
+        indices,
+        codebook: c,
+        theta,
+        recon,
+        row_scales,
+        metrics: GroupMetrics {
+            vq_loss,
+            mse_loss,
+            mse_top100,
+            history,
+            secs: t0.elapsed().as_secs_f64(),
+            codebook_utilization: utilization,
+        },
+    })
+}
+
+/// Reconstruct rows from (decoder, codebook, indices) via the AOT decode
+/// path — the exact computation an edge device runs after downloading a
+/// pocket file.
+pub fn decode_group(
+    rt: &Runtime,
+    mc: &MetaCfg,
+    decoder: &[f32],
+    codebook: &TensorF32,
+    indices: &[u32],
+    row_scales: &[f32],
+    n_rows: usize,
+) -> Result<TensorF32> {
+    anyhow::ensure!(indices.len() == n_rows * mc.l, "index count mismatch");
+    anyhow::ensure!(row_scales.len() == 2 * n_rows, "row scale count mismatch");
+    anyhow::ensure!(n_rows % mc.r == 0, "rows not divisible by dispatch size");
+    let theta = theta_from_decoder(mc, decoder);
+    let decode_name = format!("meta_decode_{}", mc.name);
+    let mut out = TensorF32::zeros(vec![n_rows, mc.w]);
+    for chunk_i in 0..n_rows / mc.r {
+        let rows_idx: Vec<usize> = (chunk_i * mc.r..(chunk_i + 1) * mc.r).collect();
+        let idx_chunk: Vec<i32> = indices
+            [chunk_i * mc.r * mc.l..(chunk_i + 1) * mc.r * mc.l]
+            .iter()
+            .map(|&v| v as i32)
+            .collect();
+        let stats_chunk =
+            row_scales[2 * chunk_i * mc.r..2 * (chunk_i + 1) * mc.r].to_vec();
+        let outs = rt.exec(
+            &decode_name,
+            &[
+                Arg::F32(theta.clone()),
+                Arg::F32(codebook.clone()),
+                Arg::I32(TensorI32::new(vec![mc.r, mc.l], idx_chunk)),
+                Arg::F32(TensorF32::new(vec![mc.r, 2], stats_chunk)),
+            ],
+        )?;
+        let rows_hat = match &outs[0] {
+            Out::F32(t) => t.clone(),
+            _ => anyhow::bail!("decode output dtype"),
+        };
+        out.scatter_rows(&rows_idx, &rows_hat);
+    }
+    Ok(out)
+}

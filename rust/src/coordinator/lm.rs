@@ -1,0 +1,130 @@
+//! LM substrate drivers: base-model training, LoRA fine-tuning (the paper's
+//! post-compression recovery stage), all through the AOT executables.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::model::WeightStore;
+use crate::runtime::{Arg, Runtime};
+use crate::tensor::TensorF32;
+use crate::util::prng::Pcg32;
+
+/// Train the LM substrate for `steps` on a corpus. Returns the weights and
+/// the loss curve (one entry per step).
+pub fn train_lm(
+    rt: &Runtime,
+    cfg_name: &str,
+    corpus: &Corpus,
+    steps: usize,
+    seed: u64,
+    log_every: usize,
+) -> Result<(WeightStore, Vec<f32>)> {
+    let cfg = rt.manifest.lm_cfg(cfg_name)?.clone();
+    let mut rng = Pcg32::seeded(seed);
+    let ws = WeightStore::init(&cfg, &mut rng);
+    let p_len = cfg.layout.total;
+    let mut params = ws.as_tensor();
+    let mut m = TensorF32::zeros(vec![p_len]);
+    let mut v = TensorF32::zeros(vec![p_len]);
+    let name = format!("lm_train_step_{cfg_name}");
+    let mut losses = Vec::with_capacity(steps);
+    for step in 1..=steps {
+        let toks = corpus.batch(cfg.train_batch, cfg.seq_len, step as u64);
+        let outs = rt.exec(
+            &name,
+            &[
+                Arg::F32(params),
+                Arg::F32(m),
+                Arg::F32(v),
+                Arg::Scalar(step as f32),
+                Arg::I32(toks),
+            ],
+        )?;
+        let mut it = outs.into_iter();
+        params = it.next().unwrap().f32()?;
+        m = it.next().unwrap().f32()?;
+        v = it.next().unwrap().f32()?;
+        let loss = it.next().unwrap().scalar()?;
+        losses.push(loss);
+        if log_every > 0 && (step % log_every == 0 || step == 1) {
+            eprintln!("[train {cfg_name}] step {step:4}  loss {loss:.4}");
+        }
+    }
+    Ok((WeightStore { cfg, flat: params.data }, losses))
+}
+
+/// LoRA fine-tune frozen base weights on the calibration corpus and merge
+/// the deltas (paper: "the standard LoRA algorithm ... once a time after
+/// compression").  Returns merged weights.
+pub fn lora_finetune(
+    rt: &Runtime,
+    base: &WeightStore,
+    corpus: &Corpus,
+    steps: usize,
+    seed: u64,
+) -> Result<WeightStore> {
+    let cfg = base.cfg.clone();
+    let name = format!("lora_train_step_{}", cfg.name);
+    let merge_name = format!("lora_merge_{}", cfg.name);
+    let mut rng = Pcg32::seeded(seed ^ 0x1072a);
+    let lora_init = WeightStore::init_lora(&cfg, &mut rng);
+    let lp = cfg.lora_layout.total;
+    let mut lora = TensorF32::new(vec![lp], lora_init);
+    let mut m = TensorF32::zeros(vec![lp]);
+    let mut v = TensorF32::zeros(vec![lp]);
+    let params = base.as_tensor();
+    for step in 1..=steps {
+        // distinct stream window from base training
+        let toks = corpus.batch(cfg.train_batch, cfg.seq_len, 0x0f00_0000 + step as u64);
+        let outs = rt.exec(
+            &name,
+            &[
+                Arg::F32(params.clone()),
+                Arg::F32(lora),
+                Arg::F32(m),
+                Arg::F32(v),
+                Arg::Scalar(step as f32),
+                Arg::I32(toks),
+            ],
+        )?;
+        let mut it = outs.into_iter();
+        lora = it.next().unwrap().f32()?;
+        m = it.next().unwrap().f32()?;
+        v = it.next().unwrap().f32()?;
+        let _loss = it.next().unwrap().scalar()?;
+    }
+    let merged = rt
+        .exec(&merge_name, &[Arg::F32(params), Arg::F32(lora)])?
+        .remove(0)
+        .f32()?;
+    Ok(WeightStore { cfg, flat: merged.data })
+}
+
+/// Train-once cache: benches share one trained base model per (cfg, steps,
+/// seed) so tables don't retrain.  Stored under `bench_results/models/`.
+pub fn cached_trained_model(
+    rt: &Runtime,
+    cfg_name: &str,
+    corpus: &Corpus,
+    steps: usize,
+    seed: u64,
+) -> Result<WeightStore> {
+    let cfg = rt.manifest.lm_cfg(cfg_name)?.clone();
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results/models");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!(
+        "{cfg_name}_s{steps}_seed{seed}_c{}.bin",
+        corpus.seed
+    ));
+    if path.exists() {
+        if let Ok(ws) = WeightStore::load(&cfg, &path) {
+            return Ok(ws);
+        }
+    }
+    eprintln!("[cache] training {cfg_name} for {steps} steps (one-time)...");
+    let (ws, _losses) = train_lm(rt, cfg_name, corpus, steps, seed, 50)?;
+    ws.save(&path)?;
+    Ok(ws)
+}

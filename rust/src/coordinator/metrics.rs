@@ -1,0 +1,75 @@
+//! Metric containers for compression jobs (the vq / mse / mse_top100
+//! triplet reported by the paper's Tables 5-7, plus training history).
+
+/// Final metrics of one group compression job.
+#[derive(Clone, Debug, Default)]
+pub struct GroupMetrics {
+    /// Mean squared latent distance to the selected codeword (paper's "vq").
+    pub vq_loss: f64,
+    /// Mean squared reconstruction error in weight space (paper's "mse").
+    pub mse_loss: f64,
+    /// Sum of the 100 largest per-subvector squared errors ("mse_top100").
+    pub mse_top100: f64,
+    /// (step, vq, mse) samples from the training loop.
+    pub history: Vec<(usize, f64, f64)>,
+    /// Wall-clock seconds spent in the job.
+    pub secs: f64,
+    /// Fraction of codebook entries actually used by the final assignment.
+    pub codebook_utilization: f64,
+}
+
+/// Whole-model compression report.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineReport {
+    pub per_group: Vec<(String, GroupMetrics)>,
+    /// Eq. 14 average bits over compressed weights.
+    pub avg_bits: f64,
+    /// Compression ratio vs f32.
+    pub ratio_fp32: f64,
+    pub total_secs: f64,
+}
+
+impl PipelineReport {
+    pub fn mean_mse(&self) -> f64 {
+        if self.per_group.is_empty() {
+            return 0.0;
+        }
+        self.per_group.iter().map(|(_, m)| m.mse_loss).sum::<f64>()
+            / self.per_group.len() as f64
+    }
+
+    pub fn mean_vq(&self) -> f64 {
+        if self.per_group.is_empty() {
+            return 0.0;
+        }
+        self.per_group.iter().map(|(_, m)| m.vq_loss).sum::<f64>()
+            / self.per_group.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_means() {
+        let mut r = PipelineReport::default();
+        r.per_group.push((
+            "q".into(),
+            GroupMetrics { vq_loss: 1.0, mse_loss: 0.1, ..Default::default() },
+        ));
+        r.per_group.push((
+            "v".into(),
+            GroupMetrics { vq_loss: 3.0, mse_loss: 0.3, ..Default::default() },
+        ));
+        assert!((r.mean_vq() - 2.0).abs() < 1e-12);
+        assert!((r.mean_mse() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_is_zero() {
+        let r = PipelineReport::default();
+        assert_eq!(r.mean_vq(), 0.0);
+        assert_eq!(r.mean_mse(), 0.0);
+    }
+}

@@ -1,0 +1,177 @@
+//! The compression coordinator — this paper's L3 system contribution.
+//!
+//! [`compress_model`] walks the model's layer groups, runs one
+//! [`job::compress_group`] per group (meta-training + k-means + assignment,
+//! all through the AOT executables), assembles the [`PocketFile`] an edge
+//! device would download, and returns the reconstructed weights alongside
+//! the Eq. 14 accounting and per-group metrics.
+//!
+//! [`reconstruct_from_pocket`] is the device side: pocket file -> dense
+//! weights, using only the decoder + codebook + indices.
+
+pub mod job;
+pub mod lm;
+pub mod metrics;
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::model::{group_rows, scatter_group_rows, WeightStore, GROUPS};
+use crate::packfmt::{ratio_for, GroupRecord, PocketFile};
+use crate::runtime::Runtime;
+use crate::util::bitpack::BitPacked;
+use job::JobOpts;
+use metrics::PipelineReport;
+
+/// What to compress and how.
+#[derive(Clone, Debug)]
+pub struct PipelineOpts {
+    /// Ratio preset name (p8x / p10x / p16x / p20x) used to resolve each
+    /// group's meta config by row width.
+    pub preset: String,
+    /// Only compress these groups (None = all seven).
+    pub groups: Option<Vec<String>>,
+    /// Per-group job options.
+    pub job: JobOpts,
+    /// Override the meta config entirely (ablations); `{width}` resolved.
+    pub meta_override: Option<String>,
+}
+
+impl Default for PipelineOpts {
+    fn default() -> Self {
+        PipelineOpts {
+            preset: "p8x".to_string(),
+            groups: None,
+            job: JobOpts::default(),
+            meta_override: None,
+        }
+    }
+}
+
+/// Output of a whole-model compression run.
+pub struct CompressedModel {
+    pub pocket: PocketFile,
+    /// The model with compressed groups replaced by their reconstruction
+    /// (what you evaluate).
+    pub reconstructed: WeightStore,
+    pub report: PipelineReport,
+}
+
+fn resolve_meta_name(rt: &Runtime, opts: &PipelineOpts, width: usize) -> Result<String> {
+    if let Some(ov) = &opts.meta_override {
+        return Ok(ov.replace("{width}", &width.to_string()));
+    }
+    Ok(rt.manifest.meta_for_preset(width, &opts.preset)?.name.clone())
+}
+
+/// Compress (some groups of) a model. Uncompressed groups and the
+/// embedding/norm residue are carried densely in the pocket file.
+pub fn compress_model(
+    rt: &Runtime,
+    ws: &WeightStore,
+    opts: &PipelineOpts,
+) -> Result<CompressedModel> {
+    let t0 = Instant::now();
+    let selected: Vec<String> = match &opts.groups {
+        Some(g) => g.clone(),
+        None => GROUPS.iter().map(|s| s.to_string()).collect(),
+    };
+
+    let mut pocket = PocketFile { lm_cfg: ws.cfg.name.clone(), ..Default::default() };
+    let mut reconstructed = ws.clone();
+    let mut report = PipelineReport::default();
+
+    for gname in &selected {
+        let gi = ws
+            .cfg
+            .groups
+            .get(gname)
+            .with_context(|| format!("unknown group {gname:?}"))?;
+        let mc = rt.manifest.meta_cfg(&resolve_meta_name(rt, opts, gi.width)?)?.clone();
+        let rows = group_rows(ws, gname)?;
+        eprintln!(
+            "[compress] group {gname:5} rows {}x{} with {} ({} steps)",
+            rows.rows(),
+            rows.cols(),
+            mc.name,
+            opts.job.train_steps
+        );
+        let res = job::compress_group(rt, &mc, &rows, &opts.job)?;
+        scatter_group_rows(&mut reconstructed, gname, &res.recon)?;
+        pocket.groups.insert(
+            gname.clone(),
+            GroupRecord {
+                meta_cfg: mc.name.clone(),
+                rows: rows.rows(),
+                width: rows.cols(),
+                codebook: res.codebook,
+                indices: BitPacked::pack(&res.indices, mc.bits_per_index()),
+                decoder: job::decoder_slice(&mc, &res.theta),
+                row_scales: res.row_scales,
+            },
+        );
+        report.per_group.push((gname.clone(), res.metrics));
+    }
+
+    // Dense residue: everything not covered by a compressed group.
+    let compressed_tensors: Vec<String> = selected
+        .iter()
+        .flat_map(|g| {
+            let gi = &ws.cfg.groups[g];
+            (0..ws.cfg.n_layers)
+                .flat_map(move |b| gi.tensors.iter().map(move |t| format!("b{b}.{t}")))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    for e in &ws.cfg.layout.entries {
+        if !compressed_tensors.contains(&e.name) {
+            pocket
+                .dense
+                .insert(e.name.clone(), ws.flat[e.offset..e.offset + e.size].to_vec());
+        }
+    }
+
+    report.avg_bits = pocket.avg_bits(&rt.manifest.meta);
+    report.ratio_fp32 = if report.avg_bits > 0.0 { 32.0 / report.avg_bits } else { 0.0 };
+    report.total_secs = t0.elapsed().as_secs_f64();
+    Ok(CompressedModel { pocket, reconstructed, report })
+}
+
+/// Device-side load: pocket file -> dense weight store, decoding every
+/// compressed group through the AOT decode path (gather + meta decoder).
+pub fn reconstruct_from_pocket(rt: &Runtime, pocket: &PocketFile) -> Result<WeightStore> {
+    let cfg = rt.manifest.lm_cfg(&pocket.lm_cfg)?.clone();
+    let mut flat = vec![0.0f32; cfg.layout.total];
+    // dense residue first
+    for (name, buf) in &pocket.dense {
+        let e = cfg.layout.find(name)?;
+        anyhow::ensure!(buf.len() == e.size, "dense buffer {name} size mismatch");
+        flat[e.offset..e.offset + e.size].copy_from_slice(buf);
+    }
+    let mut ws = WeightStore { cfg: cfg.clone(), flat };
+    // decode compressed groups
+    for (gname, rec) in &pocket.groups {
+        let mc = rt.manifest.meta_cfg(&rec.meta_cfg)?.clone();
+        let indices = rec.indices.unpack();
+        let rows = job::decode_group(
+            rt, &mc, &rec.decoder, &rec.codebook, &indices, &rec.row_scales, rec.rows,
+        )?;
+        scatter_group_rows(&mut ws, gname, &rows)?;
+    }
+    Ok(ws)
+}
+
+/// Summarize the Eq. 14 numbers for a preset applied to a model (without
+/// running compression) — used by docs and the CLI `info` command.
+pub fn preset_summary(rt: &Runtime, cfg_name: &str, preset: &str) -> Result<Vec<(String, f64, f64)>> {
+    let cfg = rt.manifest.lm_cfg(cfg_name)?;
+    let mut out = Vec::new();
+    for g in GROUPS {
+        let gi = &cfg.groups[g];
+        let mc = rt.manifest.meta_for_preset(gi.width, preset)?;
+        let r = ratio_for(mc, gi.params / mc.d, gi.rows_total);
+        out.push((g.to_string(), r.avg_bits, r.ratio_fp32));
+    }
+    Ok(out)
+}

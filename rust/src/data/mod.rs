@@ -1,0 +1,182 @@
+//! Synthetic data substrate (DESIGN.md §4).
+//!
+//! The paper evaluates on WikiText-2 / C4 and five zero-shot suites; those
+//! need gated checkpoints and datasets, so we substitute a *Zipf-Markov*
+//! corpus: token frequencies follow a Zipf profile (like natural language)
+//! and each token has a small set of preferred successors (learnable bigram
+//! structure), so a trained LM reaches a perplexity far below uniform and
+//! compression damage is measurable.  Two corpus seeds stand in for the two
+//! perplexity datasets.
+
+pub mod tasks;
+
+use crate::tensor::TensorI32;
+use crate::util::prng::{Pcg32, Zipf};
+
+/// Number of preferred successors per state.
+const FANOUT: usize = 8;
+/// Probability of following the preferred-successor structure.
+const STRUCT_P: f32 = 0.85;
+
+/// A deterministic Zipf-Markov token source.
+#[derive(Clone)]
+pub struct Corpus {
+    pub vocab: usize,
+    pub seed: u64,
+    zipf: Zipf,
+    /// successors[s] = FANOUT preferred next-tokens of state s.
+    successors: Vec<[u32; FANOUT]>,
+}
+
+impl Corpus {
+    /// Build the chain structure for a vocabulary (one-time, O(V * FANOUT)).
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 0x5eed);
+        let zipf = Zipf::new(vocab, 1.05);
+        let successors = (0..vocab)
+            .map(|_| {
+                let mut succ = [0u32; FANOUT];
+                for s in succ.iter_mut() {
+                    // successors themselves are Zipf-biased so frequent
+                    // tokens stay frequent
+                    *s = zipf.sample(&mut rng) as u32;
+                }
+                succ
+            })
+            .collect();
+        Corpus { vocab, seed, zipf, successors }
+    }
+
+    /// Sample the next token given the current one.
+    pub fn next_token(&self, cur: u32, rng: &mut Pcg32) -> u32 {
+        if rng.next_f32() < STRUCT_P {
+            // preferred successor, geometrically biased toward the first
+            let mut i = 0usize;
+            while i + 1 < FANOUT && rng.next_f32() < 0.45 {
+                i += 1;
+            }
+            self.successors[cur as usize][i]
+        } else {
+            self.zipf.sample(rng) as u32
+        }
+    }
+
+    /// Generate a fresh sequence of `len` tokens from a seeded walk.
+    pub fn sequence(&self, len: usize, stream: u64) -> Vec<u32> {
+        let mut rng = Pcg32::new(self.seed ^ 0xc0ffee, stream);
+        let mut out = Vec::with_capacity(len);
+        let mut cur = self.zipf.sample(&mut rng) as u32;
+        for _ in 0..len {
+            out.push(cur);
+            cur = self.next_token(cur, &mut rng);
+        }
+        out
+    }
+
+    /// Continue a walk from `state` for `len` tokens with an explicit rng.
+    pub fn continue_from(&self, state: u32, len: usize, rng: &mut Pcg32) -> Vec<u32> {
+        let mut out = Vec::with_capacity(len);
+        let mut cur = state;
+        for _ in 0..len {
+            cur = self.next_token(cur, rng);
+            out.push(cur);
+        }
+        out
+    }
+
+    /// A [batch, seq+1] training batch as an i32 tensor (stream-indexed so
+    /// every step sees fresh data, deterministically).
+    pub fn batch(&self, batch: usize, seq: usize, step: u64) -> TensorI32 {
+        let mut data = Vec::with_capacity(batch * (seq + 1));
+        for b in 0..batch {
+            let s = self.sequence(seq + 1, step * 9973 + b as u64 + 1);
+            data.extend(s.into_iter().map(|t| t as i32));
+        }
+        TensorI32::new(vec![batch, seq + 1], data)
+    }
+
+    /// A fixed held-out evaluation set of `n_batches` (disjoint stream range
+    /// from training: training uses streams >= 1, eval uses a high window).
+    pub fn eval_batches(&self, n_batches: usize, batch: usize, seq: usize) -> Vec<TensorI32> {
+        (0..n_batches)
+            .map(|i| {
+                let mut data = Vec::with_capacity(batch * (seq + 1));
+                for b in 0..batch {
+                    let s = self.sequence(
+                        seq + 1,
+                        0xeba1_0000_0000 + (i * batch + b) as u64,
+                    );
+                    data.extend(s.into_iter().map(|t| t as i32));
+                }
+                TensorI32::new(vec![batch, seq + 1], data)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_sequences() {
+        let c = Corpus::new(512, 42);
+        assert_eq!(c.sequence(64, 1), c.sequence(64, 1));
+        assert_ne!(c.sequence(64, 1), c.sequence(64, 2));
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = Corpus::new(128, 7);
+        for t in c.sequence(1000, 3) {
+            assert!((t as usize) < 128);
+        }
+    }
+
+    #[test]
+    fn zipf_profile_visible() {
+        let c = Corpus::new(512, 1);
+        let mut counts = vec![0u32; 512];
+        for t in c.sequence(50_000, 9) {
+            counts[t as usize] += 1;
+        }
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        // head is much heavier than the tail
+        let head: u32 = sorted[..16].iter().sum();
+        let tail: u32 = sorted[256..].iter().sum();
+        assert!(head > tail, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn bigram_structure_is_learnable() {
+        // Empirical conditional entropy must be far below uniform ln(V).
+        let c = Corpus::new(256, 5);
+        let seq = c.sequence(200_000, 11);
+        let mut bigrams = std::collections::HashMap::new();
+        let mut uni = vec![0f64; 256];
+        for w in seq.windows(2) {
+            *bigrams.entry((w[0], w[1])).or_insert(0f64) += 1.0;
+            uni[w[0] as usize] += 1.0;
+        }
+        let total = (seq.len() - 1) as f64;
+        let mut h = 0.0;
+        for ((a, _), n) in &bigrams {
+            let p_joint = n / total;
+            let p_cond = n / uni[*a as usize];
+            h -= p_joint * p_cond.ln();
+        }
+        let uniform = (256f64).ln();
+        assert!(h < uniform * 0.75, "cond entropy {h:.3} vs uniform {uniform:.3}");
+    }
+
+    #[test]
+    fn batches_have_right_shape_and_are_disjoint_from_eval() {
+        let c = Corpus::new(512, 2);
+        let b = c.batch(4, 32, 1);
+        assert_eq!(b.shape, vec![4, 33]);
+        let evals = c.eval_batches(2, 4, 32);
+        assert_eq!(evals.len(), 2);
+        assert_ne!(evals[0].data, b.data);
+    }
+}

@@ -1,0 +1,190 @@
+//! Synthetic zero-shot task suites (the WinoGrande/PiQA/HellaSwag/ARC-e/
+//! ARC-c stand-ins) plus an MMLU-like "hard probe" (Table 4).
+//!
+//! Each task instance is a multiple-choice cloze: a context sampled from the
+//! corpus chain, one *gold* continuation that follows the chain, and k-1
+//! distractor continuations sampled from walks started at other states.  A
+//! model that has learned the corpus bigram structure ranks the gold
+//! continuation's NLL lowest; compression damage pushes accuracy toward the
+//! 1/k chance floor — the same signal the paper's accuracy tables carry.
+//!
+//! Difficulty knobs per suite: number of choices, continuation length
+//! (shorter = fewer evidence tokens = harder), and distractor plausibility
+//! (plausible distractors start from a *related* state).
+
+use super::Corpus;
+use crate::util::prng::Pcg32;
+
+/// One multiple-choice instance.
+#[derive(Clone, Debug)]
+pub struct TaskInstance {
+    pub context: Vec<u32>,
+    /// choices[i] = candidate continuation tokens.
+    pub choices: Vec<Vec<u32>>,
+    pub gold: usize,
+}
+
+/// Suite definition.
+#[derive(Clone, Copy, Debug)]
+pub struct SuiteSpec {
+    pub name: &'static str,
+    pub n_choices: usize,
+    pub context_len: usize,
+    pub cont_len: usize,
+    /// if true, distractors continue from a neighbour state (harder).
+    pub plausible_distractors: bool,
+}
+
+/// The five accuracy suites of Tables 1-2 (paper stand-ins), in order.
+pub const ZERO_SHOT_SUITES: [SuiteSpec; 5] = [
+    SuiteSpec { name: "WinoG-syn", n_choices: 2, context_len: 24, cont_len: 4, plausible_distractors: true },
+    SuiteSpec { name: "PiQA-syn", n_choices: 2, context_len: 32, cont_len: 8, plausible_distractors: false },
+    SuiteSpec { name: "HellaS-syn", n_choices: 4, context_len: 48, cont_len: 12, plausible_distractors: false },
+    SuiteSpec { name: "ArcE-syn", n_choices: 4, context_len: 32, cont_len: 8, plausible_distractors: false },
+    SuiteSpec { name: "ArcC-syn", n_choices: 5, context_len: 32, cont_len: 6, plausible_distractors: true },
+];
+
+/// The MMLU-like hard probe used by the Table 4 layer ablation.
+pub const MMLU_SUITE: SuiteSpec = SuiteSpec {
+    name: "MMLU-syn",
+    n_choices: 4,
+    context_len: 20,
+    cont_len: 4,
+    plausible_distractors: true,
+};
+
+/// Generate `n` instances of a suite from a corpus (deterministic).
+pub fn generate(corpus: &Corpus, spec: &SuiteSpec, n: usize, seed: u64) -> Vec<TaskInstance> {
+    let mut rng = Pcg32::new(seed ^ 0x7a5c, 0xbeef);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ctx_stream = rng.next_u64() | 1;
+        let context = corpus.sequence(spec.context_len, ctx_stream);
+        let last = *context.last().unwrap();
+
+        let mut gold_rng = rng.fork(1);
+        let gold_cont = corpus.continue_from(last, spec.cont_len, &mut gold_rng);
+
+        let mut choices = Vec::with_capacity(spec.n_choices);
+        let gold_pos = rng.below(spec.n_choices as u32) as usize;
+        for i in 0..spec.n_choices {
+            if i == gold_pos {
+                choices.push(gold_cont.clone());
+            } else {
+                // distractor: continuation from a different start state
+                let start = if spec.plausible_distractors {
+                    // a frequent token close in rank to the true state
+                    ((last as usize + 1 + rng.below(8) as usize) % corpus.vocab) as u32
+                } else {
+                    rng.below(corpus.vocab as u32)
+                };
+                let mut drng = rng.fork(100 + i as u64);
+                let mut cont = corpus.continue_from(start, spec.cont_len, &mut drng);
+                if cont == gold_cont {
+                    // pathological collision: perturb one token
+                    let j = cont.len() - 1;
+                    cont[j] = (cont[j] + 1) % corpus.vocab as u32;
+                }
+                choices.push(cont);
+            }
+        }
+        out.push(TaskInstance { context, choices, gold: gold_pos });
+    }
+    out
+}
+
+/// Pack one (instance, choice) into padded `tokens[seq+1]` + `mask[seq]`.
+///
+/// Layout: `[context | choice | pad(0)...]`; mask is 1 exactly at target
+/// positions predicting the choice tokens (i.e. the NLL of the continuation
+/// given the context), matching `model.lm_seq_nll`.
+pub fn pack_choice(
+    inst: &TaskInstance,
+    choice: usize,
+    seq_len: usize,
+) -> (Vec<i32>, Vec<f32>) {
+    let mut toks: Vec<i32> = Vec::with_capacity(seq_len + 1);
+    toks.extend(inst.context.iter().map(|&t| t as i32));
+    toks.extend(inst.choices[choice].iter().map(|&t| t as i32));
+    assert!(toks.len() <= seq_len + 1, "instance longer than model context");
+    let clen = inst.context.len();
+    let cont = inst.choices[choice].len();
+    toks.resize(seq_len + 1, 0);
+    // mask over target positions: target position p predicts tokens_ext[p+1]
+    let mut mask = vec![0.0f32; seq_len];
+    for p in (clen - 1)..(clen - 1 + cont) {
+        mask[p] = 1.0;
+    }
+    (toks, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        Corpus::new(512, 42)
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let c = corpus();
+        let a = generate(&c, &ZERO_SHOT_SUITES[0], 10, 1);
+        let b = generate(&c, &ZERO_SHOT_SUITES[0], 10, 1);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.gold, y.gold);
+            assert_eq!(x.choices, y.choices);
+        }
+    }
+
+    #[test]
+    fn gold_positions_are_spread() {
+        let c = corpus();
+        let insts = generate(&c, &ZERO_SHOT_SUITES[2], 200, 3);
+        let mut counts = vec![0usize; 4];
+        for i in &insts {
+            counts[i.gold] += 1;
+        }
+        for &n in &counts {
+            assert!(n > 20, "gold position skew: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn distractors_differ_from_gold() {
+        let c = corpus();
+        for spec in &ZERO_SHOT_SUITES {
+            for inst in generate(&c, spec, 50, 7) {
+                let gold = &inst.choices[inst.gold];
+                for (i, ch) in inst.choices.iter().enumerate() {
+                    if i != inst.gold {
+                        assert_ne!(ch, gold, "{}", spec.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_choice_layout() {
+        let c = corpus();
+        let inst = &generate(&c, &ZERO_SHOT_SUITES[1], 1, 5)[0];
+        let (toks, mask) = pack_choice(inst, 0, 128);
+        assert_eq!(toks.len(), 129);
+        assert_eq!(mask.len(), 128);
+        let ones: usize = mask.iter().map(|&m| m as usize).sum();
+        assert_eq!(ones, inst.choices[0].len());
+        // first masked target predicts the first continuation token
+        let clen = inst.context.len();
+        assert_eq!(mask[clen - 1], 1.0);
+        assert_eq!(toks[clen], inst.choices[0][0] as i32);
+    }
+
+    #[test]
+    fn mmlu_suite_is_hardest_profile() {
+        assert!(MMLU_SUITE.cont_len <= 4);
+        assert!(MMLU_SUITE.plausible_distractors);
+    }
+}

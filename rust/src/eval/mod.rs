@@ -1,0 +1,172 @@
+//! Evaluation harness: perplexity over held-out corpora and zero-shot
+//! multiple-choice accuracy over the synthetic task suites — the measurement
+//! side of Tables 1-4, plus the Fig. 2 weight histogram.
+
+use anyhow::Result;
+
+use crate::data::tasks::{generate, pack_choice, SuiteSpec, TaskInstance};
+use crate::data::Corpus;
+use crate::model::WeightStore;
+use crate::runtime::{Arg, Runtime};
+use crate::tensor::{TensorF32, TensorI32};
+use crate::util::stats::{central_range, Histogram};
+
+/// Perplexity of a model over `n_batches` held-out batches of a corpus.
+pub fn perplexity(
+    rt: &Runtime,
+    ws: &WeightStore,
+    corpus: &Corpus,
+    n_batches: usize,
+) -> Result<f64> {
+    let cfg = &ws.cfg;
+    let name = format!("lm_eval_nll_{}", cfg.name);
+    let params = ws.as_tensor();
+    let mut total = 0.0f64;
+    let mut count = 0.0f64;
+    for b in corpus.eval_batches(n_batches, cfg.eval_batch, cfg.seq_len) {
+        let outs = rt.exec(&name, &[Arg::F32(params.clone()), Arg::I32(b)])?;
+        total += outs[0].clone().scalar()? as f64;
+        count += outs[1].clone().scalar()? as f64;
+    }
+    Ok((total / count).exp())
+}
+
+/// Score every (instance, choice) pair with the masked per-sequence NLL and
+/// return suite accuracy (gold ranked first).
+pub fn zero_shot_accuracy(
+    rt: &Runtime,
+    ws: &WeightStore,
+    corpus: &Corpus,
+    spec: &SuiteSpec,
+    n_instances: usize,
+    seed: u64,
+) -> Result<f64> {
+    let insts = generate(corpus, spec, n_instances, seed);
+    let nlls = score_instances(rt, ws, &insts)?;
+    let mut correct = 0usize;
+    for (inst, choice_nlls) in insts.iter().zip(&nlls) {
+        let best = choice_nlls
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if best == inst.gold {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / insts.len() as f64)
+}
+
+/// Per-instance, per-choice NLLs, batched through `lm_seq_nll_*`.
+pub fn score_instances(
+    rt: &Runtime,
+    ws: &WeightStore,
+    insts: &[TaskInstance],
+) -> Result<Vec<Vec<f32>>> {
+    let cfg = &ws.cfg;
+    let name = format!("lm_seq_nll_{}", cfg.name);
+    let params = ws.as_tensor();
+    let b = cfg.eval_batch;
+    let s = cfg.seq_len;
+
+    // flatten (instance, choice) pairs
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    for (i, inst) in insts.iter().enumerate() {
+        for c in 0..inst.choices.len() {
+            pairs.push((i, c));
+        }
+    }
+    let mut out: Vec<Vec<f32>> = insts.iter().map(|i| vec![0.0; i.choices.len()]).collect();
+
+    for window in pairs.chunks(b) {
+        let mut toks = Vec::with_capacity(b * (s + 1));
+        let mut mask = Vec::with_capacity(b * s);
+        for &(i, c) in window {
+            let (t, m) = pack_choice(&insts[i], c, s);
+            toks.extend(t);
+            mask.extend(m);
+        }
+        // pad the final partial batch with empty rows
+        for _ in window.len()..b {
+            toks.extend(std::iter::repeat(0).take(s + 1));
+            mask.extend(std::iter::repeat(1.0f32).take(s)); // avoid 0-count div
+        }
+        let outs = rt.exec(
+            &name,
+            &[
+                Arg::F32(params.clone()),
+                Arg::I32(TensorI32::new(vec![b, s + 1], toks)),
+                Arg::F32(TensorF32::new(vec![b, s], mask)),
+            ],
+        )?;
+        let nll = outs[0].clone().f32()?;
+        for (slot, &(i, c)) in window.iter().enumerate() {
+            out[i][c] = nll.data[slot];
+        }
+    }
+    Ok(out)
+}
+
+/// Weight-value histogram within the central `frac` range (Fig. 2).
+pub fn weight_histogram(values: &[f32], frac: f64, bins: usize) -> (Histogram, (f32, f32)) {
+    let (lo, hi) = central_range(values, frac);
+    let mut h = Histogram::new(lo as f64, hi as f64, bins);
+    h.extend(values);
+    (h, (lo, hi))
+}
+
+/// Gaussian fit quality of a histogram: normalized RMS deviation between
+/// the empirical bin mass and the best-fit normal (Fig. 2's "approximately
+/// follow a normal distribution" claim, made quantitative).
+pub fn gaussian_fit_error(values: &[f32], h: &Histogram) -> f64 {
+    let mut w = crate::util::stats::Welford::new();
+    w.extend(values);
+    let (mu, sigma) = (w.mean(), w.std().max(1e-12));
+    let total = h.total() as f64;
+    let mut err = 0.0f64;
+    let bins = h.counts().len();
+    for i in 0..bins {
+        let x = h.bin_center(i);
+        let z = (x - mu) / sigma;
+        let bin_w = (h.bin_center(1) - h.bin_center(0)).abs();
+        let expected = (-0.5 * z * z).exp() / (sigma * (2.0 * std::f64::consts::PI).sqrt())
+            * bin_w;
+        let got = h.counts()[i] as f64 / total;
+        err += (got - expected) * (got - expected);
+    }
+    (err / bins as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn histogram_covers_central_mass() {
+        let mut rng = Pcg32::seeded(3);
+        let mut xs = vec![0.0f32; 20_000];
+        rng.fill_normal(&mut xs, 0.05);
+        let (h, (lo, hi)) = weight_histogram(&xs, 0.999, 64);
+        assert!(lo < -0.1 && hi > 0.1);
+        let inside: u64 = h.counts().iter().sum();
+        assert!(inside as f64 / h.total() as f64 > 0.995);
+    }
+
+    #[test]
+    fn gaussian_fit_is_good_for_gaussian_and_bad_for_bimodal() {
+        let mut rng = Pcg32::seeded(4);
+        let mut gauss = vec![0.0f32; 50_000];
+        rng.fill_normal(&mut gauss, 1.0);
+        let (hg, _) = weight_histogram(&gauss, 0.999, 64);
+        let eg = gaussian_fit_error(&gauss, &hg);
+
+        let bimodal: Vec<f32> = (0..50_000)
+            .map(|i| if i % 2 == 0 { 3.0 + rng.normal() * 0.1 } else { -3.0 + rng.normal() * 0.1 })
+            .collect();
+        let (hb, _) = weight_histogram(&bimodal, 0.999, 64);
+        let eb = gaussian_fit_error(&bimodal, &hb);
+        assert!(eg < eb * 0.5, "gauss {eg} vs bimodal {eb}");
+    }
+}

@@ -1,0 +1,37 @@
+//! # PocketLLM — extreme LLM weight compression via meta-networks
+//!
+//! Rust reproduction of *PocketLLM: Ultimate Compression of Large Language
+//! Models via Meta Networks* (AAAI 2026).  Three-layer architecture:
+//!
+//! * **L1** — Pallas kernels (nearest-codeword assignment, fused meta-net
+//!   layers, RLN, codebook gather), authored in `python/compile/kernels/`.
+//! * **L2** — JAX compute graphs (meta encoder/decoder training with
+//!   straight-through VQ, k-means refinement, the tiny-LM substrate, LoRA
+//!   recovery), authored in `python/compile/model.py`.
+//! * **L3** — this crate: the compression **coordinator**.  It loads the
+//!   AOT-lowered HLO artifacts through PJRT (the [`runtime`] module), drives
+//!   per-layer-group compression jobs ([`coordinator`]), owns the synthetic
+//!   data/task substrates ([`data`]), the on-disk pocket format with exact
+//!   Eq. 13/14 ratio accounting ([`packfmt`]), the traditional-compression
+//!   baselines ([`quant`]), and the evaluation harness ([`eval`]).
+//!
+//! Python runs **once** at build time (`make artifacts`); the binary is
+//! self-contained afterwards.
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
+//! reproduced tables/figures.
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod packfmt;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias (anyhow-based: the only error-handling crate
+/// available in the offline vendor set).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,170 @@
+//! `pocketllm` — the coordinator CLI.
+//!
+//! Subcommands:
+//!   info                          manifest + preset ratio summary
+//!   train-lm                      train the substrate LM, save weights
+//!   compress                      compress a trained model into a .pocket file
+//!   reconstruct                   pocket file -> dense weights (device side)
+//!   eval                          perplexity + zero-shot suites of a weight file
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+use pocketllm::coordinator::{compress_model, lm, preset_summary, reconstruct_from_pocket, PipelineOpts};
+use pocketllm::data::tasks::ZERO_SHOT_SUITES;
+use pocketllm::data::Corpus;
+use pocketllm::eval::{perplexity, zero_shot_accuracy};
+use pocketllm::model::WeightStore;
+use pocketllm::packfmt::PocketFile;
+use pocketllm::runtime::Runtime;
+use pocketllm::util::benchlib::Table;
+use pocketllm::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn run() -> Result<()> {
+    let cmd = std::env::args().nth(1).unwrap_or_else(|| "help".to_string());
+    let args = Args::parse_env(2, &["no-finetune", "verbose"])?;
+    match cmd.as_str() {
+        "info" => cmd_info(&args),
+        "train-lm" => cmd_train_lm(&args),
+        "compress" => cmd_compress(&args),
+        "reconstruct" => cmd_reconstruct(&args),
+        "eval" => cmd_eval(&args),
+        "help" | "--help" | "-h" => {
+            println!(
+                "pocketllm — PocketLLM compression coordinator\n\
+                 \n\
+                 usage: pocketllm <command> [options]\n\
+                 \n\
+                 commands:\n\
+                 \x20 info         show manifest summary and Eq.14 preset ratios\n\
+                 \x20 train-lm     train the substrate LM     (--model tiny --steps 300 --out w.bin)\n\
+                 \x20 compress     compress trained weights   (--model tiny --weights w.bin --preset p8x --out m.pocket)\n\
+                 \x20 reconstruct  pocket -> dense weights    (--pocket m.pocket --out w2.bin)\n\
+                 \x20 eval         ppl + zero-shot accuracy   (--model tiny --weights w.bin)\n"
+            );
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `pocketllm help`)"),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    println!(
+        "manifest: {} artifacts, {} LM configs, {} meta configs",
+        rt.manifest.artifacts.len(),
+        rt.manifest.lm.len(),
+        rt.manifest.meta.len()
+    );
+    for (name, cfg) in &rt.manifest.lm {
+        println!(
+            "  model {name}: d_model {}, layers {}, params {} ({} linear)",
+            cfg.d_model,
+            cfg.n_layers,
+            cfg.layout.total,
+            cfg.groups.values().map(|g| g.params).sum::<usize>()
+        );
+    }
+    let model = args.str_or("model", "tiny");
+    let mut t = Table::new(
+        &format!("Eq.14 ratios for {model}"),
+        &["preset", "group", "avg_bits", "ratio_vs_fp32"],
+    );
+    for preset in ["p8x", "p10x", "p16x", "p20x"] {
+        for (g, bits, ratio) in preset_summary(&rt, &model, preset)? {
+            t.row(vec![preset.into(), g, format!("{bits:.2}"), format!("{ratio:.1}x")]);
+        }
+    }
+    t.emit(None);
+    Ok(())
+}
+
+fn cmd_train_lm(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let model = args.str_or("model", "tiny");
+    let steps = args.usize_or("steps", 300)?;
+    let seed = args.u64_or("seed", 7)?;
+    let out = args.str_or("out", "trained.bin");
+    let vocab = rt.manifest.lm_cfg(&model)?.vocab;
+    let corpus = Corpus::new(vocab, args.u64_or("corpus-seed", 1001)?);
+    let (ws, losses) = lm::train_lm(&rt, &model, &corpus, steps, seed, 25)?;
+    ws.save(std::path::Path::new(&out))?;
+    println!(
+        "trained {model} for {steps} steps: loss {:.4} -> {:.4}; saved {out}",
+        losses.first().copied().unwrap_or(0.0),
+        losses.last().copied().unwrap_or(0.0)
+    );
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let model = args.str_or("model", "tiny");
+    let cfg = rt.manifest.lm_cfg(&model)?.clone();
+    let weights = args.require("weights")?;
+    let ws = WeightStore::load(&cfg, std::path::Path::new(weights))?;
+    let mut opts = PipelineOpts {
+        preset: args.str_or("preset", "p8x"),
+        ..Default::default()
+    };
+    opts.job.train_steps = args.usize_or("steps", 300)?;
+    opts.job.kmeans_iters = args.usize_or("kmeans", 4)?;
+    if let Some(g) = args.get("groups") {
+        opts.groups = Some(g.split(',').map(|s| s.to_string()).collect());
+    }
+    let out = args.str_or("out", "model.pocket");
+    let res = compress_model(&rt, &ws, &opts)?;
+    res.pocket.save(std::path::Path::new(&out))?;
+    println!(
+        "compressed {model} with {}: avg_bits {:.2} (ratio {:.1}x vs fp32), \
+         mean mse {:.2e}, file {} bytes -> {out}",
+        opts.preset,
+        res.report.avg_bits,
+        res.report.ratio_fp32,
+        res.report.mean_mse(),
+        res.pocket.file_bytes(),
+    );
+    Ok(())
+}
+
+fn cmd_reconstruct(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let pocket = PocketFile::load(std::path::Path::new(args.require("pocket")?))?;
+    let ws = reconstruct_from_pocket(&rt, &pocket)?;
+    let out = args.str_or("out", "reconstructed.bin");
+    ws.save(std::path::Path::new(&out))?;
+    println!("reconstructed {} -> {out}", pocket.lm_cfg);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let model = args.str_or("model", "tiny");
+    let cfg = rt.manifest.lm_cfg(&model)?.clone();
+    let ws = WeightStore::load(&cfg, std::path::Path::new(args.require("weights")?))
+        .context("loading weights")?;
+    let corpus = Corpus::new(cfg.vocab, args.u64_or("corpus-seed", 1001)?);
+    let ppl = perplexity(&rt, &ws, &corpus, args.usize_or("ppl-batches", 8)?)?;
+    println!("perplexity: {ppl:.3}");
+    let n = args.usize_or("instances", 100)?;
+    let mut t = Table::new("zero-shot accuracy", &["suite", "acc"]);
+    for spec in &ZERO_SHOT_SUITES {
+        let acc = zero_shot_accuracy(&rt, &ws, &corpus, spec, n, 13)?;
+        t.row(vec![spec.name.into(), format!("{:.2}", acc * 100.0)]);
+    }
+    t.emit(None);
+    Ok(())
+}

@@ -1,0 +1,209 @@
+//! Model-side state: the flat weight store for the LM substrate and the
+//! layer-group row view that the compression pipeline operates on.
+//!
+//! PocketLLM compresses *rows of linear weight matrices*.  [`WeightStore`]
+//! owns the flat f32 parameter vector (the exact buffer the AOT train/eval
+//! executables consume); [`group_rows`]/[`scatter_group_rows`] convert
+//! between that buffer and the `[rows_total, width]` row matrix of one
+//! layer group (a layer *type* across all blocks — see DESIGN.md §4).
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::LmCfg;
+use crate::tensor::TensorF32;
+use crate::util::prng::Pcg32;
+
+/// Flat parameter vector + its layout.
+#[derive(Clone, Debug)]
+pub struct WeightStore {
+    pub cfg: LmCfg,
+    pub flat: Vec<f32>,
+}
+
+impl WeightStore {
+    /// Initialize from the manifest's per-tensor init_std (deterministic).
+    pub fn init(cfg: &LmCfg, rng: &mut Pcg32) -> WeightStore {
+        let mut flat = vec![0.0f32; cfg.layout.total];
+        for e in &cfg.layout.entries {
+            if e.init_std > 0.0 {
+                rng.fill_normal(&mut flat[e.offset..e.offset + e.size], e.init_std);
+            }
+        }
+        WeightStore { cfg: cfg.clone(), flat }
+    }
+
+    /// Zero-initialized LoRA buffer is NOT here: LoRA A needs noise — use
+    /// [`WeightStore::init_lora`].
+    pub fn init_lora(cfg: &LmCfg, rng: &mut Pcg32) -> Vec<f32> {
+        let mut flat = vec![0.0f32; cfg.lora_layout.total];
+        for e in &cfg.lora_layout.entries {
+            if e.init_std > 0.0 {
+                rng.fill_normal(&mut flat[e.offset..e.offset + e.size], e.init_std);
+            }
+        }
+        flat
+    }
+
+    pub fn as_tensor(&self) -> TensorF32 {
+        TensorF32::new(vec![self.flat.len()], self.flat.clone())
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        self.as_tensor().save(path)
+    }
+
+    pub fn load(cfg: &LmCfg, path: &std::path::Path) -> Result<WeightStore> {
+        let t = TensorF32::load(path)?;
+        anyhow::ensure!(
+            t.data.len() == cfg.layout.total,
+            "weight file {path:?} has {} params, config {} expects {}",
+            t.data.len(),
+            cfg.name,
+            cfg.layout.total
+        );
+        Ok(WeightStore { cfg: cfg.clone(), flat: t.data })
+    }
+
+    /// Count of parameters in linear layers (the compressible set).
+    pub fn linear_params(&self) -> usize {
+        self.cfg.groups.values().map(|g| g.params).sum()
+    }
+}
+
+/// Extract the `[rows_total, width]` row matrix of a layer group.
+///
+/// Row order is block-major: block 0's rows, then block 1's, etc.  For a
+/// weight `W[d_in, d_out]` applied as `x @ W`, a "row" is `W[i, :]` (width
+/// d_out), matching the paper's row-vector split (Eq. 6).
+pub fn group_rows(ws: &WeightStore, group: &str) -> Result<TensorF32> {
+    let gi = ws.cfg.groups.get(group).with_context(|| format!("no group {group:?}"))?;
+    let mut data = Vec::with_capacity(gi.rows_total * gi.width);
+    for b in 0..ws.cfg.n_layers {
+        for t in &gi.tensors {
+            let name = format!("b{b}.{t}");
+            let sl = ws.cfg.layout.slice(&ws.flat, &name)?;
+            debug_assert_eq!(sl.len(), gi.rows_per_block * gi.width);
+            data.extend_from_slice(sl);
+        }
+    }
+    Ok(TensorF32::new(vec![gi.rows_total, gi.width], data))
+}
+
+/// Write a (reconstructed) group row matrix back into the weight store.
+pub fn scatter_group_rows(ws: &mut WeightStore, group: &str, rows: &TensorF32) -> Result<()> {
+    let gi = ws.cfg.groups.get(group).cloned().with_context(|| format!("no group {group:?}"))?;
+    anyhow::ensure!(
+        rows.shape == vec![gi.rows_total, gi.width],
+        "group {group}: rows shape {:?} != [{}, {}]",
+        rows.shape,
+        gi.rows_total,
+        gi.width
+    );
+    let chunk = gi.rows_per_block * gi.width;
+    let mut off = 0usize;
+    for b in 0..ws.cfg.n_layers {
+        for t in &gi.tensors {
+            let name = format!("b{b}.{t}");
+            let dst = ws.cfg.layout.slice_mut(&mut ws.flat, &name)?;
+            dst.copy_from_slice(&rows.data[off..off + chunk]);
+            off += chunk;
+        }
+    }
+    Ok(())
+}
+
+/// All seven group names in the paper's Table 4 order.
+pub const GROUPS: [&str; 7] = ["q", "k", "v", "o", "gate", "up", "down"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::path::Path;
+
+    fn tiny() -> LmCfg {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).unwrap().lm_cfg("tiny").unwrap().clone()
+    }
+
+    #[test]
+    fn init_respects_layout_stds() {
+        let cfg = tiny();
+        let ws = WeightStore::init(&cfg, &mut Pcg32::seeded(1));
+        // norm scales have init_std 0 -> exactly zero
+        let n1 = cfg.layout.slice(&ws.flat, "b0.norm1").unwrap();
+        assert!(n1.iter().all(|&x| x == 0.0));
+        // embed is noisy with roughly the declared std
+        let emb = cfg.layout.slice(&ws.flat, "embed").unwrap();
+        let var: f64 =
+            emb.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / emb.len() as f64;
+        assert!((var.sqrt() - 0.04).abs() < 0.005, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn group_roundtrip_all_groups() {
+        let cfg = tiny();
+        let mut rng = Pcg32::seeded(2);
+        let ws = WeightStore::init(&cfg, &mut rng);
+        for g in GROUPS {
+            let rows = group_rows(&ws, g).unwrap();
+            let gi = &cfg.groups[g];
+            assert_eq!(rows.shape, vec![gi.rows_total, gi.width]);
+            let mut ws2 = ws.clone();
+            // zero the group, scatter back, expect equality with original
+            for b in 0..cfg.n_layers {
+                for t in &gi.tensors {
+                    let name = format!("b{b}.{t}");
+                    for v in cfg.layout.slice_mut(&mut ws2.flat, &name).unwrap() {
+                        *v = 0.0;
+                    }
+                }
+            }
+            scatter_group_rows(&mut ws2, g, &rows).unwrap();
+            assert_eq!(ws.flat, ws2.flat, "group {g}");
+        }
+    }
+
+    #[test]
+    fn groups_cover_exactly_linear_params() {
+        let cfg = tiny();
+        let ws = WeightStore::init(&cfg, &mut Pcg32::seeded(3));
+        let mut covered = 0usize;
+        for g in GROUPS {
+            covered += group_rows(&ws, g).unwrap().len();
+        }
+        assert_eq!(covered, ws.linear_params());
+        // and that is everything except embed/pos/norms
+        let non_linear: usize = cfg
+            .layout
+            .entries
+            .iter()
+            .filter(|e| {
+                e.name == "embed"
+                    || e.name == "pos"
+                    || e.name.contains("norm")
+            })
+            .map(|e| e.size)
+            .sum();
+        assert_eq!(covered + non_linear, cfg.layout.total);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = tiny();
+        let ws = WeightStore::init(&cfg, &mut Pcg32::seeded(4));
+        let dir = std::env::temp_dir().join("pocketllm_test_ws.bin");
+        ws.save(&dir).unwrap();
+        let ws2 = WeightStore::load(&cfg, &dir).unwrap();
+        assert_eq!(ws.flat, ws2.flat);
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn scatter_rejects_bad_shape() {
+        let cfg = tiny();
+        let mut ws = WeightStore::init(&cfg, &mut Pcg32::seeded(5));
+        let bad = TensorF32::zeros(vec![3, 3]);
+        assert!(scatter_group_rows(&mut ws, "q", &bad).is_err());
+    }
+}

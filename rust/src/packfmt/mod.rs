@@ -1,0 +1,397 @@
+//! The "pocket" on-disk format — what an edge device would actually download
+//! — plus the exact Eq. 13/14 compression-ratio accounting.
+//!
+//! Per compressed layer group the file stores exactly what the paper says
+//! survives training (§Approach: "we only need to retain the representation
+//! vectors in the codebook, the index of each weight vector ..., and the
+//! decoder"):
+//!
+//! * the codebook in **f16** (`16·K·d` bits — Eq. 14's first term),
+//! * the indices **bit-packed at log2(K) bits** (`log2(K)·N`),
+//! * the decoder parameters in f32 (`32·N_fd`),
+//! * per-row (mean, std) side info in f16 (`32·rows` bits — the analogue of
+//!   a scalar quantizer's per-group scales; see model.row_stats),
+//!
+//! plus the uncompressed residue (embeddings, norms, any group left dense)
+//! so a pocket file is a complete, loadable model.  All four terms enter
+//! the avg-bits accounting.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::manifest::MetaCfg;
+use crate::tensor::TensorF32;
+use crate::util::bitpack::BitPacked;
+use crate::util::f16;
+
+const MAGIC: &[u8; 8] = b"POCKET01";
+
+/// One compressed layer group.
+#[derive(Clone, Debug)]
+pub struct GroupRecord {
+    /// Meta-config name (resolves K, d, W, m, norm and the artifacts).
+    pub meta_cfg: String,
+    /// Rows in this group ([rows, W] reconstructs to the weight matrices).
+    pub rows: usize,
+    pub width: usize,
+    /// Codebook [K, d] stored in f16 (lossy, as in Eq. 14).
+    pub codebook: TensorF32,
+    /// One index per subvector, packed at log2(K) bits.
+    pub indices: BitPacked,
+    /// Decoder half of theta (f32), in the meta layout's decoder order.
+    pub decoder: Vec<f32>,
+    /// Per-row (mean, std) pairs, stored f16 (length 2 * rows).
+    pub row_scales: Vec<f32>,
+}
+
+/// A complete pocket model file.
+#[derive(Clone, Debug, Default)]
+pub struct PocketFile {
+    /// LM config name this model instantiates.
+    pub lm_cfg: String,
+    pub groups: BTreeMap<String, GroupRecord>,
+    /// Dense residue: named f32 buffers (embed/pos/norms/uncompressed groups).
+    pub dense: BTreeMap<String, Vec<f32>>,
+}
+
+/// Eq. 13/14 accounting for one group.
+#[derive(Clone, Copy, Debug)]
+pub struct RatioReport {
+    /// Original parameter count (N·d in the paper's notation).
+    pub orig_params: usize,
+    pub codebook_bits: u64,
+    pub index_bits: u64,
+    pub decoder_bits: u64,
+    /// Per-row (mean, std) f16 side info.
+    pub scale_bits: u64,
+    /// Average bits per original weight (the paper's Avg_bits column).
+    pub avg_bits: f64,
+    /// Compression ratio vs f32 (Eq. 14).
+    pub ratio_fp32: f64,
+}
+
+impl RatioReport {
+    pub fn compressed_bits(&self) -> u64 {
+        self.codebook_bits + self.index_bits + self.decoder_bits + self.scale_bits
+    }
+}
+
+/// Compute Eq. 14 (+ the row-scale side-info term) for a group of `rows`
+/// rows totalling `n_sub` subvectors of length d.
+pub fn ratio_for(mc: &MetaCfg, n_sub: usize, rows: usize) -> RatioReport {
+    let orig_params = n_sub * mc.d;
+    let codebook_bits = 16 * (mc.k as u64) * (mc.d as u64);
+    let index_bits = mc.bits_per_index() as u64 * n_sub as u64;
+    let decoder_bits = 32 * mc.decoder_params as u64;
+    let scale_bits = 32 * rows as u64; // 2 f16 values per row
+    let comp = (codebook_bits + index_bits + decoder_bits + scale_bits) as f64;
+    let avg_bits = comp / orig_params as f64;
+    RatioReport {
+        orig_params,
+        codebook_bits,
+        index_bits,
+        decoder_bits,
+        scale_bits,
+        avg_bits,
+        ratio_fp32: 32.0 * orig_params as f64 / comp,
+    }
+}
+
+impl GroupRecord {
+    pub fn n_subvectors(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Eq. 14 report for this record.
+    pub fn ratio(&self, mc: &MetaCfg) -> RatioReport {
+        ratio_for(mc, self.n_subvectors(), self.rows)
+    }
+}
+
+impl PocketFile {
+    /// Total compressed payload bits across groups (codebook+indices+decoder).
+    pub fn compressed_bits(&self, meta: &BTreeMap<String, MetaCfg>) -> u64 {
+        self.groups
+            .values()
+            .map(|g| g.ratio(&meta[&g.meta_cfg]).compressed_bits())
+            .sum()
+    }
+
+    /// Overall avg bits over all *compressed* weights (paper's convention:
+    /// "the calculation of the average bits only takes quantized weights
+    /// into account").
+    pub fn avg_bits(&self, meta: &BTreeMap<String, MetaCfg>) -> f64 {
+        let mut bits = 0u64;
+        let mut params = 0usize;
+        for g in self.groups.values() {
+            let r = g.ratio(&meta[&g.meta_cfg]);
+            bits += r.compressed_bits();
+            params += r.orig_params;
+        }
+        bits as f64 / params.max(1) as f64
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        write_str(&mut out, &self.lm_cfg);
+
+        out.extend_from_slice(&(self.groups.len() as u32).to_le_bytes());
+        for (name, g) in &self.groups {
+            write_str(&mut out, name);
+            write_str(&mut out, &g.meta_cfg);
+            out.extend_from_slice(&(g.rows as u64).to_le_bytes());
+            out.extend_from_slice(&(g.width as u64).to_le_bytes());
+            // codebook as f16 payload
+            let cb16 = f16::encode_f16(&g.codebook.data);
+            out.extend_from_slice(&(g.codebook.shape[0] as u64).to_le_bytes());
+            out.extend_from_slice(&(g.codebook.shape[1] as u64).to_le_bytes());
+            out.extend_from_slice(&cb16);
+            // indices
+            let idx = g.indices.to_bytes();
+            out.extend_from_slice(&(idx.len() as u64).to_le_bytes());
+            out.extend_from_slice(&idx);
+            // decoder f32
+            out.extend_from_slice(&(g.decoder.len() as u64).to_le_bytes());
+            for &v in &g.decoder {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            // per-row scales as f16
+            out.extend_from_slice(&(g.row_scales.len() as u64).to_le_bytes());
+            out.extend_from_slice(&f16::encode_f16(&g.row_scales));
+        }
+
+        out.extend_from_slice(&(self.dense.len() as u32).to_le_bytes());
+        for (name, buf) in &self.dense {
+            write_str(&mut out, name);
+            out.extend_from_slice(&(buf.len() as u64).to_le_bytes());
+            for &v in buf {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<PocketFile> {
+        let mut c = Cursor { b, i: 0 };
+        ensure!(c.take(8)? == MAGIC.as_slice(), "bad pocket magic");
+        let lm_cfg = c.string()?;
+
+        let n_groups = c.u32()? as usize;
+        ensure!(n_groups < 1024, "absurd group count");
+        let mut groups = BTreeMap::new();
+        for _ in 0..n_groups {
+            let name = c.string()?;
+            let meta_cfg = c.string()?;
+            let rows = c.u64()? as usize;
+            let width = c.u64()? as usize;
+            let k = c.u64()? as usize;
+            let d = c.u64()? as usize;
+            ensure!(k.saturating_mul(d) <= 1 << 28, "absurd codebook");
+            let cb_bytes = c.take(k * d * 2)?;
+            let codebook = TensorF32::new(vec![k, d], f16::decode_f16(cb_bytes));
+            let idx_len = c.u64()? as usize;
+            let idx_bytes = c.take(idx_len)?;
+            let (indices, used) = BitPacked::from_bytes(idx_bytes)?;
+            ensure!(used == idx_len, "index record padding mismatch");
+            let dec_len = c.u64()? as usize;
+            ensure!(dec_len <= 1 << 24, "absurd decoder size");
+            let dec_bytes = c.take(dec_len * 4)?;
+            let decoder = dec_bytes
+                .chunks_exact(4)
+                .map(|x| f32::from_le_bytes(x.try_into().unwrap()))
+                .collect();
+            let sc_len = c.u64()? as usize;
+            ensure!(sc_len <= 1 << 26, "absurd scale count");
+            let row_scales = f16::decode_f16(c.take(sc_len * 2)?);
+            groups.insert(
+                name,
+                GroupRecord {
+                    meta_cfg, rows, width, codebook, indices, decoder, row_scales,
+                },
+            );
+        }
+
+        let n_dense = c.u32()? as usize;
+        ensure!(n_dense < 4096, "absurd dense count");
+        let mut dense = BTreeMap::new();
+        for _ in 0..n_dense {
+            let name = c.string()?;
+            let len = c.u64()? as usize;
+            ensure!(len <= 1 << 28, "absurd dense size");
+            let bytes = c.take(len * 4)?;
+            dense.insert(
+                name,
+                bytes
+                    .chunks_exact(4)
+                    .map(|x| f32::from_le_bytes(x.try_into().unwrap()))
+                    .collect(),
+            );
+        }
+        ensure!(c.i == b.len(), "trailing bytes in pocket file");
+        Ok(PocketFile { lm_cfg, groups, dense })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes()).with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<PocketFile> {
+        Self::from_bytes(&std::fs::read(path).with_context(|| format!("reading {path:?}"))?)
+    }
+
+    /// On-disk size in bytes (the deliverable the paper's edge story cares
+    /// about).
+    pub fn file_bytes(&self) -> usize {
+        self.to_bytes().len()
+    }
+}
+
+fn write_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.i + n <= self.b.len(), "pocket file truncated");
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into()?))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into()?))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if n > 4096 {
+            bail!("absurd string length {n}");
+        }
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::quickcheck::{prop_assert, property};
+
+    fn sample_group(rng: &mut Pcg32, k: usize, d: usize, rows: usize, width: usize) -> GroupRecord {
+        let bits = (k as f64).log2().ceil() as u32;
+        let n_sub = rows * width / d;
+        let mut cb = vec![0.0f32; k * d];
+        rng.fill_normal(&mut cb, 0.05);
+        let idx: Vec<u32> = (0..n_sub).map(|_| rng.below(k as u32)).collect();
+        let mut dec = vec![0.0f32; 3 * (d * d + d)];
+        rng.fill_normal(&mut dec, 0.3);
+        let mut scales = vec![0.0f32; 2 * rows];
+        rng.fill_normal(&mut scales, 0.05);
+        GroupRecord {
+            meta_cfg: format!("w{width}_d{d}_k{k}_m3_rln"),
+            rows,
+            width,
+            codebook: TensorF32::new(vec![k, d], cb),
+            indices: BitPacked::pack(&idx, bits),
+            decoder: dec,
+            row_scales: scales,
+        }
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let mut rng = Pcg32::seeded(1);
+        let mut pf = PocketFile { lm_cfg: "tiny".into(), ..Default::default() };
+        pf.groups.insert("q".into(), sample_group(&mut rng, 512, 8, 64, 256));
+        pf.groups.insert("up".into(), sample_group(&mut rng, 1024, 4, 32, 512));
+        pf.dense.insert("embed".into(), vec![0.25f32; 1000]);
+        let bytes = pf.to_bytes();
+        let pf2 = PocketFile::from_bytes(&bytes).unwrap();
+        assert_eq!(pf2.lm_cfg, "tiny");
+        assert_eq!(pf2.groups.len(), 2);
+        assert_eq!(pf2.dense["embed"], pf.dense["embed"]);
+        let (a, b) = (&pf.groups["q"], &pf2.groups["q"]);
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.decoder, b.decoder);
+        // codebook goes through f16: close, not exact
+        for (x, y) in a.codebook.data.iter().zip(&b.codebook.data) {
+            assert!((x - y).abs() < 2e-3);
+        }
+    }
+
+    #[test]
+    fn truncation_detected_everywhere() {
+        let mut rng = Pcg32::seeded(2);
+        let mut pf = PocketFile { lm_cfg: "tiny".into(), ..Default::default() };
+        pf.groups.insert("q".into(), sample_group(&mut rng, 64, 4, 16, 64));
+        let bytes = pf.to_bytes();
+        for cut in [4usize, 9, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(PocketFile::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn ratio_matches_eq14_hand_calc() {
+        // W=512 group of the tiny model, d=8, K=1024 (p16x preset).
+        let mc = MetaCfg {
+            name: "x".into(),
+            encode_name: "x".into(),
+            w: 512,
+            d: 8,
+            k: 1024,
+            m: 3,
+            norm: "rln".into(),
+            r: 64,
+            l: 64,
+            theta: crate::runtime::manifest::Layout { entries: vec![], total: 0 },
+            decoder_params: 3 * (64 + 8),
+        };
+        let n_sub = 1024 * 512 / 8; // 1024 rows of width 512
+        let r = ratio_for(&mc, n_sub, 1024);
+        let comp_bits =
+            16.0 * 1024.0 * 8.0 + 10.0 * n_sub as f64 + 32.0 * 216.0 + 32.0 * 1024.0;
+        assert!((r.avg_bits - comp_bits / (n_sub * 8) as f64).abs() < 1e-9);
+        assert!((r.ratio_fp32 - 32.0 / r.avg_bits).abs() < 1e-9);
+    }
+
+    #[test]
+    fn file_bytes_tracks_payload() {
+        let mut rng = Pcg32::seeded(3);
+        let mut pf = PocketFile { lm_cfg: "tiny".into(), ..Default::default() };
+        pf.groups.insert("q".into(), sample_group(&mut rng, 256, 8, 64, 256));
+        let small = pf.file_bytes();
+        pf.dense.insert("embed".into(), vec![0.0f32; 10_000]);
+        assert!(pf.file_bytes() > small + 39_000);
+    }
+
+    #[test]
+    fn property_roundtrip_random_files() {
+        property("pocket file roundtrip", |g| {
+            let mut rng = Pcg32::seeded(g.int_in(0, 1 << 30) as u64);
+            let mut pf = PocketFile { lm_cfg: "tiny".into(), ..Default::default() };
+            let k = *g.choose(&[64usize, 256, 1024]);
+            let d = *g.choose(&[4usize, 8]);
+            let rows = g.usize_in(1, 32) * 2;
+            let width = d * g.usize_in(2, 16);
+            pf.groups.insert("g".into(), sample_group(&mut rng, k, d, rows, width));
+            let back = PocketFile::from_bytes(&pf.to_bytes()).map_err(|e| e.to_string())?;
+            prop_assert(back.groups["g"].indices == pf.groups["g"].indices, "indices")?;
+            prop_assert(back.groups["g"].rows == rows, "rows")
+        });
+    }
+}

@@ -1,0 +1,57 @@
+//! Traditional-compression baselines, implemented from scratch (the paper's
+//! comparison set: round-to-nearest / GPTQ-family scalar quantization,
+//! linear-space vector quantization, and pruning).
+//!
+//! Each baseline consumes/produces the same `[rows, W]` group-row matrices
+//! as the PocketLLM pipeline, so Tables 1-3 compare all methods on identical
+//! substrates at matched average bits.
+
+pub mod prune;
+pub mod rtn;
+pub mod vq_linear;
+
+use crate::tensor::TensorF32;
+
+/// A compression baseline applied to one group-row matrix.
+pub trait Baseline {
+    /// Short name for tables (e.g. "RTN-4").
+    fn name(&self) -> String;
+    /// Average bits per weight this configuration achieves.
+    fn avg_bits(&self, rows: &TensorF32) -> f64;
+    /// Compress + reconstruct (the damage the model will see).
+    fn reconstruct(&self, rows: &TensorF32) -> TensorF32;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::rtn::Rtn;
+    use super::vq_linear::VqLinear;
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn sample_rows() -> TensorF32 {
+        let mut rng = Pcg32::seeded(10);
+        let mut d = vec![0.0f32; 64 * 128];
+        rng.fill_normal(&mut d, 0.04);
+        TensorF32::new(vec![64, 128], d)
+    }
+
+    #[test]
+    fn more_bits_less_error_rtn() {
+        let rows = sample_rows();
+        let e4 = rows.mse(&Rtn::new(4, 64).reconstruct(&rows));
+        let e3 = rows.mse(&Rtn::new(3, 64).reconstruct(&rows));
+        let e2 = rows.mse(&Rtn::new(2, 64).reconstruct(&rows));
+        assert!(e4 < e3 && e3 < e2, "{e4} {e3} {e2}");
+    }
+
+    #[test]
+    fn bigger_codebook_less_error_vq() {
+        let rows = sample_rows();
+        let mut a = VqLinear::new(4, 64, 8, 99);
+        let mut b = VqLinear::new(4, 512, 8, 99);
+        let ea = rows.mse(&a.reconstruct(&rows));
+        let eb = rows.mse(&b.reconstruct(&rows));
+        assert!(eb < ea, "{eb} !< {ea}");
+    }
+}

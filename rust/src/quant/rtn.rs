@@ -1,0 +1,132 @@
+//! Round-to-nearest group-wise scalar quantization (the GPTQ/RTN family's
+//! damage model, without the Hessian trick — the paper's Table 1 "GPTQ"
+//! row is a post-training b-bit scalar quantizer; RTN with small groups is
+//! the standard strong variant, cf. ZeroQuant's group-wise scheme).
+//!
+//! Asymmetric per-group min/max affine quantization: each contiguous group
+//! of `group_size` weights in a row gets an f16 scale + f16 zero-point.
+
+use super::Baseline;
+use crate::tensor::TensorF32;
+use crate::util::f16;
+
+/// b-bit round-to-nearest with per-group affine params.
+#[derive(Clone, Copy, Debug)]
+pub struct Rtn {
+    pub bits: u32,
+    pub group_size: usize,
+}
+
+impl Rtn {
+    pub fn new(bits: u32, group_size: usize) -> Self {
+        assert!((1..=8).contains(&bits));
+        assert!(group_size >= 2);
+        Rtn { bits, group_size }
+    }
+
+    fn quantize_group(&self, xs: &mut [f32]) {
+        let levels = (1u32 << self.bits) - 1;
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in xs.iter() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        // store scale/zero in f16, as deployments do
+        let scale = f16::f16_bits_to_f32(f16::f32_to_f16_bits((hi - lo) / levels as f32));
+        let zero = f16::f16_bits_to_f32(f16::f32_to_f16_bits(lo));
+        if scale <= 0.0 || !scale.is_finite() {
+            for x in xs.iter_mut() {
+                *x = zero;
+            }
+            return;
+        }
+        for x in xs.iter_mut() {
+            let q = ((*x - zero) / scale).round().clamp(0.0, levels as f32);
+            *x = zero + q * scale;
+        }
+    }
+}
+
+impl Baseline for Rtn {
+    fn name(&self) -> String {
+        format!("RTN-{}", self.bits)
+    }
+
+    fn avg_bits(&self, rows: &TensorF32) -> f64 {
+        // b bits per weight + 2 f16 params per group
+        let n = rows.len() as f64;
+        let groups = (rows.len() as f64 / self.group_size as f64).ceil();
+        (self.bits as f64 * n + 32.0 * groups) / n
+    }
+
+    fn reconstruct(&self, rows: &TensorF32) -> TensorF32 {
+        let mut out = rows.clone();
+        let w = out.cols();
+        let r = out.rows();
+        for i in 0..r {
+            let row = &mut out.data[i * w..(i + 1) * w];
+            for chunk in row.chunks_mut(self.group_size) {
+                self.quantize_group(chunk);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn rows() -> TensorF32 {
+        let mut rng = Pcg32::seeded(1);
+        let mut d = vec![0.0f32; 32 * 256];
+        rng.fill_normal(&mut d, 0.04);
+        TensorF32::new(vec![32, 256], d)
+    }
+
+    #[test]
+    fn reconstruction_stays_in_group_range() {
+        let r = rows();
+        let q = Rtn::new(3, 64).reconstruct(&r);
+        let w = r.cols();
+        for i in 0..r.rows() {
+            for (c0, c1) in r.row(i).chunks(64).zip(q.row(i).chunks(64)) {
+                let lo = c0.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = c0.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                for &y in c1 {
+                    assert!(y >= lo - 2e-3 && y <= hi + 2e-3);
+                }
+            }
+            let _ = w;
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_step() {
+        let r = rows();
+        let q = Rtn::new(4, 64).reconstruct(&r);
+        for (a, b) in r.data.iter().zip(&q.data) {
+            // group range is about ±4σ = 0.32; step = range/15 ≈ 0.022
+            assert!((a - b).abs() < 0.03, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn avg_bits_accounting() {
+        let r = rows();
+        let rtn = Rtn::new(4, 64);
+        // 4 + 32/64 = 4.5 bits
+        assert!((rtn.avg_bits(&r) - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_group_is_exact() {
+        let r = TensorF32::new(vec![1, 8], vec![0.5; 8]);
+        let q = Rtn::new(2, 8).reconstruct(&r);
+        for &y in &q.data {
+            assert!((y - 0.5).abs() < 2e-4);
+        }
+    }
+}

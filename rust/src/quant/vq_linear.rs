@@ -1,0 +1,201 @@
+//! Linear-space vector quantization — the paper's key ablation target.
+//!
+//! This is "PocketLLM without the meta-networks": split rows into length-d
+//! subvectors and k-means them **in the original weight space** (the
+//! AQLM/VPTQ/GPTVQ family's core operation, single codebook).  Comparing
+//! this against the full pipeline isolates the contribution of the latent
+//! encoder/decoder, which is the paper's central claim.
+//!
+//! Storage accounting matches Eq. 14 minus the decoder term (no meta-nets
+//! to ship).
+
+use super::Baseline;
+use crate::tensor::TensorF32;
+use crate::util::prng::Pcg32;
+
+/// k-means VQ over length-d subvectors in weight space.
+#[derive(Clone, Debug)]
+pub struct VqLinear {
+    pub d: usize,
+    pub k: usize,
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl VqLinear {
+    pub fn new(d: usize, k: usize, iters: usize, seed: u64) -> Self {
+        assert!(d >= 1 && k >= 1);
+        VqLinear { d, k, iters, seed }
+    }
+
+    /// Plain Lloyd k-means. Returns (codebook [k, d], assignment per subvec).
+    pub fn kmeans(&self, sub: &[f32]) -> (Vec<f32>, Vec<u32>) {
+        let d = self.d;
+        let n = sub.len() / d;
+        let k = self.k.min(n.max(1));
+        let mut rng = Pcg32::seeded(self.seed);
+
+        // init: distinct random subvectors
+        let mut centers = vec![0.0f32; k * d];
+        let mut picked: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut picked);
+        for (ci, &si) in picked.iter().take(k).enumerate() {
+            centers[ci * d..(ci + 1) * d].copy_from_slice(&sub[si * d..si * d + d]);
+        }
+
+        let mut assign = vec![0u32; n];
+        for _ in 0..self.iters {
+            // assignment step
+            for i in 0..n {
+                let x = &sub[i * d..(i + 1) * d];
+                let mut best = 0u32;
+                let mut best_d = f32::INFINITY;
+                for c in 0..k {
+                    let cv = &centers[c * d..(c + 1) * d];
+                    let mut dist = 0.0f32;
+                    for j in 0..d {
+                        let e = x[j] - cv[j];
+                        dist += e * e;
+                        if dist >= best_d {
+                            break;
+                        }
+                    }
+                    if dist < best_d {
+                        best_d = dist;
+                        best = c as u32;
+                    }
+                }
+                assign[i] = best;
+            }
+            // update step
+            let mut sums = vec![0.0f64; k * d];
+            let mut counts = vec![0u32; k];
+            for i in 0..n {
+                let c = assign[i] as usize;
+                counts[c] += 1;
+                for j in 0..d {
+                    sums[c * d + j] += sub[i * d + j] as f64;
+                }
+            }
+            for c in 0..k {
+                if counts[c] > 0 {
+                    for j in 0..d {
+                        centers[c * d + j] = (sums[c * d + j] / counts[c] as f64) as f32;
+                    }
+                } else {
+                    // dead center: reseed from a random subvector
+                    let si = rng.below(n as u32) as usize;
+                    centers[c * d..(c + 1) * d].copy_from_slice(&sub[si * d..si * d + d]);
+                }
+            }
+        }
+        // final assignment against the last centers
+        for i in 0..n {
+            let x = &sub[i * d..(i + 1) * d];
+            let mut best = 0u32;
+            let mut best_d = f32::INFINITY;
+            for c in 0..k {
+                let cv = &centers[c * d..(c + 1) * d];
+                let mut dist = 0.0f32;
+                for j in 0..d {
+                    let e = x[j] - cv[j];
+                    dist += e * e;
+                }
+                if dist < best_d {
+                    best_d = dist;
+                    best = c as u32;
+                }
+            }
+            assign[i] = best;
+        }
+        (centers, assign)
+    }
+}
+
+impl Baseline for VqLinear {
+    fn name(&self) -> String {
+        format!("VQ-lin d{} K{}", self.d, self.k)
+    }
+
+    fn avg_bits(&self, rows: &TensorF32) -> f64 {
+        let n_sub = rows.len() / self.d;
+        let idx_bits = (self.k as f64).log2().ceil();
+        (16.0 * (self.k * self.d) as f64 + idx_bits * n_sub as f64) / rows.len() as f64
+    }
+
+    fn reconstruct(&self, rows: &TensorF32) -> TensorF32 {
+        let (centers, assign) = self.kmeans(&rows.data);
+        let d = self.d;
+        let mut out = vec![0.0f32; rows.len()];
+        for (i, &c) in assign.iter().enumerate() {
+            out[i * d..(i + 1) * d].copy_from_slice(&centers[c as usize * d..(c as usize + 1) * d]);
+        }
+        TensorF32::new(rows.shape.clone(), out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{prop_assert, property_cases};
+
+    #[test]
+    fn separable_clusters_recovered() {
+        // two well-separated clusters, k=2 -> near-zero error
+        let mut data = Vec::new();
+        for i in 0..50 {
+            let base = if i % 2 == 0 { 1.0 } else { -1.0 };
+            data.extend_from_slice(&[base, base, base, base]);
+        }
+        let rows = TensorF32::new(vec![50, 4], data);
+        let vq = VqLinear::new(4, 2, 10, 3);
+        let rec = vq.reconstruct(&rows);
+        assert!(rows.mse(&rec) < 1e-6);
+    }
+
+    #[test]
+    fn k_ge_n_is_lossless() {
+        let mut rng = Pcg32::seeded(4);
+        let mut d = vec![0.0f32; 16 * 8];
+        rng.fill_normal(&mut d, 1.0);
+        let rows = TensorF32::new(vec![16, 8], d);
+        let vq = VqLinear::new(8, 16, 10, 5);
+        let rec = vq.reconstruct(&rows);
+        assert!(rows.mse(&rec) < 1e-8, "{}", rows.mse(&rec));
+    }
+
+    #[test]
+    fn property_assignment_is_nearest() {
+        property_cases("vq assigns nearest center", 16, |g| {
+            let d = *g.choose(&[2usize, 4]);
+            let n = g.usize_in(8, 64);
+            let mut rng = Pcg32::seeded(g.int_in(0, 1 << 30) as u64);
+            let mut data = vec![0.0f32; n * d];
+            rng.fill_normal(&mut data, 1.0);
+            let vq = VqLinear::new(d, 4, 4, 7);
+            let (centers, assign) = vq.kmeans(&data);
+            let k = centers.len() / d;
+            for i in 0..n {
+                let x = &data[i * d..(i + 1) * d];
+                let dist = |c: usize| -> f32 {
+                    let cv = &centers[c * d..(c + 1) * d];
+                    x.iter().zip(cv).map(|(a, b)| (a - b) * (a - b)).sum()
+                };
+                let chosen = dist(assign[i] as usize);
+                for c in 0..k {
+                    prop_assert(chosen <= dist(c) + 1e-5, "not nearest")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn avg_bits_shrinks_with_d() {
+        // large enough that the codebook term amortizes away
+        let rows = TensorF32::zeros(vec![1024, 1024]);
+        let b4 = VqLinear::new(4, 256, 1, 1).avg_bits(&rows);
+        let b8 = VqLinear::new(8, 256, 1, 1).avg_bits(&rows);
+        assert!(b8 < b4);
+    }
+}

@@ -1,0 +1,113 @@
+//! Shared experiment-report helpers: consistent naming of bench outputs and
+//! a tiny experiment-context struct the table benches share (runtime, corpus
+//! seeds, trained-model cache).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::lm::cached_trained_model;
+use crate::coordinator::{compress_model, PipelineOpts};
+use crate::data::Corpus;
+use crate::model::WeightStore;
+use crate::packfmt::PocketFile;
+use crate::runtime::Runtime;
+
+/// Corpus seed standing in for WikiText-2 (perplexity Table 3).
+pub const CORPUS_SEED_WT2: u64 = 1001;
+/// Corpus seed standing in for C4.
+pub const CORPUS_SEED_C4: u64 = 2002;
+
+/// Default training length for the cached base models used by the tables.
+pub const BASE_TRAIN_STEPS: usize = 300;
+pub const BASE_SEED: u64 = 7;
+
+/// Where bench JSON outputs go.
+pub fn results_path(file: &str) -> String {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results").join(file);
+    p.to_string_lossy().into_owned()
+}
+
+/// Shared setup for the table benches: runtime + main corpus + trained base.
+pub struct ExpContext {
+    pub rt: Runtime,
+    pub corpus: Corpus,
+    pub base: WeightStore,
+}
+
+impl ExpContext {
+    /// Build for an LM config, training (or loading) the cached base model.
+    pub fn new(cfg_name: &str) -> Result<ExpContext> {
+        let rt = Runtime::from_repo_root()?;
+        let vocab = rt.manifest.lm_cfg(cfg_name)?.vocab;
+        let corpus = Corpus::new(vocab, CORPUS_SEED_WT2);
+        let steps = if Self::fast_mode() { 80 } else { BASE_TRAIN_STEPS };
+        let base = cached_trained_model(&rt, cfg_name, &corpus, steps, BASE_SEED)?;
+        Ok(ExpContext { rt, corpus, base })
+    }
+
+    /// Quick-mode switch: `POCKET_FAST=1` trims steps so CI smoke runs fast.
+    pub fn fast_mode() -> bool {
+        std::env::var("POCKET_FAST").map(|v| v == "1").unwrap_or(false)
+    }
+
+    /// Scale a step count down in fast mode.  The floor of 60 matters:
+    /// below ~50 meta-steps the meta-nets are undertrained and PocketLLM
+    /// rows read as artifacts of the budget, not the method.
+    pub fn steps(n: usize) -> usize {
+        if Self::fast_mode() { (n / 2).clamp(60, n.max(60)) } else { n }
+    }
+
+    /// Instance count for zero-shot suites.
+    pub fn instances(n: usize) -> usize {
+        if Self::fast_mode() { (n / 5).max(10) } else { n }
+    }
+
+    /// Compress the cached base model with a preset, caching the pocket file
+    /// and the reconstructed weights so different benches share one run.
+    /// Returns (reconstructed weights, achieved avg_bits).
+    pub fn cached_compressed(
+        &self,
+        preset: &str,
+        steps: usize,
+    ) -> Result<(WeightStore, f64)> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results/models");
+        std::fs::create_dir_all(&dir)?;
+        let tag = format!("{}_{preset}_s{steps}", self.base.cfg.name);
+        let wpath = dir.join(format!("comp_{tag}.bin"));
+        let ppath = dir.join(format!("comp_{tag}.pocket"));
+        if wpath.exists() && ppath.exists() {
+            if let (Ok(ws), Ok(pf)) =
+                (WeightStore::load(&self.base.cfg, &wpath), PocketFile::load(&ppath))
+            {
+                let bits = pf.avg_bits(&self.rt.manifest.meta);
+                return Ok((ws, bits));
+            }
+        }
+        let mut opts = PipelineOpts { preset: preset.into(), ..Default::default() };
+        opts.job.train_steps = steps;
+        opts.job.kmeans_iters = 1;
+        opts.job.post_steps = steps / 8;
+        let res = compress_model(&self.rt, &self.base, &opts)?;
+        res.pocket.save(&ppath)?;
+        res.reconstructed.save(&wpath)?;
+        Ok((res.reconstructed, res.report.avg_bits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_path_is_under_bench_results() {
+        let p = results_path("x.json");
+        assert!(p.contains("bench_results"));
+    }
+
+    #[test]
+    fn steps_scaling() {
+        std::env::remove_var("POCKET_FAST");
+        assert_eq!(ExpContext::steps(300), 300);
+    }
+}

@@ -1,0 +1,383 @@
+//! `artifacts/manifest.json` — the L2 -> L3 contract.
+//!
+//! The Python AOT pass (`python/compile/aot.py`) records every lowered
+//! artifact's input/output signature plus the full parameter layouts of every
+//! model and meta-net configuration.  The Rust side *never* re-derives a
+//! shape or an offset: everything comes from here, so a drift between the
+//! two languages fails loudly at load time instead of corrupting numerics.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One named tensor inside a flat f32 parameter vector.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init_std: f32,
+}
+
+/// A flat parameter layout (ordered, contiguous, no gaps).
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub entries: Vec<ParamEntry>,
+    pub total: usize,
+}
+
+impl Layout {
+    fn from_json(j: &Json, total: usize) -> Result<Layout> {
+        let mut entries = Vec::new();
+        for e in j.as_arr()? {
+            entries.push(ParamEntry {
+                name: e.get("name")?.as_str()?.to_string(),
+                shape: e.get("shape")?.usize_arr()?,
+                offset: e.get("offset")?.as_usize()?,
+                size: e.get("size")?.as_usize()?,
+                init_std: e.get("init_std")?.as_f64()? as f32,
+            });
+        }
+        // validate contiguity
+        let mut off = 0usize;
+        for e in &entries {
+            if e.offset != off || e.shape.iter().product::<usize>() != e.size {
+                bail!("layout entry {} is not contiguous", e.name);
+            }
+            off += e.size;
+        }
+        if off != total {
+            bail!("layout total {off} != declared {total}");
+        }
+        Ok(Layout { entries, total })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ParamEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("no param {name:?} in layout"))
+    }
+
+    /// View of one named tensor inside a flat buffer.
+    pub fn slice<'a>(&self, flat: &'a [f32], name: &str) -> Result<&'a [f32]> {
+        let e = self.find(name)?;
+        Ok(&flat[e.offset..e.offset + e.size])
+    }
+
+    pub fn slice_mut<'a>(&self, flat: &'a mut [f32], name: &str) -> Result<&'a mut [f32]> {
+        let e = self.find(name)?;
+        Ok(&mut flat[e.offset..e.offset + e.size])
+    }
+}
+
+/// One linear-layer group (the unit of PocketLLM compression).
+#[derive(Clone, Debug)]
+pub struct GroupInfo {
+    pub width: usize,
+    pub rows_per_block: usize,
+    pub rows_total: usize,
+    pub params: usize,
+    pub tensors: Vec<String>,
+}
+
+/// LM substrate configuration (mirrors `configs.LMConfig`).
+#[derive(Clone, Debug)]
+pub struct LmCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn_hidden: usize,
+    pub seq_len: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: f64,
+    pub layout: Layout,
+    pub lora_layout: Layout,
+    pub groups: BTreeMap<String, GroupInfo>,
+}
+
+/// Meta-network configuration (mirrors `configs.MetaConfig`).
+#[derive(Clone, Debug)]
+pub struct MetaCfg {
+    pub name: String,
+    pub encode_name: String,
+    pub w: usize,
+    pub d: usize,
+    pub k: usize,
+    pub m: usize,
+    pub norm: String,
+    pub r: usize,
+    pub l: usize,
+    pub theta: Layout,
+    pub decoder_params: usize,
+}
+
+impl MetaCfg {
+    pub fn bits_per_index(&self) -> u32 {
+        (self.k as f64).log2().ceil() as u32
+    }
+}
+
+/// Dtype of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dt {
+    F32,
+    I32,
+}
+
+/// Input/output signature entry.
+#[derive(Clone, Debug)]
+pub struct Sig {
+    pub dtype: Dt,
+    pub shape: Vec<usize>,
+}
+
+impl Sig {
+    pub fn count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact: HLO file + signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub inputs: Vec<Sig>,
+    pub outputs: Vec<Sig>,
+}
+
+/// Optimizer/loss constants shared with L2.
+#[derive(Clone, Debug)]
+pub struct HyperParams {
+    pub adam_b1: f64,
+    pub adam_b2: f64,
+    pub adam_eps: f64,
+    pub meta_lr: f64,
+    pub lm_lr: f64,
+    pub lora_lr: f64,
+    pub vq_lambda: f64,
+    pub vq_commit_beta: f64,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub lm: BTreeMap<String, LmCfg>,
+    pub meta: BTreeMap<String, MetaCfg>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub ratio_presets: BTreeMap<String, (usize, usize)>,
+    pub hp: HyperParams,
+}
+
+fn parse_sig(j: &Json) -> Result<Vec<Sig>> {
+    let mut out = Vec::new();
+    for e in j.as_arr()? {
+        let dt = match e.get("dtype")?.as_str()? {
+            "float32" => Dt::F32,
+            "int32" => Dt::I32,
+            other => bail!("unsupported dtype {other}"),
+        };
+        out.push(Sig { dtype: dt, shape: e.get("shape")?.usize_arr()? });
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        if j.get("version")?.as_i64()? != 1 {
+            bail!("unsupported manifest version");
+        }
+
+        let mut lm = BTreeMap::new();
+        for (name, c) in j.get("lm_configs")?.as_obj()? {
+            let total = c.get("total_params")?.as_usize()?;
+            let lora_total = c.get("total_lora_params")?.as_usize()?;
+            let mut groups = BTreeMap::new();
+            for (g, gi) in c.get("groups")?.as_obj()? {
+                groups.insert(
+                    g.clone(),
+                    GroupInfo {
+                        width: gi.get("width")?.as_usize()?,
+                        rows_per_block: gi.get("rows_per_block")?.as_usize()?,
+                        rows_total: gi.get("rows_total")?.as_usize()?,
+                        params: gi.get("params")?.as_usize()?,
+                        tensors: gi
+                            .get("tensors")?
+                            .as_arr()?
+                            .iter()
+                            .map(|t| Ok(t.as_str()?.to_string()))
+                            .collect::<Result<Vec<_>>>()?,
+                    },
+                );
+            }
+            lm.insert(
+                name.clone(),
+                LmCfg {
+                    name: name.clone(),
+                    vocab: c.get("vocab")?.as_usize()?,
+                    d_model: c.get("d_model")?.as_usize()?,
+                    n_layers: c.get("n_layers")?.as_usize()?,
+                    n_heads: c.get("n_heads")?.as_usize()?,
+                    ffn_hidden: c.get("ffn_hidden")?.as_usize()?,
+                    seq_len: c.get("seq_len")?.as_usize()?,
+                    train_batch: c.get("train_batch")?.as_usize()?,
+                    eval_batch: c.get("eval_batch")?.as_usize()?,
+                    lora_rank: c.get("lora_rank")?.as_usize()?,
+                    lora_alpha: c.get("lora_alpha")?.as_f64()?,
+                    layout: Layout::from_json(c.get("params")?, total)?,
+                    lora_layout: Layout::from_json(c.get("lora_params")?, lora_total)?,
+                    groups,
+                },
+            );
+        }
+
+        let mut meta = BTreeMap::new();
+        for (name, c) in j.get("meta_configs")?.as_obj()? {
+            let theta_len = c.get("theta_len")?.as_usize()?;
+            meta.insert(
+                name.clone(),
+                MetaCfg {
+                    name: name.clone(),
+                    encode_name: c.get("encode_name")?.as_str()?.to_string(),
+                    w: c.get("W")?.as_usize()?,
+                    d: c.get("d")?.as_usize()?,
+                    k: c.get("K")?.as_usize()?,
+                    m: c.get("m")?.as_usize()?,
+                    norm: c.get("norm")?.as_str()?.to_string(),
+                    r: c.get("R")?.as_usize()?,
+                    l: c.get("L")?.as_usize()?,
+                    theta: Layout::from_json(c.get("theta")?, theta_len)?,
+                    decoder_params: c.get("decoder_params")?.as_usize()?,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    file: a.get("file")?.as_str()?.to_string(),
+                    inputs: parse_sig(a.get("inputs")?)?,
+                    outputs: parse_sig(a.get("outputs")?)?,
+                },
+            );
+        }
+
+        let mut ratio_presets = BTreeMap::new();
+        for (name, p) in j.get("ratio_presets")?.as_obj()? {
+            let v = p.usize_arr()?;
+            if v.len() != 2 {
+                bail!("ratio preset {name} malformed");
+            }
+            ratio_presets.insert(name.clone(), (v[0], v[1]));
+        }
+
+        let adam = j.get("adam")?;
+        let vq = j.get("vq")?;
+        let hp = HyperParams {
+            adam_b1: adam.get("b1")?.as_f64()?,
+            adam_b2: adam.get("b2")?.as_f64()?,
+            adam_eps: adam.get("eps")?.as_f64()?,
+            meta_lr: adam.get("meta_lr")?.as_f64()?,
+            lm_lr: adam.get("lm_lr")?.as_f64()?,
+            lora_lr: adam.get("lora_lr")?.as_f64()?,
+            vq_lambda: vq.get("lambda")?.as_f64()?,
+            vq_commit_beta: vq.get("commit_beta")?.as_f64()?,
+        };
+
+        Ok(Manifest { dir: dir.to_path_buf(), lm, meta, artifacts, ratio_presets, hp })
+    }
+
+    pub fn lm_cfg(&self, name: &str) -> Result<&LmCfg> {
+        self.lm.get(name).with_context(|| format!("no LM config {name:?}"))
+    }
+
+    pub fn meta_cfg(&self, name: &str) -> Result<&MetaCfg> {
+        self.meta.get(name).with_context(|| format!("no meta config {name:?}"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts.get(name).with_context(|| format!("no artifact {name:?}"))
+    }
+
+    /// Find the meta config for (row width, ratio preset).
+    pub fn meta_for_preset(&self, width: usize, preset: &str) -> Result<&MetaCfg> {
+        let (d, k) = *self
+            .ratio_presets
+            .get(preset)
+            .with_context(|| format!("unknown preset {preset:?}"))?;
+        let name = format!("w{width}_d{d}_k{k}_m3_rln");
+        self.meta_cfg(&name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&manifest_dir()).expect("run `make artifacts` before tests");
+        assert!(m.lm.contains_key("tiny"));
+        assert!(m.lm.contains_key("tinyl"));
+        assert!(m.artifacts.len() > 50);
+        let tiny = m.lm_cfg("tiny").unwrap();
+        assert_eq!(tiny.d_model, 256);
+        assert_eq!(tiny.groups.len(), 7);
+        // groups account for every linear parameter
+        let linear: usize = tiny.groups.values().map(|g| g.params).sum();
+        assert_eq!(
+            linear,
+            tiny.n_layers * (4 * 256 * 256 + 3 * 256 * 512)
+        );
+    }
+
+    #[test]
+    fn layout_slices_are_consistent() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        let tiny = m.lm_cfg("tiny").unwrap();
+        let flat = vec![0.5f32; tiny.layout.total];
+        let embed = tiny.layout.slice(&flat, "embed").unwrap();
+        assert_eq!(embed.len(), tiny.vocab * tiny.d_model);
+        assert!(tiny.layout.slice(&flat, "nonexistent").is_err());
+    }
+
+    #[test]
+    fn meta_cfg_bits() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        let mc = m.meta_cfg("w512_d8_k1024_m3_rln").unwrap();
+        assert_eq!(mc.bits_per_index(), 10);
+        assert_eq!(mc.l, 64);
+        // d -> 4d -> 4d -> d per net
+        let per_net = (8 * 32 + 32) + (32 * 32 + 32) + (32 * 8 + 8);
+        assert_eq!(mc.theta.total, 2 * per_net);
+        assert_eq!(mc.decoder_params, per_net);
+    }
+
+    #[test]
+    fn preset_resolution() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        let mc = m.meta_for_preset(256, "p16x").unwrap();
+        assert_eq!((mc.d, mc.k), (8, 1024));
+        assert!(m.meta_for_preset(256, "nope").is_err());
+    }
+}

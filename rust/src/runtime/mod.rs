@@ -1,0 +1,303 @@
+//! PJRT runtime: load AOT-lowered HLO text, compile once, execute many.
+//!
+//! This is the only place the `xla` crate is touched.  [`Runtime`] owns the
+//! CPU PJRT client, the parsed [`Manifest`], and a lazily-populated cache of
+//! compiled executables.  Inputs/outputs are validated against the manifest
+//! signature on every call, so a Python/Rust drift fails with a clear error
+//! instead of silent corruption.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::tensor::{TensorF32, TensorI32};
+use manifest::{ArtifactInfo, Dt, Manifest};
+
+/// An argument to an AOT executable.
+#[derive(Clone, Debug)]
+pub enum Arg {
+    F32(TensorF32),
+    I32(TensorI32),
+    /// f32 scalar (e.g. the Adam step counter).
+    Scalar(f32),
+}
+
+impl Arg {
+    fn dt(&self) -> Dt {
+        match self {
+            Arg::F32(_) | Arg::Scalar(_) => Dt::F32,
+            Arg::I32(_) => Dt::I32,
+        }
+    }
+
+    fn shape(&self) -> Vec<usize> {
+        match self {
+            Arg::F32(t) => t.shape.clone(),
+            Arg::I32(t) => t.shape.clone(),
+            Arg::Scalar(_) => vec![],
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Arg::Scalar(x) => xla::Literal::scalar(*x),
+            Arg::F32(t) => {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data).reshape(&dims)?
+            }
+            Arg::I32(t) => {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data).reshape(&dims)?
+            }
+        })
+    }
+}
+
+/// An output from an AOT executable.
+#[derive(Clone, Debug)]
+pub enum Out {
+    F32(TensorF32),
+    I32(TensorI32),
+}
+
+impl Out {
+    pub fn f32(self) -> Result<TensorF32> {
+        match self {
+            Out::F32(t) => Ok(t),
+            Out::I32(_) => bail!("expected f32 output, got i32"),
+        }
+    }
+
+    pub fn i32(self) -> Result<TensorI32> {
+        match self {
+            Out::I32(t) => Ok(t),
+            Out::F32(_) => bail!("expected i32 output, got f32"),
+        }
+    }
+
+    /// Scalar f32 convenience.
+    pub fn scalar(self) -> Result<f32> {
+        let t = self.f32()?;
+        ensure!(t.data.len() == 1, "expected scalar, got shape {:?}", t.shape);
+        Ok(t.data[0])
+    }
+}
+
+/// Cumulative dispatch statistics (per artifact), for the perf pass.
+#[derive(Clone, Debug, Default)]
+pub struct DispatchStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// The PJRT runtime: client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<HashMap<String, DispatchStats>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts dir: `<crate root>/artifacts`.
+    pub fn from_repo_root() -> Result<Runtime> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Self::new(&dir)
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let info = self.manifest.artifact(name)?;
+        let path = self.manifest.dir.join(&info.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        let dt = t0.elapsed().as_secs_f64();
+        if dt > 1.0 {
+            eprintln!("[runtime] compiled {name} in {dt:.2}s");
+        }
+        Ok(())
+    }
+
+    fn check_args(&self, info: &ArtifactInfo, name: &str, args: &[Arg]) -> Result<()> {
+        ensure!(
+            args.len() == info.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            info.inputs.len(),
+            args.len()
+        );
+        for (i, (a, sig)) in args.iter().zip(&info.inputs).enumerate() {
+            ensure!(
+                a.dt() == sig.dtype,
+                "{name}: input {i} dtype mismatch (expected {:?})",
+                sig.dtype
+            );
+            ensure!(
+                a.shape() == sig.shape,
+                "{name}: input {i} shape {:?} != manifest {:?}",
+                a.shape(),
+                sig.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact; returns its outputs in manifest order.
+    pub fn exec(&self, name: &str, args: &[Arg]) -> Result<Vec<Out>> {
+        let info = self.manifest.artifact(name)?.clone();
+        self.check_args(&info, name, args)?;
+        self.ensure_compiled(name)?;
+
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("just compiled");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()?;
+        drop(cache);
+
+        // aot.py lowers with return_tuple=True: always a tuple literal.
+        let parts = result.to_tuple()?;
+        ensure!(
+            parts.len() == info.outputs.len(),
+            "{name}: got {} outputs, manifest says {}",
+            parts.len(),
+            info.outputs.len()
+        );
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, sig) in parts.into_iter().zip(&info.outputs) {
+            let out = match sig.dtype {
+                Dt::F32 => {
+                    let v = lit.to_vec::<f32>()?;
+                    ensure!(v.len() == sig.count(), "{name}: output size mismatch");
+                    Out::F32(TensorF32::new(sig.shape.clone(), v))
+                }
+                Dt::I32 => {
+                    let v = lit.to_vec::<i32>()?;
+                    ensure!(v.len() == sig.count(), "{name}: output size mismatch");
+                    Out::I32(TensorI32::new(sig.shape.clone(), v))
+                }
+            };
+            outs.push(out);
+        }
+
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.total_secs += dt;
+        Ok(outs)
+    }
+
+    /// Pre-compile a set of artifacts (so timing loops exclude compile time).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot of per-artifact dispatch statistics.
+    pub fn dispatch_stats(&self) -> Vec<(String, DispatchStats)> {
+        let mut v: Vec<(String, DispatchStats)> =
+            self.stats.borrow().iter().map(|(k, s)| (k.clone(), s.clone())).collect();
+        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt() -> Runtime {
+        Runtime::from_repo_root().expect("run `make artifacts` before cargo test")
+    }
+
+    #[test]
+    fn exec_validates_shapes() {
+        let rt = rt();
+        // lm_eval_nll_tiny expects (params, tokens[16, 129])
+        let bad = rt.exec("lm_eval_nll_tiny", &[Arg::Scalar(1.0)]);
+        assert!(bad.is_err());
+        let p = rt.manifest.lm_cfg("tiny").unwrap().layout.total;
+        let bad2 = rt.exec(
+            "lm_eval_nll_tiny",
+            &[
+                Arg::F32(TensorF32::zeros(vec![p])),
+                Arg::I32(TensorI32::zeros(vec![2, 2])),
+            ],
+        );
+        assert!(bad2.is_err());
+    }
+
+    #[test]
+    fn exec_lm_eval_runs_and_returns_finite_nll() {
+        let rt = rt();
+        let cfg = rt.manifest.lm_cfg("tiny").unwrap().clone();
+        let p = TensorF32::zeros(vec![cfg.layout.total]);
+        let toks = TensorI32::zeros(vec![cfg.eval_batch, cfg.seq_len + 1]);
+        let out = rt.exec("lm_eval_nll_tiny", &[Arg::F32(p), Arg::I32(toks)]).unwrap();
+        assert_eq!(out.len(), 2);
+        let nll = out[0].clone().scalar().unwrap();
+        let cnt = out[1].clone().scalar().unwrap();
+        // zero params => uniform logits => nll = ln(V) per token
+        let per_tok = nll / cnt;
+        assert!((per_tok - (cfg.vocab as f32).ln()).abs() < 1e-3, "{per_tok}");
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let rt = rt();
+        assert!(rt.exec("no_such_artifact", &[]).is_err());
+    }
+
+    #[test]
+    fn meta_assign_smoke() {
+        let rt = rt();
+        let mc = rt.manifest.meta_cfg("w256_d8_k512_m3_rln").unwrap().clone();
+        let theta = TensorF32::zeros(vec![mc.theta.total]);
+        let c = TensorF32::zeros(vec![mc.k, mc.d]);
+        let rows = TensorF32::zeros(vec![mc.r, mc.w]);
+        let out = rt
+            .exec(
+                &format!("meta_assign_{}", mc.name),
+                &[Arg::F32(theta), Arg::F32(c), Arg::F32(rows)],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 6);
+        let idx = out[0].clone().i32().unwrap();
+        assert_eq!(idx.shape, vec![mc.r, mc.l]);
+    }
+}

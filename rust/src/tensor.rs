@@ -1,0 +1,239 @@
+//! Minimal dense tensor type used to marshal data in and out of PJRT
+//! literals and to hold model weights on the Rust side.
+//!
+//! Deliberately small: shape + contiguous `Vec<f32>` / `Vec<i32>`, with the
+//! handful of ops the coordinator needs (row slicing/scattering, matmul for
+//! baseline verification, binary IO).
+
+use anyhow::{ensure, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        TensorF32 { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        TensorF32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of rows / row width for a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.cols();
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let w = self.cols();
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    /// Gather rows by index into a new [idx.len(), W] tensor.
+    pub fn gather_rows(&self, idx: &[usize]) -> TensorF32 {
+        let w = self.cols();
+        let mut data = Vec::with_capacity(idx.len() * w);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        TensorF32::new(vec![idx.len(), w], data)
+    }
+
+    /// Scatter rows of `src` back into `self` at the given indices.
+    pub fn scatter_rows(&mut self, idx: &[usize], src: &TensorF32) {
+        assert_eq!(idx.len(), src.rows());
+        assert_eq!(self.cols(), src.cols());
+        for (r, &i) in idx.iter().enumerate() {
+            self.row_mut(i).copy_from_slice(src.row(r));
+        }
+    }
+
+    /// Naive matmul (baseline verification only; the hot paths run in XLA).
+    pub fn matmul(&self, other: &TensorF32) -> TensorF32 {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (other.rows(), other.cols());
+        assert_eq!(k, k2);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let src = &other.data[p * n..(p + 1) * n];
+                let dst = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    dst[j] += a * src[j];
+                }
+            }
+        }
+        TensorF32::new(vec![m, n], out)
+    }
+
+    /// Mean squared difference against another tensor of the same shape.
+    pub fn mse(&self, other: &TensorF32) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let mut acc = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = (*a - *b) as f64;
+            acc += d * d;
+        }
+        acc / self.data.len().max(1) as f64
+    }
+
+    // -- binary IO (simple "PT01" format: magic, rank, dims, payload) -------
+
+    pub fn write_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(b"PT01");
+        out.extend_from_slice(&(self.shape.len() as u32).to_le_bytes());
+        for &d in &self.shape {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn read_from(b: &[u8]) -> Result<(Self, usize)> {
+        ensure!(b.len() >= 8 && &b[0..4] == b"PT01", "bad tensor magic");
+        let rank = u32::from_le_bytes(b[4..8].try_into()?) as usize;
+        ensure!(rank <= 8, "absurd rank {rank}");
+        let mut off = 8;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            ensure!(b.len() >= off + 8, "tensor dims truncated");
+            shape.push(u64::from_le_bytes(b[off..off + 8].try_into()?) as usize);
+            off += 8;
+        }
+        let n: usize = shape.iter().product();
+        ensure!(b.len() >= off + 4 * n, "tensor payload truncated");
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            let o = off + 4 * i;
+            data.push(f32::from_le_bytes(b[o..o + 4].try_into()?));
+        }
+        Ok((TensorF32 { shape, data }, off + 4 * n))
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut buf = Vec::new();
+        self.write_to(&mut buf);
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let b = std::fs::read(path)?;
+        let (t, used) = Self::read_from(&b)?;
+        ensure!(used == b.len(), "trailing bytes in {path:?}");
+        Ok(t)
+    }
+}
+
+/// Dense row-major i32 tensor (token ids, codebook indices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        TensorI32 { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        TensorI32 { shape, data: vec![0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let t = TensorF32::new(vec![4, 3], (0..12).map(|x| x as f32).collect());
+        let g = t.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![6.0, 7.0, 8.0, 0.0, 1.0, 2.0]);
+        let mut t2 = TensorF32::zeros(vec![4, 3]);
+        t2.scatter_rows(&[2, 0], &g);
+        assert_eq!(t2.row(2), &[6.0, 7.0, 8.0]);
+        assert_eq!(t2.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(t2.row(1), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = TensorF32::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = TensorF32::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let a = TensorF32::new(vec![3], vec![1.0, 2.0, 3.0]);
+        assert_eq!(a.mse(&a), 0.0);
+        let b = TensorF32::new(vec![3], vec![1.0, 2.0, 5.0]);
+        assert!((a.mse(&b) - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn io_roundtrip() {
+        let t = TensorF32::new(vec![2, 5], (0..10).map(|x| x as f32 * 0.5).collect());
+        let mut buf = Vec::new();
+        t.write_to(&mut buf);
+        let (t2, used) = TensorF32::read_from(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn io_rejects_corruption() {
+        let t = TensorF32::zeros(vec![4]);
+        let mut buf = Vec::new();
+        t.write_to(&mut buf);
+        buf[0] = b'X';
+        assert!(TensorF32::read_from(&buf).is_err());
+        let mut buf2 = Vec::new();
+        t.write_to(&mut buf2);
+        buf2.truncate(buf2.len() - 1);
+        assert!(TensorF32::read_from(&buf2).is_err());
+    }
+}

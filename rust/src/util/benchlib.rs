@@ -1,0 +1,223 @@
+//! Criterion-like measurement harness (criterion itself is unavailable
+//! offline).  Provides warmup + timed iterations with mean/p50/p99 stats,
+//! and paper-style table rendering used by every `rust/benches/table*.rs`.
+
+use std::time::{Duration, Instant};
+
+use super::json::{arr, num, obj, s, write_json, Json};
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` with warmup, then time `iters` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    Measurement {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: samples[samples.len() / 2],
+        p99: samples[(samples.len() * 99) / 100],
+        min: samples[0],
+    }
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:40} iters={:4}  mean={:>10}  p50={:>10}  p99={:>10}",
+            self.name,
+            self.iters,
+            fmt_duration(self.mean),
+            fmt_duration(self.p50),
+            fmt_duration(self.p99),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Paper-style tables
+// ---------------------------------------------------------------------------
+
+/// A printable table that mirrors one of the paper's result tables and can be
+/// dumped to `bench_results/*.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns, markdown-ish.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:w$} | ", c, w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.columns, &widths));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&line(&sep, &widths));
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout and write JSON next to it.
+    pub fn emit(&self, json_path: Option<&str>) {
+        println!("{}", self.render());
+        if let Some(path) = json_path {
+            let j = obj(vec![
+                ("title", s(&self.title)),
+                ("columns", arr(self.columns.iter().map(|c| s(c)).collect())),
+                (
+                    "rows",
+                    arr(self
+                        .rows
+                        .iter()
+                        .map(|r| arr(r.iter().map(|c| s(c)).collect()))
+                        .collect()),
+                ),
+            ]);
+            if let Some(dir) = std::path::Path::new(path).parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            if let Err(e) = std::fs::write(path, write_json(&j)) {
+                eprintln!("warn: could not write {path}: {e}");
+            } else {
+                println!("[table json -> {path}]");
+            }
+        }
+    }
+}
+
+/// Format an accuracy as the paper does (2 decimals).
+pub fn pct(x: f64) -> String {
+    format!("{:.2}", x * 100.0)
+}
+
+/// Format a float with fixed decimals.
+pub fn fx(x: f64, d: usize) -> String {
+    format!("{x:.d$}")
+}
+
+/// Write an arbitrary JSON report under bench_results/.
+pub fn write_report(path: &str, j: &Json) {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let _ = std::fs::write(path, write_json(j));
+}
+
+/// Resolve the repo root (benches run from the crate root).
+pub fn repo_root() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[allow(unused)]
+pub fn n(x: f64) -> Json {
+    num(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("spin", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(m.iters, 5);
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.min <= m.p50 && m.p50 <= m.p99);
+    }
+
+    #[test]
+    fn table_render_and_arity() {
+        let mut t = Table::new("Table X", &["method", "acc"]);
+        t.row(vec!["ours".into(), "64.95".into()]);
+        let r = t.render();
+        assert!(r.contains("Table X"));
+        assert!(r.contains("ours"));
+        assert!(r.contains("64.95"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_mismatch_panics() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.6495), "64.95");
+        assert_eq!(fx(5.274, 2), "5.27");
+        assert!(fmt_duration(Duration::from_micros(12)).contains("µs"));
+        assert!(fmt_duration(Duration::from_millis(12)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).contains("s"));
+    }
+}

@@ -1,0 +1,195 @@
+//! Bit-packed unsigned integer arrays.
+//!
+//! The pocket format stores codebook indices with exactly `log2(K)` bits each
+//! (Eq. 14's `log2(K)·N` term).  This module packs/unpacks b-bit values
+//! (1 <= b <= 32) into a little-endian u64 word stream, processing a word at
+//! a time on the hot path (see EXPERIMENTS.md §Perf).
+
+/// Immutable view over packed b-bit unsigned integers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitPacked {
+    bits: u32,
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl BitPacked {
+    /// Pack `values` with `bits` bits each. Every value must fit.
+    pub fn pack(values: &[u32], bits: u32) -> Self {
+        assert!((1..=32).contains(&bits), "bits must be in 1..=32");
+        let mask = ones(bits);
+        let total_bits = values.len() as u64 * bits as u64;
+        let n_words = total_bits.div_ceil(64) as usize;
+        let mut words = vec![0u64; n_words];
+        let mut word_i = 0usize;
+        let mut bit_off = 0u32;
+        for &v in values {
+            debug_assert!(v as u64 <= mask, "value {v} does not fit in {bits} bits");
+            let v = (v as u64) & mask;
+            words[word_i] |= v << bit_off;
+            let used = 64 - bit_off;
+            if used < bits {
+                // spills into the next word
+                words[word_i + 1] |= v >> used;
+            }
+            bit_off += bits;
+            if bit_off >= 64 {
+                bit_off -= 64;
+                word_i += 1;
+            }
+        }
+        BitPacked { bits, len: values.len(), words }
+    }
+
+    /// Number of packed values.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bits per value.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Exact payload size in bits (the Eq. 14 accounting term).
+    pub fn payload_bits(&self) -> u64 {
+        self.len as u64 * self.bits as u64
+    }
+
+    /// Random access to the i-th value.
+    pub fn get(&self, i: usize) -> u32 {
+        assert!(i < self.len);
+        let bit = i as u64 * self.bits as u64;
+        let word = (bit / 64) as usize;
+        let off = (bit % 64) as u32;
+        let mask = ones(self.bits);
+        let lo = self.words[word] >> off;
+        let v = if off + self.bits > 64 {
+            lo | (self.words[word + 1] << (64 - off))
+        } else {
+            lo
+        };
+        (v & mask) as u32
+    }
+
+    /// Unpack everything (word-at-a-time fast path).
+    pub fn unpack(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.len);
+        let bits = self.bits;
+        let mask = ones(bits);
+        let mut word_i = 0usize;
+        let mut bit_off = 0u32;
+        for _ in 0..self.len {
+            let lo = self.words[word_i] >> bit_off;
+            let v = if bit_off + bits > 64 {
+                lo | (self.words[word_i + 1] << (64 - bit_off))
+            } else {
+                lo
+            };
+            out.push((v & mask) as u32);
+            bit_off += bits;
+            if bit_off >= 64 {
+                bit_off -= 64;
+                word_i += 1;
+            }
+        }
+        out
+    }
+
+    /// Serialize: `bits (u32) | len (u64) | words...` little-endian.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + self.words.len() * 8);
+        out.extend_from_slice(&self.bits.to_le_bytes());
+        out.extend_from_slice(&(self.len as u64).to_le_bytes());
+        for w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize; returns (value, bytes consumed).
+    pub fn from_bytes(b: &[u8]) -> anyhow::Result<(Self, usize)> {
+        anyhow::ensure!(b.len() >= 12, "bitpack header truncated");
+        let bits = u32::from_le_bytes(b[0..4].try_into()?);
+        anyhow::ensure!((1..=32).contains(&bits), "bad bit width {bits}");
+        let len = u64::from_le_bytes(b[4..12].try_into()?) as usize;
+        let n_words = (len as u64 * bits as u64).div_ceil(64) as usize;
+        let need = 12 + n_words * 8;
+        anyhow::ensure!(b.len() >= need, "bitpack payload truncated");
+        let mut words = Vec::with_capacity(n_words);
+        for i in 0..n_words {
+            let o = 12 + i * 8;
+            words.push(u64::from_le_bytes(b[o..o + 8].try_into()?));
+        }
+        Ok((BitPacked { bits, len, words }, need))
+    }
+}
+
+#[inline]
+fn ones(bits: u32) -> u64 {
+    if bits == 64 { !0 } else { (1u64 << bits) - 1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Pcg32::seeded(1);
+        for bits in 1..=32u32 {
+            let cap = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let vals: Vec<u32> = (0..513)
+                .map(|_| {
+                    if cap == u32::MAX { rng.next_u32() } else { rng.below(cap + 1) }
+                })
+                .collect();
+            let p = BitPacked::pack(&vals, bits);
+            assert_eq!(p.unpack(), vals, "width {bits}");
+            for (i, &v) in vals.iter().enumerate().step_by(37) {
+                assert_eq!(p.get(i), v, "get width {bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn payload_bits_exact() {
+        let vals = vec![1u32; 1000];
+        let p = BitPacked::pack(&vals, 10);
+        assert_eq!(p.payload_bits(), 10_000);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut rng = Pcg32::seeded(2);
+        let vals: Vec<u32> = (0..777).map(|_| rng.below(1 << 11)).collect();
+        let p = BitPacked::pack(&vals, 11);
+        let bytes = p.to_bytes();
+        let (q, used) = BitPacked::from_bytes(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(p, q);
+        assert_eq!(q.unpack(), vals);
+    }
+
+    #[test]
+    fn truncated_input_rejected() {
+        let p = BitPacked::pack(&[1, 2, 3], 8);
+        let bytes = p.to_bytes();
+        assert!(BitPacked::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        assert!(BitPacked::from_bytes(&bytes[..4]).is_err());
+    }
+
+    #[test]
+    fn empty_is_fine() {
+        let p = BitPacked::pack(&[], 7);
+        assert!(p.is_empty());
+        assert_eq!(p.unpack(), Vec::<u32>::new());
+        let (q, _) = BitPacked::from_bytes(&p.to_bytes()).unwrap();
+        assert!(q.is_empty());
+    }
+}

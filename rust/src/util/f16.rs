@@ -1,0 +1,151 @@
+//! IEEE-754 binary16 conversion (no `half` crate offline).
+//!
+//! The pocket file format stores codebooks in f16 (Eq. 14: `16·K·d` bits),
+//! so the round-trip here is on the serving path of every decompression.
+
+/// Convert f32 -> f16 bits with round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // Re-bias exponent: f32 bias 127 -> f16 bias 15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal f16.
+        let e = (unbiased + 15) as u32;
+        let m = mant >> 13;
+        let rest = mant & 0x1fff;
+        let mut out = (sign as u32) | (e << 10) | m;
+        // round to nearest even
+        if rest > 0x1000 || (rest == 0x1000 && (m & 1) == 1) {
+            out += 1; // may carry into exponent; that is correct rounding
+        }
+        return out as u16;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16.
+        let full_mant = mant | 0x0080_0000; // implicit leading 1
+        let shift = (-14 - unbiased + 13) as u32;
+        let m = full_mant >> shift;
+        let rest = full_mant & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut out = (sign as u32) | m;
+        if rest > halfway || (rest == halfway && (m & 1) == 1) {
+            out += 1;
+        }
+        return out as u16;
+    }
+    sign // underflow -> signed zero
+}
+
+/// Convert f16 bits -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // subnormal: normalize
+            // top set bit at position h (h<10): lead = 9 - h
+            let lead = m.leading_zeros() - 22;
+            let m2 = (m << (lead + 1)) & 0x3ff;
+            let e = 127 - 15 - lead;
+            sign | (e << 23) | (m2 << 13)
+        }
+        (0x1f, 0) => sign | 0x7f80_0000,
+        (0x1f, m) => sign | 0x7f80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantize a slice through f16 and back (what the codebook experiences).
+pub fn roundtrip_f16(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| f16_bits_to_f32(f32_to_f16_bits(x))).collect()
+}
+
+/// Encode a slice to raw little-endian f16 bytes.
+pub fn encode_f16(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for &x in xs {
+        out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+    }
+    out
+}
+
+/// Decode raw little-endian f16 bytes to f32.
+pub fn decode_f16(bytes: &[u8]) -> Vec<f32> {
+    assert!(bytes.len() % 2 == 0);
+    bytes
+        .chunks_exact(2)
+        .map(|b| f16_bits_to_f32(u16::from_le_bytes([b[0], b[1]])))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_values() {
+        for &(f, h) in &[
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3c00),
+            (-1.0, 0xbc00),
+            (2.0, 0x4000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff), // f16 max
+        ] {
+            assert_eq!(f32_to_f16_bits(f), h, "{f}");
+            assert_eq!(f16_bits_to_f32(h), f, "{h:#x}");
+        }
+    }
+
+    #[test]
+    fn overflow_to_inf_and_nan() {
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xfc00);
+        assert!(f16_bits_to_f32(0x7c00).is_infinite());
+        let nan = f32_to_f16_bits(f32::NAN);
+        assert!(f16_bits_to_f32(nan).is_nan());
+    }
+
+    #[test]
+    fn subnormal_roundtrip() {
+        let tiny = 3.0e-7f32; // subnormal in f16
+        let rt = f16_bits_to_f32(f32_to_f16_bits(tiny));
+        assert!((rt - tiny).abs() / tiny < 0.1);
+    }
+
+    #[test]
+    fn relative_error_bounded_for_weights() {
+        // Typical LLM weight range: the f16 relative error must be < 2^-10.
+        let mut x = -0.2f32;
+        while x < 0.2 {
+            if x.abs() > 1e-4 {
+                let rt = f16_bits_to_f32(f32_to_f16_bits(x));
+                assert!(((rt - x) / x).abs() < 1.0 / 1024.0, "{x} -> {rt}");
+            }
+            x += 1.3e-4;
+        }
+    }
+
+    #[test]
+    fn encode_decode_bytes() {
+        let xs = vec![0.1f32, -2.5, 3.75, 0.0, -0.0078];
+        let back = decode_f16(&encode_f16(&xs));
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! From-scratch substrates (the offline vendor set has no rand / serde /
+//! clap / tokio / criterion / proptest — each is re-implemented here at the
+//! scope this project needs; see DESIGN.md §7).
+
+pub mod benchlib;
+pub mod bitpack;
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod prng;
+pub mod quickcheck;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,174 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! Provides seeded generators, a configurable case count, and greedy input
+//! shrinking for the common shapes we need (integers, f32 vectors, index
+//! vectors).  Used across the crate for invariants like "bitpack roundtrips",
+//! "pocket file format roundtrips", "k-means never increases the objective".
+//!
+//! Usage:
+//! ```ignore
+//! property("pack/unpack", |g| {
+//!     let bits = g.int_in(1, 24) as u32;
+//!     let xs = g.vec_u32(0..1 << bits, 0..2000);
+//!     prop_assert(BitPacked::pack(&xs, bits).unpack() == xs, "roundtrip")
+//! });
+//! ```
+
+use super::prng::Pcg32;
+
+/// Per-case random input source with range helpers.
+pub struct Gen {
+    rng: Pcg32,
+    /// Shrink pressure in [0,1]: generators scale sizes down as it rises.
+    pub scale: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Pcg32::seeded(seed), scale: 1.0 }
+    }
+
+    pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(hi >= lo);
+        let span = (hi - lo) as u64 + 1;
+        let scaled = ((span as f64 * self.scale).ceil() as u64).max(1);
+        lo + (self.rng.next_u64() % scaled.min(span)) as i64
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.int_in(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn normal(&mut self, std: f32) -> f32 {
+        self.rng.normal() * std
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len_lo: usize, len_hi: usize, std: f32) -> Vec<f32> {
+        let n = self.usize_in(len_lo, len_hi);
+        (0..n).map(|_| self.normal(std)).collect()
+    }
+
+    pub fn vec_u32_below(&mut self, bound: u32, len_lo: usize, len_hi: usize) -> Vec<u32> {
+        let n = self.usize_in(len_lo, len_hi);
+        (0..n).map(|_| self.rng.below(bound)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+}
+
+/// Outcome of one property case.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond { Ok(()) } else { Err(msg.to_string()) }
+}
+
+/// Assert approximate equality of two f32 slices.
+pub fn prop_close(a: &[f32], b: &[f32], atol: f32, msg: &str) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("{msg}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > atol {
+            return Err(format!("{msg}: index {i}: {x} vs {y} (atol {atol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Run `cases` random cases of `prop`; on failure, retry with shrink pressure
+/// to report a smaller counterexample seed. Panics with the failing seed so
+/// the case is reproducible.
+pub fn property_cases<F: Fn(&mut Gen) -> PropResult>(name: &str, cases: usize, prop: F) {
+    for case in 0..cases {
+        let seed = 0x9e3779b9u64.wrapping_mul(case as u64 + 1) ^ 0xabcdef;
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            // Greedy shrink: re-run with smaller size scales, keep the
+            // smallest seed/scale that still fails.
+            let mut best = (1.0f64, msg.clone());
+            let mut sc = 0.5;
+            while sc > 0.02 {
+                let mut g2 = Gen::new(seed);
+                g2.scale = sc;
+                if let Err(m2) = prop(&mut g2) {
+                    best = (sc, m2);
+                    sc *= 0.5;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed:#x}, \
+                 min scale {:.3}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// 64 cases by default.
+pub fn property<F: Fn(&mut Gen) -> PropResult>(name: &str, prop: F) {
+    property_cases(name, 64, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        property("reverse twice is identity", |g| {
+            let xs = g.vec_f32(0, 50, 1.0);
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            prop_close(&xs, &ys, 0.0, "reverse")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        property("always fails", |_g| prop_assert(false, "nope"));
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        property("ranges", |g| {
+            let x = g.int_in(-5, 5);
+            prop_assert((-5..=5).contains(&x), "int_in range")?;
+            let u = g.usize_in(1, 3);
+            prop_assert((1..=3).contains(&u), "usize_in range")?;
+            let f = g.f32_in(0.0, 2.0);
+            prop_assert((0.0..=2.0).contains(&f), "f32_in range")?;
+            let v = g.vec_u32_below(10, 0, 20);
+            prop_assert(v.iter().all(|&x| x < 10), "vec bound")
+        });
+    }
+
+    #[test]
+    fn shrink_reduces_scale_monotonically() {
+        // A property that fails only for long vectors; the shrinker should
+        // still report failure (scale shrink keeps it failing until the
+        // vector gets short).
+        let r = std::panic::catch_unwind(|| {
+            property("fails on long", |g| {
+                let xs = g.vec_f32(0, 100, 1.0);
+                prop_assert(xs.len() < 10, "too long")
+            })
+        });
+        assert!(r.is_err());
+    }
+}

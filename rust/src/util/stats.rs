@@ -1,0 +1,175 @@
+//! Streaming statistics substrate: Welford accumulator, histogram (Fig. 2),
+//! percentiles and top-k sums (the `mse_top100` metric of Tables 5-7).
+
+/// Numerically stable streaming mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn extend(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.push(x as f64);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Fixed-range histogram over f32 samples (Fig. 2's weight distribution).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n_bins = self.counts.len();
+            let b = ((x - self.lo) / (self.hi - self.lo) * n_bins as f64) as usize;
+            self.counts[b.min(n_bins - 1)] += 1;
+        }
+    }
+
+    pub fn extend(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.push(x as f64);
+        }
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        self.lo + (i as f64 + 0.5) / self.counts.len() as f64 * (self.hi - self.lo)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+}
+
+/// Exact percentile by sorting a copy (fine at our sample sizes).
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty() && (0.0..=100.0).contains(&p));
+    let mut s: Vec<f32> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0 * (s.len() - 1) as f64).round() as usize;
+    s[rank]
+}
+
+/// Sum of the k largest values (the paper's `mse_top100`).
+pub fn top_k_sum(xs: &[f32], k: usize) -> f64 {
+    let mut s: Vec<f32> = xs.to_vec();
+    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    s.iter().take(k).map(|&x| x as f64).sum()
+}
+
+/// The symmetric range covering `frac` of the samples around zero
+/// (Fig. 2 plots "values within the 99.9% range").
+pub fn central_range(xs: &[f32], frac: f64) -> (f32, f32) {
+    let tail = (100.0 - frac * 100.0) / 2.0;
+    (percentile(xs, tail), percentile(xs, 100.0 - tail))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut w = Welford::new();
+        w.extend(&xs);
+        let mean: f64 = xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64;
+        let var: f64 = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>()
+            / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-9);
+        assert!((w.var() - var).abs() < 1e-9);
+        assert_eq!(w.count(), 1000);
+    }
+
+    #[test]
+    fn histogram_bins_and_tails() {
+        let mut h = Histogram::new(-1.0, 1.0, 4);
+        for x in [-2.0, -0.9, -0.1, 0.1, 0.9, 2.0] {
+            h.push(x);
+        }
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.counts(), &[1, 1, 1, 1]);
+        assert_eq!(h.total(), 6);
+        assert!((h.bin_center(0) - (-0.75)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_and_topk() {
+        let xs: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+        assert_eq!(top_k_sum(&xs, 3), 100.0 + 99.0 + 98.0);
+    }
+
+    #[test]
+    fn central_range_symmetricish() {
+        let xs: Vec<f32> = (-500..=500).map(|i| i as f32 / 100.0).collect();
+        let (lo, hi) = central_range(&xs, 0.9);
+        assert!(lo < -4.0 && hi > 4.0);
+        assert!((lo + hi).abs() < 0.2);
+    }
+}

@@ -1,0 +1,157 @@
+//! End-to-end integration tests over the real AOT artifacts: train a few
+//! steps, compress one group, round-trip the pocket file, verify the device
+//! decode path reproduces the coordinator's reconstruction, and check that
+//! compression damage behaves monotonically with rate.
+//!
+//! These run the actual PJRT executables (CPU), so they use reduced step
+//! counts; full-scale runs live in the benches.
+
+use pocketllm::coordinator::job::{compress_group, decode_group, CodebookInit, JobOpts};
+use pocketllm::coordinator::{compress_model, lm, reconstruct_from_pocket, PipelineOpts};
+use pocketllm::data::tasks::{generate, ZERO_SHOT_SUITES};
+use pocketllm::data::Corpus;
+use pocketllm::eval::{perplexity, score_instances, zero_shot_accuracy};
+use pocketllm::model::{group_rows, WeightStore};
+use pocketllm::packfmt::PocketFile;
+use pocketllm::runtime::Runtime;
+use pocketllm::util::prng::Pcg32;
+
+fn quick_job() -> JobOpts {
+    JobOpts {
+        train_steps: 60,
+        kmeans_iters: 1,
+        post_steps: 10,
+        codebook_init: CodebookInit::LatentMatched,
+        seed: 1,
+        log_every: 20,
+    }
+}
+
+#[test]
+fn full_pipeline_roundtrip() {
+    let rt = Runtime::from_repo_root().expect("artifacts built");
+    let corpus = Corpus::new(512, 77);
+
+    // 1. a few LM steps so weights are non-degenerate
+    let (ws, losses) = lm::train_lm(&rt, "tiny", &corpus, 8, 3, 0).unwrap();
+    assert!(losses.last().unwrap() < losses.first().unwrap());
+
+    // 2. compress two groups at p16x with a quick job
+    let opts = PipelineOpts {
+        preset: "p16x".into(),
+        groups: Some(vec!["q".into(), "up".into()]),
+        job: quick_job(),
+        meta_override: None,
+    };
+    let res = compress_model(&rt, &ws, &opts).unwrap();
+    assert_eq!(res.report.per_group.len(), 2);
+    assert!(res.report.avg_bits > 1.0 && res.report.avg_bits < 3.0, "{}", res.report.avg_bits);
+    for (g, m) in &res.report.per_group {
+        assert!(m.mse_loss.is_finite() && m.mse_loss > 0.0, "{g}");
+        assert!(m.codebook_utilization > 0.05, "{g}: {}", m.codebook_utilization);
+    }
+
+    // 3. pocket file round-trip through bytes
+    let bytes = res.pocket.to_bytes();
+    let pocket2 = PocketFile::from_bytes(&bytes).unwrap();
+
+    // 4. device-side reconstruction matches the coordinator's (up to the f16
+    //    codebook + scales quantization in the file)
+    let ws2 = reconstruct_from_pocket(&rt, &pocket2).unwrap();
+    let a = group_rows(&res.reconstructed, "q").unwrap();
+    let b = group_rows(&ws2, "q").unwrap();
+    let mse = a.mse(&b);
+    assert!(mse < 1e-5, "decode path diverged: {mse}");
+    // untouched groups are bit-identical
+    let ka = group_rows(&ws, "k").unwrap();
+    let kb = group_rows(&ws2, "k").unwrap();
+    assert_eq!(ka.data, kb.data);
+
+    // 5. the compressed model still runs and its ppl is sane
+    let ppl_base = perplexity(&rt, &ws, &corpus, 2).unwrap();
+    let ppl_comp = perplexity(&rt, &ws2, &corpus, 2).unwrap();
+    assert!(ppl_base.is_finite() && ppl_comp.is_finite());
+    assert!(ppl_comp < 520.0, "compressed model saturated: {ppl_comp}");
+}
+
+#[test]
+fn decode_group_matches_assign_reconstruction() {
+    let rt = Runtime::from_repo_root().unwrap();
+    let mc = rt.manifest.meta_cfg("w256_d8_k512_m3_rln").unwrap().clone();
+    let mut rng = Pcg32::seeded(5);
+    let mut data = vec![0.0f32; 128 * 256];
+    rng.fill_normal(&mut data, 0.04);
+    let rows = pocketllm::tensor::TensorF32::new(vec![128, 256], data);
+    let res = compress_group(&rt, &mc, &rows, &quick_job()).unwrap();
+    let rec = decode_group(
+        &rt, &mc,
+        &pocketllm::coordinator::job::decoder_slice(&mc, &res.theta),
+        &res.codebook, &res.indices, &res.row_scales, 128,
+    )
+    .unwrap();
+    let mse = rec.mse(&res.recon);
+    assert!(mse < 1e-10, "decode != assign recon: {mse}");
+}
+
+#[test]
+fn more_rate_less_damage() {
+    // p8x must reconstruct better than p20x on the same rows (Table 1's
+    // vertical axis).
+    let rt = Runtime::from_repo_root().unwrap();
+    let mut rng = Pcg32::seeded(9);
+    let corpus = Corpus::new(512, 88);
+    let (ws, _) = lm::train_lm(&rt, "tiny", &corpus, 6, 4, 0).unwrap();
+    let rows = group_rows(&ws, "v").unwrap();
+    let mut mses = Vec::new();
+    for preset in ["p8x", "p20x"] {
+        let mc = rt.manifest.meta_for_preset(256, preset).unwrap().clone();
+        let res = compress_group(&rt, &mc, &rows, &quick_job()).unwrap();
+        mses.push(res.metrics.mse_loss);
+    }
+    assert!(
+        mses[0] < mses[1],
+        "8x ({}) should beat 20x ({})",
+        mses[0],
+        mses[1]
+    );
+    let _ = &mut rng;
+}
+
+#[test]
+fn zero_shot_scoring_is_consistent() {
+    let rt = Runtime::from_repo_root().unwrap();
+    let corpus = Corpus::new(512, 55);
+    let cfg = rt.manifest.lm_cfg("tiny").unwrap().clone();
+    let ws = WeightStore::init(&cfg, &mut Pcg32::seeded(2));
+    // random model ~ chance accuracy on a 2-choice suite
+    let acc = zero_shot_accuracy(&rt, &ws, &corpus, &ZERO_SHOT_SUITES[0], 60, 3).unwrap();
+    assert!((0.2..=0.8).contains(&acc), "untrained acc {acc}");
+    // scores have the right arity
+    let insts = generate(&corpus, &ZERO_SHOT_SUITES[2], 5, 4);
+    let scores = score_instances(&rt, &ws, &insts).unwrap();
+    assert_eq!(scores.len(), 5);
+    assert!(scores.iter().all(|s| s.len() == 4));
+    assert!(scores.iter().flatten().all(|v| v.is_finite()));
+}
+
+#[test]
+fn lora_finetune_improves_compressed_model() {
+    let rt = Runtime::from_repo_root().unwrap();
+    let corpus = Corpus::new(512, 66);
+    let (ws, _) = lm::train_lm(&rt, "tiny", &corpus, 12, 5, 0).unwrap();
+    // damage the model hard (p20x on three groups, tiny budget)
+    let opts = PipelineOpts {
+        preset: "p20x".into(),
+        groups: Some(vec!["q".into(), "v".into(), "up".into()]),
+        job: JobOpts { train_steps: 25, kmeans_iters: 0, post_steps: 0, ..quick_job() },
+        meta_override: None,
+    };
+    let res = compress_model(&rt, &ws, &opts).unwrap();
+    let ppl_damaged = perplexity(&rt, &res.reconstructed, &corpus, 2).unwrap();
+    let recovered = lm::lora_finetune(&rt, &res.reconstructed, &corpus, 15, 6).unwrap();
+    let ppl_rec = perplexity(&rt, &recovered, &corpus, 2).unwrap();
+    assert!(
+        ppl_rec < ppl_damaged,
+        "LoRA did not help: {ppl_damaged} -> {ppl_rec}"
+    );
+}
