@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Hermetic CI: build + test the Rust crate on the pure-Rust reference
+# backend. No Python, no JAX, no AOT artifacts, no network beyond the
+# crates.io fetch of `anyhow` — the vendored xla stub covers the PJRT
+# surface. Mirrors the tier-1 gate: cargo build --release && cargo test -q.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build (release) =="
+cargo build --release
+
+echo "== cargo test (reference backend, hermetic) =="
+cargo test -q
+
+echo "== CLI smoke (reference backend) =="
+./target/release/pocketllm info --backend reference >/dev/null
+echo "ci.sh: all green"

@@ -13,7 +13,7 @@
 //! 6. evaluates perplexity + all five zero-shot suites before/after, plus a
 //!    LoRA-recovered variant and a linear-VQ baseline at matched bits.
 //!
-//! Results land in bench_results/e2e.json and EXPERIMENTS.md quotes them.
+//! Results land in bench_results/e2e.json (see rust/DESIGN.md §6).
 
 use pocketllm::coordinator::lm::{lora_finetune, train_lm};
 use pocketllm::coordinator::{compress_model, reconstruct_from_pocket, PipelineOpts};

@@ -14,9 +14,14 @@ use pocketllm::packfmt::ratio_for;
 use pocketllm::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    // 1. PJRT runtime over the AOT artifacts (run `make artifacts` first).
+    // 1. runtime: PJRT over AOT artifacts when available, otherwise the
+    //    hermetic pure-Rust reference backend (no build step needed).
     let rt = Runtime::from_repo_root()?;
-    println!("loaded manifest: {} artifacts", rt.manifest.artifacts.len());
+    println!(
+        "backend: {} ({} artifacts in manifest)",
+        rt.backend_name(),
+        rt.manifest.artifacts.len()
+    );
 
     // 2. a synthetic corpus and a briefly trained substrate model
     let corpus = Corpus::new(512, 1001);

@@ -14,7 +14,7 @@ VMEM footprint per grid step (f32):
     = 256*8*4 + 512*8*4 + 256*512*4  ≈ 0.54 MB  « 16 MB VMEM.
 MXU utilization estimate: the 2*NB*KB*d MACs per step dominate; with d=8 the
 contraction is narrow, so on real hardware one would fuse multiple subvector
-tiles per step — noted in EXPERIMENTS.md §Perf.
+tiles per step — noted in rust/DESIGN.md §8 (perf notes).
 """
 
 from __future__ import annotations

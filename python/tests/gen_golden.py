@@ -1,0 +1,117 @@
+"""Generate golden parity vectors for the Rust reference backend.
+
+Runs the pure-jnp oracles of ``compile/kernels/ref.py`` on small fixed-seed
+inputs and dumps input/output pairs to ``rust/tests/golden/kernels.json``.
+``rust/tests/kernel_parity.rs`` replays the inputs through the native Rust
+kernels and asserts agreement to 1e-5.
+
+Usage:  cd python && python -m tests.gen_golden
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+import jax.numpy as jnp  # noqa: E402
+
+from compile.kernels import ref  # noqa: E402
+
+
+def flat(a) -> list:
+    """f32 array -> list of exact-roundtrip JSON doubles."""
+    return [float(v) for v in np.asarray(a, np.float32).reshape(-1)]
+
+
+def gen_rln(rng):
+    cases = []
+    for (r, w) in [(4, 16), (8, 64), (3, 24)]:
+        x = rng.normal(0, 0.04, (r, w)).astype(np.float32)
+        y = ref.rln_ref(jnp.array(x))
+        cases.append({"R": r, "W": w, "x": flat(x), "y": flat(y)})
+    return cases
+
+
+def gen_ln(rng):
+    cases = []
+    for (r, w, d) in [(4, 16, 4), (6, 64, 8), (2, 32, 8)]:
+        x = rng.normal(0, 1.0, (r, w)).astype(np.float32)
+        y = ref.ln_ref(jnp.array(x), d)
+        cases.append({"R": r, "W": w, "d": d, "x": flat(x), "y": flat(y)})
+    return cases
+
+
+def gen_mlp_block(rng):
+    cases = []
+    grid = [
+        # (R, W, din, dout, norm, residual, activate)
+        (4, 32, 8, 32, "rln", False, True),   # input layer d -> 4d
+        (4, 128, 32, 32, "rln", True, True),  # residual middle layer
+        (4, 128, 32, 8, "rln", False, False),  # output layer, no GELU
+        (3, 32, 8, 32, "ln", False, True),
+        (3, 128, 32, 32, "ln", True, False),
+    ]
+    for (r, w, din, dout, norm, residual, activate) in grid:
+        x = rng.normal(0, 0.5, (r, w)).astype(np.float32)
+        wm = rng.normal(0, 0.3, (din, dout)).astype(np.float32)
+        b = rng.normal(0, 0.1, (dout,)).astype(np.float32)
+        y = ref.mlp_block_ref(jnp.array(x), jnp.array(wm), jnp.array(b),
+                              norm, residual, activate)
+        cases.append({
+            "R": r, "W": w, "din": din, "dout": dout, "norm": norm,
+            "residual": residual, "activate": activate,
+            "x": flat(x), "w": flat(wm), "b": flat(b), "y": flat(y),
+        })
+    return cases
+
+
+def gen_vq_assign(rng):
+    cases = []
+    for (n, d, k) in [(32, 4, 16), (48, 8, 32), (16, 8, 8)]:
+        z = rng.normal(0, 1.0, (n, d)).astype(np.float32)
+        c = rng.normal(0, 1.0, (k, d)).astype(np.float32)
+        idx, sq = ref.vq_assign_ref(jnp.array(z), jnp.array(c))
+        cases.append({
+            "N": n, "d": d, "K": k, "z": flat(z), "c": flat(c),
+            "idx": [int(v) for v in np.asarray(idx)], "sq": flat(sq),
+        })
+    return cases
+
+
+def gen_gather_rows(rng):
+    cases = []
+    for (r, l, k, d) in [(4, 8, 16, 4), (3, 4, 8, 8)]:
+        c = rng.normal(0, 1.0, (k, d)).astype(np.float32)
+        idx = rng.integers(0, k, (r, l)).astype(np.int32)
+        y = ref.gather_rows_ref(jnp.array(c), jnp.array(idx), l * d)
+        cases.append({
+            "R": r, "L": l, "K": k, "d": d, "c": flat(c),
+            "idx": [int(v) for v in idx.reshape(-1)], "y": flat(y),
+        })
+    return cases
+
+
+def main():
+    rng = np.random.default_rng(0xC0DE)
+    golden = {
+        "rln": gen_rln(rng),
+        "ln": gen_ln(rng),
+        "mlp_block": gen_mlp_block(rng),
+        "vq_assign": gen_vq_assign(rng),
+        "gather_rows": gen_gather_rows(rng),
+    }
+    out = os.path.join(os.path.dirname(__file__), "..", "..",
+                       "rust", "tests", "golden", "kernels.json")
+    out = os.path.abspath(out)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(golden, f, separators=(",", ":"))
+    n = sum(len(v) for v in golden.values())
+    print(f"wrote {n} golden cases -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
-//! One layer-group compression job — Algorithm 1 of the paper, driven from
-//! Rust against the AOT executables:
+//! One layer-group compression job — Algorithm 1 of the paper, driven
+//! through the [`Runtime`] backend (PJRT artifacts or the pure-Rust
+//! reference kernels):
 //!
 //! 1. initialize meta-nets theta (manifest init_std) and the codebook
 //!    (normal distribution matched to the latent statistics — the paper's
@@ -17,10 +18,11 @@ use anyhow::Result;
 
 use super::metrics::GroupMetrics;
 use crate::runtime::manifest::MetaCfg;
-use crate::runtime::{Arg, Out, Runtime};
+use crate::runtime::{Arg, Runtime};
 use crate::tensor::{TensorF32, TensorI32};
 use crate::util::prng::Pcg32;
 use crate::util::stats::top_k_sum;
+use crate::util::threadpool::{default_workers, scoped_map};
 
 /// Codebook initialization strategy (Table 7 ablation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -386,9 +388,10 @@ pub fn compress_group(
     })
 }
 
-/// Reconstruct rows from (decoder, codebook, indices) via the AOT decode
-/// path — the exact computation an edge device runs after downloading a
-/// pocket file.
+/// Reconstruct rows from (decoder, codebook, indices) via the backend's
+/// decode path — the exact computation an edge device runs after
+/// downloading a pocket file.  Row chunks are independent, so they decode
+/// in parallel over the thread pool (order restored on scatter).
 pub fn decode_group(
     rt: &Runtime,
     mc: &MetaCfg,
@@ -403,30 +406,37 @@ pub fn decode_group(
     anyhow::ensure!(n_rows % mc.r == 0, "rows not divisible by dispatch size");
     let theta = theta_from_decoder(mc, decoder);
     let decode_name = format!("meta_decode_{}", mc.name);
+    let n_chunks = n_rows / mc.r;
+    let chunk_rows = scoped_map(
+        default_workers(n_chunks.max(1)),
+        (0..n_chunks).collect::<Vec<_>>(),
+        |chunk_i| -> Result<TensorF32> {
+            let idx_chunk: Vec<i32> = indices
+                [chunk_i * mc.r * mc.l..(chunk_i + 1) * mc.r * mc.l]
+                .iter()
+                .map(|&v| v as i32)
+                .collect();
+            let stats_chunk =
+                row_scales[2 * chunk_i * mc.r..2 * (chunk_i + 1) * mc.r].to_vec();
+            let outs = rt.exec(
+                &decode_name,
+                &[
+                    Arg::F32(theta.clone()),
+                    Arg::F32(codebook.clone()),
+                    Arg::I32(TensorI32::new(vec![mc.r, mc.l], idx_chunk)),
+                    Arg::F32(TensorF32::new(vec![mc.r, 2], stats_chunk)),
+                ],
+            )?;
+            outs.into_iter()
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("decode returned no outputs"))?
+                .f32()
+        },
+    );
     let mut out = TensorF32::zeros(vec![n_rows, mc.w]);
-    for chunk_i in 0..n_rows / mc.r {
+    for (chunk_i, rows_hat) in chunk_rows.into_iter().enumerate() {
         let rows_idx: Vec<usize> = (chunk_i * mc.r..(chunk_i + 1) * mc.r).collect();
-        let idx_chunk: Vec<i32> = indices
-            [chunk_i * mc.r * mc.l..(chunk_i + 1) * mc.r * mc.l]
-            .iter()
-            .map(|&v| v as i32)
-            .collect();
-        let stats_chunk =
-            row_scales[2 * chunk_i * mc.r..2 * (chunk_i + 1) * mc.r].to_vec();
-        let outs = rt.exec(
-            &decode_name,
-            &[
-                Arg::F32(theta.clone()),
-                Arg::F32(codebook.clone()),
-                Arg::I32(TensorI32::new(vec![mc.r, mc.l], idx_chunk)),
-                Arg::F32(TensorF32::new(vec![mc.r, 2], stats_chunk)),
-            ],
-        )?;
-        let rows_hat = match &outs[0] {
-            Out::F32(t) => t.clone(),
-            _ => anyhow::bail!("decode output dtype"),
-        };
-        out.scatter_rows(&rows_idx, &rows_hat);
+        out.scatter_rows(&rows_idx, &rows_hat?);
     }
     Ok(out)
 }

@@ -1,10 +1,11 @@
 //! The compression coordinator — this paper's L3 system contribution.
 //!
-//! [`compress_model`] walks the model's layer groups, runs one
+//! [`compress_model`] walks the model's layer groups and runs one
 //! [`job::compress_group`] per group (meta-training + k-means + assignment,
-//! all through the AOT executables), assembles the [`PocketFile`] an edge
-//! device would download, and returns the reconstructed weights alongside
-//! the Eq. 14 accounting and per-group metrics.
+//! all through the [`Runtime`] backend).  Groups are independent, so the
+//! per-group jobs fan out over `util::threadpool::scoped_map`; results are
+//! collected in input order, so the assembled [`PocketFile`], the
+//! reconstructed weights and the Eq. 14 accounting stay deterministic.
 //!
 //! [`reconstruct_from_pocket`] is the device side: pocket file -> dense
 //! weights, using only the decoder + codebook + indices.
@@ -19,8 +20,10 @@ use anyhow::{Context, Result};
 
 use crate::model::{group_rows, scatter_group_rows, WeightStore, GROUPS};
 use crate::packfmt::{ratio_for, GroupRecord, PocketFile};
+use crate::runtime::manifest::MetaCfg;
 use crate::runtime::Runtime;
 use crate::util::bitpack::BitPacked;
+use crate::util::threadpool::{default_workers, scoped_map};
 use job::JobOpts;
 use metrics::PipelineReport;
 
@@ -82,6 +85,10 @@ pub fn compress_model(
     let mut reconstructed = ws.clone();
     let mut report = PipelineReport::default();
 
+    // Stage the independent per-group jobs, then fan them out over the
+    // thread pool; `scoped_map` preserves input order, so everything
+    // assembled below is byte-identical to the sequential loop.
+    let mut jobs: Vec<(String, MetaCfg, TensorF32)> = Vec::with_capacity(selected.len());
     for gname in &selected {
         let gi = ws
             .cfg
@@ -90,6 +97,10 @@ pub fn compress_model(
             .with_context(|| format!("unknown group {gname:?}"))?;
         let mc = rt.manifest.meta_cfg(&resolve_meta_name(rt, opts, gi.width)?)?.clone();
         let rows = group_rows(ws, gname)?;
+        jobs.push((gname.clone(), mc, rows));
+    }
+    let workers = default_workers(jobs.len().max(1));
+    let results = scoped_map(workers, jobs, |(gname, mc, rows)| {
         eprintln!(
             "[compress] group {gname:5} rows {}x{} with {} ({} steps)",
             rows.rows(),
@@ -97,21 +108,24 @@ pub fn compress_model(
             mc.name,
             opts.job.train_steps
         );
-        let res = job::compress_group(rt, &mc, &rows, &opts.job)?;
-        scatter_group_rows(&mut reconstructed, gname, &res.recon)?;
+        job::compress_group(rt, &mc, &rows, &opts.job).map(|res| (gname, mc, res))
+    });
+    for item in results {
+        let (gname, mc, res) = item?;
         pocket.groups.insert(
             gname.clone(),
             GroupRecord {
                 meta_cfg: mc.name.clone(),
-                rows: rows.rows(),
-                width: rows.cols(),
+                rows: res.recon.rows(),
+                width: res.recon.cols(),
                 codebook: res.codebook,
                 indices: BitPacked::pack(&res.indices, mc.bits_per_index()),
                 decoder: job::decoder_slice(&mc, &res.theta),
                 row_scales: res.row_scales,
             },
         );
-        report.per_group.push((gname.clone(), res.metrics));
+        scatter_group_rows(&mut reconstructed, &gname, &res.recon)?;
+        report.per_group.push((gname, res.metrics));
     }
 
     // Dense residue: everything not covered by a compressed group.
@@ -139,7 +153,7 @@ pub fn compress_model(
 }
 
 /// Device-side load: pocket file -> dense weight store, decoding every
-/// compressed group through the AOT decode path (gather + meta decoder).
+/// compressed group through the backend decode path (gather + meta decoder).
 pub fn reconstruct_from_pocket(rt: &Runtime, pocket: &PocketFile) -> Result<WeightStore> {
     let cfg = rt.manifest.lm_cfg(&pocket.lm_cfg)?.clone();
     let mut flat = vec![0.0f32; cfg.layout.total];

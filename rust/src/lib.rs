@@ -8,18 +8,23 @@
 //! * **L2** — JAX compute graphs (meta encoder/decoder training with
 //!   straight-through VQ, k-means refinement, the tiny-LM substrate, LoRA
 //!   recovery), authored in `python/compile/model.py`.
-//! * **L3** — this crate: the compression **coordinator**.  It loads the
-//!   AOT-lowered HLO artifacts through PJRT (the [`runtime`] module), drives
+//! * **L3** — this crate: the compression **coordinator**.  It executes
+//!   every L1/L2 entry point through the [`runtime::Backend`] abstraction —
+//!   the PJRT/XLA artifact runtime when artifacts are available, or the
+//!   hermetic pure-Rust reference backend everywhere else — drives
 //!   per-layer-group compression jobs ([`coordinator`]), owns the synthetic
 //!   data/task substrates ([`data`]), the on-disk pocket format with exact
 //!   Eq. 13/14 ratio accounting ([`packfmt`]), the traditional-compression
 //!   baselines ([`quant`]), and the evaluation harness ([`eval`]).
 //!
-//! Python runs **once** at build time (`make artifacts`); the binary is
-//! self-contained afterwards.
+//! A clean checkout is fully functional: `cargo build && cargo test` run
+//! the whole pipeline on the reference backend with no Python step.  With
+//! `make artifacts` (plus the real `xla` crate in place of the vendored
+//! stub) the same code runs bit-faithfully against the XLA lowering.
 //!
-//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
-//! reproduced tables/figures.
+//! See `rust/DESIGN.md` for the backend architecture and the
+//! paper-to-module map; the reproduced tables/figures live in
+//! `rust/benches/` (one bench per table).
 
 pub mod coordinator;
 pub mod data;

@@ -30,7 +30,26 @@ fn main() {
 fn artifacts_dir(args: &Args) -> PathBuf {
     args.get("artifacts")
         .map(PathBuf::from)
-        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+        .unwrap_or_else(Runtime::default_artifacts_dir)
+}
+
+/// Resolve `--backend {pjrt,reference,auto}` (default auto: PJRT when the
+/// artifacts + bindings are usable, hermetic reference backend otherwise).
+/// An explicit `--artifacts` makes auto strict: silently computing on the
+/// reference backend when the user pointed at artifacts would be a lie.
+fn runtime_for(args: &Args) -> Result<Runtime> {
+    match args.str_or("backend", "auto").as_str() {
+        "reference" => Ok(Runtime::reference()),
+        "pjrt" => Runtime::pjrt(&artifacts_dir(args)),
+        "auto" => {
+            if args.get("artifacts").is_some() {
+                Runtime::pjrt(&artifacts_dir(args))
+            } else {
+                Ok(Runtime::auto(&artifacts_dir(args)))
+            }
+        }
+        other => bail!("unknown backend {other:?} (use pjrt, reference or auto)"),
+    }
 }
 
 fn run() -> Result<()> {
@@ -53,7 +72,13 @@ fn run() -> Result<()> {
                  \x20 train-lm     train the substrate LM     (--model tiny --steps 300 --out w.bin)\n\
                  \x20 compress     compress trained weights   (--model tiny --weights w.bin --preset p8x --out m.pocket)\n\
                  \x20 reconstruct  pocket -> dense weights    (--pocket m.pocket --out w2.bin)\n\
-                 \x20 eval         ppl + zero-shot accuracy   (--model tiny --weights w.bin)\n"
+                 \x20 eval         ppl + zero-shot accuracy   (--model tiny --weights w.bin)\n\
+                 \n\
+                 global options:\n\
+                 \x20 --backend pjrt|reference|auto   execution backend (default auto:\n\
+                 \x20                                 PJRT artifacts when usable, else the\n\
+                 \x20                                 hermetic pure-Rust reference backend)\n\
+                 \x20 --artifacts DIR                 AOT artifacts directory for PJRT\n"
             );
             Ok(())
         }
@@ -62,9 +87,10 @@ fn run() -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifacts_dir(args))?;
+    let rt = runtime_for(args)?;
     println!(
-        "manifest: {} artifacts, {} LM configs, {} meta configs",
+        "backend: {}; manifest: {} artifacts, {} LM configs, {} meta configs",
+        rt.backend_name(),
         rt.manifest.artifacts.len(),
         rt.manifest.lm.len(),
         rt.manifest.meta.len()
@@ -93,7 +119,7 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_train_lm(args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifacts_dir(args))?;
+    let rt = runtime_for(args)?;
     let model = args.str_or("model", "tiny");
     let steps = args.usize_or("steps", 300)?;
     let seed = args.u64_or("seed", 7)?;
@@ -111,7 +137,7 @@ fn cmd_train_lm(args: &Args) -> Result<()> {
 }
 
 fn cmd_compress(args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifacts_dir(args))?;
+    let rt = runtime_for(args)?;
     let model = args.str_or("model", "tiny");
     let cfg = rt.manifest.lm_cfg(&model)?.clone();
     let weights = args.require("weights")?;
@@ -141,7 +167,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
 }
 
 fn cmd_reconstruct(args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifacts_dir(args))?;
+    let rt = runtime_for(args)?;
     let pocket = PocketFile::load(std::path::Path::new(args.require("pocket")?))?;
     let ws = reconstruct_from_pocket(&rt, &pocket)?;
     let out = args.str_or("out", "reconstructed.bin");
@@ -151,7 +177,7 @@ fn cmd_reconstruct(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifacts_dir(args))?;
+    let rt = runtime_for(args)?;
     let model = args.str_or("model", "tiny");
     let cfg = rt.manifest.lm_cfg(&model)?.clone();
     let ws = WeightStore::load(&cfg, std::path::Path::new(args.require("weights")?))

@@ -119,11 +119,9 @@ pub const GROUPS: [&str; 7] = ["q", "k", "v", "o", "gate", "up", "down"];
 mod tests {
     use super::*;
     use crate::runtime::manifest::Manifest;
-    use std::path::Path;
 
     fn tiny() -> LmCfg {
-        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        Manifest::load(&dir).unwrap().lm_cfg("tiny").unwrap().clone()
+        Manifest::builtin().lm_cfg("tiny").unwrap().clone()
     }
 
     #[test]

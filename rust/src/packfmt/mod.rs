@@ -381,17 +381,45 @@ mod tests {
 
     #[test]
     fn property_roundtrip_random_files() {
+        use crate::util::quickcheck::prop_close;
         property("pocket file roundtrip", |g| {
             let mut rng = Pcg32::seeded(g.int_in(0, 1 << 30) as u64);
             let mut pf = PocketFile { lm_cfg: "tiny".into(), ..Default::default() };
-            let k = *g.choose(&[64usize, 256, 1024]);
-            let d = *g.choose(&[4usize, 8]);
-            let rows = g.usize_in(1, 32) * 2;
-            let width = d * g.usize_in(2, 16);
-            pf.groups.insert("g".into(), sample_group(&mut rng, k, d, rows, width));
+            // arbitrary group records (1-3 groups with independent shapes)
+            let n_groups = g.usize_in(1, 3);
+            for gi in 0..n_groups {
+                let k = *g.choose(&[64usize, 256, 1024]);
+                let d = *g.choose(&[4usize, 8]);
+                let rows = g.usize_in(1, 32) * 2;
+                let width = d * g.usize_in(2, 16);
+                pf.groups.insert(format!("g{gi}"), sample_group(&mut rng, k, d, rows, width));
+            }
+            if g.bool() {
+                let mut buf = vec![0.0f32; g.usize_in(1, 500)];
+                rng.fill_normal(&mut buf, 0.04);
+                pf.dense.insert("embed".into(), buf);
+            }
             let back = PocketFile::from_bytes(&pf.to_bytes()).map_err(|e| e.to_string())?;
-            prop_assert(back.groups["g"].indices == pf.groups["g"].indices, "indices")?;
-            prop_assert(back.groups["g"].rows == rows, "rows")
+            prop_assert(back.lm_cfg == pf.lm_cfg, "lm_cfg")?;
+            prop_assert(back.groups.len() == pf.groups.len(), "group count")?;
+            // re-encoding the f16 payloads must be lossless (fixed point)
+            let again = PocketFile::from_bytes(&back.to_bytes()).map_err(|e| e.to_string())?;
+            for (name, a) in &pf.groups {
+                let b = &back.groups[name];
+                prop_assert(b.meta_cfg == a.meta_cfg, "meta_cfg")?;
+                prop_assert(b.rows == a.rows && b.width == a.width, "dims")?;
+                // indices and decoder are stored exactly
+                prop_assert(b.indices == a.indices, "indices")?;
+                prop_close(&b.decoder, &a.decoder, 0.0, "decoder f32 exact")?;
+                // codebook and row scales go through f16: bounded relative loss
+                prop_close(&b.codebook.data, &a.codebook.data, 2e-3, "codebook f16")?;
+                prop_close(&b.row_scales, &a.row_scales, 2e-3, "row scales f16")?;
+                prop_close(&again.groups[name].codebook.data, &b.codebook.data, 0.0, "f16 fixpoint")?;
+            }
+            for (name, buf) in &pf.dense {
+                prop_close(&back.dense[name], buf, 0.0, "dense f32 exact")?;
+            }
+            Ok(())
         });
     }
 }

@@ -1,10 +1,18 @@
-//! `artifacts/manifest.json` — the L2 -> L3 contract.
+//! The L2 -> L3 contract: model/meta layouts, presets and hyperparameters.
 //!
-//! The Python AOT pass (`python/compile/aot.py`) records every lowered
-//! artifact's input/output signature plus the full parameter layouts of every
-//! model and meta-net configuration.  The Rust side *never* re-derives a
-//! shape or an offset: everything comes from here, so a drift between the
-//! two languages fails loudly at load time instead of corrupting numerics.
+//! Two sources produce a [`Manifest`]:
+//!
+//! * [`Manifest::load`] parses `artifacts/manifest.json`, written by the
+//!   Python AOT pass (`python/compile/aot.py`) alongside the lowered HLO
+//!   artifacts.  The PJRT backend requires this form (it carries artifact
+//!   files + signatures), and never re-derives a shape, so Python/Rust drift
+//!   fails loudly at load time instead of corrupting numerics.
+//! * [`Manifest::builtin`] constructs the same configuration natively — a
+//!   line-for-line mirror of `python/compile/configs.py` — with an empty
+//!   artifact table.  The pure-Rust reference backend runs from this, which
+//!   is what makes a clean checkout (no Python, no artifacts) fully
+//!   functional.  `python/tests/test_manifest.py` guards the mirror against
+//!   drift on machines that do build artifacts.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -123,6 +131,24 @@ pub struct MetaCfg {
 impl MetaCfg {
     pub fn bits_per_index(&self) -> u32 {
         (self.k as f64).log2().ceil() as u32
+    }
+
+    /// Hidden width of the meta-net MLPs (overcomplete 4d; see
+    /// `configs.MetaConfig.hidden` for why d->d GELU stacks fail).
+    pub fn hidden(&self) -> usize {
+        4 * self.d
+    }
+
+    /// (in, out) width per MLP layer: d -> h -> ... -> h -> d.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let (d, h, m) = (self.d, self.hidden(), self.m);
+        if m == 1 {
+            return vec![(d, d)];
+        }
+        let mut dims = vec![(d, h)];
+        dims.extend(std::iter::repeat((h, h)).take(m - 2));
+        dims.push((h, d));
+        dims
     }
 }
 
@@ -324,36 +350,256 @@ impl Manifest {
         let name = format!("w{width}_d{d}_k{k}_m3_rln");
         self.meta_cfg(&name)
     }
+
+    /// Native manifest — a 1:1 mirror of `python/compile/configs.py`, with no
+    /// AOT artifacts.  This is what the reference backend runs from, so a
+    /// clean checkout needs neither Python nor a `make artifacts` pass.
+    pub fn builtin() -> Manifest {
+        let mut lm = BTreeMap::new();
+        for cfg in [
+            builtin_lm("tiny", 512, 256, 4, 4, 512, 128, 16, 16),
+            builtin_lm("tinyl", 512, 384, 6, 6, 768, 128, 8, 16),
+        ] {
+            lm.insert(cfg.name.clone(), cfg);
+        }
+
+        // Ratio presets: (d, K) per compression target (configs.RATIO_PRESETS).
+        let mut ratio_presets = BTreeMap::new();
+        ratio_presets.insert("p8x".to_string(), (4usize, 4096usize));
+        ratio_presets.insert("p10x".to_string(), (4, 1024));
+        ratio_presets.insert("p16x".to_string(), (8, 1024));
+        ratio_presets.insert("p20x".to_string(), (8, 512));
+
+        // Meta-config grid (configs._build_meta_configs; duplicates are
+        // identical, first insert wins like Python's setdefault).
+        let mut meta: BTreeMap<String, MetaCfg> = BTreeMap::new();
+        fn add(meta: &mut BTreeMap<String, MetaCfg>, c: MetaCfg) {
+            meta.entry(c.name.clone()).or_insert(c);
+        }
+        for w in [256usize, 512] {
+            for (d, k) in ratio_presets.values() {
+                add(&mut meta, builtin_meta(w, *d, *k, 3, "rln"));
+            }
+        }
+        for w in [384usize, 768] {
+            for preset in ["p8x", "p10x"] {
+                let (d, k) = ratio_presets[preset];
+                add(&mut meta, builtin_meta(w, d, k, 3, "rln"));
+            }
+        }
+        for m in [1usize, 2, 5] {
+            add(&mut meta, builtin_meta(512, 8, 1024, m, "rln"));
+        }
+        for k in [256usize, 4096, 16384] {
+            add(&mut meta, builtin_meta(512, 8, k, 3, "rln"));
+        }
+        add(&mut meta, builtin_meta(512, 8, 1024, 3, "ln"));
+
+        let hp = HyperParams {
+            adam_b1: 0.9,
+            adam_b2: 0.999,
+            adam_eps: 1e-8,
+            meta_lr: 2e-3,
+            lm_lr: 1e-3,
+            lora_lr: 1e-3,
+            vq_lambda: 1.0,
+            vq_commit_beta: 0.25,
+        };
+
+        Manifest {
+            dir: PathBuf::new(),
+            lm,
+            meta,
+            artifacts: BTreeMap::new(),
+            ratio_presets,
+            hp,
+        }
+    }
+}
+
+fn layout_of(entries: Vec<(String, Vec<usize>, f32)>) -> Layout {
+    let mut out = Vec::with_capacity(entries.len());
+    let mut off = 0usize;
+    for (name, shape, init_std) in entries {
+        let size: usize = shape.iter().product();
+        out.push(ParamEntry { name, shape, offset: off, size, init_std });
+        off += size;
+    }
+    Layout { entries: out, total: off }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn builtin_lm(
+    name: &str,
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    ffn_hidden: usize,
+    seq_len: usize,
+    train_batch: usize,
+    eval_batch: usize,
+) -> LmCfg {
+    let (d, h, v, s) = (d_model, ffn_hidden, vocab, seq_len);
+    // matched to the Fig.2-style near-normal weight histogram
+    let std = 0.04f32;
+    let mut entries: Vec<(String, Vec<usize>, f32)> = vec![
+        ("embed".into(), vec![v, d], std),
+        ("pos".into(), vec![s, d], std),
+    ];
+    for b in 0..n_layers {
+        let p = format!("b{b}.");
+        entries.push((format!("{p}wq"), vec![d, d], std));
+        entries.push((format!("{p}wk"), vec![d, d], std));
+        entries.push((format!("{p}wv"), vec![d, d], std));
+        entries.push((format!("{p}wo"), vec![d, d], std));
+        entries.push((format!("{p}wgate"), vec![d, h], std));
+        entries.push((format!("{p}wup"), vec![d, h], std));
+        entries.push((format!("{p}wdown"), vec![h, d], std));
+        entries.push((format!("{p}norm1"), vec![d], 0.0)); // RMSNorm scale: 1 + 0
+        entries.push((format!("{p}norm2"), vec![d], 0.0));
+    }
+    entries.push(("final_norm".into(), vec![d], 0.0));
+    let layout = layout_of(entries);
+
+    let lora_rank = 4usize;
+    let lora_dims: [(&str, usize, usize); 7] = [
+        ("wq", d, d),
+        ("wk", d, d),
+        ("wv", d, d),
+        ("wo", d, d),
+        ("wgate", d, h),
+        ("wup", d, h),
+        ("wdown", h, d),
+    ];
+    let mut lora_entries: Vec<(String, Vec<usize>, f32)> = Vec::new();
+    for b in 0..n_layers {
+        for (lname, din, dout) in lora_dims {
+            // A ~ N(0, 0.02), B = 0 (standard LoRA init)
+            lora_entries.push((format!("b{b}.{lname}.A"), vec![din, lora_rank], 0.02));
+            lora_entries.push((format!("b{b}.{lname}.B"), vec![lora_rank, dout], 0.0));
+        }
+    }
+    let lora_layout = layout_of(lora_entries);
+
+    let mut groups = BTreeMap::new();
+    let group_dims: [(&str, usize, usize, &str); 7] = [
+        ("q", d, d, "wq"),
+        ("k", d, d, "wk"),
+        ("v", d, d, "wv"),
+        ("o", d, d, "wo"),
+        ("gate", h, d, "wgate"),
+        ("up", h, d, "wup"),
+        ("down", d, h, "wdown"),
+    ];
+    for (g, width, rows_per_block, tensor) in group_dims {
+        let rows_total = rows_per_block * n_layers;
+        groups.insert(
+            g.to_string(),
+            GroupInfo {
+                width,
+                rows_per_block,
+                rows_total,
+                params: rows_total * width,
+                tensors: vec![tensor.to_string()],
+            },
+        );
+    }
+
+    LmCfg {
+        name: name.to_string(),
+        vocab,
+        d_model,
+        n_layers,
+        n_heads,
+        ffn_hidden,
+        seq_len,
+        train_batch,
+        eval_batch,
+        lora_rank,
+        lora_alpha: 8.0,
+        layout,
+        lora_layout,
+        groups,
+    }
+}
+
+fn builtin_meta(w: usize, d: usize, k: usize, m: usize, norm: &str) -> MetaCfg {
+    assert!(w % d == 0, "row width must be divisible by d");
+    let name = format!("w{w}_d{d}_k{k}_m{m}_{norm}");
+    let encode_name = format!("w{w}_d{d}_m{m}_{norm}");
+    let mut proto = MetaCfg {
+        name,
+        encode_name,
+        w,
+        d,
+        k,
+        m,
+        norm: norm.to_string(),
+        r: 64,
+        l: w / d,
+        theta: Layout { entries: vec![], total: 0 },
+        decoder_params: 0,
+    };
+    let dims = proto.layer_dims();
+    let mut entries: Vec<(String, Vec<usize>, f32)> = Vec::new();
+    for net in ["enc", "dec"] {
+        for (i, (din, dout)) in dims.iter().enumerate() {
+            let std = (2.0 / (din + dout) as f64).sqrt() as f32;
+            entries.push((format!("{net}.w{i}"), vec![*din, *dout], std));
+            entries.push((format!("{net}.b{i}"), vec![*dout], 0.0));
+        }
+    }
+    proto.theta = layout_of(entries);
+    proto.decoder_params = dims.iter().map(|(din, dout)| din * dout + dout).sum();
+    proto
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn manifest_dir() -> PathBuf {
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
     #[test]
-    fn loads_real_manifest() {
-        let m = Manifest::load(&manifest_dir()).expect("run `make artifacts` before tests");
+    fn builtin_mirrors_config_grid() {
+        let m = Manifest::builtin();
         assert!(m.lm.contains_key("tiny"));
         assert!(m.lm.contains_key("tinyl"));
-        assert!(m.artifacts.len() > 50);
         let tiny = m.lm_cfg("tiny").unwrap();
         assert_eq!(tiny.d_model, 256);
         assert_eq!(tiny.groups.len(), 7);
         // groups account for every linear parameter
         let linear: usize = tiny.groups.values().map(|g| g.params).sum();
-        assert_eq!(
-            linear,
-            tiny.n_layers * (4 * 256 * 256 + 3 * 256 * 512)
-        );
+        assert_eq!(linear, tiny.n_layers * (4 * 256 * 256 + 3 * 256 * 512));
+        // full grid: 2 widths x 4 presets (8) + 2 widths x 2 presets (4)
+        // + 3 extra depths + 3 extra codebook sizes + 1 ln variant
+        assert_eq!(m.meta.len(), 19);
+    }
+
+    #[test]
+    fn builtin_layout_is_contiguous() {
+        let m = Manifest::builtin();
+        for cfg in m.lm.values() {
+            let mut off = 0usize;
+            for e in &cfg.layout.entries {
+                assert_eq!(e.offset, off, "{}", e.name);
+                assert_eq!(e.size, e.shape.iter().product::<usize>());
+                off += e.size;
+            }
+            assert_eq!(off, cfg.layout.total);
+        }
+        for mc in m.meta.values() {
+            let mut off = 0usize;
+            for e in &mc.theta.entries {
+                assert_eq!(e.offset, off, "{}", e.name);
+                off += e.size;
+            }
+            assert_eq!(off, mc.theta.total);
+        }
     }
 
     #[test]
     fn layout_slices_are_consistent() {
-        let m = Manifest::load(&manifest_dir()).unwrap();
+        let m = Manifest::builtin();
         let tiny = m.lm_cfg("tiny").unwrap();
         let flat = vec![0.5f32; tiny.layout.total];
         let embed = tiny.layout.slice(&flat, "embed").unwrap();
@@ -363,7 +609,7 @@ mod tests {
 
     #[test]
     fn meta_cfg_bits() {
-        let m = Manifest::load(&manifest_dir()).unwrap();
+        let m = Manifest::builtin();
         let mc = m.meta_cfg("w512_d8_k1024_m3_rln").unwrap();
         assert_eq!(mc.bits_per_index(), 10);
         assert_eq!(mc.l, 64);
@@ -371,13 +617,41 @@ mod tests {
         let per_net = (8 * 32 + 32) + (32 * 32 + 32) + (32 * 8 + 8);
         assert_eq!(mc.theta.total, 2 * per_net);
         assert_eq!(mc.decoder_params, per_net);
+        assert_eq!(mc.layer_dims(), vec![(8, 32), (32, 32), (32, 8)]);
+        let m1 = m.meta_cfg("w512_d8_k1024_m1_rln").unwrap();
+        assert_eq!(m1.layer_dims(), vec![(8, 8)]);
     }
 
     #[test]
     fn preset_resolution() {
-        let m = Manifest::load(&manifest_dir()).unwrap();
+        let m = Manifest::builtin();
         let mc = m.meta_for_preset(256, "p16x").unwrap();
         assert_eq!((mc.d, mc.k), (8, 1024));
         assert!(m.meta_for_preset(256, "nope").is_err());
+    }
+
+    /// Guard against builtin/Python drift on machines that built artifacts.
+    #[test]
+    #[ignore = "needs artifacts/manifest.json (run `make artifacts`)"]
+    fn builtin_matches_aot_manifest() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let loaded = Manifest::load(&dir).expect("run `make artifacts` first");
+        let native = Manifest::builtin();
+        assert!(loaded.artifacts.len() > 50);
+        for (name, cfg) in &native.lm {
+            let lc = loaded.lm_cfg(name).unwrap();
+            assert_eq!(lc.layout.total, cfg.layout.total, "{name}");
+            assert_eq!(lc.lora_layout.total, cfg.lora_layout.total, "{name}");
+            for (a, b) in lc.layout.entries.iter().zip(&cfg.layout.entries) {
+                assert_eq!((a.name.as_str(), a.offset, a.size), (b.name.as_str(), b.offset, b.size));
+            }
+        }
+        assert_eq!(loaded.meta.len(), native.meta.len());
+        for (name, mc) in &native.meta {
+            let lm = loaded.meta_cfg(name).unwrap();
+            assert_eq!(lm.theta.total, mc.theta.total, "{name}");
+            assert_eq!(lm.decoder_params, mc.decoder_params, "{name}");
+            assert_eq!((lm.r, lm.l), (mc.r, mc.l), "{name}");
+        }
     }
 }

@@ -1,24 +1,33 @@
-//! PJRT runtime: load AOT-lowered HLO text, compile once, execute many.
+//! Execution runtime: one [`Backend`] abstraction, two implementations.
 //!
-//! This is the only place the `xla` crate is touched.  [`Runtime`] owns the
-//! CPU PJRT client, the parsed [`Manifest`], and a lazily-populated cache of
-//! compiled executables.  Inputs/outputs are validated against the manifest
-//! signature on every call, so a Python/Rust drift fails with a clear error
+//! * [`pjrt::PjrtBackend`] — loads AOT-lowered HLO text, compiles once via
+//!   the `xla` crate, executes many.  Requires `artifacts/` from the Python
+//!   build (and real PJRT bindings; the vendored `xla` stub fails cleanly).
+//! * [`reference::ReferenceBackend`] — a pure-Rust, dependency-free
+//!   implementation of every manifest-declared executable, numerically
+//!   mirroring the `python/compile/kernels/ref.py` oracles.  This is the
+//!   hermetic path: a clean checkout runs the whole pipeline with it.
+//!
+//! [`Runtime`] pairs a backend with its [`Manifest`] and is what the
+//! coordinator, eval harness and CLI hold.  [`Runtime::auto`] prefers PJRT
+//! when artifacts are present and usable, and falls back to the reference
+//! backend otherwise, so `cargo test` and the examples work everywhere.
+//! Inputs/outputs are validated against the manifest (PJRT) or the config
+//! shapes (reference) on every call, so drift fails with a clear error
 //! instead of silent corruption.
 
 pub mod manifest;
+pub mod pjrt;
+pub mod reference;
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::Path;
-use std::time::Instant;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::tensor::{TensorF32, TensorI32};
-use manifest::{ArtifactInfo, Dt, Manifest};
+use manifest::{Dt, Manifest};
 
-/// An argument to an AOT executable.
+/// An argument to an executable.
 #[derive(Clone, Debug)]
 pub enum Arg {
     F32(TensorF32),
@@ -28,37 +37,23 @@ pub enum Arg {
 }
 
 impl Arg {
-    fn dt(&self) -> Dt {
+    pub(crate) fn dt(&self) -> Dt {
         match self {
             Arg::F32(_) | Arg::Scalar(_) => Dt::F32,
             Arg::I32(_) => Dt::I32,
         }
     }
 
-    fn shape(&self) -> Vec<usize> {
+    pub(crate) fn shape(&self) -> Vec<usize> {
         match self {
             Arg::F32(t) => t.shape.clone(),
             Arg::I32(t) => t.shape.clone(),
             Arg::Scalar(_) => vec![],
         }
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        Ok(match self {
-            Arg::Scalar(x) => xla::Literal::scalar(*x),
-            Arg::F32(t) => {
-                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data).reshape(&dims)?
-            }
-            Arg::I32(t) => {
-                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data).reshape(&dims)?
-            }
-        })
-    }
 }
 
-/// An output from an AOT executable.
+/// An output from an executable.
 #[derive(Clone, Debug)]
 pub enum Out {
     F32(TensorF32),
@@ -95,145 +90,99 @@ pub struct DispatchStats {
     pub total_secs: f64,
 }
 
-/// The PJRT runtime: client + manifest + executable cache.
+/// A compute backend executing manifest-declared entry points by name.
+///
+/// `Send + Sync` is part of the contract: the coordinator fans per-group
+/// compression jobs and per-chunk decodes out over `util::threadpool`, all
+/// sharing one `&Runtime`.
+pub trait Backend: Send + Sync {
+    /// Short identifier ("pjrt" / "reference") for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Execute an entry point; returns its outputs in manifest order.
+    fn exec(&self, manifest: &Manifest, name: &str, args: &[Arg]) -> Result<Vec<Out>>;
+
+    /// Pre-compile/pre-warm entry points (timing loops exclude setup).
+    fn warm(&self, manifest: &Manifest, names: &[&str]) -> Result<()> {
+        let _ = (manifest, names);
+        Ok(())
+    }
+
+    /// Snapshot of per-entry-point dispatch statistics, heaviest first.
+    fn dispatch_stats(&self) -> Vec<(String, DispatchStats)>;
+}
+
+/// Manifest + backend: the handle the rest of the crate executes through.
 pub struct Runtime {
-    client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-    stats: RefCell<HashMap<String, DispatchStats>>,
+    backend: Box<dyn Backend>,
 }
 
 impl Runtime {
-    /// Create a CPU runtime over an artifacts directory.
-    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+    /// Hermetic pure-Rust runtime over the builtin manifest.  Always works.
+    pub fn reference() -> Runtime {
+        Runtime {
+            manifest: Manifest::builtin(),
+            backend: Box::new(reference::ReferenceBackend::new()),
+        }
+    }
+
+    /// Strict PJRT runtime over an artifacts directory; fails if the
+    /// manifest is missing or the PJRT client cannot start (e.g. with the
+    /// vendored `xla` stub).
+    pub fn pjrt(artifacts_dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(HashMap::new()),
-        })
+        let backend = pjrt::PjrtBackend::new()?;
+        Ok(Runtime { manifest, backend: Box::new(backend) })
     }
 
-    /// Default artifacts dir: `<crate root>/artifacts`.
+    /// Back-compat alias for [`Runtime::pjrt`].
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        Self::pjrt(artifacts_dir)
+    }
+
+    /// PJRT when available, reference otherwise — the default everywhere.
+    pub fn auto(artifacts_dir: &Path) -> Runtime {
+        match Self::pjrt(artifacts_dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                if artifacts_dir.join("manifest.json").exists() {
+                    eprintln!("[runtime] PJRT unavailable ({e:#}); using reference backend");
+                }
+                Self::reference()
+            }
+        }
+    }
+
+    /// Default artifacts dir (`<crate root>/artifacts`), auto-selected
+    /// backend.  Kept `Result` for source compatibility; never fails.
     pub fn from_repo_root() -> Result<Runtime> {
-        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        Self::new(&dir)
+        Ok(Self::auto(&Self::default_artifacts_dir()))
     }
 
-    /// Compile (or fetch from cache) an artifact by manifest name.
-    fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.cache.borrow().contains_key(name) {
-            return Ok(());
-        }
-        let info = self.manifest.artifact(name)?;
-        let path = self.manifest.dir.join(&info.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        self.cache.borrow_mut().insert(name.to_string(), exe);
-        let dt = t0.elapsed().as_secs_f64();
-        if dt > 1.0 {
-            eprintln!("[runtime] compiled {name} in {dt:.2}s");
-        }
-        Ok(())
+    /// `<crate root>/artifacts`.
+    pub fn default_artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
-    fn check_args(&self, info: &ArtifactInfo, name: &str, args: &[Arg]) -> Result<()> {
-        ensure!(
-            args.len() == info.inputs.len(),
-            "{name}: expected {} inputs, got {}",
-            info.inputs.len(),
-            args.len()
-        );
-        for (i, (a, sig)) in args.iter().zip(&info.inputs).enumerate() {
-            ensure!(
-                a.dt() == sig.dtype,
-                "{name}: input {i} dtype mismatch (expected {:?})",
-                sig.dtype
-            );
-            ensure!(
-                a.shape() == sig.shape,
-                "{name}: input {i} shape {:?} != manifest {:?}",
-                a.shape(),
-                sig.shape
-            );
-        }
-        Ok(())
+    /// Which backend this runtime executes on ("pjrt" / "reference").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
-    /// Execute an artifact; returns its outputs in manifest order.
+    /// Execute an entry point; returns its outputs in manifest order.
     pub fn exec(&self, name: &str, args: &[Arg]) -> Result<Vec<Out>> {
-        let info = self.manifest.artifact(name)?.clone();
-        self.check_args(&info, name, args)?;
-        self.ensure_compiled(name)?;
-
-        let literals: Vec<xla::Literal> =
-            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
-        let t0 = Instant::now();
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).expect("just compiled");
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {name}"))?[0][0]
-            .to_literal_sync()?;
-        drop(cache);
-
-        // aot.py lowers with return_tuple=True: always a tuple literal.
-        let parts = result.to_tuple()?;
-        ensure!(
-            parts.len() == info.outputs.len(),
-            "{name}: got {} outputs, manifest says {}",
-            parts.len(),
-            info.outputs.len()
-        );
-        let mut outs = Vec::with_capacity(parts.len());
-        for (lit, sig) in parts.into_iter().zip(&info.outputs) {
-            let out = match sig.dtype {
-                Dt::F32 => {
-                    let v = lit.to_vec::<f32>()?;
-                    ensure!(v.len() == sig.count(), "{name}: output size mismatch");
-                    Out::F32(TensorF32::new(sig.shape.clone(), v))
-                }
-                Dt::I32 => {
-                    let v = lit.to_vec::<i32>()?;
-                    ensure!(v.len() == sig.count(), "{name}: output size mismatch");
-                    Out::I32(TensorI32::new(sig.shape.clone(), v))
-                }
-            };
-            outs.push(out);
-        }
-
-        let dt = t0.elapsed().as_secs_f64();
-        let mut stats = self.stats.borrow_mut();
-        let s = stats.entry(name.to_string()).or_default();
-        s.calls += 1;
-        s.total_secs += dt;
-        Ok(outs)
+        self.backend.exec(&self.manifest, name, args)
     }
 
-    /// Pre-compile a set of artifacts (so timing loops exclude compile time).
+    /// Pre-compile a set of entry points (timing loops exclude compile time).
     pub fn warm(&self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.ensure_compiled(n)?;
-        }
-        Ok(())
+        self.backend.warm(&self.manifest, names)
     }
 
-    /// Snapshot of per-artifact dispatch statistics.
+    /// Snapshot of per-entry-point dispatch statistics.
     pub fn dispatch_stats(&self) -> Vec<(String, DispatchStats)> {
-        let mut v: Vec<(String, DispatchStats)> =
-            self.stats.borrow().iter().map(|(k, s)| (k.clone(), s.clone())).collect();
-        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
-        v
+        self.backend.dispatch_stats()
     }
 }
 
@@ -242,7 +191,13 @@ mod tests {
     use super::*;
 
     fn rt() -> Runtime {
-        Runtime::from_repo_root().expect("run `make artifacts` before cargo test")
+        Runtime::reference()
+    }
+
+    #[test]
+    fn runtime_is_sync() {
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<Runtime>();
     }
 
     #[test]
@@ -299,5 +254,30 @@ mod tests {
         assert_eq!(out.len(), 6);
         let idx = out[0].clone().i32().unwrap();
         assert_eq!(idx.shape, vec![mc.r, mc.l]);
+    }
+
+    #[test]
+    fn dispatch_stats_accumulate() {
+        let rt = rt();
+        let cfg = rt.manifest.lm_cfg("tiny").unwrap().clone();
+        let p = TensorF32::zeros(vec![cfg.layout.total]);
+        let toks = TensorI32::zeros(vec![cfg.eval_batch, cfg.seq_len + 1]);
+        rt.exec("lm_eval_nll_tiny", &[Arg::F32(p.clone()), Arg::I32(toks.clone())]).unwrap();
+        rt.exec("lm_eval_nll_tiny", &[Arg::F32(p), Arg::I32(toks)]).unwrap();
+        let stats = rt.dispatch_stats();
+        let s = stats.iter().find(|(n, _)| n == "lm_eval_nll_tiny").unwrap();
+        assert_eq!(s.1.calls, 2);
+    }
+
+    #[test]
+    #[ignore = "needs artifacts + real xla crate (PJRT)"]
+    fn pjrt_exec_lm_eval_runs() {
+        let rt = Runtime::pjrt(&Runtime::default_artifacts_dir()).expect("artifacts + xla");
+        let cfg = rt.manifest.lm_cfg("tiny").unwrap().clone();
+        let p = TensorF32::zeros(vec![cfg.layout.total]);
+        let toks = TensorI32::zeros(vec![cfg.eval_batch, cfg.seq_len + 1]);
+        let out = rt.exec("lm_eval_nll_tiny", &[Arg::F32(p), Arg::I32(toks)]).unwrap();
+        let per_tok = out[0].clone().scalar().unwrap() / out[1].clone().scalar().unwrap();
+        assert!((per_tok - (cfg.vocab as f32).ln()).abs() < 1e-3, "{per_tok}");
     }
 }

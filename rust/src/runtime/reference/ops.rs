@@ -1,0 +1,561 @@
+//! Numeric primitives of the reference backend.
+//!
+//! Each public function mirrors a `python/compile/kernels/ref.py` oracle (or
+//! a jnp building block of `compile/model.py`) in plain f32; the golden
+//! parity suite (`rust/tests/kernel_parity.rs`) pins them against
+//! checked-in ref.py outputs to 1e-5.  Large matmuls split their output rows
+//! over `util::threadpool::scoped_map`, which keeps results bit-deterministic
+//! (each element is produced by exactly one thread, in a fixed loop order).
+
+use crate::util::threadpool::{default_workers, in_scoped_worker, scoped_map};
+
+/// Epsilon of the paper's Reshaped LayerNorm (ref.RLN_EPS).
+pub const RLN_EPS: f32 = 1e-5;
+
+/// tanh-approximate GELU constants (jax.nn.gelu approximate=True).
+const GELU_C: f32 = 0.797_884_560_802_865_4; // sqrt(2/pi)
+const GELU_A: f32 = 0.044715;
+
+/// MACs below which matmuls stay single-threaded.
+const PAR_MACS: usize = 1 << 22;
+
+/// Cap on matmul worker threads.
+const PAR_CAP: usize = 8;
+
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    let t = (GELU_C * (x + GELU_A * x * x * x)).tanh();
+    0.5 * x * (1.0 + t)
+}
+
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    let inner = GELU_C * (x + GELU_A * x * x * x);
+    let t = inner.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = sigmoid(x);
+    s * (1.0 + x * (1.0 - s))
+}
+
+fn split_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, total.max(1));
+    let base = total / parts;
+    let extra = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Run `go` over row ranges of an `[m, n]` output, in parallel when the
+/// work is large enough, concatenating blocks in order.
+fn run_row_blocks<F>(m: usize, n: usize, macs: usize, go: F) -> Vec<f32>
+where
+    F: Fn(usize, usize) -> Vec<f32> + Sync,
+{
+    let workers = default_workers(PAR_CAP);
+    // Inside an outer scoped_map worker (per-group compression jobs,
+    // per-chunk decodes) the cores are already owned — stay serial
+    // instead of nesting thread spawns.
+    if macs < PAR_MACS || workers <= 1 || m < 2 || in_scoped_worker() {
+        return go(0, m);
+    }
+    let ranges = split_ranges(m, workers);
+    let blocks = scoped_map(workers, ranges, |(r0, r1)| go(r0, r1));
+    let mut out = Vec::with_capacity(m * n);
+    for b in blocks {
+        out.extend_from_slice(&b);
+    }
+    out
+}
+
+/// C[m,n] = A[m,k] @ B[k,n].
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    run_row_blocks(m, n, m * k * n, |r0, r1| {
+        let mut out = vec![0.0f32; (r1 - r0) * n];
+        for i in r0..r1 {
+            let arow = &a[i * k..(i + 1) * k];
+            let dst = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for (d, &bv) in dst.iter_mut().zip(brow) {
+                    *d += av * bv;
+                }
+            }
+        }
+        out
+    })
+}
+
+/// C[k,n] = A[m,k]ᵀ @ B[m,n]  (weight-gradient shape).
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    run_row_blocks(k, n, m * k * n, |r0, r1| {
+        let mut out = vec![0.0f32; (r1 - r0) * n];
+        for t in 0..m {
+            let arow = &a[t * k..(t + 1) * k];
+            let brow = &b[t * n..(t + 1) * n];
+            for i in r0..r1 {
+                let av = arow[i];
+                if av == 0.0 {
+                    continue;
+                }
+                let dst = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+                for (d, &bv) in dst.iter_mut().zip(brow) {
+                    *d += av * bv;
+                }
+            }
+        }
+        out
+    })
+}
+
+/// C[m,n] = A[m,k] @ B[n,k]ᵀ  (logits / grad-through-weight shape).
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    run_row_blocks(m, n, m * k * n, |r0, r1| {
+        let mut out = vec![0.0f32; (r1 - r0) * n];
+        for i in r0..r1 {
+            let arow = &a[i * k..(i + 1) * k];
+            let dst = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            for (j, d) in dst.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *d = acc;
+            }
+        }
+        out
+    })
+}
+
+/// out[rows, n] += bias[n] broadcast.
+pub fn add_bias(out: &mut [f32], bias: &[f32], rows: usize, n: usize) {
+    debug_assert_eq!(out.len(), rows * n);
+    debug_assert_eq!(bias.len(), n);
+    for r in 0..rows {
+        for (d, &bv) in out[r * n..(r + 1) * n].iter_mut().zip(bias) {
+            *d += bv;
+        }
+    }
+}
+
+/// Saved forward state of a LayerNorm: normalized output + per-row 1/std.
+pub struct NormCache {
+    pub y: Vec<f32>,
+    pub rstd: Vec<f32>,
+}
+
+/// LayerNorm without affine params over each `width`-sized row (eps 1e-5).
+pub fn layernorm_fwd(x: &[f32], rows: usize, width: usize) -> NormCache {
+    debug_assert_eq!(x.len(), rows * width);
+    let mut y = vec![0.0f32; rows * width];
+    let mut rstd = vec![0.0f32; rows];
+    let wf = width as f32;
+    for r in 0..rows {
+        let xr = &x[r * width..(r + 1) * width];
+        let mut mean = 0.0f32;
+        for &v in xr {
+            mean += v;
+        }
+        mean /= wf;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let dv = v - mean;
+            var += dv * dv;
+        }
+        var /= wf;
+        let rs = 1.0 / (var + RLN_EPS).sqrt();
+        rstd[r] = rs;
+        for (o, &v) in y[r * width..(r + 1) * width].iter_mut().zip(xr) {
+            *o = (v - mean) * rs;
+        }
+    }
+    NormCache { y, rstd }
+}
+
+/// LayerNorm backward: dx = rstd * (g - mean(g) - y * mean(g*y)).
+pub fn layernorm_bwd(g: &[f32], cache: &NormCache, rows: usize, width: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), rows * width);
+    let mut out = vec![0.0f32; rows * width];
+    let wf = width as f32;
+    for r in 0..rows {
+        let gr = &g[r * width..(r + 1) * width];
+        let yr = &cache.y[r * width..(r + 1) * width];
+        let rs = cache.rstd[r];
+        let mut gm = 0.0f32;
+        let mut gym = 0.0f32;
+        for (&gv, &yv) in gr.iter().zip(yr) {
+            gm += gv;
+            gym += gv * yv;
+        }
+        gm /= wf;
+        gym /= wf;
+        for ((o, &gv), &yv) in out[r * width..(r + 1) * width].iter_mut().zip(gr).zip(yr) {
+            *o = rs * (gv - gm - yv * gym);
+        }
+    }
+    out
+}
+
+/// Reshaped LayerNorm (ref.rln_ref): normalize each full `[W]` row.
+pub fn rln(x: &[f32], rows: usize, width: usize) -> Vec<f32> {
+    layernorm_fwd(x, rows, width).y
+}
+
+/// Per-subvector LayerNorm baseline (ref.ln_ref): normalize each `d`-chunk.
+pub fn ln(x: &[f32], rows: usize, width: usize, d: usize) -> Vec<f32> {
+    assert!(width % d == 0, "width {width} not divisible by d {d}");
+    layernorm_fwd(x, rows * (width / d), d).y
+}
+
+/// One meta-net layer (ref.mlp_block_ref): pre-norm -> per-subvector linear
+/// -> optional GELU -> optional residual.  `x` is `[rows, L*din]`, `w` is
+/// `[din, dout]`, `b` is `[dout]`.
+#[allow(clippy::too_many_arguments)]
+pub fn mlp_block(
+    x: &[f32],
+    rows: usize,
+    width: usize,
+    w: &[f32],
+    b: &[f32],
+    din: usize,
+    dout: usize,
+    norm: &str,
+    residual: bool,
+    activate: bool,
+) -> Vec<f32> {
+    assert!(width % din == 0);
+    let l = width / din;
+    let xn = if norm == "rln" { rln(x, rows, width) } else { ln(x, rows, width, din) };
+    let mut pre = matmul(&xn, w, rows * l, din, dout);
+    add_bias(&mut pre, b, rows * l, dout);
+    let mut out: Vec<f32> = if activate { pre.iter().map(|&v| gelu(v)).collect() } else { pre };
+    if residual {
+        assert_eq!(din, dout, "residual needs matching widths");
+        for (o, &xv) in out.iter_mut().zip(x) {
+            *o += xv;
+        }
+    }
+    out
+}
+
+/// Nearest-codeword assignment (ref.vq_assign_ref, Eq. 8): `z` is `[n, d]`,
+/// `c` is `[k, d]`.  Returns (first-argmin indices, clamped squared dists),
+/// computed via the same ||z||² - 2 z·c + ||c||² expansion as the oracle so
+/// ties break identically.
+pub fn vq_assign(z: &[f32], n: usize, d: usize, c: &[f32], k: usize) -> (Vec<i32>, Vec<f32>) {
+    debug_assert_eq!(z.len(), n * d);
+    debug_assert_eq!(c.len(), k * d);
+    let mut cn = vec![0.0f32; k];
+    for (j, cnj) in cn.iter_mut().enumerate() {
+        let cr = &c[j * d..(j + 1) * d];
+        let mut s = 0.0f32;
+        for &v in cr {
+            s += v * v;
+        }
+        *cnj = s;
+    }
+    let mut idx = vec![0i32; n];
+    let mut sq = vec![0.0f32; n];
+    // blocked so the [block, k] distance matrix stays cache/memory friendly
+    const BLOCK: usize = 256;
+    let mut row = 0usize;
+    while row < n {
+        let bend = (row + BLOCK).min(n);
+        let bn = bend - row;
+        let prod = matmul_nt(&z[row * d..bend * d], c, bn, d, k);
+        for i in 0..bn {
+            let zr = &z[(row + i) * d..(row + i + 1) * d];
+            let mut zn = 0.0f32;
+            for &v in zr {
+                zn += v * v;
+            }
+            let pr = &prod[i * k..(i + 1) * k];
+            let mut best = f32::INFINITY;
+            let mut bj = 0usize;
+            for j in 0..k {
+                let d2 = zn - 2.0 * pr[j] + cn[j];
+                if d2 < best {
+                    best = d2;
+                    bj = j;
+                }
+            }
+            idx[row + i] = bj as i32;
+            sq[row + i] = best.max(0.0);
+        }
+        row = bend;
+    }
+    (idx, sq)
+}
+
+/// Codebook lookup (ref.gather_rows_ref): idx (flattened) -> `[n, d]` rows.
+pub fn gather(c: &[f32], d: usize, idx: &[i32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(idx.len() * d);
+    for &i in idx {
+        let i = i as usize;
+        out.extend_from_slice(&c[i * d..(i + 1) * d]);
+    }
+    out
+}
+
+/// Per-row (mean, std + 1e-8) side info, interleaved `[rows, 2]`
+/// (model.row_stats).
+pub fn row_stats(rows: &[f32], r: usize, w: usize) -> Vec<f32> {
+    debug_assert_eq!(rows.len(), r * w);
+    let mut out = vec![0.0f32; 2 * r];
+    let wf = w as f32;
+    for i in 0..r {
+        let xr = &rows[i * w..(i + 1) * w];
+        let mut mean = 0.0f32;
+        for &v in xr {
+            mean += v;
+        }
+        mean /= wf;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let dv = v - mean;
+            var += dv * dv;
+        }
+        var /= wf;
+        out[2 * i] = mean;
+        out[2 * i + 1] = var.sqrt() + 1e-8;
+    }
+    out
+}
+
+/// rows -> (rows - mean) / std with `[rows, 2]` stats.
+pub fn normalize_rows(rows: &[f32], stats: &[f32], r: usize, w: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; r * w];
+    for i in 0..r {
+        let (mu, sd) = (stats[2 * i], stats[2 * i + 1]);
+        for (o, &v) in out[i * w..(i + 1) * w].iter_mut().zip(&rows[i * w..(i + 1) * w]) {
+            *o = (v - mu) / sd;
+        }
+    }
+    out
+}
+
+/// In-place inverse of [`normalize_rows`].
+pub fn denormalize_rows(rows_n: &mut [f32], stats: &[f32], r: usize, w: usize) {
+    for i in 0..r {
+        let (mu, sd) = (stats[2 * i], stats[2 * i + 1]);
+        for v in rows_n[i * w..(i + 1) * w].iter_mut() {
+            *v = *v * sd + mu;
+        }
+    }
+}
+
+/// Adam on flat f32 buffers (model.adam_update; step is 1-based).
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    step: f32,
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+) {
+    let bc1 = 1.0 - b1.powf(step);
+    let bc2 = 1.0 - b2.powf(step);
+    for i in 0..p.len() {
+        let gi = g[i];
+        m[i] = b1 * m[i] + (1.0 - b1) * gi;
+        v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        p[i] -= lr * mhat / (vhat.sqrt() + eps);
+    }
+}
+
+/// Numerically-stable in-place softmax of one row.
+pub fn softmax_row(x: &mut [f32]) {
+    let mut m = f32::NEG_INFINITY;
+    for &v in x.iter() {
+        if v > m {
+            m = v;
+        }
+    }
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn matmul_variants_agree_with_naive() {
+        let mut rng = Pcg32::seeded(3);
+        let (m, k, n) = (7, 5, 6);
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let c = matmul(&a, &b, m, k, n);
+        // naive check
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                assert!((c[i * n + j] - acc).abs() < 1e-5);
+            }
+        }
+        // tn: (Aᵀ)ᵀ A == AᵀA symmetric check via both orders
+        let ata = matmul_tn(&a, &a, m, k, k);
+        for i in 0..k {
+            for j in 0..k {
+                assert!((ata[i * k + j] - ata[j * k + i]).abs() < 1e-4);
+            }
+        }
+        // nt: A @ Bᵀ where B = Cᵀ equals A @ C
+        let mut bt = vec![0.0f32; n * k];
+        for p in 0..k {
+            for j in 0..n {
+                bt[j * k + p] = b[p * n + j];
+            }
+        }
+        let c2 = matmul_nt(&a, &bt, m, k, n);
+        for (x, y) in c.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_matches_serial() {
+        let mut rng = Pcg32::seeded(4);
+        // big enough to cross PAR_MACS with n*k per row
+        let (m, k, n) = (256, 128, 256);
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        rng.fill_normal(&mut a, 0.3);
+        rng.fill_normal(&mut b, 0.3);
+        let big = matmul(&a, &b, m, k, n);
+        // serial reference on a row subset
+        for i in [0usize, 17, 255] {
+            for j in [0usize, 31, 255] {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                assert!((big[i * n + j] - acc).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn layernorm_roundtrip_properties() {
+        let mut rng = Pcg32::seeded(5);
+        let mut x = vec![0.0f32; 6 * 32];
+        rng.fill_normal(&mut x, 0.04);
+        let nc = layernorm_fwd(&x, 6, 32);
+        for r in 0..6 {
+            let yr = &nc.y[r * 32..(r + 1) * 32];
+            let mean: f32 = yr.iter().sum::<f32>() / 32.0;
+            let var: f32 = yr.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / 32.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-2, "{var}");
+        }
+    }
+
+    #[test]
+    fn layernorm_backward_matches_finite_difference() {
+        let mut rng = Pcg32::seeded(6);
+        let (rows, w) = (2usize, 8usize);
+        let mut x = vec![0.0f32; rows * w];
+        rng.fill_normal(&mut x, 1.0);
+        let mut g = vec![0.0f32; rows * w];
+        rng.fill_normal(&mut g, 1.0);
+        let nc = layernorm_fwd(&x, rows, w);
+        let gx = layernorm_bwd(&g, &nc, rows, w);
+        // scalar loss L = sum(g * y); check dL/dx_i numerically
+        let loss = |xs: &[f32]| -> f64 {
+            let yc = layernorm_fwd(xs, rows, w);
+            yc.y.iter().zip(&g).map(|(&y, &gv)| (y as f64) * (gv as f64)).sum()
+        };
+        for i in [0usize, 3, 9, 15] {
+            let eps = 1e-3f32;
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let num = (loss(&xp) - loss(&xm)) / (2.0 * eps as f64);
+            assert!(
+                (num - gx[i] as f64).abs() < 1e-2 * (1.0 + num.abs()),
+                "i={i}: analytic {} vs numeric {num}",
+                gx[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let eps = 1e-3f32;
+            let num = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!((num - gelu_grad(x)).abs() < 1e-3, "{x}");
+        }
+    }
+
+    #[test]
+    fn vq_assign_exact_on_coincident_points() {
+        // z rows equal to codewords -> distance 0, index of that codeword
+        let c = vec![0.0f32, 0.0, 1.0, 1.0, -1.0, 2.0];
+        let z = vec![1.0f32, 1.0, -1.0, 2.0];
+        let (idx, sq) = vq_assign(&z, 2, 2, &c, 3);
+        assert_eq!(idx, vec![1, 2]);
+        assert!(sq.iter().all(|&v| v < 1e-6));
+    }
+
+    #[test]
+    fn adam_first_step_moves_by_lr() {
+        // With zero state, step 1: mhat = g, vhat = g² -> update ≈ lr*sign(g)
+        let mut p = vec![0.0f32; 2];
+        let g = vec![0.5f32, -2.0];
+        let mut m = vec![0.0f32; 2];
+        let mut v = vec![0.0f32; 2];
+        adam_update(&mut p, &g, &mut m, &mut v, 1.0, 0.1, 0.9, 0.999, 1e-8);
+        assert!((p[0] + 0.1).abs() < 1e-4, "{}", p[0]);
+        assert!((p[1] - 0.1).abs() < 1e-4, "{}", p[1]);
+    }
+}

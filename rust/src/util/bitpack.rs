@@ -3,7 +3,7 @@
 //! The pocket format stores codebook indices with exactly `log2(K)` bits each
 //! (Eq. 14's `log2(K)·N` term).  This module packs/unpacks b-bit values
 //! (1 <= b <= 32) into a little-endian u64 word stream, processing a word at
-//! a time on the hot path (see EXPERIMENTS.md §Perf).
+//! a time on the hot path (see DESIGN.md §8 and `benches/perf_hotpath.rs`).
 
 /// Immutable view over packed b-bit unsigned integers.
 #[derive(Clone, Debug, PartialEq)]

@@ -148,4 +148,73 @@ mod tests {
             assert!((a - b).abs() < 2e-3, "{a} vs {b}");
         }
     }
+
+    /// Half ULP of the f16 lattice around a finite in-range value.
+    fn half_ulp_f16(x: f32) -> f32 {
+        let ax = x.abs();
+        if ax < 6.10352e-5 {
+            // subnormal spacing is 2^-24; half of it
+            0.5 * 2.0f32.powi(-24)
+        } else {
+            // normal: ulp = 2^(e-10) with 2^e <= |x| < 2^(e+1)
+            let e = ax.log2().floor() as i32;
+            0.5 * 2.0f32.powi(e - 10)
+        }
+    }
+
+    #[test]
+    fn property_roundtrip_within_half_ulp() {
+        use crate::util::quickcheck::{prop_assert, property};
+        property("f16 round-trip within half ULP", |g| {
+            // sweep several magnitude regimes incl. subnormals and weights
+            let scale = *g.choose(&[1e-6f32, 1e-3, 0.04, 1.0, 100.0, 30000.0]);
+            let x = g.normal(scale).clamp(-65000.0, 65000.0);
+            let rt = f16_bits_to_f32(f32_to_f16_bits(x));
+            let err = (rt - x).abs();
+            // round-to-nearest-even: error at most half the lattice spacing
+            // (tiny slack for the spacing estimate at power-of-two edges)
+            let bound = half_ulp_f16(x) * 1.0001 + 1e-12;
+            prop_assert(err <= bound, &format!("{x} -> {rt} (err {err}, bound {bound})"))
+        });
+    }
+
+    #[test]
+    fn property_encode_is_monotone() {
+        use crate::util::quickcheck::{prop_assert, property};
+        property("f16 conversion is monotone", |g| {
+            let scale = *g.choose(&[1e-5f32, 0.04, 1.0, 1000.0]);
+            let a = g.normal(scale).clamp(-65000.0, 65000.0);
+            let b = g.normal(scale).clamp(-65000.0, 65000.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let rl = f16_bits_to_f32(f32_to_f16_bits(lo));
+            let rh = f16_bits_to_f32(f32_to_f16_bits(hi));
+            prop_assert(rl <= rh, &format!("monotone: {lo}->{rl} vs {hi}->{rh}"))?;
+            // and on non-negative values the bit patterns order as integers
+            let (pl, ph) = (lo.abs().min(hi.abs()), lo.abs().max(hi.abs()));
+            prop_assert(
+                f32_to_f16_bits(pl) <= f32_to_f16_bits(ph),
+                &format!("bit order: {pl} vs {ph}"),
+            )
+        });
+    }
+
+    #[test]
+    fn property_decode_encode_is_identity_on_f16_lattice() {
+        use crate::util::quickcheck::{prop_assert, property};
+        property("f16 bits -> f32 -> bits is identity", |g| {
+            // any non-NaN half value round-trips exactly through f32
+            let bits = (g.int_in(0, 0xffff) as u16) & 0x7fff; // skip sign dup of NaN space
+            let is_nan = (bits & 0x7c00) == 0x7c00 && (bits & 0x3ff) != 0;
+            if is_nan {
+                return Ok(());
+            }
+            for sign in [0u16, 0x8000] {
+                let h = bits | sign;
+                let back = f32_to_f16_bits(f16_bits_to_f32(h));
+                // -0.0 and 0.0 encode distinctly; everything must be exact
+                prop_assert(back == h, &format!("lattice {h:#06x} -> {back:#06x}"))?;
+            }
+            Ok(())
+        });
+    }
 }

@@ -1,12 +1,89 @@
 //! Minimal fixed-size thread pool (no tokio/rayon offline).
 //!
-//! The coordinator uses this to run independent per-layer-group compression
-//! jobs concurrently.  Jobs are `'static` closures; results come back over a
-//! channel via [`ThreadPool::map`] which preserves input order.
+//! Two shapes of parallelism:
+//!
+//! * [`scoped_map`] — fork-join over *borrowed* state (scoped threads + a
+//!   shared work queue).  This is the coordinator's and reference
+//!   backend's workhorse: per-group compression jobs, per-chunk decodes
+//!   and matmul row splits all borrow a shared `&Runtime`/buffers, so
+//!   their captures can't be `'static`.
+//! * [`ThreadPool`] — long-lived workers for `'static` fire-and-forget
+//!   jobs with results over a channel ([`ThreadPool::map`]); kept for
+//!   daemon-style workloads that outlive a single fork-join scope.
 
+use std::cell::Cell;
+use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
+
+/// Workers to use for fork-join loops: machine parallelism, capped.
+pub fn default_workers(cap: usize) -> usize {
+    thread::available_parallelism().map(|p| p.get()).unwrap_or(1).clamp(1, cap.max(1))
+}
+
+thread_local! {
+    static IN_SCOPED_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread is a [`scoped_map`] worker.  Nested
+/// fork-join callers (e.g. the reference backend's matmul row split) use
+/// this to stay serial instead of oversubscribing the machine: the outer
+/// fan-out already owns the cores.
+pub fn in_scoped_worker() -> bool {
+    IN_SCOPED_WORKER.with(|f| f.get())
+}
+
+/// Apply `f` to every item on up to `workers` scoped threads, returning
+/// results in input order.  Unlike [`ThreadPool::map`], `f` and the items
+/// may borrow local state (no `'static` bound); panics in `f` propagate.
+/// Work is pulled from a shared queue, so uneven item costs balance out.
+pub fn scoped_map<T, R, F>(workers: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let queue: Mutex<VecDeque<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect());
+    let results: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    {
+        let queue = &queue;
+        let results = &results;
+        let f = &f;
+        thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(move || {
+                    IN_SCOPED_WORKER.with(|flag| flag.set(true));
+                    loop {
+                        let item = queue.lock().unwrap().pop_front();
+                        match item {
+                            Some((i, x)) => {
+                                let r = f(x);
+                                results.lock().unwrap()[i] = Some(r);
+                            }
+                            None => break,
+                        }
+                    }
+                });
+            }
+        });
+    }
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("scoped worker completed"))
+        .collect()
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -133,5 +210,30 @@ mod tests {
         let pool = ThreadPool::new(2);
         let out = pool.map(vec![vec![1u8; 1 << 16], vec![2u8; 1 << 16]], |v| v.len());
         assert_eq!(out, vec![1 << 16, 1 << 16]);
+    }
+
+    #[test]
+    fn scoped_map_borrows_local_state() {
+        let base = vec![10i64, 20, 30]; // borrowed, not 'static
+        let out = scoped_map(4, vec![0usize, 1, 2], |i| base[i] + i as i64);
+        assert_eq!(out, vec![10, 21, 32]);
+    }
+
+    #[test]
+    fn scoped_map_preserves_order_with_uneven_costs() {
+        let out = scoped_map(3, (0..40u64).collect::<Vec<_>>(), |x| {
+            if x % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            x * x
+        });
+        assert_eq!(out, (0..40u64).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_empty_and_single() {
+        assert_eq!(scoped_map(4, Vec::<u32>::new(), |x| x), Vec::<u32>::new());
+        assert_eq!(scoped_map(1, vec![5u32], |x| x + 1), vec![6]);
+        assert!(default_workers(8) >= 1);
     }
 }

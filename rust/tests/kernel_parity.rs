@@ -1,0 +1,134 @@
+//! Golden-vector parity: small fixed-seed inputs through each reference
+//! kernel, asserted against checked-in outputs of the pure-jnp oracles in
+//! `python/compile/kernels/ref.py` (tolerance 1e-5).
+//!
+//! The golden file is generated once by `python/tests/gen_golden.py` and
+//! committed, so this suite needs no Python at test time.  If ref.py ever
+//! changes semantics, regenerate with `cd python && python -m tests.gen_golden`.
+
+use std::path::Path;
+
+use pocketllm::runtime::reference::ops;
+use pocketllm::util::json::Json;
+
+const TOL: f32 = 1e-5;
+
+fn golden() -> Json {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/kernels.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {path:?}: {e} (run python -m tests.gen_golden)"));
+    Json::parse(&text).expect("parsing golden kernels.json")
+}
+
+fn floats(j: &Json) -> Vec<f32> {
+    j.as_arr()
+        .expect("float array")
+        .iter()
+        .map(|v| v.as_f64().expect("float") as f32)
+        .collect()
+}
+
+fn ints(j: &Json) -> Vec<i32> {
+    j.as_arr()
+        .expect("int array")
+        .iter()
+        .map(|v| v.as_i64().expect("int") as i32)
+        .collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= TOL,
+            "{what}: index {i}: got {g}, want {w} (tol {TOL})"
+        );
+    }
+}
+
+#[test]
+fn rln_matches_ref() {
+    let g = golden();
+    for (ci, case) in g.get("rln").unwrap().as_arr().unwrap().iter().enumerate() {
+        let r = case.get("R").unwrap().as_usize().unwrap();
+        let w = case.get("W").unwrap().as_usize().unwrap();
+        let x = floats(case.get("x").unwrap());
+        let want = floats(case.get("y").unwrap());
+        let got = ops::rln(&x, r, w);
+        assert_close(&got, &want, &format!("rln case {ci}"));
+    }
+}
+
+#[test]
+fn ln_matches_ref() {
+    let g = golden();
+    for (ci, case) in g.get("ln").unwrap().as_arr().unwrap().iter().enumerate() {
+        let r = case.get("R").unwrap().as_usize().unwrap();
+        let w = case.get("W").unwrap().as_usize().unwrap();
+        let d = case.get("d").unwrap().as_usize().unwrap();
+        let x = floats(case.get("x").unwrap());
+        let want = floats(case.get("y").unwrap());
+        let got = ops::ln(&x, r, w, d);
+        assert_close(&got, &want, &format!("ln case {ci}"));
+    }
+}
+
+#[test]
+fn mlp_block_matches_ref() {
+    let g = golden();
+    for (ci, case) in g.get("mlp_block").unwrap().as_arr().unwrap().iter().enumerate() {
+        let r = case.get("R").unwrap().as_usize().unwrap();
+        let w = case.get("W").unwrap().as_usize().unwrap();
+        let din = case.get("din").unwrap().as_usize().unwrap();
+        let dout = case.get("dout").unwrap().as_usize().unwrap();
+        let norm = case.get("norm").unwrap().as_str().unwrap();
+        let residual = matches!(case.get("residual").unwrap(), Json::Bool(true));
+        let activate = matches!(case.get("activate").unwrap(), Json::Bool(true));
+        let x = floats(case.get("x").unwrap());
+        let wm = floats(case.get("w").unwrap());
+        let b = floats(case.get("b").unwrap());
+        let want = floats(case.get("y").unwrap());
+        let got = ops::mlp_block(&x, r, w, &wm, &b, din, dout, norm, residual, activate);
+        assert_close(&got, &want, &format!("mlp_block case {ci} ({norm})"));
+    }
+}
+
+#[test]
+fn vq_assign_matches_ref() {
+    let g = golden();
+    for (ci, case) in g.get("vq_assign").unwrap().as_arr().unwrap().iter().enumerate() {
+        let n = case.get("N").unwrap().as_usize().unwrap();
+        let d = case.get("d").unwrap().as_usize().unwrap();
+        let k = case.get("K").unwrap().as_usize().unwrap();
+        let z = floats(case.get("z").unwrap());
+        let c = floats(case.get("c").unwrap());
+        let want_idx = ints(case.get("idx").unwrap());
+        let want_sq = floats(case.get("sq").unwrap());
+        let (idx, sq) = ops::vq_assign(&z, n, d, &c, k);
+        assert_eq!(idx, want_idx, "vq_assign case {ci}: indices");
+        assert_close(&sq, &want_sq, &format!("vq_assign case {ci} sqdist"));
+    }
+}
+
+#[test]
+fn gather_rows_matches_ref() {
+    let g = golden();
+    for (ci, case) in g.get("gather_rows").unwrap().as_arr().unwrap().iter().enumerate() {
+        let d = case.get("d").unwrap().as_usize().unwrap();
+        let c = floats(case.get("c").unwrap());
+        let idx = ints(case.get("idx").unwrap());
+        let want = floats(case.get("y").unwrap());
+        let got = ops::gather(&c, d, &idx);
+        assert_close(&got, &want, &format!("gather_rows case {ci}"));
+    }
+}
+
+/// The golden file covers every kernel family ref.py exports.
+#[test]
+fn golden_file_is_complete() {
+    let g = golden();
+    for key in ["rln", "ln", "mlp_block", "vq_assign", "gather_rows"] {
+        let cases = g.get(key).unwrap().as_arr().unwrap();
+        assert!(!cases.is_empty(), "{key}: no golden cases");
+    }
+}

@@ -1,0 +1,141 @@
+//! API-compatible **stub** of the `xla` crate surface that PocketLLM's PJRT
+//! backend (`pocketllm::runtime::pjrt`) touches.
+//!
+//! The real crate links `libxla_extension` (hundreds of MB of native code)
+//! and cannot be vendored into a hermetic checkout.  This stub keeps the
+//! PJRT code path *compiling* everywhere while making its unavailability a
+//! clean runtime error: [`PjRtClient::cpu`] always fails, so
+//! `Runtime::pjrt(..)` reports "PJRT unavailable" and the coordinator falls
+//! back to the pure-Rust reference backend.
+//!
+//! To run against real XLA artifacts, replace the `xla = { path = ... }`
+//! dependency in `rust/Cargo.toml` with the real bindings; the API below is
+//! the exact subset the backend calls.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (anyhow-compatible: implements
+/// `std::error::Error`).
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "{what}: PJRT/XLA is not available in this build (rust/vendor/xla is \
+         the hermetic stub; swap it for the real xla crate to enable the \
+         PJRT backend)"
+    )))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Host-side literal (stub: carries no data; never observed at runtime
+/// because client construction fails first).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    _shape: Vec<i64>,
+}
+
+impl Literal {
+    pub fn scalar(_x: f32) -> Literal {
+        Literal { _shape: vec![] }
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { _shape: vec![v.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _shape: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation handle (stub).
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] is the stub's choke point: it
+/// fails before any artifact is touched, so callers degrade gracefully.
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_cleanly() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn literals_marshal_without_runtime() {
+        let l = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+        let _ = Literal::vec1(&[1i32, 2, 3]);
+        let _ = Literal::scalar(0.5);
+    }
+}
