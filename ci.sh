@@ -14,4 +14,15 @@ cargo test -q
 
 echo "== CLI smoke (reference backend) =="
 ./target/release/pocketllm info --backend reference >/dev/null
+
+echo "== examples (Session/PocketReader surface, reference backend) =="
+cargo run --release --example quickstart
+POCKET_FAST=1 cargo run --release --example e2e_train_compress_eval
+
+echo "== perf snapshot (compress + lazy decode -> BENCH_compress.json) =="
+cargo bench --bench bench_compress
+test -f ../BENCH_compress.json
+echo "BENCH_compress.json:"
+cat ../BENCH_compress.json
+
 echo "ci.sh: all green"

@@ -1,21 +1,21 @@
 //! Ablation sweep over the paper's design axes on one layer group:
 //! RLN vs LN, codebook init, depth, and codebook size — a fast, single-group
-//! version of Tables 5-7 for interactive exploration.
+//! version of Tables 5-7 for interactive exploration, driven through the
+//! `Session` API's `meta_override` + `codebook_init` knobs.
 //!
 //!     cargo run --release --example ablation_sweep -- [steps]
 
-use pocketllm::coordinator::job::{compress_group, CodebookInit, JobOpts};
-use pocketllm::model::group_rows;
-use pocketllm::report::ExpContext;
+use pocketllm::coordinator::job::CodebookInit;
+use pocketllm::session::Session;
 use pocketllm::util::benchlib::Table;
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(100);
-    let ctx = ExpContext::new("tiny")?;
-    let rows = group_rows(&ctx.base, "up")?; // W=512, the paper's Table 5-7 target
+    let session = Session::builder().build()?;
+    let (base, _) = session.train_lm("tiny").steps(80).run()?;
 
     let mut t = Table::new(
-        "ablation on the `up` group",
+        "ablation on the `up` group", // W=512, the paper's Table 5-7 target
         &["config", "vq", "mse", "mse_top100", "cb_util"],
     );
     let cases: Vec<(String, String, CodebookInit)> = vec![
@@ -28,21 +28,22 @@ fn main() -> anyhow::Result<()> {
         ("K=16384".into(), "w512_d8_k16384_m3_rln".into(), CodebookInit::LatentMatched),
     ];
     for (label, cfg, init) in cases {
-        let mc = ctx.rt.manifest.meta_cfg(&cfg)?.clone();
-        let opts = JobOpts {
-            train_steps: steps,
-            kmeans_iters: 1,
-            post_steps: steps / 8,
-            codebook_init: init,
-            ..Default::default()
-        };
-        let res = compress_group(&ctx.rt, &mc, &rows, &opts)?;
+        let res = session
+            .compress(&base)
+            .groups(["up"])
+            .meta_override(cfg)
+            .steps(steps)
+            .kmeans_iters(1)
+            .post_steps(steps / 8)
+            .codebook_init(init)
+            .run()?;
+        let (_, m) = &res.report.per_group[0];
         t.row(vec![
             label,
-            format!("{:.4}", res.metrics.vq_loss),
-            format!("{:.2e}", res.metrics.mse_loss),
-            format!("{:.3}", res.metrics.mse_top100),
-            format!("{:.0}%", res.metrics.codebook_utilization * 100.0),
+            format!("{:.4}", m.vq_loss),
+            format!("{:.2e}", m.mse_loss),
+            format!("{:.3}", m.mse_top100),
+            format!("{:.0}%", m.codebook_utilization * 100.0),
         ]);
     }
     t.emit(None);

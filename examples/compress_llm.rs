@@ -2,27 +2,30 @@
 //!
 //!     cargo run --release --example compress_llm -- [preset] [steps]
 //!
-//! Trains (or loads the cached) base model, compresses every linear layer
-//! group, packs the pocket file, and reports perplexity before/after plus
-//! the exact Eq. 14 storage accounting per group.
+//! Trains a base model through the `Session` API, compresses every linear
+//! layer group, packs the pocket file, and reports perplexity before/after
+//! plus the exact Eq. 14 storage accounting per group.
 
-use pocketllm::coordinator::{compress_model, PipelineOpts};
-use pocketllm::eval::perplexity;
-use pocketllm::report::ExpContext;
+use pocketllm::session::Session;
 use pocketllm::util::benchlib::Table;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let preset = args.get(1).cloned().unwrap_or_else(|| "p8x".to_string());
     let steps: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let fast = std::env::var("POCKET_FAST").map(|v| v == "1").unwrap_or(false);
+    let train_steps = if fast { 80 } else { 300 };
 
-    let ctx = ExpContext::new("tiny")?;
-    let ppl_base = perplexity(&ctx.rt, &ctx.base, &ctx.corpus, 4)?;
+    let session = Session::builder().build()?;
+    let (base, _losses) = session.train_lm("tiny").steps(train_steps).run()?;
+    let ppl_base = session.eval(&base).ppl_batches(4).instances(10).run()?.perplexity;
     println!("base perplexity: {ppl_base:.3}");
 
-    let mut opts = PipelineOpts { preset: preset.clone(), ..Default::default() };
-    opts.job.train_steps = steps;
-    let res = compress_model(&ctx.rt, &ctx.base, &opts)?;
+    let res = session
+        .compress(&base)
+        .preset(preset.clone())
+        .steps(if fast { steps.min(80) } else { steps })
+        .run()?;
 
     let mut t = Table::new(
         &format!("per-group storage at {preset}"),
@@ -30,7 +33,7 @@ fn main() -> anyhow::Result<()> {
     );
     for (g, m) in &res.report.per_group {
         let rec = &res.pocket.groups[g];
-        let r = rec.ratio(&ctx.rt.manifest.meta[&rec.meta_cfg]);
+        let r = rec.ratio(&session.manifest().meta[&rec.meta_cfg]);
         t.row(vec![
             g.clone(),
             format!("{:.2}", r.avg_bits),
@@ -43,7 +46,8 @@ fn main() -> anyhow::Result<()> {
     }
     t.emit(None);
 
-    let ppl_comp = perplexity(&ctx.rt, &res.reconstructed, &ctx.corpus, 4)?;
+    let ppl_comp =
+        session.eval(&res.reconstructed).ppl_batches(4).instances(10).run()?.perplexity;
     println!(
         "compressed: avg {:.2} bits ({:.1}x vs fp32), pocket file {} KiB",
         res.report.avg_bits,

@@ -1,44 +1,33 @@
 //! End-to-end driver (DESIGN.md §6): proves all three layers compose on a
-//! real small workload.
+//! real small workload, driven entirely through the `Session` /
+//! `PocketReader` public surface.
 //!
 //!     cargo run --release --example e2e_train_compress_eval
 //!
-//! 1. generates the synthetic corpus;
-//! 2. trains the tiny llama-style LM for 300 steps via the AOT
-//!    `lm_train_step` executable, logging the loss curve;
+//! 1. builds a session (auto backend) over the synthetic corpus;
+//! 2. trains the tiny llama-style LM for 300 steps, logging the loss curve;
 //! 3. compresses every linear layer group with PocketLLM at the 8x preset
 //!    (meta-training + k-means + assignment through the Pallas kernels);
-//! 4. packs the pocket file, reports Eq. 14 bits and the on-disk size;
-//! 5. reloads the pocket file and reconstructs weights on the device path;
+//! 4. packs the seekable POCKET02 container, reports Eq. 14 bits and size;
+//! 5. reopens the container with a lazy `PocketReader` and reconstructs the
+//!    weights on the device path;
 //! 6. evaluates perplexity + all five zero-shot suites before/after, plus a
 //!    LoRA-recovered variant and a linear-VQ baseline at matched bits.
 //!
 //! Results land in bench_results/e2e.json (see rust/DESIGN.md §6).
 
-use pocketllm::coordinator::lm::{lora_finetune, train_lm};
-use pocketllm::coordinator::{compress_model, reconstruct_from_pocket, PipelineOpts};
-use pocketllm::data::tasks::ZERO_SHOT_SUITES;
 use pocketllm::data::Corpus;
-use pocketllm::eval::{perplexity, zero_shot_accuracy};
+use pocketllm::eval::EvalReport;
 use pocketllm::model::{group_rows, scatter_group_rows, WeightStore, GROUPS};
+use pocketllm::packfmt::PocketReader;
 use pocketllm::quant::vq_linear::VqLinear;
 use pocketllm::quant::Baseline;
-use pocketllm::runtime::Runtime;
+use pocketllm::session::Session;
 use pocketllm::util::benchlib::{pct, Table};
 use pocketllm::util::json::{arr, num, obj, s};
 
-fn eval_model(
-    rt: &Runtime,
-    ws: &WeightStore,
-    corpus: &Corpus,
-    n_inst: usize,
-) -> anyhow::Result<(f64, Vec<f64>)> {
-    let ppl = perplexity(rt, ws, corpus, 6)?;
-    let mut accs = Vec::new();
-    for spec in &ZERO_SHOT_SUITES {
-        accs.push(zero_shot_accuracy(rt, ws, corpus, spec, n_inst, 13)?);
-    }
-    Ok((ppl, accs))
+fn eval_model(session: &Session, ws: &WeightStore, n_inst: usize) -> anyhow::Result<EvalReport> {
+    Ok(session.eval(ws).ppl_batches(6).instances(n_inst).run()?)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -47,12 +36,12 @@ fn main() -> anyhow::Result<()> {
     let (train_steps, comp_steps, ft_steps, n_inst) =
         if fast { (60, 40, 10, 30) } else { (300, 150, 40, 80) };
 
-    let rt = Runtime::from_repo_root()?;
+    let session = Session::builder().build()?;
     let corpus = Corpus::new(512, 1001);
 
     // --- 1+2: train the substrate LM, log the loss curve -------------------
     println!("== training tiny LM ({train_steps} steps) ==");
-    let (base, losses) = train_lm(&rt, "tiny", &corpus, train_steps, 7, 25)?;
+    let (base, losses) = session.train_lm("tiny").steps(train_steps).seed(7).run()?;
     println!(
         "loss curve: {}",
         losses
@@ -65,11 +54,14 @@ fn main() -> anyhow::Result<()> {
 
     // --- 3+4: compress at 8x, pack --------------------------------------
     println!("\n== compressing all 7 groups at p8x ({comp_steps} steps/group) ==");
-    let mut opts = PipelineOpts { preset: "p8x".into(), ..Default::default() };
-    opts.job.train_steps = comp_steps;
-    opts.job.kmeans_iters = 1;
-    opts.job.post_steps = comp_steps / 8;
-    let res = compress_model(&rt, &base, &opts)?;
+    let res = session
+        .compress(&base)
+        .preset("p8x")
+        .steps(comp_steps)
+        .kmeans_iters(1)
+        .post_steps(comp_steps / 8)
+        .progress_sink(pocketllm::coordinator::ProgressSink::stderr())
+        .run()?;
     let pocket_path =
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_results/e2e.pocket");
     std::fs::create_dir_all(pocket_path.parent().unwrap())?;
@@ -83,45 +75,51 @@ fn main() -> anyhow::Result<()> {
         dense_bytes / 1024
     );
 
-    // --- 5: device-side reload -------------------------------------------
-    let pocket = pocketllm::packfmt::PocketFile::load(&pocket_path)?;
-    let device_ws = reconstruct_from_pocket(&rt, &pocket)?;
+    // --- 5: device-side reload through the lazy reader ---------------------
+    let reader = PocketReader::open(&pocket_path)?;
+    let device_ws = session.reconstruct(&reader)?;
+    let rstats = reader.stats();
+    println!(
+        "device reload: {} sections, {} group decodes, {} KiB read",
+        rstats.sections_read,
+        rstats.group_decodes,
+        rstats.bytes_read / 1024
+    );
 
     // --- baseline: linear-space VQ at matched (d, K) -----------------------
     println!("\n== linear-VQ baseline at matched bits ==");
     let mut baseline_ws = base.clone();
     for g in GROUPS {
         let rows = group_rows(&base, g)?;
-        let mc = rt.manifest.meta_for_preset(rows.cols(), "p8x")?;
+        let mc = session.manifest().meta_for_preset(rows.cols(), "p8x")?;
         let vq = VqLinear::new(mc.d, mc.k, 3, 42);
         scatter_group_rows(&mut baseline_ws, g, &vq.reconstruct(&rows))?;
     }
 
     // --- LoRA recovery ------------------------------------------------------
     println!("== LoRA fine-tune ({ft_steps} steps) ==");
-    let recovered = lora_finetune(&rt, &device_ws, &corpus, ft_steps, 9)?;
+    let recovered = session.lora_finetune(&device_ws, &corpus, ft_steps, 9)?;
 
     // --- 6: evaluate everything --------------------------------------------
     println!("\n== evaluation ==");
-    let (ppl_base, acc_base) = eval_model(&rt, &base, &corpus, n_inst)?;
-    let (ppl_comp, acc_comp) = eval_model(&rt, &device_ws, &corpus, n_inst)?;
-    let (ppl_ft, acc_ft) = eval_model(&rt, &recovered, &corpus, n_inst)?;
-    let (ppl_lin, acc_lin) = eval_model(&rt, &baseline_ws, &corpus, n_inst)?;
+    let r_base = eval_model(&session, &base, n_inst)?;
+    let r_comp = eval_model(&session, &device_ws, n_inst)?;
+    let r_ft = eval_model(&session, &recovered, n_inst)?;
+    let r_lin = eval_model(&session, &baseline_ws, n_inst)?;
 
     let mut t = Table::new(
         "E2E: tiny LM at ~8x compression",
         &["model", "ppl", "WinoG", "PiQA", "HellaS", "ArcE", "ArcC", "avg_acc"],
     );
-    for (name, ppl, accs) in [
-        ("dense fp32", ppl_base, &acc_base),
-        ("PocketLLM 8x (no FT)", ppl_comp, &acc_comp),
-        ("PocketLLM 8x (+LoRA)", ppl_ft, &acc_ft),
-        ("linear-VQ 8x", ppl_lin, &acc_lin),
+    for (name, r) in [
+        ("dense fp32", &r_base),
+        ("PocketLLM 8x (no FT)", &r_comp),
+        ("PocketLLM 8x (+LoRA)", &r_ft),
+        ("linear-VQ 8x", &r_lin),
     ] {
-        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
-        let mut row = vec![name.to_string(), format!("{ppl:.3}")];
-        row.extend(accs.iter().map(|a| pct(*a)));
-        row.push(pct(avg));
+        let mut row = vec![name.to_string(), format!("{:.3}", r.perplexity)];
+        row.extend(r.suites.iter().map(|(_, a)| pct(*a)));
+        row.push(pct(r.mean_accuracy()));
         t.row(row);
     }
     t.emit(Some(&format!(
@@ -129,6 +127,7 @@ fn main() -> anyhow::Result<()> {
         env!("CARGO_MANIFEST_DIR")
     )));
 
+    let accs = |r: &EvalReport| arr(r.suites.iter().map(|(_, a)| num(*a)).collect());
     let j = obj(vec![
         ("train_steps", num(train_steps as f64)),
         ("loss_first", num(losses[0] as f64)),
@@ -136,14 +135,14 @@ fn main() -> anyhow::Result<()> {
         ("avg_bits", num(res.report.avg_bits)),
         ("ratio_fp32", num(res.report.ratio_fp32)),
         ("pocket_kib", num((res.pocket.file_bytes() / 1024) as f64)),
-        ("ppl_base", num(ppl_base)),
-        ("ppl_pocket", num(ppl_comp)),
-        ("ppl_pocket_ft", num(ppl_ft)),
-        ("ppl_linear_vq", num(ppl_lin)),
-        ("acc_base", arr(acc_base.iter().map(|a| num(*a)).collect())),
-        ("acc_pocket", arr(acc_comp.iter().map(|a| num(*a)).collect())),
-        ("acc_pocket_ft", arr(acc_ft.iter().map(|a| num(*a)).collect())),
-        ("acc_linear_vq", arr(acc_lin.iter().map(|a| num(*a)).collect())),
+        ("ppl_base", num(r_base.perplexity)),
+        ("ppl_pocket", num(r_comp.perplexity)),
+        ("ppl_pocket_ft", num(r_ft.perplexity)),
+        ("ppl_linear_vq", num(r_lin.perplexity)),
+        ("acc_base", accs(&r_base)),
+        ("acc_pocket", accs(&r_comp)),
+        ("acc_pocket_ft", accs(&r_ft)),
+        ("acc_linear_vq", accs(&r_lin)),
         ("wall_secs", num(t0.elapsed().as_secs_f64())),
         ("mode", s(if fast { "fast" } else { "full" })),
     ]);

@@ -1,61 +1,75 @@
 //! Quickstart: compress one layer group of a (briefly trained) tiny LM with
-//! PocketLLM and inspect the result.
+//! PocketLLM and decode it lazily on the device side.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Walks the whole public API surface in ~1 minute: runtime -> corpus ->
-//! LM training -> group compression -> pocket packing -> device decode.
+//! Walks the whole public API surface in ~1 minute, entirely through the
+//! `Session` / `PocketReader` front door: session -> LM training -> group
+//! compression -> POCKET02 packing -> lazy per-group device decode.
 
-use pocketllm::coordinator::job::{compress_group, decode_group, decoder_slice, JobOpts};
-use pocketllm::coordinator::lm::train_lm;
-use pocketllm::data::Corpus;
-use pocketllm::model::group_rows;
-use pocketllm::packfmt::ratio_for;
-use pocketllm::runtime::Runtime;
+use pocketllm::packfmt::PocketReader;
+use pocketllm::session::Session;
 
-fn main() -> anyhow::Result<()> {
-    // 1. runtime: PJRT over AOT artifacts when available, otherwise the
+fn main() -> Result<(), pocketllm::Error> {
+    // 1. session: PJRT over AOT artifacts when available, otherwise the
     //    hermetic pure-Rust reference backend (no build step needed).
-    let rt = Runtime::from_repo_root()?;
+    let session = Session::builder().build()?;
     println!(
         "backend: {} ({} artifacts in manifest)",
-        rt.backend_name(),
-        rt.manifest.artifacts.len()
+        session.backend_name(),
+        session.manifest().artifacts.len()
     );
 
-    // 2. a synthetic corpus and a briefly trained substrate model
-    let corpus = Corpus::new(512, 1001);
-    let (ws, losses) = train_lm(&rt, "tiny", &corpus, 30, 7, 10)?;
+    // 2. a briefly trained substrate model (synthetic Zipf-Markov corpus)
+    let (ws, losses) = session.train_lm("tiny").steps(30).seed(7).run()?;
     println!("LM loss: {:.3} -> {:.3}", losses[0], losses.last().unwrap());
 
     // 3. compress the value-projection group at the ~16x preset
-    let rows = group_rows(&ws, "v")?;
-    let mc = rt.manifest.meta_for_preset(rows.cols(), "p16x")?.clone();
-    let opts = JobOpts { train_steps: 120, kmeans_iters: 1, post_steps: 20, ..Default::default() };
-    let res = compress_group(&rt, &mc, &rows, &opts)?;
-    let ratio = ratio_for(&mc, res.indices.len(), rows.rows());
+    let res = session
+        .compress(&ws)
+        .preset("p16x")
+        .groups(["v"])
+        .steps(120)
+        .kmeans_iters(1)
+        .post_steps(20)
+        .progress(|ev| println!("  progress: {ev:?}"))
+        .run()?;
+    let (g, m) = &res.report.per_group[0];
     println!(
-        "group v: {} rows x {} -> {} codewords, avg {:.2} bits/weight ({:.1}x), \
-         mse {:.2e}, codebook util {:.0}%",
-        rows.rows(),
-        rows.cols(),
-        mc.k,
-        ratio.avg_bits,
-        ratio.ratio_fp32,
-        res.metrics.mse_loss,
-        res.metrics.codebook_utilization * 100.0
+        "group {g}: avg {:.2} bits/weight ({:.1}x vs fp32), mse {:.2e}, codebook util {:.0}%",
+        res.report.avg_bits,
+        res.report.ratio_fp32,
+        m.mse_loss,
+        m.codebook_utilization * 100.0
     );
 
-    // 4. device-side decode from (decoder, codebook, indices, scales) only
-    let rec = decode_group(
-        &rt,
-        &mc,
-        &decoder_slice(&mc, &res.theta),
-        &res.codebook,
-        &res.indices,
-        &res.row_scales,
-        rows.rows(),
-    )?;
-    println!("device decode matches coordinator: mse {:.2e}", rec.mse(&res.recon));
+    // 4. pack the seekable POCKET02 container — what the edge downloads
+    let path = std::env::temp_dir().join("pocketllm_quickstart.pocket");
+    res.pocket.save(&path)?;
+    println!("pocket file: {} bytes at {}", res.pocket.file_bytes(), path.display());
+
+    // 5. device-side *lazy* decode: open reads only the header + TOC, then
+    //    decoding "v" pulls exactly that group's section off disk
+    let reader = PocketReader::open(&path)?;
+    let v_rows = reader.decode_group(session.runtime(), "v")?;
+    let stats = reader.stats();
+    println!(
+        "lazy decode read {} of {} bytes in {} section(s); decoded [{}x{}]",
+        stats.bytes_read,
+        res.pocket.file_bytes(),
+        stats.sections_read,
+        v_rows.rows(),
+        v_rows.cols()
+    );
+
+    // the decoded rows match the coordinator's reconstruction up to the
+    // f16 codebook/scale quantization of the container
+    let coord = pocketllm::model::group_rows(&res.reconstructed, "v").map_err(pocketllm::Error::from)?;
+    println!("device decode matches coordinator: mse {:.2e}", v_rows.mse(&coord));
+
+    // 6. a second decode of the same group is an LRU hit, not a backend run
+    let _again = reader.decode_group(session.runtime(), "v")?;
+    let stats = reader.stats();
+    println!("second decode: {} backend decode(s), {} cache hit(s)", stats.group_decodes, stats.cache_hits);
     Ok(())
 }

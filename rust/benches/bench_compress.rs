@@ -1,0 +1,82 @@
+//! Perf trajectory snapshot: compression and lazy-decode wall times.
+//!
+//!     cargo bench --bench bench_compress
+//!
+//! Runs a small but real pipeline on whichever backend is active (reference
+//! on a clean checkout): train a few LM steps, compress two groups, pack the
+//! POCKET02 container, then time (a) a cold single-group lazy decode through
+//! `PocketReader`, (b) a warm (LRU-hit) decode, and (c) a full
+//! `reconstruct_all`.  Results land in `BENCH_compress.json` at the repo
+//! root so the perf trajectory is tracked across PRs.
+
+use std::time::Instant;
+
+use pocketllm::packfmt::PocketReader;
+use pocketllm::session::Session;
+use pocketllm::util::benchlib::bench;
+use pocketllm::util::json::{num, obj, s};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::builder().build()?;
+    eprintln!("[bench_compress] backend: {}", session.backend_name());
+
+    let (ws, _) = session.train_lm("tiny").steps(20).seed(7).run()?;
+
+    // --- compression wall time --------------------------------------------
+    let t0 = Instant::now();
+    let res = session
+        .compress(&ws)
+        .preset("p16x")
+        .groups(["q", "up"])
+        .steps(50)
+        .kmeans_iters(1)
+        .post_steps(8)
+        .run()?;
+    let compress_secs = t0.elapsed().as_secs_f64();
+
+    let path = std::env::temp_dir().join("pocketllm_bench_compress.pocket");
+    res.pocket.save(&path)?;
+    let pocket_bytes = res.pocket.file_bytes();
+
+    // --- lazy decode timings ----------------------------------------------
+    // cold: fresh reader each iteration (header + one section + backend run)
+    let cold = bench("cold_decode_group_q", 1, 5, || {
+        let r = PocketReader::open(&path).unwrap();
+        let _ = r.decode_group(session.runtime(), "q").unwrap();
+    });
+    // warm: same reader, LRU hit
+    let reader = PocketReader::open(&path)?;
+    let _ = reader.decode_group(session.runtime(), "q")?;
+    let warm = bench("warm_decode_group_q", 1, 20, || {
+        let _ = reader.decode_group(session.runtime(), "q").unwrap();
+    });
+    // full device-side reload
+    let full = bench("reconstruct_all", 1, 3, || {
+        let r = PocketReader::open(&path).unwrap();
+        let _ = r.reconstruct_all(session.runtime()).unwrap();
+    });
+    println!("{cold}");
+    println!("{warm}");
+    println!("{full}");
+    println!(
+        "compress 2 groups: {compress_secs:.2}s; pocket {pocket_bytes} bytes; \
+         avg {:.2} bits ({:.1}x)",
+        res.report.avg_bits, res.report.ratio_fp32
+    );
+
+    let out = format!("{}/../BENCH_compress.json", env!("CARGO_MANIFEST_DIR"));
+    let j = obj(vec![
+        ("backend", s(session.backend_name())),
+        ("compress_two_groups_secs", num(compress_secs)),
+        ("cold_decode_group_ms", num(cold.mean.as_secs_f64() * 1e3)),
+        ("warm_decode_group_us", num(warm.mean.as_secs_f64() * 1e6)),
+        ("reconstruct_all_ms", num(full.mean.as_secs_f64() * 1e3)),
+        ("pocket_bytes", num(pocket_bytes as f64)),
+        ("avg_bits", num(res.report.avg_bits)),
+        ("ratio_fp32", num(res.report.ratio_fp32)),
+    ]);
+    pocketllm::util::benchlib::write_report(&out, &j);
+    println!("[bench_compress] wrote {out}");
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

@@ -5,6 +5,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
+use super::{ProgressEvent, ProgressSink};
 use crate::data::Corpus;
 use crate::model::WeightStore;
 use crate::runtime::{Arg, Runtime};
@@ -12,7 +13,9 @@ use crate::tensor::TensorF32;
 use crate::util::prng::Pcg32;
 
 /// Train the LM substrate for `steps` on a corpus. Returns the weights and
-/// the loss curve (one entry per step).
+/// the loss curve (one entry per step).  Logs to stderr every `log_every`
+/// steps (0 = silent) — the historical behavior; library users should call
+/// [`train_lm_with_progress`] (or `Session::train_lm`) to choose the sink.
 pub fn train_lm(
     rt: &Runtime,
     cfg_name: &str,
@@ -20,6 +23,20 @@ pub fn train_lm(
     steps: usize,
     seed: u64,
     log_every: usize,
+) -> Result<(WeightStore, Vec<f32>)> {
+    let sink = if log_every > 0 { ProgressSink::stderr() } else { ProgressSink::none() };
+    train_lm_with_progress(rt, cfg_name, corpus, steps, seed, log_every, &sink)
+}
+
+/// [`train_lm`] with an explicit [`ProgressSink`] instead of stderr.
+pub fn train_lm_with_progress(
+    rt: &Runtime,
+    cfg_name: &str,
+    corpus: &Corpus,
+    steps: usize,
+    seed: u64,
+    log_every: usize,
+    progress: &ProgressSink,
 ) -> Result<(WeightStore, Vec<f32>)> {
     let cfg = rt.manifest.lm_cfg(cfg_name)?.clone();
     let mut rng = Pcg32::seeded(seed);
@@ -49,7 +66,11 @@ pub fn train_lm(
         let loss = it.next().unwrap().scalar()?;
         losses.push(loss);
         if log_every > 0 && (step % log_every == 0 || step == 1) {
-            eprintln!("[train {cfg_name}] step {step:4}  loss {loss:.4}");
+            progress.emit(&ProgressEvent::TrainStep {
+                model: cfg_name.to_string(),
+                step,
+                loss,
+            });
         }
     }
     Ok((WeightStore { cfg, flat: params.data }, losses))

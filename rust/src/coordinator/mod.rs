@@ -7,25 +7,107 @@
 //! collected in input order, so the assembled [`PocketFile`], the
 //! reconstructed weights and the Eq. 14 accounting stay deterministic.
 //!
+//! Progress reporting goes through [`ProgressSink`] — silent by default so
+//! library embedders are not spammed on stderr; the CLI plugs in
+//! [`ProgressSink::stderr`].  The preferred way to drive this module is
+//! [`crate::Session`], which wraps these free functions in a builder-style
+//! API with structured [`crate::Error`]s.
+//!
 //! [`reconstruct_from_pocket`] is the device side: pocket file -> dense
-//! weights, using only the decoder + codebook + indices.
+//! weights.  It is a thin wrapper over
+//! [`crate::packfmt::PocketReader::reconstruct_all`], the lazy per-group
+//! decode path.
 
 pub mod job;
 pub mod lm;
 pub mod metrics;
 
+use std::collections::BTreeSet;
+use std::fmt;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::model::{group_rows, scatter_group_rows, WeightStore, GROUPS};
-use crate::packfmt::{ratio_for, GroupRecord, PocketFile};
+use crate::packfmt::{ratio_for, GroupRecord, PocketFile, PocketReader};
 use crate::runtime::manifest::MetaCfg;
 use crate::runtime::Runtime;
+use crate::tensor::TensorF32;
 use crate::util::bitpack::BitPacked;
 use crate::util::threadpool::{default_workers, scoped_map};
 use job::JobOpts;
 use metrics::PipelineReport;
+
+/// A progress notification from the pipeline.
+#[derive(Clone, Debug)]
+pub enum ProgressEvent {
+    /// A per-group compression job is starting.
+    GroupStart {
+        group: String,
+        rows: usize,
+        width: usize,
+        meta_cfg: String,
+        steps: usize,
+    },
+    /// A per-group compression job finished.
+    GroupDone { group: String, secs: f64, mse: f64 },
+    /// An LM training step was logged.
+    TrainStep { model: String, step: usize, loss: f32 },
+}
+
+/// Where progress events go.  Defaults to silent (library embedders choose
+/// their own sink); the CLI uses [`ProgressSink::stderr`].  Cheap to clone
+/// and safe to call from the worker threads the pipeline fans out over.
+#[derive(Clone, Default)]
+pub struct ProgressSink(Option<Arc<dyn Fn(&ProgressEvent) + Send + Sync>>);
+
+impl fmt::Debug for ProgressSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(if self.0.is_some() { "ProgressSink(set)" } else { "ProgressSink(none)" })
+    }
+}
+
+impl ProgressSink {
+    /// Discard all events (the default).
+    pub fn none() -> ProgressSink {
+        ProgressSink(None)
+    }
+
+    /// Deliver events to a callback.
+    pub fn new(f: impl Fn(&ProgressEvent) + Send + Sync + 'static) -> ProgressSink {
+        ProgressSink(Some(Arc::new(f)))
+    }
+
+    /// Human-readable lines on stderr (the historical CLI behavior).
+    pub fn stderr() -> ProgressSink {
+        ProgressSink::new(|ev| match ev {
+            ProgressEvent::GroupStart { group, rows, width, meta_cfg, steps } => {
+                eprintln!(
+                    "[compress] group {group:5} rows {rows}x{width} with {meta_cfg} ({steps} steps)"
+                );
+            }
+            ProgressEvent::GroupDone { group, secs, mse } => {
+                eprintln!("[compress] group {group:5} done in {secs:.1}s (mse {mse:.2e})");
+            }
+            ProgressEvent::TrainStep { model, step, loss } => {
+                eprintln!("[train {model}] step {step:4}  loss {loss:.4}");
+            }
+        })
+    }
+
+    /// True when a callback is attached.
+    pub fn is_set(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Emit one event (no-op when silent).
+    pub fn emit(&self, ev: &ProgressEvent) {
+        if let Some(f) = &self.0 {
+            f(ev)
+        }
+    }
+}
 
 /// What to compress and how.
 #[derive(Clone, Debug)]
@@ -39,6 +121,8 @@ pub struct PipelineOpts {
     pub job: JobOpts,
     /// Override the meta config entirely (ablations); `{width}` resolved.
     pub meta_override: Option<String>,
+    /// Progress sink (silent by default).
+    pub progress: ProgressSink,
 }
 
 impl Default for PipelineOpts {
@@ -48,11 +132,13 @@ impl Default for PipelineOpts {
             groups: None,
             job: JobOpts::default(),
             meta_override: None,
+            progress: ProgressSink::none(),
         }
     }
 }
 
 /// Output of a whole-model compression run.
+#[derive(Debug)]
 pub struct CompressedModel {
     pub pocket: PocketFile,
     /// The model with compressed groups replaced by their reconstruction
@@ -101,17 +187,22 @@ pub fn compress_model(
     }
     let workers = default_workers(jobs.len().max(1));
     let results = scoped_map(workers, jobs, |(gname, mc, rows)| {
-        eprintln!(
-            "[compress] group {gname:5} rows {}x{} with {} ({} steps)",
-            rows.rows(),
-            rows.cols(),
-            mc.name,
-            opts.job.train_steps
-        );
+        opts.progress.emit(&ProgressEvent::GroupStart {
+            group: gname.clone(),
+            rows: rows.rows(),
+            width: rows.cols(),
+            meta_cfg: mc.name.clone(),
+            steps: opts.job.train_steps,
+        });
         job::compress_group(rt, &mc, &rows, &opts.job).map(|res| (gname, mc, res))
     });
     for item in results {
         let (gname, mc, res) = item?;
+        opts.progress.emit(&ProgressEvent::GroupDone {
+            group: gname.clone(),
+            secs: res.metrics.secs,
+            mse: res.metrics.mse_loss,
+        });
         pocket.groups.insert(
             gname.clone(),
             GroupRecord {
@@ -128,8 +219,10 @@ pub fn compress_model(
         report.per_group.push((gname, res.metrics));
     }
 
-    // Dense residue: everything not covered by a compressed group.
-    let compressed_tensors: Vec<String> = selected
+    // Dense residue: everything not covered by a compressed group.  The
+    // layout scan is O(n log n) against a set (was a linear `.contains`
+    // over a Vec per entry).
+    let compressed_tensors: BTreeSet<String> = selected
         .iter()
         .flat_map(|g| {
             let gi = &ws.cfg.groups[g];
@@ -152,28 +245,12 @@ pub fn compress_model(
     Ok(CompressedModel { pocket, reconstructed, report })
 }
 
-/// Device-side load: pocket file -> dense weight store, decoding every
-/// compressed group through the backend decode path (gather + meta decoder).
+/// Device-side load: pocket file -> dense weight store.  Thin wrapper over
+/// the [`PocketReader`] decode path — borrowing, no clone (kept for source
+/// compatibility; new code should open a [`PocketReader`] and decode on
+/// demand).
 pub fn reconstruct_from_pocket(rt: &Runtime, pocket: &PocketFile) -> Result<WeightStore> {
-    let cfg = rt.manifest.lm_cfg(&pocket.lm_cfg)?.clone();
-    let mut flat = vec![0.0f32; cfg.layout.total];
-    // dense residue first
-    for (name, buf) in &pocket.dense {
-        let e = cfg.layout.find(name)?;
-        anyhow::ensure!(buf.len() == e.size, "dense buffer {name} size mismatch");
-        flat[e.offset..e.offset + e.size].copy_from_slice(buf);
-    }
-    let mut ws = WeightStore { cfg: cfg.clone(), flat };
-    // decode compressed groups
-    for (gname, rec) in &pocket.groups {
-        let mc = rt.manifest.meta_cfg(&rec.meta_cfg)?.clone();
-        let indices = rec.indices.unpack();
-        let rows = job::decode_group(
-            rt, &mc, &rec.decoder, &rec.codebook, &indices, &rec.row_scales, rec.rows,
-        )?;
-        scatter_group_rows(&mut ws, gname, &rows)?;
-    }
-    Ok(ws)
+    Ok(PocketReader::reconstruct_pocket(rt, pocket)?)
 }
 
 /// Summarize the Eq. 14 numbers for a preset applied to a model (without

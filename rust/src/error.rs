@@ -1,0 +1,149 @@
+//! Structured error type of the public `Session` / `PocketReader` surface.
+//!
+//! The crate's internals run on `anyhow` (the only error-handling crate in
+//! the offline vendor set), but a library an inference server embeds needs
+//! errors it can *match on*: is this pocket file corrupt, is the group name
+//! wrong, did the PJRT backend fail to come up?  [`Error`] is that surface.
+//! It implements [`std::error::Error`], so `?` converts it into `anyhow`
+//! for free at the CLI boundary, and [`Error::from`] wraps any `anyhow`
+//! error coming back out of the internals.
+
+use std::fmt;
+
+/// Errors returned by the `Session` / `PocketReader` public API.
+#[derive(Debug)]
+pub enum Error {
+    /// A layer-group name that the model config does not define.
+    UnknownGroup {
+        group: String,
+        /// The group names the config does define (for the message).
+        known: Vec<String>,
+    },
+    /// A named config (LM config, meta config, ratio preset) that the
+    /// manifest does not define.
+    UnknownConfig {
+        /// What kind of config was looked up ("lm config", "preset", ...).
+        kind: &'static str,
+        name: String,
+    },
+    /// A tensor or buffer whose shape/size disagrees with the layout.
+    ShapeMismatch {
+        what: String,
+        expected: String,
+        got: String,
+    },
+    /// The requested backend could not be constructed (e.g. PJRT without
+    /// artifacts or with the vendored xla stub).
+    BackendUnavailable {
+        backend: &'static str,
+        reason: String,
+    },
+    /// A malformed pocket container: bad magic, truncated TOC, section out
+    /// of bounds, checksum mismatch, absurd declared sizes.
+    Format {
+        detail: String,
+        /// Byte offset in the container where the problem was detected.
+        offset: usize,
+    },
+    /// An I/O failure with the path that caused it.
+    Io {
+        path: String,
+        source: std::io::Error,
+    },
+    /// Anything else bubbling up from the anyhow-based internals.
+    Other(anyhow::Error),
+}
+
+impl Error {
+    /// Helper used by the container parser.
+    pub(crate) fn format(detail: impl Into<String>, offset: usize) -> Error {
+        Error::Format { detail: detail.into(), offset }
+    }
+
+    /// Helper wrapping an I/O error with its path.
+    pub(crate) fn io(path: &std::path::Path, source: std::io::Error) -> Error {
+        Error::Io { path: path.display().to_string(), source }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::UnknownGroup { group, known } => {
+                write!(f, "unknown layer group {group:?} (known: {})", known.join(", "))
+            }
+            Error::UnknownConfig { kind, name } => {
+                write!(f, "unknown {kind} {name:?}")
+            }
+            Error::ShapeMismatch { what, expected, got } => {
+                write!(f, "shape mismatch in {what}: expected {expected}, got {got}")
+            }
+            Error::BackendUnavailable { backend, reason } => {
+                write!(f, "backend {backend:?} unavailable: {reason}")
+            }
+            Error::Format { detail, offset } => {
+                write!(f, "malformed pocket container at byte {offset}: {detail}")
+            }
+            Error::Io { path, source } => {
+                write!(f, "io error on {path}: {source}")
+            }
+            Error::Other(e) => write!(f, "{e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Error {
+        // Keep structured errors structured when they round-trip through
+        // the anyhow-based internals.
+        match e.downcast::<Error>() {
+            Ok(err) => err,
+            Err(e) => Error::Other(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = Error::UnknownGroup { group: "qq".into(), known: vec!["q".into(), "v".into()] };
+        let s = e.to_string();
+        assert!(s.contains("qq") && s.contains("q, v"), "{s}");
+        let e = Error::Format { detail: "bad magic".into(), offset: 3 };
+        assert!(e.to_string().contains("byte 3"));
+    }
+
+    #[test]
+    fn converts_to_and_from_anyhow() {
+        fn returns_anyhow() -> anyhow::Result<()> {
+            let r: Result<(), Error> =
+                Err(Error::UnknownConfig { kind: "preset", name: "p99x".into() });
+            r?;
+            Ok(())
+        }
+        let a = returns_anyhow().unwrap_err();
+        assert!(a.to_string().contains("p99x"));
+        // and back: the structured variant survives the round-trip
+        let back = Error::from(a);
+        assert!(matches!(back, Error::UnknownConfig { .. }));
+    }
+
+    #[test]
+    fn plain_anyhow_becomes_other() {
+        let e = Error::from(anyhow::anyhow!("boom"));
+        assert!(matches!(e, Error::Other(_)));
+        assert!(e.to_string().contains("boom"));
+    }
+}

@@ -4,12 +4,50 @@
 
 use anyhow::Result;
 
-use crate::data::tasks::{generate, pack_choice, SuiteSpec, TaskInstance};
+use crate::data::tasks::{generate, pack_choice, SuiteSpec, TaskInstance, ZERO_SHOT_SUITES};
 use crate::data::Corpus;
 use crate::model::WeightStore;
 use crate::runtime::{Arg, Runtime};
 use crate::tensor::{TensorF32, TensorI32};
 use crate::util::stats::{central_range, Histogram};
+
+/// One full evaluation: perplexity plus per-suite zero-shot accuracy.
+/// Produced by [`evaluate`] / `Session::eval`.
+#[derive(Clone, Debug, Default)]
+pub struct EvalReport {
+    pub perplexity: f64,
+    /// (suite name, accuracy) in `ZERO_SHOT_SUITES` order.
+    pub suites: Vec<(String, f64)>,
+}
+
+impl EvalReport {
+    /// Mean accuracy over the zero-shot suites.
+    pub fn mean_accuracy(&self) -> f64 {
+        if self.suites.is_empty() {
+            return 0.0;
+        }
+        self.suites.iter().map(|(_, a)| a).sum::<f64>() / self.suites.len() as f64
+    }
+}
+
+/// Run the whole measurement side in one call: perplexity over `ppl_batches`
+/// held-out batches and all five zero-shot suites at `n_instances` each.
+pub fn evaluate(
+    rt: &Runtime,
+    ws: &WeightStore,
+    corpus: &Corpus,
+    ppl_batches: usize,
+    n_instances: usize,
+    seed: u64,
+) -> Result<EvalReport> {
+    let ppl = perplexity(rt, ws, corpus, ppl_batches)?;
+    let mut suites = Vec::with_capacity(ZERO_SHOT_SUITES.len());
+    for spec in &ZERO_SHOT_SUITES {
+        let acc = zero_shot_accuracy(rt, ws, corpus, spec, n_instances, seed)?;
+        suites.push((spec.name.to_string(), acc));
+    }
+    Ok(EvalReport { perplexity: ppl, suites })
+}
 
 /// Perplexity of a model over `n_batches` held-out batches of a corpus.
 pub fn perplexity(

@@ -8,35 +8,84 @@
 //! * **L2** — JAX compute graphs (meta encoder/decoder training with
 //!   straight-through VQ, k-means refinement, the tiny-LM substrate, LoRA
 //!   recovery), authored in `python/compile/model.py`.
-//! * **L3** — this crate: the compression **coordinator**.  It executes
-//!   every L1/L2 entry point through the [`runtime::Backend`] abstraction —
-//!   the PJRT/XLA artifact runtime when artifacts are available, or the
-//!   hermetic pure-Rust reference backend everywhere else — drives
-//!   per-layer-group compression jobs ([`coordinator`]), owns the synthetic
-//!   data/task substrates ([`data`]), the on-disk pocket format with exact
-//!   Eq. 13/14 ratio accounting ([`packfmt`]), the traditional-compression
-//!   baselines ([`quant`]), and the evaluation harness ([`eval`]).
+//! * **L3** — this crate: the compression **coordinator**, embeddable as a
+//!   library.  It executes every L1/L2 entry point through the
+//!   [`runtime::Backend`] abstraction — the PJRT/XLA artifact runtime when
+//!   artifacts are available, or the hermetic pure-Rust reference backend
+//!   everywhere else.
+//!
+//! ## Public surface
+//!
+//! Two types are the front door:
+//!
+//! * [`Session`] — owns the runtime + manifest and exposes builder-style
+//!   entry points for every pipeline stage, returning structured
+//!   [`Error`]s:
+//!
+//!   ```no_run
+//!   use pocketllm::Session;
+//!
+//!   fn main() -> Result<(), pocketllm::Error> {
+//!       let session = Session::builder().build()?;
+//!       let (ws, _) = session.train_lm("tiny").steps(60).run()?;
+//!       let res = session.compress(&ws).preset("p10x").steps(150).run()?;
+//!       res.pocket.save(std::path::Path::new("model.pocket"))?;
+//!       Ok(())
+//!   }
+//!   ```
+//!
+//! * [`PocketReader`] — the serving side.  Opens the seekable **POCKET02**
+//!   container (legacy POCKET01 reads transparently), pulls only the header
+//!   + table of contents, and decodes *one group or one named tensor on
+//!   demand* through the backend, with an LRU cache of decoded groups and
+//!   byte/decode counters — exactly the "download a small decoder, a
+//!   concise codebook, and an index" edge story of the paper:
+//!
+//!   ```no_run
+//!   use pocketllm::{PocketReader, Session};
+//!
+//!   fn main() -> Result<(), pocketllm::Error> {
+//!       let session = Session::builder().build()?;
+//!       let reader = PocketReader::open(std::path::Path::new("model.pocket"))?;
+//!       let _v_rows = reader.decode_group(session.runtime(), "v")?;
+//!       println!("{:?}", reader.stats()); // bytes_read << file size
+//!       Ok(())
+//!   }
+//!   ```
+//!
+//! Around them: per-layer-group compression jobs ([`coordinator`]), the
+//! synthetic data/task substrates ([`data`]), the on-disk pocket format
+//! with exact Eq. 13/14 ratio accounting ([`packfmt`]), the
+//! traditional-compression baselines ([`quant`]), and the evaluation
+//! harness ([`eval`]).
 //!
 //! A clean checkout is fully functional: `cargo build && cargo test` run
 //! the whole pipeline on the reference backend with no Python step.  With
 //! `make artifacts` (plus the real `xla` crate in place of the vendored
 //! stub) the same code runs bit-faithfully against the XLA lowering.
 //!
-//! See `rust/DESIGN.md` for the backend architecture and the
-//! paper-to-module map; the reproduced tables/figures live in
-//! `rust/benches/` (one bench per table).
+//! See `rust/DESIGN.md` for the backend architecture, the POCKET02 on-disk
+//! layout and the paper-to-module map; the reproduced tables/figures live
+//! in `rust/benches/` (one bench per table).
 
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod eval;
 pub mod model;
 pub mod packfmt;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod session;
 pub mod tensor;
 pub mod util;
 
+pub use error::Error;
+pub use packfmt::{PocketReader, ReaderStats};
+pub use session::{BackendKind, Session, SessionBuilder};
+
 /// Crate-wide result alias (anyhow-based: the only error-handling crate
-/// available in the offline vendor set).
+/// available in the offline vendor set).  The `Session` / `PocketReader`
+/// surface returns [`Error`] instead.
 pub type Result<T> = anyhow::Result<T>;

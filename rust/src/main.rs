@@ -1,22 +1,22 @@
-//! `pocketllm` — the coordinator CLI.
+//! `pocketllm` — the coordinator CLI, a thin shell over [`Session`] and
+//! [`PocketReader`] (structured [`pocketllm::Error`]s convert into anyhow
+//! at this boundary).
 //!
 //! Subcommands:
 //!   info                          manifest + preset ratio summary
 //!   train-lm                      train the substrate LM, save weights
 //!   compress                      compress a trained model into a .pocket file
 //!   reconstruct                   pocket file -> dense weights (device side)
-//!   eval                          perplexity + zero-shot suites of a weight file
+//!   eval                          perplexity + zero-shot suites of a weight
+//!                                 file (--weights) or a pocket file (--pocket,
+//!                                 decoded lazily via PocketReader)
 
-use std::path::PathBuf;
+use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-use pocketllm::coordinator::{compress_model, lm, preset_summary, reconstruct_from_pocket, PipelineOpts};
-use pocketllm::data::tasks::ZERO_SHOT_SUITES;
-use pocketllm::data::Corpus;
-use pocketllm::eval::{perplexity, zero_shot_accuracy};
-use pocketllm::model::WeightStore;
-use pocketllm::packfmt::PocketFile;
-use pocketllm::runtime::Runtime;
+use anyhow::{bail, Result};
+use pocketllm::coordinator::ProgressSink;
+use pocketllm::packfmt::PocketReader;
+use pocketllm::session::{BackendKind, Session};
 use pocketllm::util::benchlib::Table;
 use pocketllm::util::cli::Args;
 
@@ -27,29 +27,17 @@ fn main() {
     }
 }
 
-fn artifacts_dir(args: &Args) -> PathBuf {
-    args.get("artifacts")
-        .map(PathBuf::from)
-        .unwrap_or_else(Runtime::default_artifacts_dir)
-}
-
 /// Resolve `--backend {pjrt,reference,auto}` (default auto: PJRT when the
 /// artifacts + bindings are usable, hermetic reference backend otherwise).
 /// An explicit `--artifacts` makes auto strict: silently computing on the
 /// reference backend when the user pointed at artifacts would be a lie.
-fn runtime_for(args: &Args) -> Result<Runtime> {
-    match args.str_or("backend", "auto").as_str() {
-        "reference" => Ok(Runtime::reference()),
-        "pjrt" => Runtime::pjrt(&artifacts_dir(args)),
-        "auto" => {
-            if args.get("artifacts").is_some() {
-                Runtime::pjrt(&artifacts_dir(args))
-            } else {
-                Ok(Runtime::auto(&artifacts_dir(args)))
-            }
-        }
-        other => bail!("unknown backend {other:?} (use pjrt, reference or auto)"),
+fn session_for(args: &Args) -> Result<Session> {
+    let kind = BackendKind::parse(&args.str_or("backend", "auto"))?;
+    let mut b = Session::builder().backend(kind);
+    if let Some(dir) = args.get("artifacts") {
+        b = b.artifacts(dir);
     }
+    Ok(b.build()?)
 }
 
 fn run() -> Result<()> {
@@ -72,7 +60,7 @@ fn run() -> Result<()> {
                  \x20 train-lm     train the substrate LM     (--model tiny --steps 300 --out w.bin)\n\
                  \x20 compress     compress trained weights   (--model tiny --weights w.bin --preset p8x --out m.pocket)\n\
                  \x20 reconstruct  pocket -> dense weights    (--pocket m.pocket --out w2.bin)\n\
-                 \x20 eval         ppl + zero-shot accuracy   (--model tiny --weights w.bin)\n\
+                 \x20 eval         ppl + zero-shot accuracy   (--model tiny --weights w.bin | --pocket m.pocket)\n\
                  \n\
                  global options:\n\
                  \x20 --backend pjrt|reference|auto   execution backend (default auto:\n\
@@ -87,15 +75,16 @@ fn run() -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let rt = runtime_for(args)?;
+    let session = session_for(args)?;
+    let manifest = session.manifest();
     println!(
         "backend: {}; manifest: {} artifacts, {} LM configs, {} meta configs",
-        rt.backend_name(),
-        rt.manifest.artifacts.len(),
-        rt.manifest.lm.len(),
-        rt.manifest.meta.len()
+        session.backend_name(),
+        manifest.artifacts.len(),
+        manifest.lm.len(),
+        manifest.meta.len()
     );
-    for (name, cfg) in &rt.manifest.lm {
+    for (name, cfg) in &manifest.lm {
         println!(
             "  model {name}: d_model {}, layers {}, params {} ({} linear)",
             cfg.d_model,
@@ -110,7 +99,7 @@ fn cmd_info(args: &Args) -> Result<()> {
         &["preset", "group", "avg_bits", "ratio_vs_fp32"],
     );
     for preset in ["p8x", "p10x", "p16x", "p20x"] {
-        for (g, bits, ratio) in preset_summary(&rt, &model, preset)? {
+        for (g, bits, ratio) in session.preset_summary(&model, preset)? {
             t.row(vec![preset.into(), g, format!("{bits:.2}"), format!("{ratio:.1}x")]);
         }
     }
@@ -119,15 +108,19 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_train_lm(args: &Args) -> Result<()> {
-    let rt = runtime_for(args)?;
+    let session = session_for(args)?;
     let model = args.str_or("model", "tiny");
     let steps = args.usize_or("steps", 300)?;
-    let seed = args.u64_or("seed", 7)?;
     let out = args.str_or("out", "trained.bin");
-    let vocab = rt.manifest.lm_cfg(&model)?.vocab;
-    let corpus = Corpus::new(vocab, args.u64_or("corpus-seed", 1001)?);
-    let (ws, losses) = lm::train_lm(&rt, &model, &corpus, steps, seed, 25)?;
-    ws.save(std::path::Path::new(&out))?;
+    let (ws, losses) = session
+        .train_lm(&model)
+        .steps(steps)
+        .seed(args.u64_or("seed", 7)?)
+        .corpus_seed(args.u64_or("corpus-seed", 1001)?)
+        .log_every(25)
+        .progress_sink(ProgressSink::stderr())
+        .run()?;
+    ws.save(Path::new(&out))?;
     println!(
         "trained {model} for {steps} steps: loss {:.4} -> {:.4}; saved {out}",
         losses.first().copied().unwrap_or(0.0),
@@ -137,27 +130,25 @@ fn cmd_train_lm(args: &Args) -> Result<()> {
 }
 
 fn cmd_compress(args: &Args) -> Result<()> {
-    let rt = runtime_for(args)?;
+    let session = session_for(args)?;
     let model = args.str_or("model", "tiny");
-    let cfg = rt.manifest.lm_cfg(&model)?.clone();
-    let weights = args.require("weights")?;
-    let ws = WeightStore::load(&cfg, std::path::Path::new(weights))?;
-    let mut opts = PipelineOpts {
-        preset: args.str_or("preset", "p8x"),
-        ..Default::default()
-    };
-    opts.job.train_steps = args.usize_or("steps", 300)?;
-    opts.job.kmeans_iters = args.usize_or("kmeans", 4)?;
+    let ws = session.load_weights(&model, Path::new(args.require("weights")?))?;
+    let preset = args.str_or("preset", "p8x");
+    let mut b = session
+        .compress(&ws)
+        .preset(preset.clone())
+        .steps(args.usize_or("steps", 300)?)
+        .kmeans_iters(args.usize_or("kmeans", 4)?)
+        .progress_sink(ProgressSink::stderr());
     if let Some(g) = args.get("groups") {
-        opts.groups = Some(g.split(',').map(|s| s.to_string()).collect());
+        b = b.groups(g.split(','));
     }
+    let res = b.run()?;
     let out = args.str_or("out", "model.pocket");
-    let res = compress_model(&rt, &ws, &opts)?;
-    res.pocket.save(std::path::Path::new(&out))?;
+    res.pocket.save(Path::new(&out))?;
     println!(
-        "compressed {model} with {}: avg_bits {:.2} (ratio {:.1}x vs fp32), \
+        "compressed {model} with {preset}: avg_bits {:.2} (ratio {:.1}x vs fp32), \
          mean mse {:.2e}, file {} bytes -> {out}",
-        opts.preset,
         res.report.avg_bits,
         res.report.ratio_fp32,
         res.report.mean_mse(),
@@ -167,29 +158,42 @@ fn cmd_compress(args: &Args) -> Result<()> {
 }
 
 fn cmd_reconstruct(args: &Args) -> Result<()> {
-    let rt = runtime_for(args)?;
-    let pocket = PocketFile::load(std::path::Path::new(args.require("pocket")?))?;
-    let ws = reconstruct_from_pocket(&rt, &pocket)?;
+    let session = session_for(args)?;
+    let reader = PocketReader::open(Path::new(args.require("pocket")?))?;
+    let ws = session.reconstruct(&reader)?;
     let out = args.str_or("out", "reconstructed.bin");
-    ws.save(std::path::Path::new(&out))?;
-    println!("reconstructed {} -> {out}", pocket.lm_cfg);
+    ws.save(Path::new(&out))?;
+    let st = reader.stats();
+    println!(
+        "reconstructed {} -> {out} ({} sections, {} KiB read, {} group decodes)",
+        reader.lm_cfg(),
+        st.sections_read,
+        st.bytes_read / 1024,
+        st.group_decodes
+    );
     Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let rt = runtime_for(args)?;
-    let model = args.str_or("model", "tiny");
-    let cfg = rt.manifest.lm_cfg(&model)?.clone();
-    let ws = WeightStore::load(&cfg, std::path::Path::new(args.require("weights")?))
-        .context("loading weights")?;
-    let corpus = Corpus::new(cfg.vocab, args.u64_or("corpus-seed", 1001)?);
-    let ppl = perplexity(&rt, &ws, &corpus, args.usize_or("ppl-batches", 8)?)?;
-    println!("perplexity: {ppl:.3}");
-    let n = args.usize_or("instances", 100)?;
+    let session = session_for(args)?;
+    let ws = if let Some(p) = args.get("pocket") {
+        // lazy device-side decode: no intermediate reconstruct + weight file
+        let reader = PocketReader::open(Path::new(p))?;
+        session.reconstruct(&reader)?
+    } else {
+        let model = args.str_or("model", "tiny");
+        session.load_weights(&model, Path::new(args.require("weights")?))?
+    };
+    let report = session
+        .eval(&ws)
+        .corpus_seed(args.u64_or("corpus-seed", 1001)?)
+        .ppl_batches(args.usize_or("ppl-batches", 8)?)
+        .instances(args.usize_or("instances", 100)?)
+        .run()?;
+    println!("perplexity: {:.3}", report.perplexity);
     let mut t = Table::new("zero-shot accuracy", &["suite", "acc"]);
-    for spec in &ZERO_SHOT_SUITES {
-        let acc = zero_shot_accuracy(&rt, &ws, &corpus, spec, n, 13)?;
-        t.row(vec![spec.name.into(), format!("{:.2}", acc * 100.0)]);
+    for (suite, acc) in &report.suites {
+        t.row(vec![suite.clone(), format!("{:.2}", acc * 100.0)]);
     }
     t.emit(None);
     Ok(())

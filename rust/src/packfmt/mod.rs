@@ -15,18 +15,39 @@
 //! plus the uncompressed residue (embeddings, norms, any group left dense)
 //! so a pocket file is a complete, loadable model.  All four terms enter
 //! the avg-bits accounting.
+//!
+//! # Containers
+//!
+//! Two container revisions share the group-payload encoding above:
+//!
+//! * **POCKET02** (current, written by [`PocketFile::to_bytes`]) — a
+//!   *seekable* container: fixed header, then a table of contents with one
+//!   entry per section (compressed group or dense residue tensor) carrying
+//!   absolute byte offsets, lengths and FNV-1a checksums, then the payload
+//!   sections.  [`PocketReader`] uses the TOC to decode one group at a time
+//!   without touching the rest of the file — the serving path.
+//! * **POCKET01** (legacy, written by [`PocketFile::to_bytes_v1`]) — the
+//!   original streaming blob with no TOC.  Still read transparently by
+//!   both [`PocketFile::from_bytes`] and [`PocketReader`].
+//!
+//! All parse failures surface as [`crate::Error::Format`] with the byte
+//! offset where the problem was detected.
+
+pub mod reader;
+
+pub use reader::{PocketReader, ReaderStats};
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, ensure, Context, Result};
-
+use crate::error::Error;
 use crate::runtime::manifest::MetaCfg;
 use crate::tensor::TensorF32;
 use crate::util::bitpack::BitPacked;
 use crate::util::f16;
 
-const MAGIC: &[u8; 8] = b"POCKET01";
+pub(crate) const MAGIC_V1: &[u8; 8] = b"POCKET01";
+pub(crate) const MAGIC_V2: &[u8; 8] = b"POCKET02";
 
 /// One compressed layer group.
 #[derive(Clone, Debug)]
@@ -110,6 +131,47 @@ impl GroupRecord {
     }
 }
 
+// ---------------------------------------------------------------------------
+// POCKET02 table of contents
+// ---------------------------------------------------------------------------
+
+/// Section kind tag in the POCKET02 TOC.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SectionKind {
+    /// A compressed layer group (payload: codebook/indices/decoder/scales).
+    Group,
+    /// A dense residue tensor (payload: raw little-endian f32).
+    Dense,
+}
+
+/// One POCKET02 table-of-contents entry.
+#[derive(Clone, Debug)]
+pub struct TocEntry {
+    pub kind: SectionKind,
+    pub name: String,
+    /// Meta-config name for group sections; empty for dense sections.
+    pub meta_cfg: String,
+    /// Group rows/width for group sections; 0 for dense sections.
+    pub rows: usize,
+    pub width: usize,
+    /// Absolute byte offset of the payload from the start of the container.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub length: u64,
+    /// FNV-1a 64 checksum of the payload bytes.
+    pub checksum: u64,
+}
+
+/// FNV-1a 64-bit hash — the per-section payload checksum of POCKET02.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 impl PocketFile {
     /// Total compressed payload bits across groups (codebook+indices+decoder).
     pub fn compressed_bits(&self, meta: &BTreeMap<String, MetaCfg>) -> u64 {
@@ -135,9 +197,74 @@ impl PocketFile {
 
     // -- serialization ------------------------------------------------------
 
+    /// Serialize as the current seekable **POCKET02** container.
     pub fn to_bytes(&self) -> Vec<u8> {
+        // payload sections in TOC order: groups (BTreeMap order) then dense
+        let mut payloads: Vec<(SectionKind, &str, &str, usize, usize, Vec<u8>)> = Vec::new();
+        for (name, g) in &self.groups {
+            let mut p = Vec::new();
+            write_group_body(&mut p, g);
+            payloads.push((
+                SectionKind::Group,
+                name.as_str(),
+                g.meta_cfg.as_str(),
+                g.rows,
+                g.width,
+                p,
+            ));
+        }
+        for (name, buf) in &self.dense {
+            let mut p = Vec::with_capacity(buf.len() * 4);
+            for &v in buf {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+            payloads.push((SectionKind::Dense, name.as_str(), "", 0, 0, p));
+        }
+
+        // fixed-size part of a TOC entry: kind(1) + rows/width/offset/length/
+        // checksum (5 x u64) + two string length prefixes (2 x u32)
+        let header_len: usize = 8
+            + 8
+            + 4
+            + self.lm_cfg.len()
+            + 4
+            + payloads
+                .iter()
+                .map(|(_, name, meta, ..)| 1 + 4 + name.len() + 4 + meta.len() + 5 * 8)
+                .sum::<usize>();
+
         let mut out = Vec::new();
-        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(MAGIC_V2);
+        out.extend_from_slice(&(header_len as u64).to_le_bytes());
+        write_str(&mut out, &self.lm_cfg);
+        out.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
+        let mut offset = header_len as u64;
+        for (kind, name, meta, rows, width, p) in &payloads {
+            out.push(match kind {
+                SectionKind::Group => 0u8,
+                SectionKind::Dense => 1u8,
+            });
+            write_str(&mut out, name);
+            write_str(&mut out, meta);
+            out.extend_from_slice(&(*rows as u64).to_le_bytes());
+            out.extend_from_slice(&(*width as u64).to_le_bytes());
+            out.extend_from_slice(&offset.to_le_bytes());
+            out.extend_from_slice(&(p.len() as u64).to_le_bytes());
+            out.extend_from_slice(&fnv1a64(p).to_le_bytes());
+            offset += p.len() as u64;
+        }
+        debug_assert_eq!(out.len(), header_len, "TOC size accounting drifted");
+        for (.., p) in &payloads {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+
+    /// Serialize as the legacy streaming **POCKET01** blob (no TOC).  Kept
+    /// for back-compat tests and for tooling that still expects v1.
+    pub fn to_bytes_v1(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC_V1);
         write_str(&mut out, &self.lm_cfg);
 
         out.extend_from_slice(&(self.groups.len() as u32).to_le_bytes());
@@ -146,23 +273,7 @@ impl PocketFile {
             write_str(&mut out, &g.meta_cfg);
             out.extend_from_slice(&(g.rows as u64).to_le_bytes());
             out.extend_from_slice(&(g.width as u64).to_le_bytes());
-            // codebook as f16 payload
-            let cb16 = f16::encode_f16(&g.codebook.data);
-            out.extend_from_slice(&(g.codebook.shape[0] as u64).to_le_bytes());
-            out.extend_from_slice(&(g.codebook.shape[1] as u64).to_le_bytes());
-            out.extend_from_slice(&cb16);
-            // indices
-            let idx = g.indices.to_bytes();
-            out.extend_from_slice(&(idx.len() as u64).to_le_bytes());
-            out.extend_from_slice(&idx);
-            // decoder f32
-            out.extend_from_slice(&(g.decoder.len() as u64).to_le_bytes());
-            for &v in &g.decoder {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
-            // per-row scales as f16
-            out.extend_from_slice(&(g.row_scales.len() as u64).to_le_bytes());
-            out.extend_from_slice(&f16::encode_f16(&g.row_scales));
+            write_group_body(&mut out, g);
         }
 
         out.extend_from_slice(&(self.dense.len() as u32).to_le_bytes());
@@ -176,54 +287,114 @@ impl PocketFile {
         out
     }
 
-    pub fn from_bytes(b: &[u8]) -> Result<PocketFile> {
-        let mut c = Cursor { b, i: 0 };
-        ensure!(c.take(8)? == MAGIC.as_slice(), "bad pocket magic");
-        let lm_cfg = c.string()?;
+    /// Parse either container revision (sniffed from the magic).
+    pub fn from_bytes(b: &[u8]) -> Result<PocketFile, Error> {
+        if b.len() < 8 {
+            return Err(Error::format("pocket file shorter than its magic", 0));
+        }
+        if &b[..8] == MAGIC_V1.as_slice() {
+            Self::from_bytes_v1(b)
+        } else if &b[..8] == MAGIC_V2.as_slice() {
+            Self::from_bytes_v2(b)
+        } else {
+            Err(Error::format("bad pocket magic", 0))
+        }
+    }
 
-        let n_groups = c.u32()? as usize;
-        ensure!(n_groups < 1024, "absurd group count");
+    fn from_bytes_v2(b: &[u8]) -> Result<PocketFile, Error> {
+        let (lm_cfg, toc, header_len) = parse_header_v2(b)?;
+        let mut groups = BTreeMap::new();
+        let mut dense = BTreeMap::new();
+        let mut expect = header_len as u64;
+        for e in &toc {
+            if e.offset != expect {
+                return Err(Error::format(
+                    format!("section {:?} is not contiguous (offset {} != {})", e.name, e.offset, expect),
+                    e.offset as usize,
+                ));
+            }
+            expect = expect.saturating_add(e.length);
+            let end = e.offset.saturating_add(e.length);
+            if end > b.len() as u64 {
+                return Err(Error::format(
+                    format!("section {:?} out of bounds (file truncated?)", e.name),
+                    e.offset as usize,
+                ));
+            }
+            let payload = &b[e.offset as usize..end as usize];
+            verify_checksum(payload, e)?;
+            match e.kind {
+                SectionKind::Group => {
+                    let g = parse_group_payload(payload, e)?;
+                    if groups.insert(e.name.clone(), g).is_some() {
+                        return Err(Error::format(
+                            format!("duplicate group section {:?}", e.name),
+                            e.offset as usize,
+                        ));
+                    }
+                }
+                SectionKind::Dense => {
+                    let buf = parse_dense_payload(payload, e)?;
+                    if dense.insert(e.name.clone(), buf).is_some() {
+                        return Err(Error::format(
+                            format!("duplicate dense section {:?}", e.name),
+                            e.offset as usize,
+                        ));
+                    }
+                }
+            }
+        }
+        if expect != b.len() as u64 {
+            return Err(Error::format("trailing bytes in pocket file", expect as usize));
+        }
+        Ok(PocketFile { lm_cfg, groups, dense })
+    }
+
+    fn from_bytes_v1(b: &[u8]) -> Result<PocketFile, Error> {
+        let mut c = Cursor { b, i: 0, base: 0 };
+        let magic = c.take(8, "magic")?;
+        if magic != MAGIC_V1.as_slice() {
+            return Err(Error::format("bad pocket magic", 0));
+        }
+        let lm_cfg = c.string("lm config name")?;
+
+        let n_groups = c.u32("group count")? as usize;
+        if n_groups >= 1024 {
+            return Err(Error::format(format!("absurd group count {n_groups}"), c.i));
+        }
         let mut groups = BTreeMap::new();
         for _ in 0..n_groups {
-            let name = c.string()?;
-            let meta_cfg = c.string()?;
-            let rows = c.u64()? as usize;
-            let width = c.u64()? as usize;
-            let k = c.u64()? as usize;
-            let d = c.u64()? as usize;
-            ensure!(k.saturating_mul(d) <= 1 << 28, "absurd codebook");
-            let cb_bytes = c.take(k * d * 2)?;
-            let codebook = TensorF32::new(vec![k, d], f16::decode_f16(cb_bytes));
-            let idx_len = c.u64()? as usize;
-            let idx_bytes = c.take(idx_len)?;
-            let (indices, used) = BitPacked::from_bytes(idx_bytes)?;
-            ensure!(used == idx_len, "index record padding mismatch");
-            let dec_len = c.u64()? as usize;
-            ensure!(dec_len <= 1 << 24, "absurd decoder size");
-            let dec_bytes = c.take(dec_len * 4)?;
-            let decoder = dec_bytes
-                .chunks_exact(4)
-                .map(|x| f32::from_le_bytes(x.try_into().unwrap()))
-                .collect();
-            let sc_len = c.u64()? as usize;
-            ensure!(sc_len <= 1 << 26, "absurd scale count");
-            let row_scales = f16::decode_f16(c.take(sc_len * 2)?);
+            let name = c.string("group name")?;
+            let meta_cfg = c.string("meta config name")?;
+            let rows = c.u64("group rows")? as usize;
+            let width = c.u64("group width")? as usize;
+            let body = read_group_body(&mut c)?;
             groups.insert(
                 name,
                 GroupRecord {
-                    meta_cfg, rows, width, codebook, indices, decoder, row_scales,
+                    meta_cfg,
+                    rows,
+                    width,
+                    codebook: body.codebook,
+                    indices: body.indices,
+                    decoder: body.decoder,
+                    row_scales: body.row_scales,
                 },
             );
         }
 
-        let n_dense = c.u32()? as usize;
-        ensure!(n_dense < 4096, "absurd dense count");
+        let n_dense = c.u32("dense count")? as usize;
+        if n_dense >= 4096 {
+            return Err(Error::format(format!("absurd dense count {n_dense}"), c.i));
+        }
         let mut dense = BTreeMap::new();
         for _ in 0..n_dense {
-            let name = c.string()?;
-            let len = c.u64()? as usize;
-            ensure!(len <= 1 << 28, "absurd dense size");
-            let bytes = c.take(len * 4)?;
+            let name = c.string("dense name")?;
+            let len = c.u64("dense length")? as usize;
+            if len > 1 << 28 {
+                return Err(Error::format(format!("absurd dense size {len}"), c.i));
+            }
+            let bytes = c.take(len * 4, "dense payload")?;
             dense.insert(
                 name,
                 bytes
@@ -232,16 +403,19 @@ impl PocketFile {
                     .collect(),
             );
         }
-        ensure!(c.i == b.len(), "trailing bytes in pocket file");
+        if c.i != b.len() {
+            return Err(Error::format("trailing bytes in pocket file", c.i));
+        }
         Ok(PocketFile { lm_cfg, groups, dense })
     }
 
-    pub fn save(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_bytes()).with_context(|| format!("writing {path:?}"))
+    pub fn save(&self, path: &Path) -> Result<(), Error> {
+        std::fs::write(path, self.to_bytes()).map_err(|e| Error::io(path, e))
     }
 
-    pub fn load(path: &Path) -> Result<PocketFile> {
-        Self::from_bytes(&std::fs::read(path).with_context(|| format!("reading {path:?}"))?)
+    pub fn load(path: &Path) -> Result<PocketFile, Error> {
+        let b = std::fs::read(path).map_err(|e| Error::io(path, e))?;
+        Self::from_bytes(&b)
     }
 
     /// On-disk size in bytes (the deliverable the paper's edge story cares
@@ -251,48 +425,241 @@ impl PocketFile {
     }
 }
 
+// ---------------------------------------------------------------------------
+// shared encode/decode helpers (group body is identical in v1 and v2)
+// ---------------------------------------------------------------------------
+
+/// Serialize a group's payload: `k, d, codebook f16, indices, decoder f32,
+/// row scales f16` — byte-identical to the POCKET01 group body.
+fn write_group_body(out: &mut Vec<u8>, g: &GroupRecord) {
+    let cb16 = f16::encode_f16(&g.codebook.data);
+    out.extend_from_slice(&(g.codebook.shape[0] as u64).to_le_bytes());
+    out.extend_from_slice(&(g.codebook.shape[1] as u64).to_le_bytes());
+    out.extend_from_slice(&cb16);
+    let idx = g.indices.to_bytes();
+    out.extend_from_slice(&(idx.len() as u64).to_le_bytes());
+    out.extend_from_slice(&idx);
+    out.extend_from_slice(&(g.decoder.len() as u64).to_le_bytes());
+    for &v in &g.decoder {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&(g.row_scales.len() as u64).to_le_bytes());
+    out.extend_from_slice(&f16::encode_f16(&g.row_scales));
+}
+
+struct GroupBody {
+    codebook: TensorF32,
+    indices: BitPacked,
+    decoder: Vec<f32>,
+    row_scales: Vec<f32>,
+}
+
+fn read_group_body(c: &mut Cursor) -> Result<GroupBody, Error> {
+    let k = c.u64("codebook K")? as usize;
+    let d = c.u64("codebook d")? as usize;
+    if k.saturating_mul(d) > 1 << 28 {
+        return Err(Error::format(format!("absurd codebook {k}x{d}"), c.abs()));
+    }
+    let cb_bytes = c.take(k * d * 2, "codebook payload")?;
+    let codebook = TensorF32::new(vec![k, d], f16::decode_f16(cb_bytes));
+    let idx_len = c.u64("index record length")? as usize;
+    if idx_len > 1 << 28 {
+        return Err(Error::format(format!("absurd index record size {idx_len}"), c.abs()));
+    }
+    let at = c.abs();
+    let idx_bytes = c.take(idx_len, "index payload")?;
+    let (indices, used) = BitPacked::from_bytes(idx_bytes)
+        .map_err(|e| Error::format(format!("bad index record: {e}"), at))?;
+    if used != idx_len {
+        return Err(Error::format("index record padding mismatch", at));
+    }
+    let dec_len = c.u64("decoder length")? as usize;
+    if dec_len > 1 << 24 {
+        return Err(Error::format(format!("absurd decoder size {dec_len}"), c.abs()));
+    }
+    let dec_bytes = c.take(dec_len * 4, "decoder payload")?;
+    let decoder = dec_bytes
+        .chunks_exact(4)
+        .map(|x| f32::from_le_bytes(x.try_into().unwrap()))
+        .collect();
+    let sc_len = c.u64("row scale count")? as usize;
+    if sc_len > 1 << 26 {
+        return Err(Error::format(format!("absurd scale count {sc_len}"), c.abs()));
+    }
+    let row_scales = f16::decode_f16(c.take(sc_len * 2, "row scale payload")?);
+    Ok(GroupBody { codebook, indices, decoder, row_scales })
+}
+
+/// Parse one POCKET02 group payload (the TOC entry supplies name, meta
+/// config, rows and width).
+pub(crate) fn parse_group_payload(payload: &[u8], e: &TocEntry) -> Result<GroupRecord, Error> {
+    let mut c = Cursor { b: payload, i: 0, base: e.offset as usize };
+    let body = read_group_body(&mut c)?;
+    if c.i != payload.len() {
+        return Err(Error::format(
+            format!("trailing bytes in group section {:?}", e.name),
+            c.abs(),
+        ));
+    }
+    Ok(GroupRecord {
+        meta_cfg: e.meta_cfg.clone(),
+        rows: e.rows,
+        width: e.width,
+        codebook: body.codebook,
+        indices: body.indices,
+        decoder: body.decoder,
+        row_scales: body.row_scales,
+    })
+}
+
+/// Parse one POCKET02 dense payload (raw little-endian f32).
+pub(crate) fn parse_dense_payload(payload: &[u8], e: &TocEntry) -> Result<Vec<f32>, Error> {
+    if payload.len() % 4 != 0 {
+        return Err(Error::format(
+            format!("dense section {:?} length {} is not a multiple of 4", e.name, payload.len()),
+            e.offset as usize,
+        ));
+    }
+    Ok(payload
+        .chunks_exact(4)
+        .map(|x| f32::from_le_bytes(x.try_into().unwrap()))
+        .collect())
+}
+
+/// Verify a section payload against its TOC checksum.
+pub(crate) fn verify_checksum(payload: &[u8], e: &TocEntry) -> Result<(), Error> {
+    let got = fnv1a64(payload);
+    if got != e.checksum {
+        return Err(Error::format(
+            format!(
+                "checksum mismatch in section {:?}: TOC {:#018x}, payload {:#018x}",
+                e.name, e.checksum, got
+            ),
+            e.offset as usize,
+        ));
+    }
+    Ok(())
+}
+
+/// Parse a POCKET02 header (magic + header length + lm config + TOC) out of
+/// `b`, which must contain at least the full header.  Returns the LM config
+/// name, the TOC and the header length (== the payload base offset).
+pub(crate) fn parse_header_v2(b: &[u8]) -> Result<(String, Vec<TocEntry>, usize), Error> {
+    let mut c = Cursor { b, i: 0, base: 0 };
+    let magic = c.take(8, "magic")?;
+    if magic != MAGIC_V2.as_slice() {
+        return Err(Error::format("bad pocket magic", 0));
+    }
+    let header_len = c.u64("header length")? as usize;
+    if !(24..=1 << 26).contains(&header_len) {
+        return Err(Error::format(format!("absurd header length {header_len}"), 8));
+    }
+    if header_len > b.len() {
+        return Err(Error::format("header truncated", b.len()));
+    }
+    // the TOC must fit entirely inside the declared header
+    let mut c = Cursor { b: &b[..header_len], i: c.i, base: 0 };
+    let lm_cfg = c.string("lm config name")?;
+    let n_sections = c.u32("section count")? as usize;
+    if n_sections >= 8192 {
+        return Err(Error::format(format!("absurd section count {n_sections}"), c.i));
+    }
+    let mut toc = Vec::with_capacity(n_sections);
+    for _ in 0..n_sections {
+        let kind = match c.u8("section kind")? {
+            0 => SectionKind::Group,
+            1 => SectionKind::Dense,
+            other => {
+                return Err(Error::format(format!("unknown section kind {other}"), c.i - 1));
+            }
+        };
+        let name = c.string("section name")?;
+        let meta_cfg = c.string("section meta config")?;
+        let rows = c.u64("section rows")? as usize;
+        let width = c.u64("section width")? as usize;
+        let offset = c.u64("section offset")?;
+        let length = c.u64("section length")?;
+        let checksum = c.u64("section checksum")?;
+        if offset < header_len as u64 || offset.checked_add(length).is_none() {
+            return Err(Error::format(
+                format!("section {name:?} offset {offset} overlaps the header"),
+                c.i,
+            ));
+        }
+        toc.push(TocEntry { kind, name, meta_cfg, rows, width, offset, length, checksum });
+    }
+    if c.i != header_len {
+        return Err(Error::format("trailing bytes in TOC", c.i));
+    }
+    Ok((lm_cfg, toc, header_len))
+}
+
 fn write_str(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(&(s.len() as u32).to_le_bytes());
     out.extend_from_slice(s.as_bytes());
 }
 
+/// Bounds-checked little-endian reader over a byte slice.  `base` is the
+/// slice's absolute offset inside the container so [`Error::Format`] can
+/// report file positions even when parsing an extracted section.
 struct Cursor<'a> {
     b: &'a [u8],
     i: usize,
+    base: usize,
 }
 
 impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        ensure!(self.i + n <= self.b.len(), "pocket file truncated");
-        let s = &self.b[self.i..self.i + n];
-        self.i += n;
+    /// Absolute container offset of the cursor.
+    fn abs(&self) -> usize {
+        self.base + self.i
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], Error> {
+        let end = match self.i.checked_add(n) {
+            Some(end) if end <= self.b.len() => end,
+            _ => return Err(Error::format(format!("{what} truncated"), self.abs())),
+        };
+        let s = &self.b[self.i..end];
+        self.i = end;
         Ok(s)
     }
 
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into()?))
+    fn u8(&mut self, what: &str) -> Result<u8, Error> {
+        Ok(self.take(1, what)?[0])
     }
 
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into()?))
+    fn u32(&mut self, what: &str) -> Result<u32, Error> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
     }
 
-    fn string(&mut self) -> Result<String> {
-        let n = self.u32()? as usize;
+    fn u64(&mut self, what: &str) -> Result<u64, Error> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self, what: &str) -> Result<String, Error> {
+        let at = self.abs();
+        let n = self.u32(what)? as usize;
         if n > 4096 {
-            bail!("absurd string length {n}");
+            return Err(Error::format(format!("absurd string length {n} for {what}"), at));
         }
-        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+        String::from_utf8(self.take(n, what)?.to_vec())
+            .map_err(|_| Error::format(format!("{what} is not utf-8"), at))
     }
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
     use crate::util::prng::Pcg32;
     use crate::util::quickcheck::{prop_assert, property};
 
-    fn sample_group(rng: &mut Pcg32, k: usize, d: usize, rows: usize, width: usize) -> GroupRecord {
+    pub(crate) fn sample_group(
+        rng: &mut Pcg32,
+        k: usize,
+        d: usize,
+        rows: usize,
+        width: usize,
+    ) -> GroupRecord {
         let bits = (k as f64).log2().ceil() as u32;
         let n_sub = rows * width / d;
         let mut cb = vec![0.0f32; k * d];
@@ -313,14 +680,20 @@ mod tests {
         }
     }
 
-    #[test]
-    fn roundtrip_file() {
-        let mut rng = Pcg32::seeded(1);
+    pub(crate) fn sample_file(seed: u64) -> PocketFile {
+        let mut rng = Pcg32::seeded(seed);
         let mut pf = PocketFile { lm_cfg: "tiny".into(), ..Default::default() };
         pf.groups.insert("q".into(), sample_group(&mut rng, 512, 8, 64, 256));
         pf.groups.insert("up".into(), sample_group(&mut rng, 1024, 4, 32, 512));
         pf.dense.insert("embed".into(), vec![0.25f32; 1000]);
+        pf
+    }
+
+    #[test]
+    fn roundtrip_file_v2() {
+        let pf = sample_file(1);
         let bytes = pf.to_bytes();
+        assert_eq!(&bytes[..8], MAGIC_V2.as_slice());
         let pf2 = PocketFile::from_bytes(&bytes).unwrap();
         assert_eq!(pf2.lm_cfg, "tiny");
         assert_eq!(pf2.groups.len(), 2);
@@ -335,14 +708,71 @@ mod tests {
     }
 
     #[test]
+    fn legacy_v1_still_loads() {
+        let pf = sample_file(7);
+        let v1 = pf.to_bytes_v1();
+        assert_eq!(&v1[..8], MAGIC_V1.as_slice());
+        let from_v1 = PocketFile::from_bytes(&v1).unwrap();
+        let from_v2 = PocketFile::from_bytes(&pf.to_bytes()).unwrap();
+        assert_eq!(from_v1.lm_cfg, from_v2.lm_cfg);
+        assert_eq!(from_v1.groups.len(), from_v2.groups.len());
+        for (name, a) in &from_v1.groups {
+            let b = &from_v2.groups[name];
+            assert_eq!(a.meta_cfg, b.meta_cfg);
+            assert_eq!(a.rows, b.rows);
+            assert_eq!(a.width, b.width);
+            assert_eq!(a.indices, b.indices);
+            assert_eq!(a.decoder, b.decoder);
+            assert_eq!(a.codebook.data, b.codebook.data);
+            assert_eq!(a.row_scales, b.row_scales);
+        }
+        assert_eq!(from_v1.dense["embed"], from_v2.dense["embed"]);
+    }
+
+    #[test]
     fn truncation_detected_everywhere() {
         let mut rng = Pcg32::seeded(2);
         let mut pf = PocketFile { lm_cfg: "tiny".into(), ..Default::default() };
         pf.groups.insert("q".into(), sample_group(&mut rng, 64, 4, 16, 64));
-        let bytes = pf.to_bytes();
-        for cut in [4usize, 9, 20, bytes.len() / 2, bytes.len() - 1] {
-            assert!(PocketFile::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        for bytes in [pf.to_bytes(), pf.to_bytes_v1()] {
+            for cut in [4usize, 9, 20, bytes.len() / 2, bytes.len() - 1] {
+                let e = PocketFile::from_bytes(&bytes[..cut]);
+                assert!(e.is_err(), "cut at {cut}");
+                assert!(
+                    matches!(e.unwrap_err(), crate::Error::Format { .. }),
+                    "cut at {cut} is not a Format error"
+                );
+            }
         }
+    }
+
+    #[test]
+    fn corrupted_payload_fails_checksum() {
+        let pf = sample_file(3);
+        let mut bytes = pf.to_bytes();
+        // flip a byte in the last payload section (well past the header)
+        let at = bytes.len() - 2;
+        bytes[at] ^= 0xFF;
+        let e = PocketFile::from_bytes(&bytes).unwrap_err();
+        match e {
+            crate::Error::Format { detail, .. } => {
+                assert!(detail.contains("checksum"), "{detail}")
+            }
+            other => panic!("expected Format error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupted_toc_is_format_error() {
+        let pf = sample_file(4);
+        let mut bytes = pf.to_bytes();
+        // clobber the section count (offset 8 magic + 8 header_len +
+        // 4+len("tiny") string)
+        let at = 8 + 8 + 4 + 4;
+        bytes[at] = 0xFF;
+        bytes[at + 1] = 0xFF;
+        let e = PocketFile::from_bytes(&bytes).unwrap_err();
+        assert!(matches!(e, crate::Error::Format { .. }), "{e:?}");
     }
 
     #[test]
@@ -380,6 +810,12 @@ mod tests {
     }
 
     #[test]
+    fn fnv_is_stable_and_sensitive() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"abd"));
+    }
+
+    #[test]
     fn property_roundtrip_random_files() {
         use crate::util::quickcheck::prop_close;
         property("pocket file roundtrip", |g| {
@@ -399,25 +835,35 @@ mod tests {
                 rng.fill_normal(&mut buf, 0.04);
                 pf.dense.insert("embed".into(), buf);
             }
-            let back = PocketFile::from_bytes(&pf.to_bytes()).map_err(|e| e.to_string())?;
-            prop_assert(back.lm_cfg == pf.lm_cfg, "lm_cfg")?;
-            prop_assert(back.groups.len() == pf.groups.len(), "group count")?;
-            // re-encoding the f16 payloads must be lossless (fixed point)
-            let again = PocketFile::from_bytes(&back.to_bytes()).map_err(|e| e.to_string())?;
-            for (name, a) in &pf.groups {
-                let b = &back.groups[name];
-                prop_assert(b.meta_cfg == a.meta_cfg, "meta_cfg")?;
-                prop_assert(b.rows == a.rows && b.width == a.width, "dims")?;
-                // indices and decoder are stored exactly
-                prop_assert(b.indices == a.indices, "indices")?;
-                prop_close(&b.decoder, &a.decoder, 0.0, "decoder f32 exact")?;
-                // codebook and row scales go through f16: bounded relative loss
-                prop_close(&b.codebook.data, &a.codebook.data, 2e-3, "codebook f16")?;
-                prop_close(&b.row_scales, &a.row_scales, 2e-3, "row scales f16")?;
-                prop_close(&again.groups[name].codebook.data, &b.codebook.data, 0.0, "f16 fixpoint")?;
-            }
-            for (name, buf) in &pf.dense {
-                prop_close(&back.dense[name], buf, 0.0, "dense f32 exact")?;
+            // exercise both container revisions on the same logical file
+            let encodings = [pf.to_bytes(), pf.to_bytes_v1()];
+            for bytes in &encodings {
+                let back = PocketFile::from_bytes(bytes).map_err(|e| e.to_string())?;
+                prop_assert(back.lm_cfg == pf.lm_cfg, "lm_cfg")?;
+                prop_assert(back.groups.len() == pf.groups.len(), "group count")?;
+                // re-encoding the f16 payloads must be lossless (fixed point)
+                let again =
+                    PocketFile::from_bytes(&back.to_bytes()).map_err(|e| e.to_string())?;
+                for (name, a) in &pf.groups {
+                    let b = &back.groups[name];
+                    prop_assert(b.meta_cfg == a.meta_cfg, "meta_cfg")?;
+                    prop_assert(b.rows == a.rows && b.width == a.width, "dims")?;
+                    // indices and decoder are stored exactly
+                    prop_assert(b.indices == a.indices, "indices")?;
+                    prop_close(&b.decoder, &a.decoder, 0.0, "decoder f32 exact")?;
+                    // codebook and row scales go through f16: bounded loss
+                    prop_close(&b.codebook.data, &a.codebook.data, 2e-3, "codebook f16")?;
+                    prop_close(&b.row_scales, &a.row_scales, 2e-3, "row scales f16")?;
+                    prop_close(
+                        &again.groups[name].codebook.data,
+                        &b.codebook.data,
+                        0.0,
+                        "f16 fixpoint",
+                    )?;
+                }
+                for (name, buf) in &pf.dense {
+                    prop_close(&back.dense[name], buf, 0.0, "dense f32 exact")?;
+                }
             }
             Ok(())
         });

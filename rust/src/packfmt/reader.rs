@@ -1,0 +1,576 @@
+//! `PocketReader` — the lazy, seekable serving-side view of a pocket file.
+//!
+//! The paper's edge story is that a device downloads "a small decoder, a
+//! concise codebook, and an index" — it should not have to materialize the
+//! whole dense model to answer a query that touches one layer group.  A
+//! `PocketReader` opens a **POCKET02** container, reads only the header +
+//! table of contents, and then decodes *one group or one named tensor at a
+//! time* through the backend, pulling exactly that group's section off disk
+//! (verified by checksum) and caching the decoded rows in a small LRU.
+//!
+//! Legacy **POCKET01** blobs (and in-memory [`PocketFile`]s) are supported
+//! transparently through an eager fallback: the whole container is parsed
+//! up front, but the decode-on-demand API, LRU cache and counters behave
+//! identically.
+//!
+//! Counters ([`PocketReader::stats`]) track bytes read from the source,
+//! sections fetched, backend group decodes and cache hits, so both tests
+//! and serving dashboards can see that lazy means lazy.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::job;
+use crate::error::Error;
+use crate::model::{scatter_group_rows, WeightStore};
+use crate::runtime::Runtime;
+use crate::tensor::TensorF32;
+
+use super::{
+    parse_dense_payload, parse_group_payload, parse_header_v2, verify_checksum, GroupRecord,
+    PocketFile, SectionKind, TocEntry, MAGIC_V1, MAGIC_V2,
+};
+
+/// Default number of decoded groups kept in the LRU cache (a model has at
+/// most seven compressible groups, so the default caches everything).
+const DEFAULT_CACHE_GROUPS: usize = 8;
+
+/// Snapshot of a reader's I/O and decode counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReaderStats {
+    /// Bytes pulled from the underlying source (header + fetched sections).
+    pub bytes_read: u64,
+    /// Payload sections fetched (and checksum-verified).
+    pub sections_read: u64,
+    /// Backend decode runs (one per LRU miss on a group).
+    pub group_decodes: u64,
+    /// Decoded-group requests answered from the LRU cache.
+    pub cache_hits: u64,
+}
+
+/// Random-access byte source behind a lazy reader.
+trait ByteSource: Send {
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> std::io::Result<()>;
+}
+
+struct FileSource(std::fs::File);
+
+impl ByteSource for FileSource {
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+        self.0.seek(SeekFrom::Start(offset))?;
+        self.0.read_exact(buf)
+    }
+}
+
+struct MemSource(Vec<u8>);
+
+impl ByteSource for MemSource {
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+        let start = offset as usize;
+        let end = start.checked_add(buf.len()).filter(|&e| e <= self.0.len()).ok_or_else(
+            || std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "read past end of buffer"),
+        )?;
+        buf.copy_from_slice(&self.0[start..end]);
+        Ok(())
+    }
+}
+
+/// Tiny LRU over decoded groups (at most a handful of entries, so a vector
+/// with move-to-front is both simplest and fastest).
+struct Lru {
+    cap: usize,
+    /// Most-recently-used first.
+    entries: Vec<(String, Arc<TensorF32>)>,
+}
+
+impl Lru {
+    fn get(&mut self, name: &str) -> Option<Arc<TensorF32>> {
+        let pos = self.entries.iter().position(|(n, _)| n == name)?;
+        let e = self.entries.remove(pos);
+        let v = e.1.clone();
+        self.entries.insert(0, e);
+        Some(v)
+    }
+
+    fn put(&mut self, name: String, v: Arc<TensorF32>) {
+        self.entries.retain(|(n, _)| n != &name);
+        self.entries.insert(0, (name, v));
+        self.entries.truncate(self.cap.max(1));
+    }
+}
+
+enum Inner {
+    /// POCKET02 over a seekable source: sections fetched on demand.
+    Lazy {
+        src: Mutex<Box<dyn ByteSource>>,
+        groups: BTreeMap<String, TocEntry>,
+        dense: BTreeMap<String, TocEntry>,
+    },
+    /// Legacy POCKET01 or an in-memory [`PocketFile`]: everything parsed up
+    /// front, same API on top.
+    Eager(PocketFile),
+}
+
+/// Lazy serving-side reader over a pocket container.  See the module docs.
+pub struct PocketReader {
+    lm_cfg: String,
+    inner: Inner,
+    cache: Mutex<Lru>,
+    header_bytes: u64,
+    bytes_read: AtomicU64,
+    sections_read: AtomicU64,
+    group_decodes: AtomicU64,
+    cache_hits: AtomicU64,
+}
+
+impl PocketReader {
+    /// Open a pocket container from disk.  POCKET02 reads only the header +
+    /// TOC; legacy POCKET01 falls back to an eager whole-file parse.
+    pub fn open(path: &Path) -> Result<PocketReader, Error> {
+        let mut file = std::fs::File::open(path).map_err(|e| Error::io(path, e))?;
+        let mut magic = [0u8; 8];
+        file.read_exact(&mut magic).map_err(|e| Error::io(path, e))?;
+        if magic == *MAGIC_V1 {
+            // legacy streaming blob: no TOC to seek by, parse it all
+            let mut rest = Vec::new();
+            file.seek(SeekFrom::Start(0)).map_err(|e| Error::io(path, e))?;
+            file.read_to_end(&mut rest).map_err(|e| Error::io(path, e))?;
+            let total = rest.len() as u64;
+            let pf = PocketFile::from_bytes(&rest)?;
+            return Ok(Self::eager(pf, total));
+        }
+        if magic != *MAGIC_V2 {
+            return Err(Error::format("bad pocket magic", 0));
+        }
+        let mut len_bytes = [0u8; 8];
+        file.read_exact(&mut len_bytes).map_err(|e| Error::io(path, e))?;
+        let header_len = u64::from_le_bytes(len_bytes) as usize;
+        if !(24..=1 << 26).contains(&header_len) {
+            return Err(Error::format(format!("absurd header length {header_len}"), 8));
+        }
+        let total = file.metadata().map_err(|e| Error::io(path, e))?.len();
+        let mut header = vec![0u8; header_len];
+        header[..8].copy_from_slice(&magic);
+        header[8..16].copy_from_slice(&len_bytes);
+        file.seek(SeekFrom::Start(16)).map_err(|e| Error::io(path, e))?;
+        file.read_exact(&mut header[16..]).map_err(|e| {
+            Error::format(format!("header truncated ({e})"), header_len)
+        })?;
+        Self::lazy(header, Box::new(FileSource(file)), total)
+    }
+
+    /// Read a pocket container already held in memory.  POCKET02 stays lazy
+    /// (sections are checksum-verified on first access); POCKET01 is parsed
+    /// eagerly.
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<PocketReader, Error> {
+        if bytes.len() < 8 {
+            return Err(Error::format("pocket file shorter than its magic", 0));
+        }
+        if &bytes[..8] == MAGIC_V1.as_slice() {
+            let total = bytes.len() as u64;
+            let pf = PocketFile::from_bytes(&bytes)?;
+            return Ok(Self::eager(pf, total));
+        }
+        let (_, _, header_len) = parse_header_v2(&bytes)?;
+        let header = bytes[..header_len].to_vec();
+        let total = bytes.len() as u64;
+        Self::lazy(header, Box::new(MemSource(bytes)), total)
+    }
+
+    /// Wrap an in-memory [`PocketFile`] (e.g. straight out of
+    /// `Session::compress`) without re-encoding it.  Decoding through this
+    /// reader is bit-identical to the historical eager reconstruction.
+    pub fn from_pocket(pf: PocketFile) -> PocketReader {
+        Self::eager(pf, 0)
+    }
+
+    fn eager(pf: PocketFile, total_bytes: u64) -> PocketReader {
+        PocketReader {
+            lm_cfg: pf.lm_cfg.clone(),
+            inner: Inner::Eager(pf),
+            cache: Mutex::new(Lru { cap: DEFAULT_CACHE_GROUPS, entries: Vec::new() }),
+            header_bytes: total_bytes,
+            bytes_read: AtomicU64::new(total_bytes),
+            sections_read: AtomicU64::new(0),
+            group_decodes: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+        }
+    }
+
+    fn lazy(
+        header: Vec<u8>,
+        src: Box<dyn ByteSource>,
+        total_bytes: u64,
+    ) -> Result<PocketReader, Error> {
+        let (lm_cfg, toc, header_len) = parse_header_v2(&header)?;
+        let mut groups = BTreeMap::new();
+        let mut dense = BTreeMap::new();
+        for e in toc {
+            // bound every section against the real source size up front, so
+            // a corrupt TOC length can never drive a huge allocation later
+            if e.offset.saturating_add(e.length) > total_bytes {
+                return Err(Error::format(
+                    format!("section {:?} out of bounds (file truncated?)", e.name),
+                    e.offset as usize,
+                ));
+            }
+            let map = match e.kind {
+                SectionKind::Group => &mut groups,
+                SectionKind::Dense => &mut dense,
+            };
+            if map.insert(e.name.clone(), e).is_some() {
+                return Err(Error::format("duplicate section name in TOC", header_len));
+            }
+        }
+        Ok(PocketReader {
+            lm_cfg,
+            inner: Inner::Lazy { src: Mutex::new(src), groups, dense },
+            cache: Mutex::new(Lru { cap: DEFAULT_CACHE_GROUPS, entries: Vec::new() }),
+            header_bytes: header_len as u64,
+            bytes_read: AtomicU64::new(header_len as u64),
+            sections_read: AtomicU64::new(0),
+            group_decodes: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+        })
+    }
+
+    /// Cap the decoded-group LRU cache (builder style).
+    pub fn with_cache_capacity(self, groups: usize) -> PocketReader {
+        self.cache.lock().unwrap().cap = groups.max(1);
+        self
+    }
+
+    /// LM config name this pocket model instantiates.
+    pub fn lm_cfg(&self) -> &str {
+        &self.lm_cfg
+    }
+
+    /// Names of the compressed layer groups, sorted.
+    pub fn group_names(&self) -> Vec<String> {
+        match &self.inner {
+            Inner::Lazy { groups, .. } => groups.keys().cloned().collect(),
+            Inner::Eager(pf) => pf.groups.keys().cloned().collect(),
+        }
+    }
+
+    /// Names of the dense residue tensors, sorted.
+    pub fn dense_names(&self) -> Vec<String> {
+        match &self.inner {
+            Inner::Lazy { dense, .. } => dense.keys().cloned().collect(),
+            Inner::Eager(pf) => pf.dense.keys().cloned().collect(),
+        }
+    }
+
+    /// Bytes of header + TOC read at open time (lazy mode), or the whole
+    /// container size (eager fallback).
+    pub fn header_bytes(&self) -> u64 {
+        self.header_bytes
+    }
+
+    /// Payload length of one named section, if this reader has a TOC.
+    pub fn section_length(&self, name: &str) -> Option<u64> {
+        match &self.inner {
+            Inner::Lazy { groups, dense, .. } => groups
+                .get(name)
+                .or_else(|| dense.get(name))
+                .map(|e| e.length),
+            Inner::Eager(_) => None,
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> ReaderStats {
+        ReaderStats {
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            sections_read: self.sections_read.load(Ordering::Relaxed),
+            group_decodes: self.group_decodes.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+        }
+    }
+
+    fn fetch_section(
+        &self,
+        src: &Mutex<Box<dyn ByteSource>>,
+        e: &TocEntry,
+    ) -> Result<Vec<u8>, Error> {
+        let mut buf = vec![0u8; e.length as usize];
+        // genuine I/O failures are Error::Io (retryable by embedders);
+        // Error::Format is reserved for actual container corruption
+        src.lock()
+            .unwrap()
+            .read_at(e.offset, &mut buf)
+            .map_err(|err| Error::Io {
+                path: format!("<pocket section {:?} at offset {}>", e.name, e.offset),
+                source: err,
+            })?;
+        verify_checksum(&buf, e)?;
+        self.bytes_read.fetch_add(e.length, Ordering::Relaxed);
+        self.sections_read.fetch_add(1, Ordering::Relaxed);
+        Ok(buf)
+    }
+
+    /// The stored (undecoded) record of one compressed group.  Lazy mode
+    /// reads and checksum-verifies exactly that group's section.
+    pub fn group_record(&self, group: &str) -> Result<GroupRecord, Error> {
+        match &self.inner {
+            Inner::Lazy { src, groups, .. } => {
+                let e = groups.get(group).ok_or_else(|| Error::UnknownGroup {
+                    group: group.to_string(),
+                    known: groups.keys().cloned().collect(),
+                })?;
+                let payload = self.fetch_section(src, e)?;
+                parse_group_payload(&payload, e)
+            }
+            Inner::Eager(pf) => pf.groups.get(group).cloned().ok_or_else(|| {
+                Error::UnknownGroup {
+                    group: group.to_string(),
+                    known: pf.groups.keys().cloned().collect(),
+                }
+            }),
+        }
+    }
+
+    /// One dense residue tensor by name.
+    pub fn dense_tensor(&self, name: &str) -> Result<Vec<f32>, Error> {
+        match &self.inner {
+            Inner::Lazy { src, dense, .. } => {
+                let e = dense.get(name).ok_or_else(|| Error::UnknownConfig {
+                    kind: "dense tensor",
+                    name: name.to_string(),
+                })?;
+                let payload = self.fetch_section(src, e)?;
+                parse_dense_payload(&payload, e)
+            }
+            Inner::Eager(pf) => pf.dense.get(name).cloned().ok_or_else(|| {
+                Error::UnknownConfig { kind: "dense tensor", name: name.to_string() }
+            }),
+        }
+    }
+
+    /// Decode one compressed group to its `[rows, width]` row matrix through
+    /// the backend, with LRU caching of the decoded result.
+    pub fn decode_group(&self, rt: &Runtime, group: &str) -> Result<Arc<TensorF32>, Error> {
+        if let Some(hit) = self.cache.lock().unwrap().get(group) {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(hit);
+        }
+        let rec = self.group_record(group)?;
+        let rows = decode_record(rt, &rec)?;
+        self.group_decodes.fetch_add(1, Ordering::Relaxed);
+        let rows = Arc::new(rows);
+        self.cache.lock().unwrap().put(group.to_string(), rows.clone());
+        Ok(rows)
+    }
+
+    /// One *named tensor* (layout entry) on demand: a dense residue tensor
+    /// directly, or the relevant row slice of its (decoded, cached) group.
+    pub fn tensor(&self, rt: &Runtime, name: &str) -> Result<Vec<f32>, Error> {
+        if self.dense_names().iter().any(|n| n == name) {
+            return self.dense_tensor(name);
+        }
+        let cfg = rt
+            .manifest
+            .lm_cfg(&self.lm_cfg)
+            .map_err(|_| Error::UnknownConfig { kind: "lm config", name: self.lm_cfg.clone() })?
+            .clone();
+        let compressed = self.group_names();
+        for gname in &compressed {
+            let gi = match cfg.groups.get(gname) {
+                Some(gi) => gi,
+                None => continue,
+            };
+            for b in 0..cfg.n_layers {
+                for (ti, t) in gi.tensors.iter().enumerate() {
+                    if format!("b{b}.{t}") != name {
+                        continue;
+                    }
+                    let rows = self.decode_group(rt, gname)?;
+                    let row_start = (b * gi.tensors.len() + ti) * gi.rows_per_block;
+                    let start = row_start * gi.width;
+                    let len = gi.rows_per_block * gi.width;
+                    if start + len > rows.data.len() {
+                        return Err(Error::ShapeMismatch {
+                            what: format!("group {gname} rows"),
+                            expected: format!(">= {} values", start + len),
+                            got: format!("{} values", rows.data.len()),
+                        });
+                    }
+                    return Ok(rows.data[start..start + len].to_vec());
+                }
+            }
+        }
+        Err(Error::UnknownConfig { kind: "tensor", name: name.to_string() })
+    }
+
+    /// Decode a *borrowed* in-memory [`PocketFile`] into a dense weight
+    /// store without constructing a reader (and without cloning the pocket)
+    /// — the zero-copy path behind
+    /// [`crate::coordinator::reconstruct_from_pocket`].  Shares the exact
+    /// per-group decode of [`PocketReader::decode_group`], so the result is
+    /// bit-identical to a reader-driven reconstruction.
+    pub fn reconstruct_pocket(rt: &Runtime, pf: &PocketFile) -> Result<WeightStore, Error> {
+        let cfg = rt
+            .manifest
+            .lm_cfg(&pf.lm_cfg)
+            .map_err(|_| Error::UnknownConfig { kind: "lm config", name: pf.lm_cfg.clone() })?
+            .clone();
+        let mut flat = vec![0.0f32; cfg.layout.total];
+        for (name, buf) in &pf.dense {
+            let e = cfg
+                .layout
+                .find(name)
+                .map_err(|_| Error::UnknownConfig { kind: "tensor", name: name.clone() })?;
+            if buf.len() != e.size {
+                return Err(Error::ShapeMismatch {
+                    what: format!("dense buffer {name}"),
+                    expected: format!("{} values", e.size),
+                    got: format!("{} values", buf.len()),
+                });
+            }
+            flat[e.offset..e.offset + e.size].copy_from_slice(buf);
+        }
+        let mut ws = WeightStore { cfg, flat };
+        for (gname, rec) in &pf.groups {
+            let rows = decode_record(rt, rec)?;
+            scatter_group_rows(&mut ws, gname, &rows).map_err(Error::from)?;
+        }
+        Ok(ws)
+    }
+
+    /// Decode *everything* into a dense [`WeightStore`] — the historical
+    /// eager device-side load, now a loop over the lazy per-group path.
+    pub fn reconstruct_all(&self, rt: &Runtime) -> Result<WeightStore, Error> {
+        let cfg = rt
+            .manifest
+            .lm_cfg(&self.lm_cfg)
+            .map_err(|_| Error::UnknownConfig { kind: "lm config", name: self.lm_cfg.clone() })?
+            .clone();
+        let mut flat = vec![0.0f32; cfg.layout.total];
+        for name in self.dense_names() {
+            let buf = self.dense_tensor(&name)?;
+            let e = cfg
+                .layout
+                .find(&name)
+                .map_err(|_| Error::UnknownConfig { kind: "tensor", name: name.clone() })?;
+            if buf.len() != e.size {
+                return Err(Error::ShapeMismatch {
+                    what: format!("dense buffer {name}"),
+                    expected: format!("{} values", e.size),
+                    got: format!("{} values", buf.len()),
+                });
+            }
+            flat[e.offset..e.offset + e.size].copy_from_slice(&buf);
+        }
+        let mut ws = WeightStore { cfg, flat };
+        for gname in self.group_names() {
+            let rows = self.decode_group(rt, &gname)?;
+            scatter_group_rows(&mut ws, &gname, &rows).map_err(Error::from)?;
+        }
+        Ok(ws)
+    }
+}
+
+/// Decode one stored group record to its `[rows, width]` row matrix through
+/// the backend — the single decode path shared by [`PocketReader`] and the
+/// borrowed [`PocketReader::reconstruct_pocket`] route.
+fn decode_record(rt: &Runtime, rec: &GroupRecord) -> Result<TensorF32, Error> {
+    let mc = rt
+        .manifest
+        .meta_cfg(&rec.meta_cfg)
+        .map_err(|_| Error::UnknownConfig { kind: "meta config", name: rec.meta_cfg.clone() })?
+        .clone();
+    let indices = rec.indices.unpack();
+    job::decode_group(
+        rt,
+        &mc,
+        &rec.decoder,
+        &rec.codebook,
+        &indices,
+        &rec.row_scales,
+        rec.rows,
+    )
+    .map_err(Error::from)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packfmt::tests::sample_file;
+
+    #[test]
+    fn lazy_open_reads_only_header_then_requested_sections() {
+        let pf = sample_file(11);
+        let bytes = pf.to_bytes();
+        let total = bytes.len() as u64;
+        let r = PocketReader::from_bytes(bytes).unwrap();
+        let s0 = r.stats();
+        assert_eq!(s0.bytes_read, r.header_bytes());
+        assert!(s0.bytes_read < total, "header should be a small prefix");
+        assert_eq!(s0.sections_read, 0);
+
+        let rec = r.group_record("q").unwrap();
+        assert_eq!(rec.rows, pf.groups["q"].rows);
+        let s1 = r.stats();
+        assert_eq!(s1.sections_read, 1);
+        assert_eq!(s1.bytes_read, r.header_bytes() + r.section_length("q").unwrap());
+        assert!(s1.bytes_read < total, "one group must not read the whole file");
+    }
+
+    #[test]
+    fn reader_handles_legacy_v1_eagerly() {
+        let pf = sample_file(12);
+        let v1 = pf.to_bytes_v1();
+        let total = v1.len() as u64;
+        let r = PocketReader::from_bytes(v1).unwrap();
+        assert_eq!(r.stats().bytes_read, total);
+        assert_eq!(r.lm_cfg(), "tiny");
+        assert_eq!(r.group_names(), vec!["q".to_string(), "up".to_string()]);
+        let rec = r.group_record("up").unwrap();
+        assert_eq!(rec.width, pf.groups["up"].width);
+        assert_eq!(r.dense_tensor("embed").unwrap(), pf.dense["embed"]);
+    }
+
+    #[test]
+    fn corrupt_section_detected_on_access_not_open() {
+        let pf = sample_file(13);
+        let mut bytes = pf.to_bytes();
+        // find the "q" group's payload and flip a byte in it
+        let r0 = PocketReader::from_bytes(bytes.clone()).unwrap();
+        let header = r0.header_bytes() as usize;
+        bytes[header + 3] ^= 0x40;
+        let r = PocketReader::from_bytes(bytes).unwrap(); // open is lazy: fine
+        let first_group = r.group_names()[0].clone();
+        let e = r.group_record(&first_group).unwrap_err();
+        assert!(matches!(e, Error::Format { .. }), "{e:?}");
+        assert!(e.to_string().contains("checksum"), "{e}");
+    }
+
+    #[test]
+    fn unknown_group_is_typed() {
+        let r = PocketReader::from_bytes(sample_file(14).to_bytes()).unwrap();
+        let e = r.group_record("nope").unwrap_err();
+        match e {
+            Error::UnknownGroup { group, known } => {
+                assert_eq!(group, "nope");
+                assert!(known.contains(&"q".to_string()));
+            }
+            other => panic!("expected UnknownGroup, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lru_moves_to_front_and_evicts() {
+        let mut lru = Lru { cap: 2, entries: Vec::new() };
+        let t = |v: f32| Arc::new(TensorF32::new(vec![1], vec![v]));
+        lru.put("a".into(), t(1.0));
+        lru.put("b".into(), t(2.0));
+        assert!(lru.get("a").is_some()); // a is now most recent
+        lru.put("c".into(), t(3.0)); // evicts b
+        assert!(lru.get("b").is_none());
+        assert!(lru.get("a").is_some());
+        assert!(lru.get("c").is_some());
+    }
+}

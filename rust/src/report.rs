@@ -37,8 +37,11 @@ pub struct ExpContext {
 
 impl ExpContext {
     /// Build for an LM config, training (or loading) the cached base model.
+    /// The runtime is constructed through the [`crate::Session`] builder
+    /// (auto backend selection), then unwrapped so the benches can keep
+    /// passing `&ctx.rt` around.
     pub fn new(cfg_name: &str) -> Result<ExpContext> {
-        let rt = Runtime::from_repo_root()?;
+        let rt = crate::session::Session::builder().build()?.into_runtime();
         let vocab = rt.manifest.lm_cfg(cfg_name)?.vocab;
         let corpus = Corpus::new(vocab, CORPUS_SEED_WT2);
         let steps = if Self::fast_mode() { 80 } else { BASE_TRAIN_STEPS };

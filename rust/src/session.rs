@@ -1,0 +1,549 @@
+//! `Session` — the builder-style front door of the crate.
+//!
+//! A [`Session`] owns the [`Runtime`] (backend + manifest) and exposes every
+//! pipeline entry point as a typed builder, returning structured
+//! [`crate::Error`]s instead of bare `anyhow` chains:
+//!
+//! ```no_run
+//! use pocketllm::session::Session;
+//!
+//! fn main() -> Result<(), pocketllm::Error> {
+//!     let session = Session::builder().build()?; // auto backend selection
+//!     let (ws, _losses) = session.train_lm("tiny").steps(60).run()?;
+//!     let res = session
+//!         .compress(&ws)
+//!         .preset("p10x")
+//!         .groups(["q", "v"])
+//!         .steps(120)
+//!         .run()?;
+//!     let report = session.eval(&res.reconstructed).instances(40).run()?;
+//!     println!("avg bits {:.2}, ppl {:.2}", res.report.avg_bits, report.perplexity);
+//!     Ok(())
+//! }
+//! ```
+//!
+//! The free functions in [`crate::coordinator`] remain available for code
+//! that already threads a `&Runtime` around (the benches do), but the CLI,
+//! the examples and new embedders go through here.
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::job::CodebookInit;
+use crate::coordinator::{
+    compress_model, lm, preset_summary, CompressedModel, PipelineOpts, ProgressEvent,
+    ProgressSink,
+};
+use crate::data::Corpus;
+use crate::error::Error;
+use crate::eval::{evaluate, EvalReport};
+use crate::model::WeightStore;
+use crate::packfmt::PocketReader;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::Runtime;
+
+/// Which execution backend a [`SessionBuilder`] should construct.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT when artifacts + bindings are usable, reference otherwise.  An
+    /// explicit artifacts dir makes auto strict (silently falling back when
+    /// the user pointed at artifacts would be a lie).
+    #[default]
+    Auto,
+    /// The hermetic pure-Rust reference backend (always available).
+    Reference,
+    /// The PJRT/XLA artifact backend (fails without artifacts + bindings).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse a CLI-style backend name.
+    pub fn parse(s: &str) -> Result<BackendKind, Error> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "reference" => Ok(BackendKind::Reference),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(Error::UnknownConfig { kind: "backend", name: other.to_string() }),
+        }
+    }
+}
+
+/// Builder for [`Session`].
+#[derive(Clone, Debug, Default)]
+pub struct SessionBuilder {
+    backend: BackendKind,
+    artifacts: Option<PathBuf>,
+}
+
+impl SessionBuilder {
+    /// Select the execution backend (default: [`BackendKind::Auto`]).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend = kind;
+        self
+    }
+
+    /// Point at an AOT artifacts directory for PJRT.  Under
+    /// [`BackendKind::Auto`] this makes backend selection strict.
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// Construct the session (and its backend).
+    pub fn build(self) -> Result<Session, Error> {
+        let strict_pjrt = |dir: &Path| -> Result<Session, Error> {
+            Runtime::pjrt(dir).map(Session::from_runtime).map_err(|e| {
+                Error::BackendUnavailable { backend: "pjrt", reason: format!("{e:#}") }
+            })
+        };
+        match self.backend {
+            BackendKind::Reference => Ok(Session::from_runtime(Runtime::reference())),
+            BackendKind::Pjrt => {
+                let dir =
+                    self.artifacts.unwrap_or_else(Runtime::default_artifacts_dir);
+                strict_pjrt(&dir)
+            }
+            BackendKind::Auto => match &self.artifacts {
+                Some(dir) => strict_pjrt(dir),
+                None => Ok(Session::from_runtime(Runtime::auto(
+                    &Runtime::default_artifacts_dir(),
+                ))),
+            },
+        }
+    }
+}
+
+/// Owns the runtime (backend + manifest) and hands out typed builders for
+/// every pipeline entry point.  See the module docs for a quickstart.
+pub struct Session {
+    rt: Runtime,
+}
+
+impl Session {
+    /// Start configuring a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Hermetic reference-backend session (never fails; used by tests).
+    pub fn reference() -> Session {
+        Session::from_runtime(Runtime::reference())
+    }
+
+    /// Wrap an already-constructed [`Runtime`].
+    pub fn from_runtime(rt: Runtime) -> Session {
+        Session { rt }
+    }
+
+    /// The underlying runtime, for code that still takes `&Runtime`.
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Unwrap back into the runtime (bench plumbing that stores a
+    /// `Runtime` by value builds it through the session this way).
+    pub fn into_runtime(self) -> Runtime {
+        self.rt
+    }
+
+    /// The L2->L3 shape contract (configs, layouts, presets).
+    pub fn manifest(&self) -> &Manifest {
+        &self.rt.manifest
+    }
+
+    /// Which backend this session executes on ("pjrt" / "reference").
+    pub fn backend_name(&self) -> &'static str {
+        self.rt.backend_name()
+    }
+
+    /// Start a whole-model (or some-groups) compression run.
+    pub fn compress<'s, 'w>(&'s self, ws: &'w WeightStore) -> CompressBuilder<'s, 'w> {
+        CompressBuilder { session: self, ws, opts: PipelineOpts::default() }
+    }
+
+    /// Start an LM substrate training run.
+    pub fn train_lm(&self, cfg_name: &str) -> TrainLmBuilder<'_> {
+        TrainLmBuilder {
+            session: self,
+            cfg_name: cfg_name.to_string(),
+            steps: 300,
+            seed: 7,
+            corpus_seed: 1001,
+            log_every: 25,
+            progress: ProgressSink::none(),
+        }
+    }
+
+    /// Start an evaluation (perplexity + zero-shot suites).
+    pub fn eval<'s, 'w>(&'s self, ws: &'w WeightStore) -> EvalBuilder<'s, 'w> {
+        EvalBuilder {
+            session: self,
+            ws,
+            corpus_seed: 1001,
+            ppl_batches: 8,
+            instances: 100,
+            seed: 13,
+        }
+    }
+
+    /// LoRA fine-tune a (reconstructed) model on the calibration corpus and
+    /// merge the deltas — the paper's recovery stage.
+    pub fn lora_finetune(
+        &self,
+        base: &WeightStore,
+        corpus: &Corpus,
+        steps: usize,
+        seed: u64,
+    ) -> Result<WeightStore, Error> {
+        lm::lora_finetune(&self.rt, base, corpus, steps, seed).map_err(Error::from)
+    }
+
+    /// Eq. 14 (avg_bits, ratio) per group for a preset, without compressing.
+    pub fn preset_summary(
+        &self,
+        cfg_name: &str,
+        preset: &str,
+    ) -> Result<Vec<(String, f64, f64)>, Error> {
+        self.rt
+            .manifest
+            .lm_cfg(cfg_name)
+            .map_err(|_| Error::UnknownConfig { kind: "lm config", name: cfg_name.to_string() })?;
+        if !self.rt.manifest.ratio_presets.contains_key(preset) {
+            return Err(Error::UnknownConfig { kind: "preset", name: preset.to_string() });
+        }
+        preset_summary(&self.rt, cfg_name, preset).map_err(Error::from)
+    }
+
+    /// Open a pocket container for lazy serving-side decode.
+    pub fn open_pocket(&self, path: &Path) -> Result<PocketReader, Error> {
+        PocketReader::open(path)
+    }
+
+    /// Decode a whole pocket into a dense weight store through the reader's
+    /// lazy per-group path.
+    pub fn reconstruct(&self, reader: &PocketReader) -> Result<WeightStore, Error> {
+        reader.reconstruct_all(&self.rt)
+    }
+
+    /// Load a dense weight file for a named LM config.
+    pub fn load_weights(&self, cfg_name: &str, path: &Path) -> Result<WeightStore, Error> {
+        let cfg = self
+            .rt
+            .manifest
+            .lm_cfg(cfg_name)
+            .map_err(|_| Error::UnknownConfig { kind: "lm config", name: cfg_name.to_string() })?
+            .clone();
+        WeightStore::load(&cfg, path).map_err(Error::from)
+    }
+}
+
+/// Builder for one compression run (`session.compress(&ws)`).
+pub struct CompressBuilder<'s, 'w> {
+    session: &'s Session,
+    ws: &'w WeightStore,
+    opts: PipelineOpts,
+}
+
+impl<'s, 'w> CompressBuilder<'s, 'w> {
+    /// Ratio preset (p8x / p10x / p16x / p20x).  Default p8x.
+    pub fn preset(mut self, preset: impl Into<String>) -> Self {
+        self.opts.preset = preset.into();
+        self
+    }
+
+    /// Restrict to these layer groups (default: all seven).
+    pub fn groups<I, S>(mut self, groups: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.opts.groups = Some(groups.into_iter().map(|g| g.into()).collect());
+        self
+    }
+
+    /// Meta-training steps per group.
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.opts.job.train_steps = steps;
+        self
+    }
+
+    /// Lloyd refinement iterations.
+    pub fn kmeans_iters(mut self, iters: usize) -> Self {
+        self.opts.job.kmeans_iters = iters;
+        self
+    }
+
+    /// Decoder re-adaptation steps after Lloyd.
+    pub fn post_steps(mut self, steps: usize) -> Self {
+        self.opts.job.post_steps = steps;
+        self
+    }
+
+    /// Job seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.opts.job.seed = seed;
+        self
+    }
+
+    /// Codebook initialization strategy (Table 7 ablation axis).
+    pub fn codebook_init(mut self, init: CodebookInit) -> Self {
+        self.opts.job.codebook_init = init;
+        self
+    }
+
+    /// Override the meta config name entirely (`{width}` is substituted).
+    pub fn meta_override(mut self, name: impl Into<String>) -> Self {
+        self.opts.meta_override = Some(name.into());
+        self
+    }
+
+    /// Receive [`ProgressEvent`]s through a callback.
+    pub fn progress(mut self, f: impl Fn(&ProgressEvent) + Send + Sync + 'static) -> Self {
+        self.opts.progress = ProgressSink::new(f);
+        self
+    }
+
+    /// Receive [`ProgressEvent`]s through a pre-built sink
+    /// (e.g. [`ProgressSink::stderr`]).
+    pub fn progress_sink(mut self, sink: ProgressSink) -> Self {
+        self.opts.progress = sink;
+        self
+    }
+
+    /// Run the pipeline.
+    pub fn run(self) -> Result<CompressedModel, Error> {
+        // typed validation up front, before the anyhow internals take over
+        let known: Vec<String> = self.ws.cfg.groups.keys().cloned().collect();
+        let selected: Vec<String> = match &self.opts.groups {
+            Some(gs) => gs.clone(),
+            None => known.clone(),
+        };
+        for g in &selected {
+            if !self.ws.cfg.groups.contains_key(g) {
+                return Err(Error::UnknownGroup { group: g.clone(), known });
+            }
+        }
+        if self.opts.meta_override.is_none() {
+            let manifest = self.session.manifest();
+            if !manifest.ratio_presets.contains_key(&self.opts.preset) {
+                return Err(Error::UnknownConfig {
+                    kind: "preset",
+                    name: self.opts.preset.clone(),
+                });
+            }
+            for g in &selected {
+                let width = self.ws.cfg.groups[g].width;
+                manifest.meta_for_preset(width, &self.opts.preset).map_err(|_| {
+                    Error::UnknownConfig {
+                        kind: "meta config",
+                        name: format!("{} at width {width}", self.opts.preset),
+                    }
+                })?;
+            }
+        }
+        compress_model(&self.session.rt, self.ws, &self.opts).map_err(Error::from)
+    }
+}
+
+/// Builder for one LM training run (`session.train_lm("tiny")`).
+pub struct TrainLmBuilder<'s> {
+    session: &'s Session,
+    cfg_name: String,
+    steps: usize,
+    seed: u64,
+    corpus_seed: u64,
+    log_every: usize,
+    progress: ProgressSink,
+}
+
+impl<'s> TrainLmBuilder<'s> {
+    /// Training steps (default 300).
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// Init/shuffle seed (default 7).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Corpus seed (default 1001 — the WikiText-2 stand-in).
+    pub fn corpus_seed(mut self, seed: u64) -> Self {
+        self.corpus_seed = seed;
+        self
+    }
+
+    /// Emit a [`ProgressEvent::TrainStep`] every this many steps
+    /// (default 25; only delivered when a progress sink is attached).
+    pub fn log_every(mut self, every: usize) -> Self {
+        self.log_every = every;
+        self
+    }
+
+    /// Receive [`ProgressEvent`]s through a callback.
+    pub fn progress(mut self, f: impl Fn(&ProgressEvent) + Send + Sync + 'static) -> Self {
+        self.progress = ProgressSink::new(f);
+        self
+    }
+
+    /// Receive [`ProgressEvent`]s through a pre-built sink.
+    pub fn progress_sink(mut self, sink: ProgressSink) -> Self {
+        self.progress = sink;
+        self
+    }
+
+    /// Train.  Returns the weights and the per-step loss curve.
+    pub fn run(self) -> Result<(WeightStore, Vec<f32>), Error> {
+        let cfg = self
+            .session
+            .rt
+            .manifest
+            .lm_cfg(&self.cfg_name)
+            .map_err(|_| Error::UnknownConfig { kind: "lm config", name: self.cfg_name.clone() })?;
+        let corpus = Corpus::new(cfg.vocab, self.corpus_seed);
+        lm::train_lm_with_progress(
+            &self.session.rt,
+            &self.cfg_name,
+            &corpus,
+            self.steps,
+            self.seed,
+            self.log_every,
+            &self.progress,
+        )
+        .map_err(Error::from)
+    }
+}
+
+/// Builder for one evaluation run (`session.eval(&ws)`).
+pub struct EvalBuilder<'s, 'w> {
+    session: &'s Session,
+    ws: &'w WeightStore,
+    corpus_seed: u64,
+    ppl_batches: usize,
+    instances: usize,
+    seed: u64,
+}
+
+impl<'s, 'w> EvalBuilder<'s, 'w> {
+    /// Corpus seed (default 1001).
+    pub fn corpus_seed(mut self, seed: u64) -> Self {
+        self.corpus_seed = seed;
+        self
+    }
+
+    /// Held-out batches for perplexity (default 8).
+    pub fn ppl_batches(mut self, n: usize) -> Self {
+        self.ppl_batches = n;
+        self
+    }
+
+    /// Instances per zero-shot suite (default 100).
+    pub fn instances(mut self, n: usize) -> Self {
+        self.instances = n;
+        self
+    }
+
+    /// Suite sampling seed (default 13).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Evaluate.
+    pub fn run(self) -> Result<EvalReport, Error> {
+        let corpus = Corpus::new(self.ws.cfg.vocab, self.corpus_seed);
+        evaluate(
+            &self.session.rt,
+            self.ws,
+            &corpus,
+            self.ppl_batches,
+            self.instances,
+            self.seed,
+        )
+        .map_err(Error::from)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::WeightStore;
+    use crate::util::prng::Pcg32;
+
+    fn tiny_ws(session: &Session) -> WeightStore {
+        let cfg = session.manifest().lm_cfg("tiny").unwrap().clone();
+        WeightStore::init(&cfg, &mut Pcg32::seeded(5))
+    }
+
+    #[test]
+    fn builder_constructs_reference_session() {
+        let s = Session::builder().backend(BackendKind::Reference).build().unwrap();
+        assert_eq!(s.backend_name(), "reference");
+        assert!(s.manifest().lm.contains_key("tiny"));
+    }
+
+    #[test]
+    fn pjrt_without_artifacts_is_backend_unavailable() {
+        let e = Session::builder()
+            .backend(BackendKind::Pjrt)
+            .artifacts("/definitely/not/a/dir")
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, Error::BackendUnavailable { backend: "pjrt", .. }), "{e:?}");
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("reference").unwrap(), BackendKind::Reference);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(matches!(
+            BackendKind::parse("tpu"),
+            Err(Error::UnknownConfig { kind: "backend", .. })
+        ));
+    }
+
+    #[test]
+    fn unknown_group_is_typed() {
+        let s = Session::reference();
+        let ws = tiny_ws(&s);
+        let e = s.compress(&ws).groups(["qq"]).run().unwrap_err();
+        match e {
+            Error::UnknownGroup { group, known } => {
+                assert_eq!(group, "qq");
+                assert!(known.contains(&"q".to_string()));
+            }
+            other => panic!("expected UnknownGroup, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_preset_is_typed() {
+        let s = Session::reference();
+        let ws = tiny_ws(&s);
+        let e = s.compress(&ws).preset("p99x").groups(["q"]).run().unwrap_err();
+        assert!(matches!(e, Error::UnknownConfig { kind: "preset", .. }), "{e:?}");
+        let e = s.preset_summary("tiny", "p99x").unwrap_err();
+        assert!(matches!(e, Error::UnknownConfig { kind: "preset", .. }), "{e:?}");
+    }
+
+    #[test]
+    fn unknown_lm_config_is_typed() {
+        let s = Session::reference();
+        let e = s.train_lm("giant").steps(1).run().unwrap_err();
+        assert!(matches!(e, Error::UnknownConfig { kind: "lm config", .. }), "{e:?}");
+    }
+
+    #[test]
+    fn preset_summary_matches_free_function() {
+        let s = Session::reference();
+        let a = s.preset_summary("tiny", "p8x").unwrap();
+        let b = preset_summary(s.runtime(), "tiny", "p8x").unwrap();
+        assert_eq!(a.len(), b.len());
+        for ((ga, ba, ra), (gb, bb, rb)) in a.iter().zip(&b) {
+            assert_eq!(ga, gb);
+            assert!((ba - bb).abs() < 1e-12 && (ra - rb).abs() < 1e-12);
+        }
+    }
+}

@@ -42,7 +42,7 @@ fn full_pipeline_roundtrip_on(rt: &Runtime) {
         preset: "p16x".into(),
         groups: Some(vec!["q".into(), "up".into()]),
         job: quick_job(),
-        meta_override: None,
+        ..Default::default()
     };
     let res = compress_model(rt, &ws, &opts).unwrap();
     assert_eq!(res.report.per_group.len(), 2);
@@ -148,7 +148,7 @@ fn lora_finetune_improves_compressed_model() {
         preset: "p20x".into(),
         groups: Some(vec!["q".into(), "v".into(), "up".into()]),
         job: JobOpts { train_steps: 25, kmeans_iters: 0, post_steps: 0, ..quick_job() },
-        meta_override: None,
+        ..Default::default()
     };
     let res = compress_model(&rt, &ws, &opts).unwrap();
     let ppl_damaged = perplexity(&rt, &res.reconstructed, &corpus, 2).unwrap();
@@ -171,7 +171,7 @@ fn parallel_compress_is_deterministic() {
         preset: "p20x".into(),
         groups: Some(vec!["q".into(), "k".into(), "v".into()]),
         job: JobOpts { train_steps: 12, kmeans_iters: 1, post_steps: 4, ..quick_job() },
-        meta_override: None,
+        ..Default::default()
     };
     let a = compress_model(&rt, &ws, &opts).unwrap();
     let b = compress_model(&rt, &ws, &opts).unwrap();
