@@ -48,9 +48,10 @@ fn main() -> Result<(), pocketllm::Error> {
     res.pocket.save(&path)?;
     println!("pocket file: {} bytes at {}", res.pocket.file_bytes(), path.display());
 
-    // 5. device-side *lazy* decode: open reads only the header + TOC, then
-    //    decoding "v" pulls exactly that group's section off disk
-    let reader = PocketReader::open(&path)?;
+    // 5. device-side *lazy* decode: open (mmap on unix) reads only the
+    //    header + TOC, then decoding "v" pulls exactly that group's section
+    //    off disk; decoded groups live under an 8 MiB byte budget
+    let reader = PocketReader::open(&path)?.with_cache_budget(8 << 20);
     let v_rows = reader.decode_group(session.runtime(), "v")?;
     let stats = reader.stats();
     println!(
@@ -67,9 +68,14 @@ fn main() -> Result<(), pocketllm::Error> {
     let coord = pocketllm::model::group_rows(&res.reconstructed, "v").map_err(pocketllm::Error::from)?;
     println!("device decode matches coordinator: mse {:.2e}", v_rows.mse(&coord));
 
-    // 6. a second decode of the same group is an LRU hit, not a backend run
+    // 6. a second decode of the same group is a cache hit, not a backend run
     let _again = reader.decode_group(session.runtime(), "v")?;
     let stats = reader.stats();
-    println!("second decode: {} backend decode(s), {} cache hit(s)", stats.group_decodes, stats.cache_hits);
+    println!(
+        "second decode: {} backend decode(s), {} cache hit(s), {} KiB resident",
+        stats.group_decodes,
+        stats.cache_hits,
+        stats.cache.resident_bytes / 1024
+    );
     Ok(())
 }

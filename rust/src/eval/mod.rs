@@ -49,6 +49,19 @@ pub fn evaluate(
     Ok(EvalReport { perplexity: ppl, suites })
 }
 
+/// Perplexity of a pocket-served model: reconstruct the weights lazily
+/// through the reader — riding its (possibly shared) decode cache — and
+/// score.  The serve path's whole-model quality probe.
+pub fn perplexity_reader(
+    rt: &Runtime,
+    reader: &crate::packfmt::PocketReader,
+    corpus: &Corpus,
+    n_batches: usize,
+) -> Result<f64> {
+    let ws = reader.reconstruct_all(rt).map_err(anyhow::Error::new)?;
+    perplexity(rt, &ws, corpus, n_batches)
+}
+
 /// Perplexity of a model over `n_batches` held-out batches of a corpus.
 pub fn perplexity(
     rt: &Runtime,

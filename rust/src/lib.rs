@@ -35,11 +35,14 @@
 //!   ```
 //!
 //! * [`PocketReader`] — the serving side.  Opens the seekable **POCKET02**
-//!   container (legacy POCKET01 reads transparently), pulls only the header
-//!   + table of contents, and decodes *one group or one named tensor on
-//!   demand* through the backend, with an LRU cache of decoded groups and
-//!   byte/decode counters — exactly the "download a small decoder, a
-//!   concise codebook, and an index" edge story of the paper:
+//!   container (legacy POCKET01 reads transparently) through a
+//!   [`SectionSource`] (mmap / file / shared memory / range streaming),
+//!   pulls only the header + table of contents, and decodes *one group or
+//!   one named tensor on demand* through the backend.  Decoded groups live
+//!   in a byte-budget [`DecodeCache`] shareable across readers and threads,
+//!   with byte/decode/hit counters — exactly the "download a small decoder,
+//!   a concise codebook, and an index" edge story of the paper.
+//!   [`Session::serve`] fans worker threads over one reader + cache:
 //!
 //!   ```no_run
 //!   use pocketllm::{PocketReader, Session};
@@ -77,13 +80,16 @@ pub mod packfmt;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod tensor;
 pub mod util;
 
 pub use error::Error;
-pub use packfmt::{PocketReader, ReaderStats};
+pub use packfmt::{PocketReader, ReaderStats, SectionSource};
+pub use serve::{PocketServer, ServeReport, ServeRequest};
 pub use session::{BackendKind, Session, SessionBuilder};
+pub use util::cache::{CacheStats, DecodeCache};
 
 /// Crate-wide result alias (anyhow-based: the only error-handling crate
 /// available in the offline vendor set).  The `Session` / `PocketReader`

@@ -10,15 +10,22 @@
 //!   eval                          perplexity + zero-shot suites of a weight
 //!                                 file (--weights) or a pocket file (--pocket,
 //!                                 decoded lazily via PocketReader)
+//!   serve-bench                   concurrent serve path: N worker threads over
+//!                                 a request mix against one shared byte-budget
+//!                                 decode cache; reports req/s + cache stats
 
 use std::path::Path;
+use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 use pocketllm::coordinator::ProgressSink;
-use pocketllm::packfmt::PocketReader;
+use pocketllm::packfmt::{ChunkedSource, PocketReader};
+use pocketllm::serve::ServeRequest;
 use pocketllm::session::{BackendKind, Session};
 use pocketllm::util::benchlib::Table;
 use pocketllm::util::cli::Args;
+use pocketllm::util::json::{num, obj, s};
+use pocketllm::DecodeCache;
 
 fn main() {
     if let Err(e) = run() {
@@ -42,13 +49,14 @@ fn session_for(args: &Args) -> Result<Session> {
 
 fn run() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_else(|| "help".to_string());
-    let args = Args::parse_env(2, &["no-finetune", "verbose"])?;
+    let args = Args::parse_env(2, &["no-finetune", "verbose", "check"])?;
     match cmd.as_str() {
         "info" => cmd_info(&args),
         "train-lm" => cmd_train_lm(&args),
         "compress" => cmd_compress(&args),
         "reconstruct" => cmd_reconstruct(&args),
         "eval" => cmd_eval(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "help" | "--help" | "-h" => {
             println!(
                 "pocketllm — PocketLLM compression coordinator\n\
@@ -61,6 +69,9 @@ fn run() -> Result<()> {
                  \x20 compress     compress trained weights   (--model tiny --weights w.bin --preset p8x --out m.pocket)\n\
                  \x20 reconstruct  pocket -> dense weights    (--pocket m.pocket --out w2.bin)\n\
                  \x20 eval         ppl + zero-shot accuracy   (--model tiny --weights w.bin | --pocket m.pocket)\n\
+                 \x20 serve-bench  concurrent serve path      (--pocket m.pocket --threads 4 --requests 200\n\
+                 \x20              [--eval-every K] [--chunk BYTES] [--json out.json] [--check];\n\
+                 \x20              no --pocket: a tiny pocket is synthesized)\n\
                  \n\
                  global options:\n\
                  \x20 --backend pjrt|reference|auto   execution backend (default auto:\n\
@@ -171,6 +182,189 @@ fn cmd_reconstruct(args: &Args) -> Result<()> {
         st.bytes_read / 1024,
         st.group_decodes
     );
+    Ok(())
+}
+
+/// The concurrent serve path, measured: fan `--threads` workers over request
+/// mixes against one shared byte-budget decode cache.
+///
+/// Three phases over the same container bytes:
+///   cold   decode/tensor requests with caching disabled (budget 0) — every
+///          group request is a full section fetch + backend decode;
+///   warm   the same requests against a fresh shared cache — after one
+///          decode per group, everything is a cache hit;
+///   mixed  tensors + whole-model eval probes (--eval-every K) against the
+///          already-warm cache — the realistic serving blend.
+///
+/// Reports req/s per phase, the warm/cold speedup, the cache hit rate, and
+/// the `ReaderStats` proof that each group's section was fetched exactly
+/// once across all workers.  `--json PATH` writes the snapshot
+/// (BENCH_serve.json in CI); `--check` makes the expectations hard errors.
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let session = session_for(args)?;
+    let threads = args.usize_or("threads", 4)?;
+    let n_requests = args.usize_or("requests", 200)?;
+    let eval_every = args.usize_or("eval-every", 0)?;
+    let chunk = args.u64_or("chunk", 0)?;
+    eprintln!("[serve-bench] backend: {}", session.backend_name());
+
+    let bytes: Vec<u8> = match args.get("pocket") {
+        Some(p) => std::fs::read(p)?,
+        None => {
+            eprintln!("[serve-bench] no --pocket given: synthesizing one (train + compress q,up)");
+            let (ws, _) = session.train_lm("tiny").steps(10).run()?;
+            let res = session
+                .compress(&ws)
+                .preset("p16x")
+                .groups(["q", "up"])
+                .steps(30)
+                .kmeans_iters(1)
+                .post_steps(5)
+                .run()?;
+            res.pocket.to_bytes()
+        }
+    };
+    let buf: Arc<[u8]> = bytes.into();
+
+    // request mixes + budget sizing, derived from the container's own TOC
+    let probe = PocketReader::from_bytes(buf.clone())?;
+    let groups = probe.group_names();
+    ensure!(!groups.is_empty(), "pocket has no compressed groups to serve");
+    // the mixes alternate group/tensor round-robin: at least two requests
+    // per group are needed for the fetch-once check to cover every group
+    let n_requests = n_requests.max(2 * groups.len());
+    // size the warm budget from the container so the fetch-once invariant
+    // holds even for pockets whose decoded groups exceed the default budget
+    let warm_budget = groups
+        .iter()
+        .filter_map(|g| probe.decoded_group_bytes(g))
+        .sum::<u64>()
+        .max(DecodeCache::DEFAULT_BUDGET);
+
+    // serve through the range-request simulator when --chunk is given, the
+    // shared in-memory buffer otherwise
+    let open = |budget: u64| -> Result<Arc<PocketReader>> {
+        let r = if chunk > 0 {
+            PocketReader::with_source(ChunkedSource::new(buf.clone(), chunk))?
+        } else {
+            PocketReader::from_bytes(buf.clone())?
+        };
+        Ok(Arc::new(r.with_cache_budget(budget)))
+    };
+    let cfg = session
+        .manifest()
+        .lm_cfg(probe.lm_cfg())
+        .map_err(|_| anyhow::anyhow!("pocket names unknown lm config {:?}", probe.lm_cfg()))?;
+    let tensors: Vec<String> = groups
+        .iter()
+        .filter_map(|g| cfg.groups.get(g).map(|gi| format!("b0.{}", gi.tensors[0])))
+        .collect();
+    ensure!(!tensors.is_empty(), "no pocket group maps to a layout tensor");
+    let decode_mix: Vec<ServeRequest> = (0..n_requests)
+        .map(|i| {
+            if i % 2 == 0 {
+                ServeRequest::Group(groups[(i / 2) % groups.len()].clone())
+            } else {
+                ServeRequest::Tensor(tensors[(i / 2) % tensors.len()].clone())
+            }
+        })
+        .collect();
+    let mixed_mix: Vec<ServeRequest> = (0..n_requests)
+        .map(|i| {
+            if eval_every > 0 && i % eval_every == 0 {
+                ServeRequest::Eval { ppl_batches: 1 }
+            } else {
+                ServeRequest::Tensor(tensors[i % tensors.len()].clone())
+            }
+        })
+        .collect();
+
+    let cold = session.serve(open(0)?).workers(threads).run(&decode_mix)?;
+    let server = session.serve(open(warm_budget)?).workers(threads);
+    let warm = server.run(&decode_mix)?;
+    let mixed = server.run(&mixed_mix)?;
+
+    let speedup = warm.rps() / cold.rps().max(1e-12);
+    // the mixed report carries the warm reader's final counter snapshot
+    let st = mixed.stats;
+    let hit_rate = mixed.cache_hit_rate();
+    let n_evals = if eval_every > 0 { n_requests.div_ceil(eval_every) } else { 0 };
+
+    let mut t = Table::new(
+        &format!("serve-bench ({} backend, {threads} threads)", session.backend_name()),
+        &["phase", "requests", "req/s", "note"],
+    );
+    t.row(vec![
+        "cold".into(),
+        format!("{n_requests}"),
+        format!("{:.0}", cold.rps()),
+        "cache disabled: every group request decodes".into(),
+    ]);
+    t.row(vec![
+        "warm".into(),
+        format!("{n_requests}"),
+        format!("{:.0}", warm.rps()),
+        format!("shared cache: {speedup:.1}x cold"),
+    ]);
+    t.row(vec![
+        "mixed".into(),
+        format!("{n_requests}"),
+        format!("{:.0}", mixed.rps()),
+        format!("{n_evals} eval probes riding the warm cache"),
+    ]);
+    t.emit(None);
+    println!(
+        "cache: hit rate {:.1}% ({} hits / {} decodes), resident {} KiB, {} evictions; \
+         group sections fetched {} (groups: {})",
+        hit_rate * 100.0,
+        st.cache_hits,
+        st.group_decodes,
+        st.cache.resident_bytes / 1024,
+        st.cache.evictions,
+        st.group_sections_read,
+        groups.len(),
+    );
+
+    if let Some(path) = args.get("json") {
+        let j = obj(vec![
+            ("backend", s(session.backend_name())),
+            ("threads", num(threads as f64)),
+            ("requests", num(n_requests as f64)),
+            ("groups", num(groups.len() as f64)),
+            ("evals", num(n_evals as f64)),
+            ("chunk_bytes", num(chunk as f64)),
+            ("cold_rps", num(cold.rps())),
+            ("warm_rps", num(warm.rps())),
+            ("warm_over_cold", num(speedup)),
+            ("mixed_rps", num(mixed.rps())),
+            ("cache_hit_rate", num(hit_rate)),
+            ("group_sections_read", num(st.group_sections_read as f64)),
+            ("group_decodes", num(st.group_decodes as f64)),
+            ("cache_resident_bytes", num(st.cache.resident_bytes as f64)),
+        ]);
+        pocketllm::util::benchlib::write_report(path, &j);
+        println!("[serve-bench] wrote {path}");
+    }
+
+    if args.flag("check") {
+        ensure!(
+            speedup >= 5.0,
+            "shared-cache warm throughput is only {speedup:.2}x cold (expected >= 5x)"
+        );
+        // legacy POCKET01 has no TOC: the eager fallback parses everything at
+        // open and never fetches sections, so the fetch-once proof only
+        // applies to seekable containers
+        let seekable = probe.section_span(&groups[0]).is_some();
+        if seekable {
+            ensure!(
+                st.group_sections_read == groups.len() as u64,
+                "expected each of the {} group sections to be fetched exactly once, got {}",
+                groups.len(),
+                st.group_sections_read
+            );
+        }
+        println!("[serve-bench] checks passed: warm {speedup:.1}x cold, one fetch per group");
+    }
     Ok(())
 }
 

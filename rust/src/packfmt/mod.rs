@@ -30,12 +30,21 @@
 //!   original streaming blob with no TOC.  Still read transparently by
 //!   both [`PocketFile::from_bytes`] and [`PocketReader`].
 //!
+//! The byte layer under the reader is the public [`SectionSource`] trait
+//! ([`source`] module): mmap (zero-copy, unix), positional file reads,
+//! shared in-memory buffers, or a chunked range-request simulator for
+//! hermetic streaming tests.
+//!
 //! All parse failures surface as [`crate::Error::Format`] with the byte
 //! offset where the problem was detected.
 
 pub mod reader;
+pub mod source;
 
 pub use reader::{PocketReader, ReaderStats};
+#[cfg(unix)]
+pub use source::MmapSource;
+pub use source::{ChunkedSource, FileSource, MemSource, SectionBytes, SectionSource};
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -160,6 +169,13 @@ pub struct TocEntry {
     pub length: u64,
     /// FNV-1a 64 checksum of the payload bytes.
     pub checksum: u64,
+}
+
+/// Decoded size in bytes of a `[rows, width]` f32 group — the unit the
+/// decode-cache budget is accounted in.  Parse-time shape bounds keep the
+/// u64 product from overflowing.
+pub(crate) fn decoded_bytes(rows: usize, width: usize) -> u64 {
+    rows as u64 * width as u64 * 4
 }
 
 /// FNV-1a 64-bit hash — the per-section payload checksum of POCKET02.
@@ -366,8 +382,12 @@ impl PocketFile {
         for _ in 0..n_groups {
             let name = c.string("group name")?;
             let meta_cfg = c.string("meta config name")?;
-            let rows = c.u64("group rows")? as usize;
-            let width = c.u64("group width")? as usize;
+            let rows = c.u64("group rows")?;
+            let width = c.u64("group width")?;
+            if rows.saturating_mul(width) > 1 << 28 {
+                return Err(Error::format(format!("absurd group shape {rows}x{width}"), c.i));
+            }
+            let (rows, width) = (rows as usize, width as usize);
             let body = read_group_body(&mut c)?;
             groups.insert(
                 name,
@@ -575,8 +595,15 @@ pub(crate) fn parse_header_v2(b: &[u8]) -> Result<(String, Vec<TocEntry>, usize)
         };
         let name = c.string("section name")?;
         let meta_cfg = c.string("section meta config")?;
-        let rows = c.u64("section rows")? as usize;
-        let width = c.u64("section width")? as usize;
+        let rows = c.u64("section rows")?;
+        let width = c.u64("section width")?;
+        // bound the decoded geometry like every other declared size, so
+        // rows * width arithmetic downstream (cache budgets, scatter
+        // offsets) can never overflow
+        if rows.saturating_mul(width) > 1 << 28 {
+            return Err(Error::format(format!("absurd section shape {rows}x{width}"), c.i));
+        }
+        let (rows, width) = (rows as usize, width as usize);
         let offset = c.u64("section offset")?;
         let length = c.u64("section length")?;
         let checksum = c.u64("section checksum")?;

@@ -3,109 +3,70 @@
 //! The paper's edge story is that a device downloads "a small decoder, a
 //! concise codebook, and an index" — it should not have to materialize the
 //! whole dense model to answer a query that touches one layer group.  A
-//! `PocketReader` opens a **POCKET02** container, reads only the header +
-//! table of contents, and then decodes *one group or one named tensor at a
-//! time* through the backend, pulling exactly that group's section off disk
-//! (verified by checksum) and caching the decoded rows in a small LRU.
+//! `PocketReader` opens a **POCKET02** container through a
+//! [`SectionSource`] (mmap, positional file reads, shared memory, or a
+//! range-request transport), reads only the header + table of contents, and
+//! then decodes *one group or one named tensor at a time* through the
+//! backend, pulling exactly that group's section (verified by checksum) —
+//! zero-copy when the source supports borrowed slices.
+//!
+//! Decoded groups land in a [`DecodeCache`]: a thread-safe LRU bounded by a
+//! **byte budget**, shareable across readers and threads (`decode_group`
+//! takes `&self`), with single-flight decode so N concurrent misses on one
+//! group fetch and decode its section exactly once.
 //!
 //! Legacy **POCKET01** blobs (and in-memory [`PocketFile`]s) are supported
 //! transparently through an eager fallback: the whole container is parsed
-//! up front, but the decode-on-demand API, LRU cache and counters behave
+//! up front, but the decode-on-demand API, cache and counters behave
 //! identically.
 //!
 //! Counters ([`PocketReader::stats`]) track bytes read from the source,
-//! sections fetched, backend group decodes and cache hits, so both tests
-//! and serving dashboards can see that lazy means lazy.
+//! sections fetched (split by group/dense), backend group decodes, cache
+//! hits and the shared cache's own hit/miss/eviction/resident-bytes stats,
+//! so both tests and serving dashboards can see that lazy means lazy.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::coordinator::job;
 use crate::error::Error;
 use crate::model::{scatter_group_rows, WeightStore};
 use crate::runtime::Runtime;
 use crate::tensor::TensorF32;
+use crate::util::cache::{CacheStats, DecodeCache};
 
+use super::source::{open_path, MemSource, SectionBytes, SectionSource};
 use super::{
-    parse_dense_payload, parse_group_payload, parse_header_v2, verify_checksum, GroupRecord,
+    decoded_bytes, parse_dense_payload, parse_group_payload, parse_header_v2, verify_checksum, GroupRecord,
     PocketFile, SectionKind, TocEntry, MAGIC_V1, MAGIC_V2,
 };
 
-/// Default number of decoded groups kept in the LRU cache (a model has at
-/// most seven compressible groups, so the default caches everything).
-const DEFAULT_CACHE_GROUPS: usize = 8;
-
-/// Snapshot of a reader's I/O and decode counters.
+/// Snapshot of a reader's I/O and decode counters.  The `cache` field is
+/// the *shared* [`DecodeCache`]'s view (other readers on the same cache
+/// contribute to it); the flat fields are this reader's own.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ReaderStats {
     /// Bytes pulled from the underlying source (header + fetched sections).
     pub bytes_read: u64,
-    /// Payload sections fetched (and checksum-verified).
+    /// Payload sections fetched (and checksum-verified), group + dense.
     pub sections_read: u64,
-    /// Backend decode runs (one per LRU miss on a group).
+    /// Group sections fetched — with an adequate cache budget this stays at
+    /// one per group no matter how many threads request decodes.
+    pub group_sections_read: u64,
+    /// Backend decode runs (one per cache miss on a group).
     pub group_decodes: u64,
-    /// Decoded-group requests answered from the LRU cache.
+    /// Decoded-group requests answered from the cache.
     pub cache_hits: u64,
-}
-
-/// Random-access byte source behind a lazy reader.
-trait ByteSource: Send {
-    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> std::io::Result<()>;
-}
-
-struct FileSource(std::fs::File);
-
-impl ByteSource for FileSource {
-    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
-        self.0.seek(SeekFrom::Start(offset))?;
-        self.0.read_exact(buf)
-    }
-}
-
-struct MemSource(Vec<u8>);
-
-impl ByteSource for MemSource {
-    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
-        let start = offset as usize;
-        let end = start.checked_add(buf.len()).filter(|&e| e <= self.0.len()).ok_or_else(
-            || std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "read past end of buffer"),
-        )?;
-        buf.copy_from_slice(&self.0[start..end]);
-        Ok(())
-    }
-}
-
-/// Tiny LRU over decoded groups (at most a handful of entries, so a vector
-/// with move-to-front is both simplest and fastest).
-struct Lru {
-    cap: usize,
-    /// Most-recently-used first.
-    entries: Vec<(String, Arc<TensorF32>)>,
-}
-
-impl Lru {
-    fn get(&mut self, name: &str) -> Option<Arc<TensorF32>> {
-        let pos = self.entries.iter().position(|(n, _)| n == name)?;
-        let e = self.entries.remove(pos);
-        let v = e.1.clone();
-        self.entries.insert(0, e);
-        Some(v)
-    }
-
-    fn put(&mut self, name: String, v: Arc<TensorF32>) {
-        self.entries.retain(|(n, _)| n != &name);
-        self.entries.insert(0, (name, v));
-        self.entries.truncate(self.cap.max(1));
-    }
+    /// Shared decode-cache counters (hits/misses/evictions/resident bytes).
+    pub cache: CacheStats,
 }
 
 enum Inner {
     /// POCKET02 over a seekable source: sections fetched on demand.
     Lazy {
-        src: Mutex<Box<dyn ByteSource>>,
+        src: Box<dyn SectionSource>,
         groups: BTreeMap<String, TocEntry>,
         dense: BTreeMap<String, TocEntry>,
     },
@@ -118,66 +79,97 @@ enum Inner {
 pub struct PocketReader {
     lm_cfg: String,
     inner: Inner,
-    cache: Mutex<Lru>,
+    /// Process-unique id namespacing this reader's keys in the (possibly
+    /// shared) decode cache.
+    pocket_id: u64,
+    cache: Arc<DecodeCache>,
     header_bytes: u64,
     bytes_read: AtomicU64,
     sections_read: AtomicU64,
+    group_sections_read: AtomicU64,
     group_decodes: AtomicU64,
     cache_hits: AtomicU64,
 }
 
 impl PocketReader {
-    /// Open a pocket container from disk.  POCKET02 reads only the header +
-    /// TOC; legacy POCKET01 falls back to an eager whole-file parse.
+    /// Open a pocket container from disk through the best available source:
+    /// `mmap` on unix (zero-copy sections), positional file reads elsewhere
+    /// or when mapping fails.  POCKET02 reads only the header + TOC; legacy
+    /// POCKET01 falls back to an eager whole-file parse.
     pub fn open(path: &Path) -> Result<PocketReader, Error> {
-        let mut file = std::fs::File::open(path).map_err(|e| Error::io(path, e))?;
-        let mut magic = [0u8; 8];
-        file.read_exact(&mut magic).map_err(|e| Error::io(path, e))?;
-        if magic == *MAGIC_V1 {
-            // legacy streaming blob: no TOC to seek by, parse it all
-            let mut rest = Vec::new();
-            file.seek(SeekFrom::Start(0)).map_err(|e| Error::io(path, e))?;
-            file.read_to_end(&mut rest).map_err(|e| Error::io(path, e))?;
-            let total = rest.len() as u64;
-            let pf = PocketFile::from_bytes(&rest)?;
-            return Ok(Self::eager(pf, total));
-        }
-        if magic != *MAGIC_V2 {
-            return Err(Error::format("bad pocket magic", 0));
-        }
-        let mut len_bytes = [0u8; 8];
-        file.read_exact(&mut len_bytes).map_err(|e| Error::io(path, e))?;
-        let header_len = u64::from_le_bytes(len_bytes) as usize;
-        if !(24..=1 << 26).contains(&header_len) {
-            return Err(Error::format(format!("absurd header length {header_len}"), 8));
-        }
-        let total = file.metadata().map_err(|e| Error::io(path, e))?.len();
-        let mut header = vec![0u8; header_len];
-        header[..8].copy_from_slice(&magic);
-        header[8..16].copy_from_slice(&len_bytes);
-        file.seek(SeekFrom::Start(16)).map_err(|e| Error::io(path, e))?;
-        file.read_exact(&mut header[16..]).map_err(|e| {
-            Error::format(format!("header truncated ({e})"), header_len)
-        })?;
-        Self::lazy(header, Box::new(FileSource(file)), total)
+        let src = open_path(path).map_err(|e| Error::io(path, e))?;
+        Self::from_source(src).map_err(|e| match e {
+            // from_source has no path to report; restore the real one
+            Error::Io { path: placeholder, source } if placeholder == "<pocket source>" => {
+                Error::io(path, source)
+            }
+            other => other,
+        })
     }
 
-    /// Read a pocket container already held in memory.  POCKET02 stays lazy
-    /// (sections are checksum-verified on first access); POCKET01 is parsed
-    /// eagerly.
-    pub fn from_bytes(bytes: Vec<u8>) -> Result<PocketReader, Error> {
-        if bytes.len() < 8 {
-            return Err(Error::format("pocket file shorter than its magic", 0));
-        }
-        if &bytes[..8] == MAGIC_V1.as_slice() {
+    /// Read a pocket container already held in memory.  Accepts anything
+    /// that converts into a shared `Arc<[u8]>`: an existing `Arc<[u8]>` (or
+    /// a clone of one) is shared with **zero** copies across any number of
+    /// readers; a `Vec<u8>` pays the one unavoidable copy of the
+    /// `Vec -> Arc<[u8]>` conversion at open and is never cloned again.
+    /// POCKET02 stays lazy (sections are checksum-verified on first
+    /// access, served as zero-copy slices); POCKET01 is parsed eagerly.
+    pub fn from_bytes(bytes: impl Into<Arc<[u8]>>) -> Result<PocketReader, Error> {
+        let bytes: Arc<[u8]> = bytes.into();
+        // parse legacy v1 straight from the shared buffer (from_source would
+        // read it into a fresh copy first); v2 goes through the one shared
+        // open path over a MemSource — zero-copy sections, header read once
+        if bytes.len() >= 8 && &bytes[..8] == MAGIC_V1.as_slice() {
             let total = bytes.len() as u64;
             let pf = PocketFile::from_bytes(&bytes)?;
             return Ok(Self::eager(pf, total));
         }
-        let (_, _, header_len) = parse_header_v2(&bytes)?;
-        let header = bytes[..header_len].to_vec();
-        let total = bytes.len() as u64;
-        Self::lazy(header, Box::new(MemSource(bytes)), total)
+        Self::from_source(Box::new(MemSource::new(bytes)))
+    }
+
+    /// Open a pocket container over any [`SectionSource`] — an
+    /// [`MmapSource`](super::source::MmapSource), a
+    /// [`ChunkedSource`](super::source::ChunkedSource) simulating HTTP range
+    /// requests, or an embedder's own transport.  Reads only the magic,
+    /// header and TOC from the source.
+    pub fn with_source(src: impl SectionSource + 'static) -> Result<PocketReader, Error> {
+        Self::from_source(Box::new(src))
+    }
+
+    fn from_source(src: Box<dyn SectionSource>) -> Result<PocketReader, Error> {
+        let total = src.len();
+        let mut prefix = [0u8; 16];
+        let magic_only = total < 16;
+        if total < 8 {
+            return Err(Error::format("pocket file shorter than its magic", 0));
+        }
+        let prefix_len = if magic_only { 8 } else { 16 };
+        src.read_at(0, &mut prefix[..prefix_len])
+            .map_err(|e| Error::Io { path: "<pocket source>".to_string(), source: e })?;
+        if prefix[..8] == *MAGIC_V1 {
+            // legacy streaming blob: no TOC to seek by, read + parse it all
+            let mut rest = vec![0u8; total as usize];
+            src.read_at(0, &mut rest)
+                .map_err(|e| Error::Io { path: "<pocket source>".to_string(), source: e })?;
+            let pf = PocketFile::from_bytes(&rest)?;
+            return Ok(Self::eager(pf, total));
+        }
+        if prefix[..8] != *MAGIC_V2 {
+            return Err(Error::format("bad pocket magic", 0));
+        }
+        if magic_only {
+            return Err(Error::format("header truncated", total as usize));
+        }
+        let header_len = u64::from_le_bytes(prefix[8..16].try_into().unwrap()) as usize;
+        if !(24..=1 << 26).contains(&header_len) {
+            return Err(Error::format(format!("absurd header length {header_len}"), 8));
+        }
+        let mut header = vec![0u8; header_len];
+        header[..16].copy_from_slice(&prefix);
+        src.read_at(16, &mut header[16..]).map_err(|e| {
+            Error::format(format!("header truncated ({e})"), header_len)
+        })?;
+        Self::lazy(&header, src, total)
     }
 
     /// Wrap an in-memory [`PocketFile`] (e.g. straight out of
@@ -187,25 +179,38 @@ impl PocketReader {
         Self::eager(pf, 0)
     }
 
+    /// Default budget for a fresh reader: the fixed floor, raised to hold
+    /// at least two copies of the container's largest decoded group — so
+    /// the default always caches *something*, even for models whose groups
+    /// dwarf [`DecodeCache::DEFAULT_BUDGET`].  An explicit
+    /// [`PocketReader::with_cache_budget`] is absolute and never adjusted.
+    fn default_budget(max_group_bytes: u64) -> u64 {
+        DecodeCache::DEFAULT_BUDGET.max(max_group_bytes.saturating_mul(2))
+    }
+
     fn eager(pf: PocketFile, total_bytes: u64) -> PocketReader {
+        let max_group =
+            pf.groups.values().map(|g| decoded_bytes(g.rows, g.width)).max().unwrap_or(0);
         PocketReader {
             lm_cfg: pf.lm_cfg.clone(),
             inner: Inner::Eager(pf),
-            cache: Mutex::new(Lru { cap: DEFAULT_CACHE_GROUPS, entries: Vec::new() }),
+            pocket_id: DecodeCache::next_pocket_id(),
+            cache: DecodeCache::with_budget(Self::default_budget(max_group)),
             header_bytes: total_bytes,
             bytes_read: AtomicU64::new(total_bytes),
             sections_read: AtomicU64::new(0),
+            group_sections_read: AtomicU64::new(0),
             group_decodes: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
         }
     }
 
     fn lazy(
-        header: Vec<u8>,
-        src: Box<dyn ByteSource>,
+        header: &[u8],
+        src: Box<dyn SectionSource>,
         total_bytes: u64,
     ) -> Result<PocketReader, Error> {
-        let (lm_cfg, toc, header_len) = parse_header_v2(&header)?;
+        let (lm_cfg, toc, header_len) = parse_header_v2(header)?;
         let mut groups = BTreeMap::new();
         let mut dense = BTreeMap::new();
         for e in toc {
@@ -225,22 +230,75 @@ impl PocketReader {
                 return Err(Error::format("duplicate section name in TOC", header_len));
             }
         }
+        let max_group =
+            groups.values().map(|e| decoded_bytes(e.rows, e.width)).max().unwrap_or(0);
         Ok(PocketReader {
             lm_cfg,
-            inner: Inner::Lazy { src: Mutex::new(src), groups, dense },
-            cache: Mutex::new(Lru { cap: DEFAULT_CACHE_GROUPS, entries: Vec::new() }),
+            inner: Inner::Lazy { src, groups, dense },
+            pocket_id: DecodeCache::next_pocket_id(),
+            cache: DecodeCache::with_budget(Self::default_budget(max_group)),
             header_bytes: header_len as u64,
             bytes_read: AtomicU64::new(header_len as u64),
             sections_read: AtomicU64::new(0),
+            group_sections_read: AtomicU64::new(0),
             group_decodes: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
         })
     }
 
-    /// Cap the decoded-group LRU cache (builder style).
-    pub fn with_cache_capacity(self, groups: usize) -> PocketReader {
-        self.cache.lock().unwrap().cap = groups.max(1);
+    /// Bound the decoded-group cache to `bytes` of decoded tensors (builder
+    /// style).  Replaces this reader's cache with a fresh one; a budget of
+    /// 0 disables caching (every decode recomputes — still correct, used by
+    /// cold benchmarks).
+    pub fn with_cache_budget(mut self, bytes: u64) -> PocketReader {
+        self.cache = DecodeCache::with_budget(bytes);
         self
+    }
+
+    /// Share an existing [`DecodeCache`] (builder style).  Multiple readers
+    /// — and all their threads — then compete under one byte budget; keys
+    /// are namespaced per reader, so identical group names never alias.
+    pub fn with_shared_cache(mut self, cache: Arc<DecodeCache>) -> PocketReader {
+        self.cache = cache;
+        self
+    }
+
+    /// Cap the decoded-group cache by *group count* (builder style).
+    #[deprecated(
+        note = "cache capacity is a byte budget now: use with_cache_budget(bytes); \
+                this shim converts groups * max decoded group size"
+    )]
+    pub fn with_cache_capacity(self, groups: usize) -> PocketReader {
+        let per_group = self.max_group_bytes().max(1);
+        let budget = (groups.max(1) as u64).saturating_mul(per_group);
+        self.with_cache_budget(budget)
+    }
+
+    /// Decoded size of one group in bytes (`rows * width` f32s) — what it
+    /// occupies in the decode cache.  Useful for sizing a budget from the
+    /// container itself (e.g. `serve-bench` sums these for its warm cache).
+    pub fn decoded_group_bytes(&self, group: &str) -> Option<u64> {
+        match &self.inner {
+            Inner::Lazy { groups, .. } => {
+                groups.get(group).map(|e| decoded_bytes(e.rows, e.width))
+            }
+            Inner::Eager(pf) => pf.groups.get(group).map(|g| decoded_bytes(g.rows, g.width)),
+        }
+    }
+
+    /// Largest decoded group in this container, in bytes.
+    fn max_group_bytes(&self) -> u64 {
+        self.group_names()
+            .iter()
+            .filter_map(|g| self.decoded_group_bytes(g))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// The decode cache this reader uses — clone the `Arc` into
+    /// [`PocketReader::with_shared_cache`] on another reader to share it.
+    pub fn decode_cache(&self) -> Arc<DecodeCache> {
+        self.cache.clone()
     }
 
     /// LM config name this pocket model instantiates.
@@ -272,11 +330,18 @@ impl PocketReader {
 
     /// Payload length of one named section, if this reader has a TOC.
     pub fn section_length(&self, name: &str) -> Option<u64> {
+        self.toc_entry(name).map(|e| e.length)
+    }
+
+    /// Absolute `(offset, length)` of one named section's payload, if this
+    /// reader has a TOC — what a range-request transport would prefetch.
+    pub fn section_span(&self, name: &str) -> Option<(u64, u64)> {
+        self.toc_entry(name).map(|e| (e.offset, e.length))
+    }
+
+    fn toc_entry(&self, name: &str) -> Option<&TocEntry> {
         match &self.inner {
-            Inner::Lazy { groups, dense, .. } => groups
-                .get(name)
-                .or_else(|| dense.get(name))
-                .map(|e| e.length),
+            Inner::Lazy { groups, dense, .. } => groups.get(name).or_else(|| dense.get(name)),
             Inner::Eager(_) => None,
         }
     }
@@ -286,30 +351,31 @@ impl PocketReader {
         ReaderStats {
             bytes_read: self.bytes_read.load(Ordering::Relaxed),
             sections_read: self.sections_read.load(Ordering::Relaxed),
+            group_sections_read: self.group_sections_read.load(Ordering::Relaxed),
             group_decodes: self.group_decodes.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache: self.cache.stats(),
         }
     }
 
-    fn fetch_section(
+    fn fetch_section<'s>(
         &self,
-        src: &Mutex<Box<dyn ByteSource>>,
+        src: &'s dyn SectionSource,
         e: &TocEntry,
-    ) -> Result<Vec<u8>, Error> {
-        let mut buf = vec![0u8; e.length as usize];
+    ) -> Result<SectionBytes<'s>, Error> {
         // genuine I/O failures are Error::Io (retryable by embedders);
         // Error::Format is reserved for actual container corruption
-        src.lock()
-            .unwrap()
-            .read_at(e.offset, &mut buf)
-            .map_err(|err| Error::Io {
-                path: format!("<pocket section {:?} at offset {}>", e.name, e.offset),
-                source: err,
-            })?;
-        verify_checksum(&buf, e)?;
+        let payload = src.section(e.offset, e.length).map_err(|err| Error::Io {
+            path: format!("<pocket section {:?} at offset {}>", e.name, e.offset),
+            source: err,
+        })?;
+        verify_checksum(&payload, e)?;
         self.bytes_read.fetch_add(e.length, Ordering::Relaxed);
         self.sections_read.fetch_add(1, Ordering::Relaxed);
-        Ok(buf)
+        if e.kind == SectionKind::Group {
+            self.group_sections_read.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(payload)
     }
 
     /// The stored (undecoded) record of one compressed group.  Lazy mode
@@ -321,7 +387,7 @@ impl PocketReader {
                     group: group.to_string(),
                     known: groups.keys().cloned().collect(),
                 })?;
-                let payload = self.fetch_section(src, e)?;
+                let payload = self.fetch_section(src.as_ref(), e)?;
                 parse_group_payload(&payload, e)
             }
             Inner::Eager(pf) => pf.groups.get(group).cloned().ok_or_else(|| {
@@ -341,7 +407,7 @@ impl PocketReader {
                     kind: "dense tensor",
                     name: name.to_string(),
                 })?;
-                let payload = self.fetch_section(src, e)?;
+                let payload = self.fetch_section(src.as_ref(), e)?;
                 parse_dense_payload(&payload, e)
             }
             Inner::Eager(pf) => pf.dense.get(name).cloned().ok_or_else(|| {
@@ -351,44 +417,62 @@ impl PocketReader {
     }
 
     /// Decode one compressed group to its `[rows, width]` row matrix through
-    /// the backend, with LRU caching of the decoded result.
+    /// the backend, caching the decoded result in the (possibly shared)
+    /// byte-budget [`DecodeCache`].  Safe to call from many threads at
+    /// once: concurrent misses on one group are single-flighted, so its
+    /// section is fetched and decoded exactly once.
     pub fn decode_group(&self, rt: &Runtime, group: &str) -> Result<Arc<TensorF32>, Error> {
-        if let Some(hit) = self.cache.lock().unwrap().get(group) {
+        let (rows, hit) = self.cache.get_or_try_insert_with(self.pocket_id, group, || {
+            let rec = self.group_record(group)?;
+            let rows = decode_record(rt, &rec)?;
+            self.group_decodes.fetch_add(1, Ordering::Relaxed);
+            Ok::<_, Error>(Arc::new(rows))
+        })?;
+        if hit {
             self.cache_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(hit);
         }
-        let rec = self.group_record(group)?;
-        let rows = decode_record(rt, &rec)?;
-        self.group_decodes.fetch_add(1, Ordering::Relaxed);
-        let rows = Arc::new(rows);
-        self.cache.lock().unwrap().put(group.to_string(), rows.clone());
         Ok(rows)
+    }
+
+    fn has_dense(&self, name: &str) -> bool {
+        match &self.inner {
+            Inner::Lazy { dense, .. } => dense.contains_key(name),
+            Inner::Eager(pf) => pf.dense.contains_key(name),
+        }
+    }
+
+    fn has_group(&self, name: &str) -> bool {
+        match &self.inner {
+            Inner::Lazy { groups, .. } => groups.contains_key(name),
+            Inner::Eager(pf) => pf.groups.contains_key(name),
+        }
     }
 
     /// One *named tensor* (layout entry) on demand: a dense residue tensor
     /// directly, or the relevant row slice of its (decoded, cached) group.
+    /// This is the per-request unit of the serve path, so the lookup
+    /// allocates nothing until the row slice is copied out.
     pub fn tensor(&self, rt: &Runtime, name: &str) -> Result<Vec<f32>, Error> {
-        if self.dense_names().iter().any(|n| n == name) {
+        if self.has_dense(name) {
             return self.dense_tensor(name);
         }
         let cfg = rt
             .manifest
             .lm_cfg(&self.lm_cfg)
-            .map_err(|_| Error::UnknownConfig { kind: "lm config", name: self.lm_cfg.clone() })?
-            .clone();
-        let compressed = self.group_names();
-        for gname in &compressed {
-            let gi = match cfg.groups.get(gname) {
-                Some(gi) => gi,
-                None => continue,
-            };
-            for b in 0..cfg.n_layers {
-                for (ti, t) in gi.tensors.iter().enumerate() {
-                    if format!("b{b}.{t}") != name {
+            .map_err(|_| Error::UnknownConfig { kind: "lm config", name: self.lm_cfg.clone() })?;
+        // compressed-group tensor names are "b{block}.{tensor}"
+        if let Some((block, tname)) = split_block_name(name) {
+            if block < cfg.n_layers {
+                for (gname, gi) in &cfg.groups {
+                    if !self.has_group(gname) {
                         continue;
                     }
+                    let ti = match gi.tensors.iter().position(|t| t == tname) {
+                        Some(ti) => ti,
+                        None => continue,
+                    };
                     let rows = self.decode_group(rt, gname)?;
-                    let row_start = (b * gi.tensors.len() + ti) * gi.rows_per_block;
+                    let row_start = (block * gi.tensors.len() + ti) * gi.rows_per_block;
                     let start = row_start * gi.width;
                     let len = gi.rows_per_block * gi.width;
                     if start + len > rows.data.len() {
@@ -473,6 +557,22 @@ impl PocketReader {
     }
 }
 
+/// Parse a layout tensor name of the form `b{block}.{tensor}` without
+/// allocating (the serve path resolves one of these per request).  Only the
+/// canonical spelling matches — `b01.wq` / `b+1.wq` are rejected, exactly
+/// like the historical `format!("b{b}.{t}")` comparison.
+fn split_block_name(name: &str) -> Option<(usize, &str)> {
+    let rest = name.strip_prefix('b')?;
+    let (num, tname) = rest.split_once('.')?;
+    let canonical = !num.is_empty()
+        && num.bytes().all(|b| b.is_ascii_digit())
+        && (num.len() == 1 || !num.starts_with('0'));
+    if !canonical {
+        return None;
+    }
+    Some((num.parse().ok()?, tname))
+}
+
 /// Decode one stored group record to its `[rows, width]` row matrix through
 /// the backend — the single decode path shared by [`PocketReader`] and the
 /// borrowed [`PocketReader::reconstruct_pocket`] route.
@@ -515,6 +615,7 @@ mod tests {
         assert_eq!(rec.rows, pf.groups["q"].rows);
         let s1 = r.stats();
         assert_eq!(s1.sections_read, 1);
+        assert_eq!(s1.group_sections_read, 1);
         assert_eq!(s1.bytes_read, r.header_bytes() + r.section_length("q").unwrap());
         assert!(s1.bytes_read < total, "one group must not read the whole file");
     }
@@ -562,15 +663,52 @@ mod tests {
     }
 
     #[test]
-    fn lru_moves_to_front_and_evicts() {
-        let mut lru = Lru { cap: 2, entries: Vec::new() };
-        let t = |v: f32| Arc::new(TensorF32::new(vec![1], vec![v]));
-        lru.put("a".into(), t(1.0));
-        lru.put("b".into(), t(2.0));
-        assert!(lru.get("a").is_some()); // a is now most recent
-        lru.put("c".into(), t(3.0)); // evicts b
-        assert!(lru.get("b").is_none());
-        assert!(lru.get("a").is_some());
-        assert!(lru.get("c").is_some());
+    fn from_bytes_shares_an_arc_without_copying() {
+        let bytes: Arc<[u8]> = sample_file(15).to_bytes().into();
+        let a = PocketReader::from_bytes(bytes.clone()).unwrap();
+        let b = PocketReader::from_bytes(bytes.clone()).unwrap();
+        // three owners: the local arc plus one MemSource per reader
+        assert_eq!(Arc::strong_count(&bytes), 3);
+        assert_eq!(a.group_record("q").unwrap().decoder, b.group_record("q").unwrap().decoder);
+    }
+
+    #[test]
+    fn section_span_matches_toc_layout() {
+        let r = PocketReader::from_bytes(sample_file(16).to_bytes()).unwrap();
+        let (q_off, q_len) = r.section_span("q").unwrap();
+        assert!(q_off >= r.header_bytes());
+        assert_eq!(q_len, r.section_length("q").unwrap());
+        assert!(r.section_span("nope").is_none());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn cache_capacity_shim_converts_group_count_to_bytes() {
+        let pf = sample_file(17);
+        let max_bytes = pf
+            .groups
+            .values()
+            .map(|g| (g.rows * g.width) as u64 * 4)
+            .max()
+            .unwrap();
+        let r = PocketReader::from_bytes(pf.to_bytes()).unwrap().with_cache_capacity(3);
+        assert_eq!(r.decode_cache().budget(), 3 * max_bytes);
+    }
+
+    #[test]
+    fn with_source_reads_header_through_custom_transport() {
+        use crate::packfmt::source::ChunkedSource;
+        let pf = sample_file(18);
+        let bytes = pf.to_bytes();
+        let total = bytes.len() as u64;
+        let src = ChunkedSource::new(bytes, 128);
+        let r = PocketReader::with_source(src.clone()).unwrap();
+        assert_eq!(r.group_names(), vec!["q".to_string(), "up".to_string()]);
+        // open pulled only the chunk-aligned cover of the header + TOC
+        assert!(src.bytes_fetched() < total);
+        let header_cover = r.header_bytes().div_ceil(128) * 128;
+        for (off, len) in src.range_log() {
+            assert!(off + len <= header_cover.min(total), "open fetched past the TOC");
+        }
     }
 }

@@ -1,0 +1,523 @@
+//! `SectionSource` — where a pocket container's bytes come from.
+//!
+//! The serving story of the paper ("download a small decoder, a concise
+//! codebook, and an index; decode on demand") only pays off if section
+//! access is cheap: a reader should not copy a whole container to answer a
+//! request that touches one group.  This module is the byte layer under
+//! [`super::PocketReader`]:
+//!
+//! * [`SectionSource`] — a thread-safe random-access byte source
+//!   (`read_at(&self, ..)`, so concurrent readers need no lock), with a
+//!   [`SectionSource::section`] hook that returns **borrowed** bytes when
+//!   the source can hand out zero-copy slices.
+//! * [`MmapSource`] (unix) — the file mapped read-only into the address
+//!   space; sections are zero-copy slices and the page cache is shared
+//!   across processes serving the same pocket.
+//! * [`FileSource`] — positional reads (`pread` on unix); the portable
+//!   fallback and the right choice when the file may be truncated or
+//!   replaced underneath a long-lived mapping.
+//! * [`MemSource`] — an `Arc<[u8]>` already in memory; cloning the `Arc`
+//!   shares one buffer across any number of readers, and sections are
+//!   zero-copy slices.
+//! * [`ChunkedSource`] — an in-memory stand-in for an HTTP range-request
+//!   transport: reads are rounded to a configurable chunk size and every
+//!   fetched range is counted + logged, so streaming behaviour ("a ranged
+//!   open reads only the header + TOC") is testable hermetically.
+//!
+//! [`open_path`] picks the best available source for a file (mmap on unix,
+//! positional-read file handle elsewhere or if mapping fails).
+
+use std::io;
+use std::ops::Deref;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Section bytes handed out by a [`SectionSource`]: borrowed straight from
+/// the source (mmap / in-memory buffer — zero-copy) or owned (read into a
+/// fresh buffer by file/range transports).  Derefs to `[u8]` either way.
+pub enum SectionBytes<'a> {
+    Borrowed(&'a [u8]),
+    Owned(Vec<u8>),
+}
+
+impl Deref for SectionBytes<'_> {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match self {
+            SectionBytes::Borrowed(b) => b,
+            SectionBytes::Owned(v) => v,
+        }
+    }
+}
+
+impl SectionBytes<'_> {
+    /// True when the bytes were borrowed from the source without a copy.
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self, SectionBytes::Borrowed(_))
+    }
+}
+
+/// Thread-safe random-access byte source behind a [`super::PocketReader`].
+///
+/// `read_at` takes `&self`: sources must support concurrent reads (readers
+/// call in from many threads, `decode_group` stays `&self`).  Implementors
+/// that can hand out stable borrowed slices should override
+/// [`SectionSource::section`] to make section access zero-copy.
+pub trait SectionSource: Send + Sync {
+    /// Total container length in bytes.
+    fn len(&self) -> u64;
+
+    /// True for an empty (zero-byte) source.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fill `buf` from the absolute byte `offset`.  Short reads are errors
+    /// (`UnexpectedEof`), exactly like `read_exact_at`.
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()>;
+
+    /// `len` bytes at `offset`, borrowed zero-copy when the source can.
+    /// The default copies through [`SectionSource::read_at`] — bounds are
+    /// checked *before* the buffer is allocated, so an absurd declared
+    /// length surfaces as a typed EOF error instead of an OOM abort.
+    fn section(&self, offset: u64, len: u64) -> io::Result<SectionBytes<'_>> {
+        let total = self.len();
+        if offset.checked_add(len).map_or(true, |end| end > total) {
+            return Err(eof(offset, len as usize, total));
+        }
+        let mut buf = vec![0u8; len as usize];
+        self.read_at(offset, &mut buf)?;
+        Ok(SectionBytes::Owned(buf))
+    }
+}
+
+fn eof(offset: u64, want: usize, have: u64) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::UnexpectedEof,
+        format!("read of {want} bytes at offset {offset} past end of {have}-byte source"),
+    )
+}
+
+/// Bounds-check a `(offset, len)` range against a source of `total` bytes,
+/// returning the usize span.
+fn span(offset: u64, len: usize, total: u64) -> io::Result<(usize, usize)> {
+    let end = offset
+        .checked_add(len as u64)
+        .filter(|&e| e <= total)
+        .ok_or_else(|| eof(offset, len, total))?;
+    Ok((offset as usize, end as usize))
+}
+
+// ---------------------------------------------------------------------------
+// MemSource
+// ---------------------------------------------------------------------------
+
+/// A pocket container already in memory, shared behind an `Arc<[u8]>` —
+/// cloning the handle (or the `Arc`) never copies the buffer, and sections
+/// are zero-copy slices.
+#[derive(Clone)]
+pub struct MemSource {
+    bytes: Arc<[u8]>,
+}
+
+impl MemSource {
+    /// Wrap a buffer.  `Vec<u8>`, `&[u8]` and `Arc<[u8]>` all convert; an
+    /// existing `Arc<[u8]>` is shared without any copy.
+    pub fn new(bytes: impl Into<Arc<[u8]>>) -> MemSource {
+        MemSource { bytes: bytes.into() }
+    }
+
+    /// The shared underlying buffer.
+    pub fn bytes(&self) -> &Arc<[u8]> {
+        &self.bytes
+    }
+}
+
+impl SectionSource for MemSource {
+    fn len(&self) -> u64 {
+        self.bytes.len() as u64
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        let (start, end) = span(offset, buf.len(), self.len())?;
+        buf.copy_from_slice(&self.bytes[start..end]);
+        Ok(())
+    }
+
+    fn section(&self, offset: u64, len: u64) -> io::Result<SectionBytes<'_>> {
+        let (start, end) = span(offset, len as usize, self.len())?;
+        Ok(SectionBytes::Borrowed(&self.bytes[start..end]))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FileSource
+// ---------------------------------------------------------------------------
+
+/// Positional reads from an open file.  On unix this is `pread` (no shared
+/// cursor, so concurrent readers need no lock); elsewhere a mutex-guarded
+/// seek+read provides the same contract.
+pub struct FileSource {
+    #[cfg(unix)]
+    file: std::fs::File,
+    #[cfg(not(unix))]
+    file: Mutex<std::fs::File>,
+    len: u64,
+}
+
+impl FileSource {
+    pub fn open(path: &Path) -> io::Result<FileSource> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        #[cfg(unix)]
+        return Ok(FileSource { file, len });
+        #[cfg(not(unix))]
+        return Ok(FileSource { file: Mutex::new(file), len });
+    }
+}
+
+impl SectionSource for FileSource {
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    #[cfg(unix)]
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        use std::os::unix::fs::FileExt;
+        self.file.read_exact_at(buf, offset)
+    }
+
+    #[cfg(not(unix))]
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MmapSource (unix)
+// ---------------------------------------------------------------------------
+
+/// The container mapped read-only into the address space (unix `mmap`).
+/// Sections are zero-copy slices of the mapping; the kernel pages bytes in
+/// on first touch and shares the page cache across every process serving
+/// the same pocket.  Use [`open_path`] to fall back to [`FileSource`] on
+/// other platforms or when mapping fails.
+#[cfg(unix)]
+pub struct MmapSource {
+    ptr: *mut std::os::raw::c_void,
+    len: usize,
+}
+
+// SAFETY: the mapping is read-only (PROT_READ) and owned exclusively by
+// this struct until Drop; concurrent reads of immutable memory are safe.
+#[cfg(unix)]
+unsafe impl Send for MmapSource {}
+#[cfg(unix)]
+unsafe impl Sync for MmapSource {}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    // Declared by hand: the offline vendor set has no `libc` crate, but std
+    // already links the platform libc.  `off_t` is 64-bit on every tier-1
+    // unix target this repo builds on.
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_SHARED: c_int = 1;
+}
+
+#[cfg(unix)]
+impl MmapSource {
+    /// Map `path` read-only.  Fails (cleanly, with the OS error) on empty
+    /// files and exotic filesystems — callers wanting a fallback should go
+    /// through [`open_path`].
+    pub fn open(path: &Path) -> io::Result<MmapSource> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            // mmap(len=0) is EINVAL; model it as an empty source instead.
+            return Ok(MmapSource { ptr: std::ptr::null_mut(), len: 0 });
+        }
+        let len = usize::try_from(len)
+            .map_err(|_| io::Error::new(io::ErrorKind::OutOfMemory, "file too large to map"))?;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(io::Error::last_os_error());
+        }
+        // the fd can be closed once the mapping exists; the mapping keeps
+        // the underlying pages alive
+        Ok(MmapSource { ptr, len })
+    }
+
+    fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            &[]
+        } else {
+            // SAFETY: ptr/len come from a successful PROT_READ mapping that
+            // lives until Drop.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for MmapSource {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: exactly the region returned by mmap in open().
+            unsafe { sys::munmap(self.ptr, self.len) };
+        }
+    }
+}
+
+#[cfg(unix)]
+impl SectionSource for MmapSource {
+    fn len(&self) -> u64 {
+        self.len as u64
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        let (start, end) = span(offset, buf.len(), self.len as u64)?;
+        buf.copy_from_slice(&self.as_slice()[start..end]);
+        Ok(())
+    }
+
+    fn section(&self, offset: u64, len: u64) -> io::Result<SectionBytes<'_>> {
+        let (start, end) = span(offset, len as usize, self.len as u64)?;
+        Ok(SectionBytes::Borrowed(&self.as_slice()[start..end]))
+    }
+}
+
+/// Best available source for a container file: `mmap` on unix (zero-copy
+/// sections), positional-read [`FileSource`] elsewhere or when the mapping
+/// fails (e.g. a filesystem that refuses `MAP_SHARED`).
+pub fn open_path(path: &Path) -> io::Result<Box<dyn SectionSource>> {
+    #[cfg(unix)]
+    if let Ok(m) = MmapSource::open(path) {
+        return Ok(Box::new(m));
+    }
+    Ok(Box::new(FileSource::open(path)?))
+}
+
+// ---------------------------------------------------------------------------
+// ChunkedSource
+// ---------------------------------------------------------------------------
+
+/// Hermetic stand-in for an HTTP range-request transport.
+///
+/// Wraps an in-memory container and serves `read_at` by fetching
+/// chunk-aligned ranges (chunk size configurable), counting and logging
+/// every range it "downloads".  Clones share one buffer and one counter
+/// set, so a test can keep a handle while a reader owns another and assert
+/// exactly which byte ranges a lazy open or a single-group decode pulled.
+#[derive(Clone)]
+pub struct ChunkedSource {
+    bytes: Arc<[u8]>,
+    chunk: u64,
+    counters: Arc<ChunkCounters>,
+}
+
+#[derive(Default)]
+struct ChunkCounters {
+    /// Chunk-granular ranges fetched.
+    ranges: AtomicU64,
+    /// Total bytes "downloaded" (sum of fetched range lengths).
+    bytes: AtomicU64,
+    /// Every fetched `(offset, len)` range, in order.
+    log: Mutex<Vec<(u64, u64)>>,
+}
+
+impl ChunkedSource {
+    /// Serve `bytes` in ranges of `chunk_bytes` (clamped to >= 1).
+    pub fn new(bytes: impl Into<Arc<[u8]>>, chunk_bytes: u64) -> ChunkedSource {
+        ChunkedSource {
+            bytes: bytes.into(),
+            chunk: chunk_bytes.max(1),
+            counters: Arc::new(ChunkCounters::default()),
+        }
+    }
+
+    /// Configured chunk size in bytes.
+    pub fn chunk_bytes(&self) -> u64 {
+        self.chunk
+    }
+
+    /// Number of chunk ranges fetched so far (shared across clones).
+    pub fn ranges_fetched(&self) -> u64 {
+        self.counters.ranges.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes fetched so far, counting chunk rounding and re-fetches —
+    /// what a range-request transport would actually move.
+    pub fn bytes_fetched(&self) -> u64 {
+        self.counters.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Every `(offset, len)` range fetched so far, in fetch order.
+    pub fn range_log(&self) -> Vec<(u64, u64)> {
+        self.counters.log.lock().unwrap().clone()
+    }
+}
+
+impl SectionSource for ChunkedSource {
+    fn len(&self) -> u64 {
+        self.bytes.len() as u64
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        let total = self.len();
+        let (start, end) = span(offset, buf.len(), total)?;
+        if buf.is_empty() {
+            return Ok(()); // nothing to download for a zero-length read
+        }
+        // fetch the chunk-aligned cover of [start, end), one range per chunk
+        let mut at = (start as u64 / self.chunk) * self.chunk;
+        let mut log = self.counters.log.lock().unwrap();
+        while at < end as u64 {
+            let len = self.chunk.min(total - at);
+            self.counters.ranges.fetch_add(1, Ordering::Relaxed);
+            self.counters.bytes.fetch_add(len, Ordering::Relaxed);
+            log.push((at, len));
+            at += len;
+        }
+        drop(log);
+        buf.copy_from_slice(&self.bytes[start..end]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_source_reads_and_borrows() {
+        let src = MemSource::new((0u8..100).collect::<Vec<u8>>());
+        assert_eq!(src.len(), 100);
+        let mut buf = [0u8; 4];
+        src.read_at(10, &mut buf).unwrap();
+        assert_eq!(buf, [10, 11, 12, 13]);
+        let sec = src.section(96, 4).unwrap();
+        assert!(sec.is_borrowed());
+        assert_eq!(&*sec, &[96, 97, 98, 99]);
+        // out-of-bounds is a typed EOF, not a panic
+        let e = src.read_at(98, &mut buf).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof);
+        assert!(src.section(u64::MAX, 4).is_err(), "offset overflow must not wrap");
+    }
+
+    #[test]
+    fn mem_source_clones_share_one_buffer() {
+        let arc: Arc<[u8]> = vec![7u8; 32].into();
+        let a = MemSource::new(arc.clone());
+        let b = a.clone();
+        assert!(Arc::ptr_eq(a.bytes(), b.bytes()));
+        assert!(Arc::ptr_eq(a.bytes(), &arc));
+    }
+
+    #[test]
+    fn file_source_positional_reads() {
+        let path = std::env::temp_dir().join("pocketllm_test_filesource.bin");
+        std::fs::write(&path, (0u8..64).collect::<Vec<u8>>()).unwrap();
+        let src = FileSource::open(&path).unwrap();
+        assert_eq!(src.len(), 64);
+        let mut buf = [0u8; 3];
+        src.read_at(61, &mut buf).unwrap();
+        assert_eq!(buf, [61, 62, 63]);
+        assert!(src.read_at(62, &mut buf).is_err());
+        // default section() path copies through read_at
+        let sec = src.section(0, 2).unwrap();
+        assert!(!sec.is_borrowed());
+        assert_eq!(&*sec, &[0, 1]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_source_is_zero_copy_and_matches_file() {
+        let path = std::env::temp_dir().join("pocketllm_test_mmapsource.bin");
+        let data: Vec<u8> = (0..257u32).map(|x| (x * 7 % 256) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let m = MmapSource::open(&path).unwrap();
+        assert_eq!(m.len(), data.len() as u64);
+        let sec = m.section(5, 250).unwrap();
+        assert!(sec.is_borrowed());
+        assert_eq!(&*sec, &data[5..255]);
+        let mut buf = vec![0u8; data.len()];
+        m.read_at(0, &mut buf).unwrap();
+        assert_eq!(buf, data);
+        assert!(m.section(250, 8).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_of_empty_file_is_an_empty_source() {
+        let path = std::env::temp_dir().join("pocketllm_test_mmap_empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let m = MmapSource::open(&path).unwrap();
+        assert_eq!(m.len(), 0);
+        assert!(m.is_empty());
+        assert!(m.read_at(0, &mut [0u8; 1]).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn chunked_source_counts_chunk_aligned_ranges() {
+        let src = ChunkedSource::new(vec![1u8; 100], 16);
+        let mut buf = [0u8; 10];
+        // [20, 30) covers chunks [16,32) -> one 16-byte range
+        src.read_at(20, &mut buf).unwrap();
+        assert_eq!(src.ranges_fetched(), 1);
+        assert_eq!(src.bytes_fetched(), 16);
+        assert_eq!(src.range_log(), vec![(16, 16)]);
+        // [30, 40) covers chunks [16,32) and [32,48) -> two ranges
+        src.read_at(30, &mut buf).unwrap();
+        assert_eq!(src.ranges_fetched(), 3);
+        assert_eq!(&src.range_log()[1..], &[(16, 16), (32, 16)]);
+        // the tail chunk is clipped to the source length
+        let mut tail = [0u8; 4];
+        src.read_at(96, &mut tail).unwrap();
+        assert_eq!(*src.range_log().last().unwrap(), (96, 4));
+        // clones share counters
+        let clone = src.clone();
+        clone.read_at(0, &mut buf).unwrap();
+        assert_eq!(src.ranges_fetched(), clone.ranges_fetched());
+    }
+
+    #[test]
+    fn chunked_source_clamps_zero_chunk() {
+        let src = ChunkedSource::new(vec![0u8; 8], 0);
+        assert_eq!(src.chunk_bytes(), 1);
+        let mut b = [0u8; 2];
+        src.read_at(3, &mut b).unwrap();
+        assert_eq!(src.ranges_fetched(), 2);
+    }
+}

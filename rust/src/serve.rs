@@ -1,0 +1,190 @@
+//! `PocketServer` — the concurrent serve path over a shared reader + cache.
+//!
+//! The paper's deliverable is a pocket file an edge node downloads once and
+//! then answers many requests from.  This module is that serving loop in
+//! library form: a [`PocketServer`] (built by `Session::serve`) fans a
+//! request list over N worker threads, all hammering **one**
+//! [`PocketReader`] and therefore one byte-budget
+//! [`DecodeCache`](crate::util::cache::DecodeCache) — decode results are
+//! shared, each group's section is fetched from the source exactly once
+//! (single-flight), and eviction pressure is global.
+//!
+//! Three request shapes cover the serving mix:
+//!
+//! * [`ServeRequest::Group`] — decode one compressed group's row matrix
+//!   (the unit of backend work, and of cache residency);
+//! * [`ServeRequest::Tensor`] — one named layout tensor: a slice of its
+//!   decoded group, or a dense residue section read straight off the
+//!   source;
+//! * [`ServeRequest::Eval`] — a full quality probe (perplexity over held-out
+//!   batches) on weights reconstructed *through the reader*, so even a
+//!   whole-model request rides the shared cache.
+//!
+//! The CLI `serve-bench` subcommand and `examples/serve_concurrent.rs` sit
+//! on top of this; `cargo test` exercises it in
+//! `tests/serve_concurrent.rs`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::data::Corpus;
+use crate::error::Error;
+use crate::eval;
+use crate::packfmt::{PocketReader, ReaderStats};
+use crate::session::Session;
+use crate::util::threadpool::{default_workers, scoped_map};
+
+/// One serving request against a pocket model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeRequest {
+    /// Decode one compressed group's `[rows, width]` matrix.
+    Group(String),
+    /// Materialize one named layout tensor (dense or group-sliced).
+    Tensor(String),
+    /// Perplexity over `ppl_batches` held-out batches, on weights
+    /// reconstructed lazily through the reader.
+    Eval { ppl_batches: usize },
+}
+
+/// Outcome of one [`PocketServer::run`]: wall time plus the reader's
+/// counter snapshot (including the shared cache's stats).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub workers: usize,
+    pub elapsed: Duration,
+    /// Reader + shared-cache counters *after* the run.
+    pub stats: ReaderStats,
+}
+
+impl ServeReport {
+    /// Requests served per second.
+    pub fn rps(&self) -> f64 {
+        self.requests as f64 / self.elapsed.as_secs_f64().max(1e-12)
+    }
+
+    /// Fraction of group-decode requests answered from the cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.stats.cache_hits + self.stats.group_decodes;
+        if total == 0 {
+            return 0.0;
+        }
+        self.stats.cache_hits as f64 / total as f64
+    }
+}
+
+/// Concurrent server over one shared [`PocketReader`].  Built by
+/// [`Session::serve`]; see the module docs.
+pub struct PocketServer<'s> {
+    session: &'s Session,
+    reader: Arc<PocketReader>,
+    workers: usize,
+    corpus_seed: u64,
+    /// Built once, on the first [`ServeRequest::Eval`] — the corpus is
+    /// deterministic in (vocab, seed), so rebuilding it per request would
+    /// only burn worker time.
+    corpus: std::sync::OnceLock<Corpus>,
+}
+
+impl<'s> PocketServer<'s> {
+    pub(crate) fn new(session: &'s Session, reader: Arc<PocketReader>) -> PocketServer<'s> {
+        PocketServer {
+            session,
+            reader,
+            workers: default_workers(8),
+            corpus_seed: 1001,
+            corpus: std::sync::OnceLock::new(),
+        }
+    }
+
+    /// Worker threads to fan requests over (default: machine parallelism,
+    /// capped at 8).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Corpus seed for [`ServeRequest::Eval`] probes (default 1001).  Set
+    /// it before serving: the corpus is built once, on the first eval.
+    pub fn corpus_seed(mut self, seed: u64) -> Self {
+        self.corpus_seed = seed;
+        self
+    }
+
+    /// The shared reader behind this server.
+    pub fn reader(&self) -> &Arc<PocketReader> {
+        &self.reader
+    }
+
+    /// Serve one request on the calling thread.
+    pub fn handle(&self, req: &ServeRequest) -> Result<(), Error> {
+        let rt = self.session.runtime();
+        match req {
+            ServeRequest::Group(g) => {
+                self.reader.decode_group(rt, g)?;
+            }
+            ServeRequest::Tensor(t) => {
+                self.reader.tensor(rt, t)?;
+            }
+            ServeRequest::Eval { ppl_batches } => {
+                let cfg = rt.manifest.lm_cfg(self.reader.lm_cfg()).map_err(|_| {
+                    Error::UnknownConfig {
+                        kind: "lm config",
+                        name: self.reader.lm_cfg().to_string(),
+                    }
+                })?;
+                let corpus =
+                    self.corpus.get_or_init(|| Corpus::new(cfg.vocab, self.corpus_seed));
+                eval::perplexity_reader(rt, &self.reader, corpus, *ppl_batches)
+                    .map_err(Error::from)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Fan `requests` over the worker threads against the shared reader and
+    /// cache.  Work is pulled from a queue, so uneven request costs balance
+    /// out.  The whole list is drained before errors are surfaced; the
+    /// first failing request's error (in input order) is then returned.
+    pub fn run(&self, requests: &[ServeRequest]) -> Result<ServeReport, Error> {
+        let t0 = Instant::now();
+        let results =
+            scoped_map(self.workers, requests.iter().collect(), |req| self.handle(req));
+        let elapsed = t0.elapsed();
+        for r in results {
+            r?;
+        }
+        Ok(ServeReport {
+            requests: requests.len(),
+            workers: self.workers,
+            elapsed,
+            stats: self.reader.stats(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_math_is_sane() {
+        let stats = ReaderStats { cache_hits: 30, group_decodes: 10, ..Default::default() };
+        let r = ServeReport {
+            requests: 100,
+            workers: 4,
+            elapsed: Duration::from_millis(500),
+            stats,
+        };
+        assert!((r.rps() - 200.0).abs() < 1e-9);
+        assert!((r.cache_hit_rate() - 0.75).abs() < 1e-12);
+        let empty = ServeReport {
+            requests: 0,
+            workers: 1,
+            elapsed: Duration::from_secs(0),
+            stats: ReaderStats::default(),
+        };
+        assert_eq!(empty.cache_hit_rate(), 0.0);
+        assert!(empty.rps().is_finite());
+    }
+}

@@ -40,6 +40,8 @@ use crate::model::WeightStore;
 use crate::packfmt::PocketReader;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::Runtime;
+use crate::serve::PocketServer;
+use std::sync::Arc;
 
 /// Which execution backend a [`SessionBuilder`] should construct.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -213,9 +215,20 @@ impl Session {
         preset_summary(&self.rt, cfg_name, preset).map_err(Error::from)
     }
 
-    /// Open a pocket container for lazy serving-side decode.
+    /// Open a pocket container for lazy serving-side decode (mmap on unix,
+    /// positional file reads elsewhere).  Chain
+    /// [`PocketReader::with_cache_budget`] /
+    /// [`PocketReader::with_shared_cache`] to bound or share the decode
+    /// cache.
     pub fn open_pocket(&self, path: &Path) -> Result<PocketReader, Error> {
         PocketReader::open(path)
+    }
+
+    /// Build a concurrent [`PocketServer`] over a shared reader: N worker
+    /// threads fan requests against one decode cache.  See
+    /// [`crate::serve`].
+    pub fn serve(&self, reader: Arc<PocketReader>) -> PocketServer<'_> {
+        PocketServer::new(self, reader)
     }
 
     /// Decode a whole pocket into a dense weight store through the reader's

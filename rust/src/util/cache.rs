@@ -1,0 +1,379 @@
+//! `DecodeCache` — a thread-safe, shareable LRU over decoded group row
+//! matrices, bounded by a **byte budget** rather than an entry count.
+//!
+//! Serving a pocket model means many concurrent requests touching a few
+//! layer groups; the expensive unit is one backend decode of one group, and
+//! the scarce resource is decoded-tensor memory.  A `DecodeCache` is keyed
+//! by `(pocket_id, group)` so any number of [`crate::PocketReader`]s — and
+//! any number of threads — can share one pool under one budget:
+//!
+//! * LRU eviction by decoded-tensor size (4 bytes per f32), never exceeding
+//!   the budget; a value larger than the whole budget is served but never
+//!   cached (`uncacheable` counter).
+//! * **Single-flight** decode: when N threads miss on the same key at once,
+//!   one computes while the rest wait and then take the cached value — each
+//!   group's section is fetched and decoded exactly once.  Uncacheable
+//!   work is never serialized: a zero budget skips coordination entirely,
+//!   and a thread that waited once and still missed computes immediately.
+//! * Counters ([`CacheStats`]) for hits, misses (= computations), LRU
+//!   evictions, uncacheable inserts, resident bytes and entry count; folded
+//!   into [`crate::ReaderStats`] by the readers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::tensor::TensorF32;
+
+/// Cache key: a reader-unique pocket id plus the group name.  Ids come from
+/// [`DecodeCache::next_pocket_id`], so two readers over the same container
+/// bytes never alias (they share the budget, not entries).
+pub type DecodeKey = (u64, String);
+
+/// Snapshot of a cache's counters.  `misses` counts actual decode
+/// computations — threads that waited on another thread's in-flight decode
+/// and then took the cached value count as hits.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Values larger than the whole budget: served, never cached.
+    pub uncacheable: u64,
+    pub resident_bytes: u64,
+    pub entries: u64,
+}
+
+struct Entry {
+    key: DecodeKey,
+    value: Arc<TensorF32>,
+    bytes: u64,
+}
+
+#[derive(Default)]
+struct State {
+    /// Most-recently-used first.
+    entries: Vec<Entry>,
+    resident: u64,
+    /// In-flight decodes, for single-flight coordination.
+    flights: Vec<(DecodeKey, Arc<Mutex<()>>)>,
+}
+
+impl State {
+    /// Borrowed-key lookup (no allocation on the hit path), bumping the
+    /// entry to most-recently-used.
+    fn get_mru(&mut self, pocket: u64, group: &str) -> Option<Arc<TensorF32>> {
+        let pos =
+            self.entries.iter().position(|e| e.key.0 == pocket && e.key.1 == group)?;
+        let e = self.entries.remove(pos);
+        let v = e.value.clone();
+        self.entries.insert(0, e);
+        Some(v)
+    }
+}
+
+static NEXT_POCKET_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Thread-safe byte-budget LRU of decoded groups.  See the module docs.
+pub struct DecodeCache {
+    budget: u64,
+    state: Mutex<State>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    uncacheable: AtomicU64,
+}
+
+impl DecodeCache {
+    /// Default budget for per-reader caches (64 MiB — every group of the
+    /// bundled substrate models fits many times over).
+    pub const DEFAULT_BUDGET: u64 = 64 << 20;
+
+    /// A fresh shareable cache bounded to `bytes` of decoded tensors.  A
+    /// budget of 0 disables caching entirely (every decode recomputes).
+    pub fn with_budget(bytes: u64) -> Arc<DecodeCache> {
+        Arc::new(DecodeCache {
+            budget: bytes,
+            state: Mutex::new(State::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            uncacheable: AtomicU64::new(0),
+        })
+    }
+
+    /// The configured byte budget.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Allocate a process-unique pocket id for a new reader.
+    pub fn next_pocket_id() -> u64 {
+        NEXT_POCKET_ID.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Resident size of one decoded tensor (4 bytes per f32).
+    pub fn tensor_bytes(t: &TensorF32) -> u64 {
+        4 * t.data.len() as u64
+    }
+
+    /// Cached value for `(pocket, group)`, bumping it to most-recently-used.
+    /// Prefer [`DecodeCache::get_or_try_insert_with`] on the decode path
+    /// (it adds single-flight coordination and counter upkeep).
+    pub fn get(&self, pocket: u64, group: &str) -> Option<Arc<TensorF32>> {
+        // a pure probe: hit/miss counters track the decode path
+        // (get_or_try_insert_with) only, so `misses` == decode computations
+        self.state.lock().unwrap().get_mru(pocket, group)
+    }
+
+    /// The decode path: return the cached value for `(pocket, group)`, or
+    /// run `f` to produce it (inserting the result under the budget).  When
+    /// several threads miss on the same key concurrently, exactly one runs
+    /// `f`; the others block until it finishes and then take the cached
+    /// value.  A thread that waited and *still* misses (the value was too
+    /// big to cache, or the decode failed) recomputes immediately instead
+    /// of queueing behind further flights — uncacheable keys decode in
+    /// parallel rather than serializing.
+    ///
+    /// Returns `(value, was_hit)` so callers can keep per-reader hit
+    /// counters.  An `Err` from `f` propagates (and releases the flight so
+    /// a later caller can retry).  The hit path allocates nothing.
+    pub fn get_or_try_insert_with<E>(
+        &self,
+        pocket: u64,
+        group: &str,
+        f: impl FnOnce() -> Result<Arc<TensorF32>, E>,
+    ) -> Result<(Arc<TensorF32>, bool), E> {
+        let mut waited = false;
+        loop {
+            // flight coordination only pays when the computed value can be
+            // cached for the waiters: a zero budget caches nothing, and a
+            // thread that already waited once woke to a miss — in both
+            // cases compute immediately instead of serializing
+            let coordinate = self.budget > 0 && !waited;
+            let wait = {
+                let mut st = self.state.lock().unwrap();
+                if let Some(v) = st.get_mru(pocket, group) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((v, true));
+                }
+                let in_flight = if coordinate {
+                    st.flights
+                        .iter()
+                        .find(|(k, _)| k.0 == pocket && k.1 == group)
+                        .map(|(_, m)| m.clone())
+                } else {
+                    None
+                };
+                match in_flight {
+                    Some(m) => m,
+                    None => {
+                        // become a computing thread: register and lock the
+                        // flight *while still holding the state lock*, so
+                        // no waiter can grab the mutex first and busy-spin
+                        let key: DecodeKey = (pocket, group.to_string());
+                        let m = Arc::new(Mutex::new(()));
+                        if coordinate {
+                            st.flights.push((key.clone(), m.clone()));
+                        }
+                        let guard = m.lock().unwrap();
+                        drop(st);
+                        let result = f();
+                        self.misses.fetch_add(1, Ordering::Relaxed);
+                        let mut st = self.state.lock().unwrap();
+                        if coordinate {
+                            st.flights.retain(|(k, _)| *k != key);
+                        }
+                        let out = result.map(|v| {
+                            self.insert_locked(&mut st, key, v.clone());
+                            (v, false)
+                        });
+                        drop(st);
+                        drop(guard);
+                        return out;
+                    }
+                }
+            };
+            // another thread is decoding this key: wait for it, then retry
+            // (hit in the common case; recompute if it was uncacheable)
+            drop(wait.lock().unwrap());
+            waited = true;
+        }
+    }
+
+    fn insert_locked(&self, st: &mut State, key: DecodeKey, value: Arc<TensorF32>) {
+        let bytes = Self::tensor_bytes(&value);
+        if bytes > self.budget {
+            self.uncacheable.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if let Some(pos) = st.entries.iter().position(|e| e.key == key) {
+            let old = st.entries.remove(pos);
+            st.resident -= old.bytes;
+        }
+        while st.resident + bytes > self.budget {
+            let evicted = st.entries.pop().expect("resident bytes imply entries");
+            st.resident -= evicted.bytes;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        st.resident += bytes;
+        st.entries.insert(0, Entry { key, value, bytes });
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        let st = self.state.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            uncacheable: self.uncacheable.load(Ordering::Relaxed),
+            resident_bytes: st.resident,
+            entries: st.entries.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(vals: usize) -> Arc<TensorF32> {
+        Arc::new(TensorF32::new(vec![vals], vec![1.0; vals]))
+    }
+
+    fn k(id: u64, g: &str) -> DecodeKey {
+        (id, g.to_string())
+    }
+
+    #[test]
+    fn lru_evicts_by_bytes_not_count() {
+        let c = DecodeCache::with_budget(100); // room for 25 f32s
+        c.get_or_try_insert_with(1, "a", || Ok::<_, ()>(t(10))).unwrap(); // 40 B
+        c.get_or_try_insert_with(1, "b", || Ok::<_, ()>(t(10))).unwrap(); // 80 B
+        assert_eq!(c.stats().resident_bytes, 80);
+        // touching "a" makes "b" the LRU victim
+        assert!(c.get(1, "a").is_some());
+        c.get_or_try_insert_with(1, "c", || Ok::<_, ()>(t(10))).unwrap(); // evicts b
+        let st = c.stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.resident_bytes, 80);
+        assert_eq!(st.entries, 2);
+        assert!(c.get(1, "b").is_none());
+        assert!(c.get(1, "a").is_some() && c.get(1, "c").is_some());
+    }
+
+    #[test]
+    fn oversize_value_is_served_but_never_cached() {
+        let c = DecodeCache::with_budget(16);
+        let (v, hit) = c.get_or_try_insert_with(1, "big", || Ok::<_, ()>(t(100))).unwrap();
+        assert_eq!(v.data.len(), 100);
+        assert!(!hit);
+        let st = c.stats();
+        assert_eq!((st.uncacheable, st.entries, st.resident_bytes), (1, 0, 0));
+        // a second request recomputes
+        let (_, hit) = c.get_or_try_insert_with(1, "big", || Ok::<_, ()>(t(100))).unwrap();
+        assert!(!hit);
+        assert_eq!(c.stats().misses, 2);
+    }
+
+    #[test]
+    fn zero_budget_disables_caching() {
+        let c = DecodeCache::with_budget(0);
+        for _ in 0..3 {
+            let (_, hit) = c.get_or_try_insert_with(1, "g", || Ok::<_, ()>(t(4))).unwrap();
+            assert!(!hit);
+        }
+        let st = c.stats();
+        assert_eq!((st.misses, st.hits, st.entries), (3, 0, 0));
+        assert_eq!(st.uncacheable, 3);
+    }
+
+    #[test]
+    fn errors_propagate_and_release_the_flight() {
+        let c = DecodeCache::with_budget(1000);
+        let e = c.get_or_try_insert_with(1, "g", || Err::<Arc<TensorF32>, _>("boom"));
+        assert_eq!(e.unwrap_err(), "boom");
+        // the key is retryable and the flight is gone
+        let (_, hit) = c.get_or_try_insert_with(1, "g", || Ok::<_, ()>(t(2))).unwrap();
+        assert!(!hit);
+        assert!(c.get(1, "g").is_some());
+    }
+
+    #[test]
+    fn replacing_a_key_adjusts_resident_bytes() {
+        let c = DecodeCache::with_budget(1000);
+        c.get_or_try_insert_with(1, "g", || Ok::<_, ()>(t(10))).unwrap();
+        assert_eq!(c.stats().resident_bytes, 40);
+        // direct re-insert path (e.g. after an uncached recompute)
+        let mut st = c.state.lock().unwrap();
+        c.insert_locked(&mut st, k(1, "g"), t(5));
+        drop(st);
+        let st = c.stats();
+        assert_eq!((st.resident_bytes, st.entries), (20, 1));
+    }
+
+    #[test]
+    fn single_flight_dedupes_concurrent_misses() {
+        use std::sync::atomic::AtomicUsize;
+        let c = DecodeCache::with_budget(1 << 20);
+        let computed = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let (v, _) = c
+                        .get_or_try_insert_with(7, "g", || {
+                            computed.fetch_add(1, Ordering::SeqCst);
+                            // widen the race window
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            Ok::<_, ()>(t(16))
+                        })
+                        .unwrap();
+                    assert_eq!(v.data.len(), 16);
+                });
+            }
+        });
+        assert_eq!(computed.load(Ordering::SeqCst), 1, "decode ran more than once");
+        let st = c.stats();
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.hits, 7);
+    }
+
+    #[test]
+    fn uncacheable_keys_do_not_serialize_after_the_first_wait() {
+        use std::sync::atomic::AtomicUsize;
+        // budget too small to cache: every thread must end up computing,
+        // and a thread that waited once must not queue behind new flights
+        let c = DecodeCache::with_budget(8);
+        let computed = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..6 {
+                s.spawn(|| {
+                    let (v, hit) = c
+                        .get_or_try_insert_with(9, "g", || {
+                            computed.fetch_add(1, Ordering::SeqCst);
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                            Ok::<_, ()>(t(16))
+                        })
+                        .unwrap();
+                    assert!(!hit);
+                    assert_eq!(v.data.len(), 16);
+                });
+            }
+        });
+        assert_eq!(computed.load(Ordering::SeqCst), 6, "every request must decode");
+        let st = c.stats();
+        assert_eq!((st.misses, st.hits), (6, 0));
+        assert_eq!(st.uncacheable, 6);
+        assert_eq!(st.entries, 0);
+    }
+
+    #[test]
+    fn pocket_ids_are_unique_and_isolate_readers() {
+        let a = DecodeCache::next_pocket_id();
+        let b = DecodeCache::next_pocket_id();
+        assert_ne!(a, b);
+        let c = DecodeCache::with_budget(1000);
+        c.get_or_try_insert_with(a, "g", || Ok::<_, ()>(t(3))).unwrap();
+        assert!(c.get(b, "g").is_none(), "keys must not alias across pockets");
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod benchlib;
 pub mod bitpack;
+pub mod cache;
 pub mod cli;
 pub mod f16;
 pub mod json;

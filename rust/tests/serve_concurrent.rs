@@ -1,0 +1,272 @@
+//! Integration tests for the zero-copy serving core:
+//!
+//! * N threads hammering `decode_group`/`tensor` on one shared byte-budget
+//!   cache produce bit-identical results, never deadlock, and fetch each
+//!   group's section from the source **exactly once** (single-flight);
+//! * a budget smaller than one decoded group still serves every request —
+//!   it just never caches (and the counters say so);
+//! * `ChunkedSource` (the hermetic HTTP range-request stand-in): a ranged
+//!   open reads only header + TOC chunks, and decoding one group fetches
+//!   only that group's ranges;
+//! * `MmapSource` decodes bit-identically to the in-memory path;
+//! * two readers sharing one `DecodeCache` compete under one byte budget
+//!   (cross-reader eviction, no key aliasing);
+//! * the `Session::serve` / `PocketServer` layer fans a mixed request list
+//!   over worker threads against the shared cache.
+//!
+//! Everything runs hermetically on the pure-Rust reference backend.
+
+use std::sync::Arc;
+
+use pocketllm::coordinator::reconstruct_from_pocket;
+use pocketllm::model::group_rows;
+use pocketllm::packfmt::{ChunkedSource, PocketFile, PocketReader};
+use pocketllm::serve::ServeRequest;
+use pocketllm::session::Session;
+use pocketllm::DecodeCache;
+
+/// One quick two-group compression, shared by the tests below.
+fn compressed_pocket(session: &Session) -> PocketFile {
+    use pocketllm::coordinator::lm;
+    use pocketllm::data::Corpus;
+    let corpus = Corpus::new(512, 77);
+    let (ws, _) = lm::train_lm(session.runtime(), "tiny", &corpus, 6, 3, 0).unwrap();
+    session
+        .compress(&ws)
+        .preset("p16x")
+        .groups(["q", "up"])
+        .steps(40)
+        .kmeans_iters(1)
+        .post_steps(8)
+        .seed(1)
+        .run()
+        .unwrap()
+        .pocket
+}
+
+#[test]
+fn concurrent_threads_share_one_fetch_and_decode_per_group() {
+    let session = Session::reference();
+    let pocket = compressed_pocket(&session);
+    let reader = Arc::new(PocketReader::from_bytes(pocket.to_bytes()).unwrap());
+
+    // ground truth from the serialized container (codebook goes through f16)
+    let direct =
+        reconstruct_from_pocket(session.runtime(), &PocketFile::from_bytes(&pocket.to_bytes()).unwrap())
+            .unwrap();
+    let expect_q = group_rows(&direct, "q").unwrap();
+    let expect_up = group_rows(&direct, "up").unwrap();
+    let e = direct.cfg.layout.find("b0.wq").unwrap();
+    let expect_wq = direct.flat[e.offset..e.offset + e.size].to_vec();
+
+    const THREADS: usize = 8;
+    const ITERS: usize = 10;
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            s.spawn(|| {
+                let rt = session.runtime();
+                for _ in 0..ITERS {
+                    let q = reader.decode_group(rt, "q").unwrap();
+                    assert_eq!(q.data, expect_q.data, "concurrent decode diverged");
+                    let up = reader.decode_group(rt, "up").unwrap();
+                    assert_eq!(up.data, expect_up.data);
+                    let wq = reader.tensor(rt, "b0.wq").unwrap();
+                    assert_eq!(wq, expect_wq);
+                }
+            });
+        }
+    });
+
+    let st = reader.stats();
+    // the load-bearing claim: 240 decode-path calls, 2 section fetches
+    assert_eq!(st.group_sections_read, 2, "a group section was fetched more than once");
+    assert_eq!(st.group_decodes, 2, "a group was decoded more than once across threads");
+    // every call either decoded or hit the cache (tensor() decodes through
+    // its group, so 3 decode-path calls per iteration)
+    let calls = (THREADS * ITERS * 3) as u64;
+    assert_eq!(st.cache_hits + st.group_decodes, calls);
+    // eviction counters consistent: nothing was evicted, both groups resident
+    assert_eq!(st.cache.evictions, 0);
+    assert_eq!(st.cache.entries, 2);
+    let expect_resident = 4 * (expect_q.data.len() + expect_up.data.len()) as u64;
+    assert_eq!(st.cache.resident_bytes, expect_resident);
+    assert_eq!(st.cache.hits, st.cache_hits);
+    assert_eq!(st.cache.misses, st.group_decodes);
+}
+
+#[test]
+fn budget_smaller_than_one_group_still_serves_but_never_caches() {
+    let session = Session::reference();
+    let pocket = compressed_pocket(&session);
+    // 64 bytes is far below any decoded group in this pocket
+    let reader =
+        Arc::new(PocketReader::from_bytes(pocket.to_bytes()).unwrap().with_cache_budget(64));
+    let direct =
+        reconstruct_from_pocket(session.runtime(), &PocketFile::from_bytes(&pocket.to_bytes()).unwrap())
+            .unwrap();
+    let expect_q = group_rows(&direct, "q").unwrap();
+
+    const THREADS: usize = 8;
+    const ITERS: usize = 5;
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            s.spawn(|| {
+                for _ in 0..ITERS {
+                    let q = reader.decode_group(session.runtime(), "q").unwrap();
+                    assert_eq!(q.data, expect_q.data);
+                }
+            });
+        }
+    });
+
+    let st = reader.stats();
+    let calls = (THREADS * ITERS) as u64;
+    assert_eq!(st.group_decodes, calls, "an oversize group must decode every time");
+    assert_eq!(st.cache_hits, 0);
+    assert_eq!(st.cache.uncacheable, calls);
+    assert_eq!(st.cache.resident_bytes, 0);
+    assert_eq!(st.cache.entries, 0);
+    assert_eq!(st.group_sections_read, calls, "each decode re-reads the section");
+}
+
+#[test]
+fn chunked_source_open_and_single_decode_fetch_only_their_ranges() {
+    let session = Session::reference();
+    let pocket = compressed_pocket(&session);
+    let bytes = pocket.to_bytes();
+    let total = bytes.len() as u64;
+    let chunk = 256u64;
+
+    let src = ChunkedSource::new(bytes, chunk);
+    let reader = PocketReader::with_source(src.clone()).unwrap();
+
+    // a ranged open reads only header + TOC bytes (chunk-rounded)
+    let header_cover = reader.header_bytes().div_ceil(chunk) * chunk;
+    let open_ranges = src.range_log();
+    assert!(!open_ranges.is_empty());
+    for (off, len) in &open_ranges {
+        assert!(off + len <= header_cover.min(total), "open fetched past the TOC");
+    }
+    assert!(src.bytes_fetched() < total, "open must not download the container");
+    let open_count = open_ranges.len();
+
+    // decoding one group fetches only that group's ranges
+    let (q_off, q_len) = reader.section_span("q").unwrap();
+    reader.decode_group(session.runtime(), "q").unwrap();
+    let log = src.range_log();
+    let fetched = &log[open_count..];
+    assert!(!fetched.is_empty(), "decode must fetch the group's section");
+    let lo = q_off / chunk * chunk;
+    let hi = ((q_off + q_len).div_ceil(chunk) * chunk).min(total);
+    for (off, len) in fetched {
+        assert!(
+            *off >= lo && off + len <= hi,
+            "range {off}+{len} is outside group q's span [{lo}, {hi})"
+        );
+    }
+    // ... which also means the "up" group and the dense residue (both past
+    // q's chunk cover) were never downloaded
+    assert!(src.bytes_fetched() < total);
+
+    // a second decode is a cache hit: zero new ranges
+    let before = src.ranges_fetched();
+    reader.decode_group(session.runtime(), "q").unwrap();
+    assert_eq!(src.ranges_fetched(), before, "cache hit re-fetched ranges");
+}
+
+#[cfg(unix)]
+#[test]
+fn mmap_open_decodes_bit_identically_to_memory() {
+    use pocketllm::packfmt::MmapSource;
+    let session = Session::reference();
+    let pocket = compressed_pocket(&session);
+    let bytes = pocket.to_bytes();
+    let path = std::env::temp_dir().join("pocketllm_test_mmap_parity.pocket");
+    std::fs::write(&path, &bytes).unwrap();
+
+    let via_mmap = PocketReader::with_source(MmapSource::open(&path).unwrap()).unwrap();
+    let via_mem = PocketReader::from_bytes(bytes).unwrap();
+    let a = via_mmap.reconstruct_all(session.runtime()).unwrap();
+    let b = via_mem.reconstruct_all(session.runtime()).unwrap();
+    assert_eq!(a.flat, b.flat, "mmap decode diverged from the in-memory path");
+    assert_eq!(via_mmap.stats().bytes_read, via_mem.stats().bytes_read);
+
+    // the default open() goes through the mmap/file auto-pick and agrees too
+    let via_open = PocketReader::open(&path).unwrap();
+    let c = via_open.reconstruct_all(session.runtime()).unwrap();
+    assert_eq!(a.flat, c.flat);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn two_readers_share_one_cache_under_one_budget() {
+    let session = Session::reference();
+    let pocket = compressed_pocket(&session);
+    let bytes: Arc<[u8]> = pocket.to_bytes().into();
+
+    // generous budget: both readers' "q" groups fit side by side
+    let probe = PocketReader::from_bytes(bytes.clone()).unwrap();
+    let q_bytes = {
+        let rows = probe.decode_group(session.runtime(), "q").unwrap();
+        4 * rows.data.len() as u64
+    };
+    let cache = DecodeCache::with_budget(2 * q_bytes);
+    let a = PocketReader::from_bytes(bytes.clone()).unwrap().with_shared_cache(cache.clone());
+    let b = PocketReader::from_bytes(bytes.clone()).unwrap().with_shared_cache(cache.clone());
+    let qa = a.decode_group(session.runtime(), "q").unwrap();
+    let qb = b.decode_group(session.runtime(), "q").unwrap();
+    assert_eq!(qa.data, qb.data);
+    let st = cache.stats();
+    // keys are namespaced per reader: same group name, two entries
+    assert_eq!(st.entries, 2, "readers must not alias cache keys");
+    assert_eq!(st.resident_bytes, 2 * q_bytes);
+
+    // tight budget: the second reader's decode evicts the first's
+    let tight = DecodeCache::with_budget(q_bytes);
+    let a = PocketReader::from_bytes(bytes.clone()).unwrap().with_shared_cache(tight.clone());
+    let b = PocketReader::from_bytes(bytes.clone()).unwrap().with_shared_cache(tight.clone());
+    a.decode_group(session.runtime(), "q").unwrap();
+    b.decode_group(session.runtime(), "q").unwrap();
+    let st = tight.stats();
+    assert_eq!(st.evictions, 1, "shared budget must evict across readers");
+    assert_eq!(st.entries, 1);
+    assert_eq!(st.resident_bytes, q_bytes);
+    // reader a's next decode misses again (it was evicted), and works
+    let s_before = a.stats().group_decodes;
+    a.decode_group(session.runtime(), "q").unwrap();
+    assert_eq!(a.stats().group_decodes, s_before + 1);
+}
+
+#[test]
+fn serve_layer_fans_mixed_requests_over_workers() {
+    let session = Session::reference();
+    let pocket = compressed_pocket(&session);
+    let reader = Arc::new(PocketReader::from_bytes(pocket.to_bytes()).unwrap());
+
+    let mut requests = Vec::new();
+    for i in 0..60 {
+        requests.push(match i % 3 {
+            0 => ServeRequest::Group(if i % 2 == 0 { "q" } else { "up" }.to_string()),
+            1 => ServeRequest::Tensor("b0.wq".to_string()),
+            _ => ServeRequest::Tensor("b0.wv".to_string()), // dense residue
+        });
+    }
+    requests.push(ServeRequest::Eval { ppl_batches: 1 });
+
+    let report = session.serve(reader.clone()).workers(4).run(&requests).unwrap();
+    assert_eq!(report.requests, requests.len());
+    assert_eq!(report.workers, 4);
+    assert!(report.rps() > 0.0);
+    let st = reader.stats();
+    assert_eq!(st.group_sections_read, 2, "each group section fetched exactly once");
+    assert_eq!(st.group_decodes, 2);
+    assert!(report.cache_hit_rate() > 0.5, "warm serving must mostly hit the cache");
+
+    // unknown names surface as typed errors, not hangs
+    let err = session
+        .serve(reader)
+        .workers(2)
+        .run(&[ServeRequest::Group("nope".into())])
+        .unwrap_err();
+    assert!(matches!(err, pocketllm::Error::UnknownGroup { .. }), "{err:?}");
+}
