@@ -18,6 +18,7 @@ echo "== CLI smoke (reference backend) =="
 echo "== examples (Session/PocketReader surface, reference backend) =="
 cargo run --release --example quickstart
 cargo run --release --example serve_concurrent
+cargo run --release --example remote_stream
 POCKET_FAST=1 cargo run --release --example e2e_train_compress_eval
 
 echo "== perf snapshot (compress + lazy decode -> BENCH_compress.json) =="
@@ -26,9 +27,9 @@ test -f ../BENCH_compress.json
 echo "BENCH_compress.json:"
 cat ../BENCH_compress.json
 
-echo "== serve-bench (concurrent shared-cache serve path -> BENCH_serve.json) =="
+echo "== serve-bench (concurrent shared-cache serve path + loopback remote streaming -> BENCH_serve.json) =="
 ./target/release/pocketllm serve-bench --backend reference \
-  --threads 4 --requests 200 --eval-every 50 --check --json ../BENCH_serve.json
+  --threads 4 --requests 200 --eval-every 50 --remote --check --json ../BENCH_serve.json
 test -f ../BENCH_serve.json
 echo "BENCH_serve.json:"
 cat ../BENCH_serve.json

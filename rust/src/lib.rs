@@ -36,9 +36,11 @@
 //!
 //! * [`PocketReader`] — the serving side.  Opens the seekable **POCKET02**
 //!   container (legacy POCKET01 reads transparently) through a
-//!   [`SectionSource`] (mmap / file / shared memory / range streaming),
-//!   pulls only the header + table of contents, and decodes *one group or
-//!   one named tensor on demand* through the backend.  Decoded groups live
+//!   [`SectionSource`] (mmap / file / shared memory / HTTP range streaming
+//!   via [`PocketReader::open_url`], with TOC-guided prefetch coalescing
+//!   and retry-with-backoff), pulls only the header + table of contents,
+//!   and decodes *one group or one named tensor on demand* through the
+//!   backend.  Decoded groups live
 //!   in a byte-budget [`DecodeCache`] shareable across readers and threads,
 //!   with byte/decode/hit counters — exactly the "download a small decoder,
 //!   a concise codebook, and an index" edge story of the paper.
@@ -86,7 +88,10 @@ pub mod tensor;
 pub mod util;
 
 pub use error::Error;
-pub use packfmt::{PocketReader, ReaderStats, SectionSource};
+pub use packfmt::{
+    HttpOptions, HttpSource, PocketReader, PrefetchPlan, ReaderStats, RetryPolicy, SectionSource,
+    SourceStats,
+};
 pub use serve::{PocketServer, ServeReport, ServeRequest};
 pub use session::{BackendKind, Session, SessionBuilder};
 pub use util::cache::{CacheStats, DecodeCache};

@@ -49,7 +49,7 @@ fn session_for(args: &Args) -> Result<Session> {
 
 fn run() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_else(|| "help".to_string());
-    let args = Args::parse_env(2, &["no-finetune", "verbose", "check"])?;
+    let args = Args::parse_env(2, &["no-finetune", "verbose", "check", "remote"])?;
     match cmd.as_str() {
         "info" => cmd_info(&args),
         "train-lm" => cmd_train_lm(&args),
@@ -70,8 +70,9 @@ fn run() -> Result<()> {
                  \x20 reconstruct  pocket -> dense weights    (--pocket m.pocket --out w2.bin)\n\
                  \x20 eval         ppl + zero-shot accuracy   (--model tiny --weights w.bin | --pocket m.pocket)\n\
                  \x20 serve-bench  concurrent serve path      (--pocket m.pocket --threads 4 --requests 200\n\
-                 \x20              [--eval-every K] [--chunk BYTES] [--json out.json] [--check];\n\
-                 \x20              no --pocket: a tiny pocket is synthesized)\n\
+                 \x20              [--eval-every K] [--chunk BYTES] [--remote] [--json out.json]\n\
+                 \x20              [--check]; no --pocket: a tiny pocket is synthesized;\n\
+                 \x20              --remote adds a loopback HTTP range-streaming phase)\n\
                  \n\
                  global options:\n\
                  \x20 --backend pjrt|reference|auto   execution backend (default auto:\n\
@@ -234,12 +235,15 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // per group are needed for the fetch-once check to cover every group
     let n_requests = n_requests.max(2 * groups.len());
     // size the warm budget from the container so the fetch-once invariant
-    // holds even for pockets whose decoded groups exceed the default budget
-    let warm_budget = groups
-        .iter()
-        .filter_map(|g| probe.decoded_group_bytes(g))
-        .sum::<u64>()
-        .max(DecodeCache::DEFAULT_BUDGET);
+    // holds even for pockets whose decoded groups exceed the default budget;
+    // dense residue rides the same cache now, so budget for it too
+    let warm_budget = {
+        let group_bytes: u64 =
+            groups.iter().filter_map(|g| probe.decoded_group_bytes(g)).sum();
+        let dense_bytes: u64 =
+            probe.dense_names().iter().filter_map(|n| probe.section_length(n)).sum();
+        (group_bytes + dense_bytes).max(DecodeCache::DEFAULT_BUDGET)
+    };
 
     // serve through the range-request simulator when --chunk is given, the
     // shared in-memory buffer otherwise
@@ -284,6 +288,75 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let warm = server.run(&decode_mix)?;
     let mixed = server.run(&mixed_mix)?;
 
+    // optional remote streaming phase: the same container served by an
+    // in-process loopback HTTP/1.1 range server, decoded through HttpSource
+    struct RemotePhase {
+        cold_rps: f64,
+        warm_rps: f64,
+        plan_windows: usize,
+        windows_touched: usize,
+        warm_ranges: u64,
+        warm_bytes: u64,
+        retries: u64,
+        ranges_are_windows: bool,
+    }
+    let remote: Option<RemotePhase> = if args.flag("remote") {
+        use pocketllm::packfmt::{HttpOptions, HttpSource, PrefetchPlan};
+        use pocketllm::util::testserver::RangeServer;
+        let range_server = RangeServer::serve(buf.clone())?;
+        eprintln!("[serve-bench] remote phase: loopback range server at {}", range_server.url());
+
+        // remote-cold: no prefetch plan, no decode cache — every group
+        // request is one per-section HTTP range fetch + backend decode
+        let cold_src = HttpSource::connect(&range_server.url())?;
+        let cold_reader =
+            Arc::new(PocketReader::with_source(cold_src)?.with_cache_budget(0));
+        let remote_cold = session.serve(cold_reader).workers(threads).run(&decode_mix)?;
+
+        // remote-warm: TOC-guided prefetch plan + shared decode cache — one
+        // coalesced window fetch per window, then cache hits.  The window
+        // cache must hold the whole plan, or a big --pocket could evict and
+        // refetch a window mid-run and spuriously fail the fetch-once check
+        let plan_len = probe
+            .prefetch_plan(PrefetchPlan::DEFAULT_MAX_GAP, PrefetchPlan::DEFAULT_MAX_WINDOW)
+            .len();
+        let warm_src = HttpSource::connect_with(
+            &range_server.url(),
+            HttpOptions { max_windows: plan_len.max(16), ..HttpOptions::default() },
+        )?;
+        let warm_handle = warm_src.clone();
+        let warm_reader =
+            Arc::new(PocketReader::open_http(warm_src)?.with_cache_budget(warm_budget));
+        let after_open = warm_handle.ranges_fetched();
+        let open_bytes = warm_handle.bytes_fetched();
+        let open_log_len = warm_handle.range_log().len();
+        let remote_warm = session.serve(warm_reader).workers(threads).run(&decode_mix)?;
+
+        let plan = warm_handle.plan();
+        let mut touched: Vec<(u64, u64)> = groups
+            .iter()
+            .filter_map(|g| probe.section_span(g))
+            .filter_map(|(off, len)| plan.window_covering(off, len))
+            .collect();
+        touched.sort_unstable();
+        touched.dedup();
+        let log = warm_handle.range_log();
+        let ranges_are_windows =
+            log[open_log_len..].iter().all(|r| plan.windows().contains(r));
+        Some(RemotePhase {
+            cold_rps: remote_cold.rps(),
+            warm_rps: remote_warm.rps(),
+            plan_windows: plan.len(),
+            windows_touched: touched.len(),
+            warm_ranges: warm_handle.ranges_fetched() - after_open,
+            warm_bytes: warm_handle.bytes_fetched() - open_bytes,
+            retries: warm_handle.retries(),
+            ranges_are_windows,
+        })
+    } else {
+        None
+    };
+
     let speedup = warm.rps() / cold.rps().max(1e-12);
     // the mixed report carries the warm reader's final counter snapshot
     let st = mixed.stats;
@@ -312,6 +385,23 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         format!("{:.0}", mixed.rps()),
         format!("{n_evals} eval probes riding the warm cache"),
     ]);
+    if let Some(r) = &remote {
+        t.row(vec![
+            "remote-cold".into(),
+            format!("{n_requests}"),
+            format!("{:.0}", r.cold_rps),
+            "loopback HTTP, per-section fetches, no cache".into(),
+        ]);
+        t.row(vec![
+            "remote-warm".into(),
+            format!("{n_requests}"),
+            format!("{:.0}", r.warm_rps),
+            format!(
+                "{} coalesced window fetches ({} windows planned), {} retries",
+                r.warm_ranges, r.plan_windows, r.retries
+            ),
+        ]);
+    }
     t.emit(None);
     println!(
         "cache: hit rate {:.1}% ({} hits / {} decodes), resident {} KiB, {} evictions; \
@@ -326,7 +416,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     );
 
     if let Some(path) = args.get("json") {
-        let j = obj(vec![
+        let mut fields = vec![
             ("backend", s(session.backend_name())),
             ("threads", num(threads as f64)),
             ("requests", num(n_requests as f64)),
@@ -341,7 +431,23 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             ("group_sections_read", num(st.group_sections_read as f64)),
             ("group_decodes", num(st.group_decodes as f64)),
             ("cache_resident_bytes", num(st.cache.resident_bytes as f64)),
-        ]);
+        ];
+        if let Some(r) = &remote {
+            fields.push((
+                "remote",
+                obj(vec![
+                    ("cold_rps", num(r.cold_rps)),
+                    ("warm_rps", num(r.warm_rps)),
+                    ("warm_over_cold", num(r.warm_rps / r.cold_rps.max(1e-12))),
+                    ("plan_windows", num(r.plan_windows as f64)),
+                    ("windows_touched", num(r.windows_touched as f64)),
+                    ("warm_window_fetches", num(r.warm_ranges as f64)),
+                    ("warm_bytes_fetched", num(r.warm_bytes as f64)),
+                    ("retries", num(r.retries as f64)),
+                ]),
+            ));
+        }
+        let j = obj(fields);
         pocketllm::util::benchlib::write_report(path, &j);
         println!("[serve-bench] wrote {path}");
     }
@@ -363,7 +469,28 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 st.group_sections_read
             );
         }
-        println!("[serve-bench] checks passed: warm {speedup:.1}x cold, one fetch per group");
+        if let Some(r) = &remote {
+            ensure!(
+                r.warm_rps >= r.cold_rps,
+                "remote warm throughput ({:.0} rps) fell below remote cold ({:.0} rps)",
+                r.warm_rps,
+                r.cold_rps
+            );
+            ensure!(
+                r.warm_ranges == r.windows_touched as u64,
+                "expected one fetch per coalesced window ({} touched), got {} fetches",
+                r.windows_touched,
+                r.warm_ranges
+            );
+            ensure!(
+                r.ranges_are_windows,
+                "a warm remote fetch was not a whole coalesced window"
+            );
+        }
+        println!(
+            "[serve-bench] checks passed: warm {speedup:.1}x cold, one fetch per group{}",
+            if remote.is_some() { ", one remote fetch per coalesced window" } else { "" }
+        );
     }
     Ok(())
 }

@@ -32,19 +32,25 @@
 //!
 //! The byte layer under the reader is the public [`SectionSource`] trait
 //! ([`source`] module): mmap (zero-copy, unix), positional file reads,
-//! shared in-memory buffers, or a chunked range-request simulator for
-//! hermetic streaming tests.
+//! shared in-memory buffers, a chunked range-request simulator for
+//! hermetic streaming tests, or — the real remote transport — the
+//! [`remote`] module's [`HttpSource`]: HTTP/1.1 range requests with a
+//! TOC-guided [`PrefetchPlan`] and retry-with-backoff, opened via
+//! [`PocketReader::open_url`] and tested offline against the in-process
+//! loopback range server in [`crate::util::testserver`].
 //!
 //! All parse failures surface as [`crate::Error::Format`] with the byte
 //! offset where the problem was detected.
 
 pub mod reader;
+pub mod remote;
 pub mod source;
 
 pub use reader::{PocketReader, ReaderStats};
+pub use remote::{HttpOptions, HttpSource, PrefetchPlan, RetryPolicy};
 #[cfg(unix)]
 pub use source::MmapSource;
-pub use source::{ChunkedSource, FileSource, MemSource, SectionBytes, SectionSource};
+pub use source::{ChunkedSource, FileSource, MemSource, SectionBytes, SectionSource, SourceStats};
 
 use std::collections::BTreeMap;
 use std::path::Path;

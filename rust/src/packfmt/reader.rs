@@ -5,7 +5,8 @@
 //! whole dense model to answer a query that touches one layer group.  A
 //! `PocketReader` opens a **POCKET02** container through a
 //! [`SectionSource`] (mmap, positional file reads, shared memory, or a
-//! range-request transport), reads only the header + table of contents, and
+//! range-request transport — including real HTTP streaming via
+//! [`PocketReader::open_url`]), reads only the header + table of contents, and
 //! then decodes *one group or one named tensor at a time* through the
 //! backend, pulling exactly that group's section (verified by checksum) —
 //! zero-copy when the source supports borrowed slices.
@@ -37,7 +38,8 @@ use crate::runtime::Runtime;
 use crate::tensor::TensorF32;
 use crate::util::cache::{CacheStats, DecodeCache};
 
-use super::source::{open_path, MemSource, SectionBytes, SectionSource};
+use super::remote::{HttpOptions, HttpSource, PrefetchPlan};
+use super::source::{open_path, MemSource, SectionBytes, SectionSource, SourceStats};
 use super::{
     decoded_bytes, parse_dense_payload, parse_group_payload, parse_header_v2, verify_checksum, GroupRecord,
     PocketFile, SectionKind, TocEntry, MAGIC_V1, MAGIC_V2,
@@ -55,12 +57,21 @@ pub struct ReaderStats {
     /// Group sections fetched — with an adequate cache budget this stays at
     /// one per group no matter how many threads request decodes.
     pub group_sections_read: u64,
+    /// Dense residue sections fetched.  Dense payloads are admitted to the
+    /// same shared cache as decoded groups, so with an adequate budget this
+    /// too stays at one per section no matter how many requests touch it.
+    pub dense_sections_read: u64,
     /// Backend decode runs (one per cache miss on a group).
     pub group_decodes: u64,
     /// Decoded-group requests answered from the cache.
     pub cache_hits: u64,
+    /// Dense-residue requests answered from the cache.
+    pub dense_hits: u64,
     /// Shared decode-cache counters (hits/misses/evictions/resident bytes).
     pub cache: CacheStats,
+    /// Range-transport fetch counters ([`ChunkedSource`](super::ChunkedSource)
+    /// / [`HttpSource`]); `None` for local sources and eager containers.
+    pub source: Option<SourceStats>,
 }
 
 enum Inner {
@@ -87,8 +98,10 @@ pub struct PocketReader {
     bytes_read: AtomicU64,
     sections_read: AtomicU64,
     group_sections_read: AtomicU64,
+    dense_sections_read: AtomicU64,
     group_decodes: AtomicU64,
     cache_hits: AtomicU64,
+    dense_hits: AtomicU64,
 }
 
 impl PocketReader {
@@ -172,6 +185,54 @@ impl PocketReader {
         Self::lazy(&header, src, total)
     }
 
+    /// Open a pocket container served over HTTP (`http://host[:port]/path`)
+    /// for **remote streaming**: connect (one `HEAD` to learn the length),
+    /// read only the header + TOC over ranged `GET`s, then install a
+    /// TOC-guided [`PrefetchPlan`] on the source so section reads coalesce
+    /// adjacent groups/residue into bounded fetch windows — N sections per
+    /// window become one round trip, fetched once while the window stays
+    /// resident.  Transport failures retry with backoff inside the source
+    /// and surface as [`Error::Io`] when exhausted; container corruption is
+    /// still [`Error::Format`].
+    pub fn open_url(url: &str) -> Result<PocketReader, Error> {
+        Self::open_url_with(url, HttpOptions::default())
+    }
+
+    /// [`PocketReader::open_url`] with explicit timeout/retry/window-cache
+    /// options.
+    pub fn open_url_with(url: &str, opts: HttpOptions) -> Result<PocketReader, Error> {
+        let src = HttpSource::connect_with(url, opts)
+            .map_err(|e| Error::Io { path: url.to_string(), source: e })?;
+        Self::open_http(src)
+    }
+
+    /// Open over an already-connected [`HttpSource`] (e.g. one built with a
+    /// custom [`RetryPolicy`](super::RetryPolicy)), installing the
+    /// TOC-guided prefetch plan on it.  Keep a clone of the source to
+    /// observe its fetch counters and range log.
+    pub fn open_http(src: HttpSource) -> Result<PocketReader, Error> {
+        let handle = src.clone();
+        let reader = Self::with_source(src)?;
+        handle.install_plan(
+            reader.prefetch_plan(PrefetchPlan::DEFAULT_MAX_GAP, PrefetchPlan::DEFAULT_MAX_WINDOW),
+        );
+        Ok(reader)
+    }
+
+    /// The TOC-guided fetch-coalescing plan for this container: every group
+    /// and dense section span, coalesced under `(max_gap, max_window)`.
+    /// Empty for eager (TOC-less) containers.
+    pub fn prefetch_plan(&self, max_gap: u64, max_window: u64) -> PrefetchPlan {
+        match &self.inner {
+            Inner::Lazy { groups, dense, .. } => PrefetchPlan::coalesce(
+                groups.values().chain(dense.values()).map(|e| (e.offset, e.length)),
+                max_gap,
+                max_window,
+            ),
+            Inner::Eager(_) => PrefetchPlan::default(),
+        }
+    }
+
     /// Wrap an in-memory [`PocketFile`] (e.g. straight out of
     /// `Session::compress`) without re-encoding it.  Decoding through this
     /// reader is bit-identical to the historical eager reconstruction.
@@ -200,8 +261,10 @@ impl PocketReader {
             bytes_read: AtomicU64::new(total_bytes),
             sections_read: AtomicU64::new(0),
             group_sections_read: AtomicU64::new(0),
+            dense_sections_read: AtomicU64::new(0),
             group_decodes: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
+            dense_hits: AtomicU64::new(0),
         }
     }
 
@@ -241,8 +304,10 @@ impl PocketReader {
             bytes_read: AtomicU64::new(header_len as u64),
             sections_read: AtomicU64::new(0),
             group_sections_read: AtomicU64::new(0),
+            dense_sections_read: AtomicU64::new(0),
             group_decodes: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
+            dense_hits: AtomicU64::new(0),
         })
     }
 
@@ -352,9 +417,15 @@ impl PocketReader {
             bytes_read: self.bytes_read.load(Ordering::Relaxed),
             sections_read: self.sections_read.load(Ordering::Relaxed),
             group_sections_read: self.group_sections_read.load(Ordering::Relaxed),
+            dense_sections_read: self.dense_sections_read.load(Ordering::Relaxed),
             group_decodes: self.group_decodes.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            dense_hits: self.dense_hits.load(Ordering::Relaxed),
             cache: self.cache.stats(),
+            source: match &self.inner {
+                Inner::Lazy { src, .. } => src.fetch_stats(),
+                Inner::Eager(_) => None,
+            },
         }
     }
 
@@ -372,9 +443,11 @@ impl PocketReader {
         verify_checksum(&payload, e)?;
         self.bytes_read.fetch_add(e.length, Ordering::Relaxed);
         self.sections_read.fetch_add(1, Ordering::Relaxed);
-        if e.kind == SectionKind::Group {
-            self.group_sections_read.fetch_add(1, Ordering::Relaxed);
+        match e.kind {
+            SectionKind::Group => &self.group_sections_read,
+            SectionKind::Dense => &self.dense_sections_read,
         }
+        .fetch_add(1, Ordering::Relaxed);
         Ok(payload)
     }
 
@@ -399,7 +472,12 @@ impl PocketReader {
         }
     }
 
-    /// One dense residue tensor by name.
+    /// One dense residue tensor by name.  Lazy mode fetches and parses the
+    /// section **once**, admitting it to the same shared [`DecodeCache`] as
+    /// decoded groups (namespaced keys, so a group and a residue tensor with
+    /// one name never alias): repeated requests — and remote transports —
+    /// stop re-reading the payload while it stays resident.  Concurrent
+    /// misses single-flight exactly like group decodes.
     pub fn dense_tensor(&self, name: &str) -> Result<Vec<f32>, Error> {
         match &self.inner {
             Inner::Lazy { src, dense, .. } => {
@@ -407,8 +485,17 @@ impl PocketReader {
                     kind: "dense tensor",
                     name: name.to_string(),
                 })?;
-                let payload = self.fetch_section(src.as_ref(), e)?;
-                parse_dense_payload(&payload, e)
+                let key = dense_key(name);
+                let (t, hit) =
+                    self.cache.get_or_try_insert_with(self.pocket_id, &key, || {
+                        let payload = self.fetch_section(src.as_ref(), e)?;
+                        let buf = parse_dense_payload(&payload, e)?;
+                        Ok::<_, Error>(Arc::new(TensorF32::new(vec![buf.len()], buf)))
+                    })?;
+                if hit {
+                    self.dense_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(t.data.clone())
             }
             Inner::Eager(pf) => pf.dense.get(name).cloned().ok_or_else(|| {
                 Error::UnknownConfig { kind: "dense tensor", name: name.to_string() }
@@ -555,6 +642,13 @@ impl PocketReader {
         }
         Ok(ws)
     }
+}
+
+/// Decode-cache key for a dense residue section.  Groups use the bare
+/// section name; the `\0` separator cannot occur in a section name, so the
+/// two namespaces never collide inside one shared cache.
+fn dense_key(name: &str) -> String {
+    format!("dense\0{name}")
 }
 
 /// Parse a layout tensor name of the form `b{block}.{tensor}` without
@@ -710,5 +804,50 @@ mod tests {
         for (off, len) in src.range_log() {
             assert!(off + len <= header_cover.min(total), "open fetched past the TOC");
         }
+        // the transport's fetch counters surface uniformly through stats()
+        let fetched = r.stats().source.expect("chunked transport must report fetch stats");
+        assert_eq!(fetched.ranges_fetched, src.ranges_fetched());
+        assert_eq!(fetched.bytes_fetched, src.bytes_fetched());
+        assert_eq!(fetched.retries, 0);
+    }
+
+    #[test]
+    fn dense_sections_are_cached_and_counted() {
+        let r = PocketReader::from_bytes(sample_file(19).to_bytes()).unwrap();
+        let a = r.dense_tensor("embed").unwrap();
+        let s1 = r.stats();
+        assert_eq!((s1.dense_sections_read, s1.dense_hits), (1, 0));
+        assert_eq!(s1.cache.entries, 1, "dense payload must enter the shared cache");
+        let b = r.dense_tensor("embed").unwrap();
+        assert_eq!(a, b);
+        let s2 = r.stats();
+        assert_eq!(s2.dense_sections_read, 1, "warm dense request re-read its section");
+        assert_eq!(s2.sections_read, 1);
+        assert_eq!(s2.dense_hits, 1);
+        // local in-memory source: no transport counters
+        assert!(s2.source.is_none());
+    }
+
+    #[test]
+    fn prefetch_plan_covers_every_section_and_coalesces() {
+        let pf = sample_file(20);
+        let r = PocketReader::from_bytes(pf.to_bytes()).unwrap();
+        let mut names = r.group_names();
+        names.extend(r.dense_names());
+        let plan =
+            r.prefetch_plan(PrefetchPlan::DEFAULT_MAX_GAP, PrefetchPlan::DEFAULT_MAX_WINDOW);
+        for n in &names {
+            let (off, len) = r.section_span(n).unwrap();
+            assert!(plan.window_covering(off, len).is_some(), "section {n} not covered");
+        }
+        // payload sections are written back-to-back: they coalesce fully
+        assert_eq!(plan.len(), 1, "adjacent sections must coalesce into one window");
+        // a degenerate policy (no gap bridging, 1-byte windows) goes
+        // per-section
+        let fine = r.prefetch_plan(0, 1);
+        assert_eq!(fine.len(), names.len());
+        // eager (TOC-less) containers have nothing to plan
+        let eager = PocketReader::from_bytes(pf.to_bytes_v1()).unwrap();
+        assert!(eager.prefetch_plan(4096, 1 << 20).is_empty());
     }
 }

@@ -1,0 +1,677 @@
+//! `HttpSource` — a real remote [`SectionSource`]: HTTP/1.1 range requests
+//! over `std::net::TcpStream`, no dependencies.
+//!
+//! This is the serving transport the ROADMAP names after the in-memory
+//! [`ChunkedSource`](super::source::ChunkedSource) simulator: an edge device
+//! opens a POCKET02 container *in place* on a remote host, reads only the
+//! header + TOC, and then streams exactly the sections its requests touch —
+//! the paper's "download a small decoder, a concise codebook, and an index"
+//! story without the download.
+//!
+//! Three pieces:
+//!
+//! * **Wire client** — a minimal HTTP/1.1 subset: `GET` with
+//!   `Range: bytes=a-b` (and one `HEAD` at connect to learn the container
+//!   length), `Connection: keep-alive` reuse of a single socket, responses
+//!   `200`/`206` honoured, `4xx` treated as permanent errors and `5xx` /
+//!   transport failures as retryable.  No chunked transfer-encoding, no TLS,
+//!   no redirects — pocket mirrors are dumb byte ranges.
+//! * **[`PrefetchPlan`]** — TOC-guided coalescing: adjacent sections whose
+//!   gap is at most `max_gap` merge into one fetch window bounded by
+//!   `max_window`.  A `read_at` that lands inside a planned window fetches
+//!   the *whole window once* and serves every later read in it from a small
+//!   MRU window cache — N sections per window become one round trip.
+//!   [`super::PocketReader::open_url`] builds the plan from the TOC it just
+//!   read and installs it automatically.
+//! * **[`RetryPolicy`]** — every fetch is attempted up to `attempts` times
+//!   with exponential backoff, reconnecting on each retry; exhausted retries
+//!   surface as `io::Error` (and therefore [`crate::Error::Io`] out of the
+//!   reader), never as container corruption.
+//!
+//! Clones share one connection, one plan, one window cache and one counter
+//! set (like `ChunkedSource`), so a test or bench can keep a handle while a
+//! reader owns another and assert exactly what was fetched.  The hermetic
+//! counterpart lives in [`crate::util::testserver`]: an in-process loopback
+//! range server with scripted fault injection, so the whole retry/resume
+//! surface is exercised offline in `tests/remote_stream.rs`.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::source::{span, SectionSource, SourceStats};
+
+// ---------------------------------------------------------------------------
+// PrefetchPlan
+// ---------------------------------------------------------------------------
+
+/// TOC-guided fetch coalescing: a sorted set of non-overlapping byte
+/// windows, each covering one or more whole sections.  Built by
+/// [`PrefetchPlan::coalesce`] from `(offset, length)` section spans.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PrefetchPlan {
+    /// Sorted by offset; non-overlapping.
+    windows: Vec<(u64, u64)>,
+}
+
+impl PrefetchPlan {
+    /// Default maximum gap (bytes) bridged between two sections before they
+    /// stop coalescing — a TOC's padding/ordering slack, not a reason for an
+    /// extra round trip.
+    pub const DEFAULT_MAX_GAP: u64 = 4096;
+    /// Default upper bound on one coalesced fetch window.
+    pub const DEFAULT_MAX_WINDOW: u64 = 4 << 20;
+
+    /// Coalesce section spans into fetch windows: spans are sorted, then a
+    /// span merges into the previous window when the gap between them is at
+    /// most `max_gap` *and* the merged window stays within `max_window`.
+    /// A single span larger than `max_window` still gets its own (oversize)
+    /// window — windows always cover whole sections.
+    pub fn coalesce(
+        spans: impl IntoIterator<Item = (u64, u64)>,
+        max_gap: u64,
+        max_window: u64,
+    ) -> PrefetchPlan {
+        let mut spans: Vec<(u64, u64)> = spans.into_iter().filter(|&(_, l)| l > 0).collect();
+        spans.sort_unstable();
+        let mut windows: Vec<(u64, u64)> = Vec::new();
+        for (off, len) in spans {
+            if let Some(last) = windows.last_mut() {
+                let last_end = last.0 + last.1;
+                let end = (off.saturating_add(len)).max(last_end);
+                if off <= last_end.saturating_add(max_gap) && end - last.0 <= max_window {
+                    last.1 = end - last.0;
+                    continue;
+                }
+            }
+            windows.push((off, len));
+        }
+        PrefetchPlan { windows }
+    }
+
+    /// The coalesced `(offset, length)` windows, sorted by offset.
+    pub fn windows(&self) -> &[(u64, u64)] {
+        &self.windows
+    }
+
+    /// Number of fetch windows.
+    pub fn len(&self) -> usize {
+        self.windows.len()
+    }
+
+    /// True when the plan has no windows.
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// The window fully covering `[offset, offset + len)`, if any.
+    pub fn window_covering(&self, offset: u64, len: u64) -> Option<(u64, u64)> {
+        let i = self.windows.partition_point(|&(o, _)| o <= offset);
+        let (o, l) = *self.windows.get(i.checked_sub(1)?)?;
+        (offset.checked_add(len)? <= o + l).then_some((o, l))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RetryPolicy / HttpOptions
+// ---------------------------------------------------------------------------
+
+/// Retry-with-backoff for one fetch: up to `attempts` tries, sleeping
+/// `backoff * 2^attempt` between them, reconnecting each time.  Permanent
+/// rejections (HTTP `4xx`) fail immediately.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts per fetch (clamped to >= 1).
+    pub attempts: u32,
+    /// Base backoff between attempts (doubles each retry).
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { attempts: 3, backoff: Duration::from_millis(25) }
+    }
+}
+
+impl RetryPolicy {
+    fn delay(&self, attempt: u32) -> Duration {
+        self.backoff.saturating_mul(1u32 << attempt.min(10))
+    }
+}
+
+/// Connection and caching knobs for [`HttpSource::connect_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct HttpOptions {
+    /// Socket read/write timeout — a stalled server surfaces as a timeout
+    /// `io::Error` (retryable) instead of a hang.
+    pub timeout: Duration,
+    pub retry: RetryPolicy,
+    /// Prefetch windows kept resident (MRU).  Windows are raw container
+    /// bytes; decoded tensors live in the byte-budget
+    /// [`DecodeCache`](crate::DecodeCache), so this stays small.
+    pub max_windows: usize,
+}
+
+impl Default for HttpOptions {
+    fn default() -> HttpOptions {
+        HttpOptions {
+            timeout: Duration::from_secs(5),
+            retry: RetryPolicy::default(),
+            max_windows: 16,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HttpSource
+// ---------------------------------------------------------------------------
+
+struct Inner {
+    host: String,
+    port: u16,
+    path: String,
+    len: u64,
+    opts: HttpOptions,
+    /// The kept-alive connection.  One socket per source: fetches serialize
+    /// here, which is also what makes window fills single-flight.
+    conn: Mutex<Option<TcpStream>>,
+    plan: Mutex<PrefetchPlan>,
+    /// Held across a window-cache miss and its fill, so N concurrent misses
+    /// on one cold window produce exactly one wire fetch.
+    fill: Mutex<()>,
+    /// MRU-first cache of fetched prefetch windows.
+    windows: Mutex<Vec<(u64, Arc<Vec<u8>>)>>,
+    /// Successful range fetches.
+    ranges: AtomicU64,
+    /// Bytes moved by successful fetches (window rounding included).
+    bytes: AtomicU64,
+    /// Failed attempts that were retried (or exhausted the policy).
+    retries: AtomicU64,
+    /// Every successfully fetched `(offset, len)` range, in order.
+    log: Mutex<Vec<(u64, u64)>>,
+}
+
+/// Remote [`SectionSource`] over HTTP/1.1 range requests.  See the module
+/// docs; clones share the connection, plan, window cache and counters.
+#[derive(Clone)]
+pub struct HttpSource {
+    inner: Arc<Inner>,
+}
+
+impl HttpSource {
+    /// Connect to `http://host[:port]/path` and learn the container length
+    /// with a `HEAD` request (retried under the default [`RetryPolicy`]).
+    pub fn connect(url: &str) -> io::Result<HttpSource> {
+        Self::connect_with(url, HttpOptions::default())
+    }
+
+    /// [`HttpSource::connect`] with explicit timeout/retry/window options.
+    pub fn connect_with(url: &str, opts: HttpOptions) -> io::Result<HttpSource> {
+        let (host, port, path) = parse_url(url)?;
+        let mut src = HttpSource {
+            inner: Arc::new(Inner {
+                host,
+                port,
+                path,
+                len: 0,
+                opts,
+                conn: Mutex::new(None),
+                plan: Mutex::new(PrefetchPlan::default()),
+                fill: Mutex::new(()),
+                windows: Mutex::new(Vec::new()),
+                ranges: AtomicU64::new(0),
+                bytes: AtomicU64::new(0),
+                retries: AtomicU64::new(0),
+                log: Mutex::new(Vec::new()),
+            }),
+        };
+        let len = src.with_retry(|s| Self::head_len(s, &src.inner))?;
+        // `len` is immutable after connect: no clones exist yet, so the
+        // unique-Arc write below is the only writer it will ever see
+        Arc::get_mut(&mut src.inner).expect("no clones exist at connect").len = len;
+        Ok(src)
+    }
+
+    /// The URL this source fetches from.
+    pub fn url(&self) -> String {
+        format!("http://{}:{}{}", self.inner.host, self.inner.port, self.inner.path)
+    }
+
+    /// Install (replace) the TOC-guided prefetch plan.  Reads covered by a
+    /// window fetch the whole window once; everything else fetches exact
+    /// ranges.  [`super::PocketReader::open_url`] does this automatically.
+    /// Windows cached under the previous plan are discarded — their extents
+    /// may not match the new plan's.
+    pub fn install_plan(&self, plan: PrefetchPlan) {
+        *self.inner.plan.lock().unwrap() = plan;
+        self.inner.windows.lock().unwrap().clear();
+    }
+
+    /// The currently installed prefetch plan.
+    pub fn plan(&self) -> PrefetchPlan {
+        self.inner.plan.lock().unwrap().clone()
+    }
+
+    /// Successful range fetches so far (shared across clones).
+    pub fn ranges_fetched(&self) -> u64 {
+        self.inner.ranges.load(Ordering::Relaxed)
+    }
+
+    /// Bytes moved by successful fetches (window rounding included).
+    pub fn bytes_fetched(&self) -> u64 {
+        self.inner.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Failed attempts that were retried or exhausted the policy.
+    pub fn retries(&self) -> u64 {
+        self.inner.retries.load(Ordering::Relaxed)
+    }
+
+    /// Every successfully fetched `(offset, len)` range, in fetch order.
+    pub fn range_log(&self) -> Vec<(u64, u64)> {
+        self.inner.log.lock().unwrap().clone()
+    }
+
+    // -- wire client ---------------------------------------------------------
+
+    /// Run `f` against the kept-alive connection under the retry policy:
+    /// on a retryable failure the socket is dropped, we back off, reconnect
+    /// and try again; permanent errors (HTTP 4xx) and exhausted attempts
+    /// surface as the final `io::Error`.  `f` returns `(value, keep)`:
+    /// `keep = false` (the server announced `Connection: close`) drops the
+    /// socket *now*, so the next fetch reconnects cleanly instead of
+    /// failing — and being miscounted as a retry — on a dead connection.
+    fn with_retry<T>(
+        &self,
+        mut f: impl FnMut(&mut TcpStream) -> io::Result<(T, bool)>,
+    ) -> io::Result<T> {
+        let retry = self.inner.opts.retry;
+        let attempts = retry.attempts.max(1);
+        let mut last: Option<io::Error> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(retry.delay(attempt - 1));
+            }
+            let mut guard = self.inner.conn.lock().unwrap();
+            if guard.is_none() {
+                match self.open_conn() {
+                    Ok(s) => *guard = Some(s),
+                    Err(e) => {
+                        self.inner.retries.fetch_add(1, Ordering::Relaxed);
+                        last = Some(e);
+                        continue;
+                    }
+                }
+            }
+            let stream = guard.as_mut().expect("connection ensured above");
+            match f(stream) {
+                Ok((v, keep)) => {
+                    if !keep {
+                        *guard = None;
+                    }
+                    return Ok(v);
+                }
+                Err(e) => {
+                    // any failure poisons the socket: response framing is
+                    // unknown now, so the next attempt reconnects
+                    *guard = None;
+                    if e.kind() == io::ErrorKind::InvalidInput {
+                        return Err(e); // permanent: the server rejected us
+                    }
+                    self.inner.retries.fetch_add(1, Ordering::Relaxed);
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| io::Error::other("retries exhausted")))
+    }
+
+    fn open_conn(&self) -> io::Result<TcpStream> {
+        let stream = TcpStream::connect((self.inner.host.as_str(), self.inner.port))?;
+        stream.set_read_timeout(Some(self.inner.opts.timeout))?;
+        stream.set_write_timeout(Some(self.inner.opts.timeout))?;
+        stream.set_nodelay(true).ok();
+        Ok(stream)
+    }
+
+    /// One `HEAD` round trip: the container length from `Content-Length`,
+    /// plus whether the connection survives the exchange.
+    fn head_len(stream: &mut TcpStream, inner: &Inner) -> io::Result<(u64, bool)> {
+        write!(
+            stream,
+            "HEAD {} HTTP/1.1\r\nHost: {}:{}\r\nConnection: keep-alive\r\n\r\n",
+            inner.path, inner.host, inner.port
+        )?;
+        stream.flush()?;
+        let head = read_head(stream)?;
+        let (status, headers) = parse_head(&head)?;
+        if status != 200 {
+            return Err(status_error(status, "HEAD"));
+        }
+        let len = header_u64(&headers, "content-length")
+            .ok_or_else(|| io::Error::other("HEAD response missing Content-Length"))?;
+        Ok((len, !wants_close(&headers)))
+    }
+
+    /// One `GET Range` round trip filling `buf` with `[start, end)`.
+    /// Returns `(bytes actually moved off the wire, keep-connection)` —
+    /// a `200` full-body fallback moves the whole resource, not the span.
+    fn get_range(
+        stream: &mut TcpStream,
+        inner: &Inner,
+        start: u64,
+        end: u64,
+        buf: &mut [u8],
+    ) -> io::Result<(u64, bool)> {
+        debug_assert_eq!((end - start) as usize, buf.len());
+        write!(
+            stream,
+            "GET {} HTTP/1.1\r\nHost: {}:{}\r\nRange: bytes={}-{}\r\nConnection: keep-alive\r\n\r\n",
+            inner.path,
+            inner.host,
+            inner.port,
+            start,
+            end - 1
+        )?;
+        stream.flush()?;
+        let head = read_head(stream)?;
+        let (status, headers) = parse_head(&head)?;
+        let content_len = header_u64(&headers, "content-length");
+        let moved = match status {
+            206 => {
+                let n = content_len
+                    .ok_or_else(|| io::Error::other("206 without Content-Length"))?;
+                if n != buf.len() as u64 {
+                    return Err(io::Error::other(format!(
+                        "206 body is {n} bytes, wanted {}",
+                        buf.len()
+                    )));
+                }
+                stream.read_exact(buf)?;
+                n
+            }
+            200 => {
+                // server ignored the Range header: read the whole resource
+                // and slice the requested span out of it
+                let n = content_len
+                    .ok_or_else(|| io::Error::other("200 without Content-Length"))?;
+                if end > n {
+                    return Err(io::Error::other(format!(
+                        "200 body is {n} bytes, range ends at {end}"
+                    )));
+                }
+                let mut body = vec![0u8; n as usize];
+                stream.read_exact(&mut body)?;
+                buf.copy_from_slice(&body[start as usize..end as usize]);
+                n
+            }
+            other => return Err(status_error(other, "GET")),
+        };
+        Ok((moved, !wants_close(&headers)))
+    }
+
+    /// Fetch `[start, end)` into `buf` under the retry policy, counting the
+    /// successful range.  `bytes` counts what actually crossed the wire
+    /// (a `200` fallback moves the whole resource); the log records the
+    /// requested range.
+    fn fetch(&self, start: u64, end: u64, buf: &mut [u8]) -> io::Result<()> {
+        let moved = self.with_retry(|s| Self::get_range(s, &self.inner, start, end, buf))?;
+        self.inner.ranges.fetch_add(1, Ordering::Relaxed);
+        self.inner.bytes.fetch_add(moved, Ordering::Relaxed);
+        self.inner.log.lock().unwrap().push((start, end - start));
+        Ok(())
+    }
+
+    /// Cached window lookup, bumping MRU.  The length must match too: a
+    /// clone racing [`HttpSource::install_plan`] may have cached this
+    /// offset under the previous plan with a different extent — serving
+    /// that would hand back short bytes.
+    fn window_cached(&self, wo: u64, wl: u64) -> Option<Arc<Vec<u8>>> {
+        let mut ws = self.inner.windows.lock().unwrap();
+        let pos = ws.iter().position(|(o, w)| *o == wo && w.len() as u64 == wl)?;
+        let w = ws.remove(pos);
+        let v = w.1.clone();
+        ws.insert(0, w);
+        Some(v)
+    }
+
+    /// The bytes of the planned window at `wo` — fetched over the wire at
+    /// most once while it stays resident.  The single connection serializes
+    /// fills, so concurrent readers of one cold window produce one fetch.
+    fn window_bytes(&self, wo: u64, wl: u64) -> io::Result<Arc<Vec<u8>>> {
+        if let Some(w) = self.window_cached(wo, wl) {
+            return Ok(w);
+        }
+        // single-flight fill: re-check under the fill lock so a thread that
+        // raced a concurrent fill takes the cached window instead of
+        // re-fetching it
+        let _fill = self.inner.fill.lock().unwrap();
+        if let Some(w) = self.window_cached(wo, wl) {
+            return Ok(w);
+        }
+        let mut v = vec![0u8; wl as usize];
+        self.fetch(wo, wo + wl, &mut v)?;
+        let w = Arc::new(v);
+        let mut ws = self.inner.windows.lock().unwrap();
+        ws.insert(0, (wo, w.clone()));
+        ws.truncate(self.inner.opts.max_windows.max(1));
+        Ok(w)
+    }
+}
+
+impl SectionSource for HttpSource {
+    fn len(&self) -> u64 {
+        self.inner.len
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        // bounds are checked locally, exactly like every other source: an
+        // out-of-range read never becomes wire traffic (the server-side
+        // counterpart — 416 — is exercised by the fault-injection tests)
+        span(offset, buf.len(), self.len())?;
+        if buf.is_empty() {
+            return Ok(());
+        }
+        let end = offset + buf.len() as u64;
+        let window = self.inner.plan.lock().unwrap().window_covering(offset, buf.len() as u64);
+        if let Some((wo, wl)) = window {
+            let w = self.window_bytes(wo, wl)?;
+            let s = (offset - wo) as usize;
+            buf.copy_from_slice(&w[s..s + buf.len()]);
+            return Ok(());
+        }
+        self.fetch(offset, end, buf)
+    }
+
+    fn fetch_stats(&self) -> Option<SourceStats> {
+        Some(SourceStats {
+            ranges_fetched: self.ranges_fetched(),
+            bytes_fetched: self.bytes_fetched(),
+            retries: self.retries(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// wire parsing helpers
+// ---------------------------------------------------------------------------
+
+/// True when the server announced it will close the connection.
+fn wants_close(headers: &[(String, String)]) -> bool {
+    headers.iter().any(|(k, v)| k == "connection" && v.eq_ignore_ascii_case("close"))
+}
+
+fn status_error(status: u16, method: &str) -> io::Error {
+    let msg = format!("{method} returned HTTP {status}");
+    if (400..500).contains(&status) {
+        // permanent: retrying an out-of-range / bad request cannot help
+        io::Error::new(io::ErrorKind::InvalidInput, msg)
+    } else {
+        io::Error::other(msg)
+    }
+}
+
+/// Parse `http://host[:port]/path` (the only scheme a pocket mirror needs).
+fn parse_url(url: &str) -> io::Result<(String, u16, String)> {
+    let rest = url
+        .strip_prefix("http://")
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "url must be http://"))?;
+    let (authority, path) = match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, "/"),
+    };
+    let (host, port) = match authority.rsplit_once(':') {
+        Some((h, p)) => (
+            h,
+            p.parse::<u16>().map_err(|_| {
+                io::Error::new(io::ErrorKind::InvalidInput, format!("bad port {p:?}"))
+            })?,
+        ),
+        None => (authority, 80),
+    };
+    if host.is_empty() {
+        return Err(io::Error::new(io::ErrorKind::InvalidInput, "empty host"));
+    }
+    Ok((host.to_string(), port, path.to_string()))
+}
+
+/// Read one response head (through the final `\r\n\r\n`), byte-wise so no
+/// body bytes are consumed.  Capped at 16 KiB.
+fn read_head(stream: &mut TcpStream) -> io::Result<Vec<u8>> {
+    let mut head = Vec::with_capacity(256);
+    let mut b = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        if head.len() > 16 << 10 {
+            return Err(io::Error::other("response head too large"));
+        }
+        let n = stream.read(&mut b)?;
+        if n == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "connection closed mid-response",
+            ));
+        }
+        head.push(b[0]);
+    }
+    Ok(head)
+}
+
+/// Parse a response head into (status code, lowercase header pairs).
+fn parse_head(head: &[u8]) -> io::Result<(u16, Vec<(String, String)>)> {
+    let text = std::str::from_utf8(head)
+        .map_err(|_| io::Error::other("non-utf8 response head"))?;
+    let mut lines = text.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.splitn(3, ' ');
+    let proto = parts.next().unwrap_or("");
+    if !proto.starts_with("HTTP/1.") {
+        return Err(io::Error::other(format!("not an HTTP response: {status_line:?}")));
+    }
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| io::Error::other(format!("bad status line {status_line:?}")))?;
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    Ok((status, headers))
+}
+
+fn header_u64(headers: &[(String, String)], name: &str) -> Option<u64> {
+    headers.iter().find(|(k, _)| k == name).and_then(|(_, v)| v.parse().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalesce_merges_adjacent_sections_within_bounds() {
+        // three sections with small gaps, one far away
+        let spans = [(100, 50), (160, 40), (210, 30), (10_000, 20)];
+        let plan = PrefetchPlan::coalesce(spans, 16, 1 << 20);
+        assert_eq!(plan.windows(), &[(100, 140), (10_000, 20)]);
+        // gap larger than max_gap splits everywhere (all gaps here are 10)
+        let plan = PrefetchPlan::coalesce(spans, 9, 1 << 20);
+        assert_eq!(plan.windows(), &[(100, 50), (160, 40), (210, 30), (10_000, 20)]);
+        // window bound splits even with a bridgeable gap
+        let plan = PrefetchPlan::coalesce(spans, 16, 100);
+        assert_eq!(plan.windows(), &[(100, 100), (210, 30), (10_000, 20)]);
+    }
+
+    #[test]
+    fn coalesce_keeps_oversize_sections_whole() {
+        let plan = PrefetchPlan::coalesce([(0, 500), (600, 10)], 1000, 64);
+        // the 500-byte section exceeds max_window but stays one window
+        assert_eq!(plan.windows(), &[(0, 500), (600, 10)]);
+    }
+
+    #[test]
+    fn window_covering_requires_full_containment() {
+        let plan = PrefetchPlan::coalesce([(100, 100), (300, 50)], 0, 1 << 20);
+        assert_eq!(plan.window_covering(100, 100), Some((100, 100)));
+        assert_eq!(plan.window_covering(150, 10), Some((100, 100)));
+        assert_eq!(plan.window_covering(150, 60), None, "straddles the window end");
+        assert_eq!(plan.window_covering(0, 10), None);
+        assert_eq!(plan.window_covering(310, 40), Some((300, 50)));
+        assert_eq!(plan.window_covering(u64::MAX, 2), None, "offset overflow must not wrap");
+        assert!(PrefetchPlan::default().window_covering(0, 1).is_none());
+    }
+
+    #[test]
+    fn coalesce_sorts_and_drops_empty_spans() {
+        let plan = PrefetchPlan::coalesce([(300, 10), (0, 0), (100, 10), (112, 10)], 4, 1 << 20);
+        assert_eq!(plan.windows(), &[(100, 22), (300, 10)]);
+        assert_eq!(plan.len(), 2);
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn url_parsing_accepts_host_port_path() {
+        assert_eq!(
+            parse_url("http://127.0.0.1:8080/model.pocket").unwrap(),
+            ("127.0.0.1".to_string(), 8080, "/model.pocket".to_string())
+        );
+        assert_eq!(
+            parse_url("http://example.com/p").unwrap(),
+            ("example.com".to_string(), 80, "/p".to_string())
+        );
+        assert_eq!(parse_url("http://h:1").unwrap(), ("h".to_string(), 1, "/".to_string()));
+        assert!(parse_url("https://h/p").is_err(), "no TLS in the std-only client");
+        assert!(parse_url("http://:80/p").is_err());
+        assert!(parse_url("http://h:badport/p").is_err());
+    }
+
+    #[test]
+    fn head_parsing_extracts_status_and_headers() {
+        let head = b"HTTP/1.1 206 Partial Content\r\nContent-Length: 42\r\nContent-Range: bytes 0-41/100\r\n\r\n";
+        let (status, headers) = parse_head(head).unwrap();
+        assert_eq!(status, 206);
+        assert_eq!(header_u64(&headers, "content-length"), Some(42));
+        assert!(parse_head(b"SMTP nope\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn retry_policy_backoff_doubles() {
+        let r = RetryPolicy { attempts: 4, backoff: Duration::from_millis(10) };
+        assert_eq!(r.delay(0), Duration::from_millis(10));
+        assert_eq!(r.delay(1), Duration::from_millis(20));
+        assert_eq!(r.delay(2), Duration::from_millis(40));
+    }
+
+    #[test]
+    fn status_errors_split_permanent_from_retryable() {
+        assert_eq!(status_error(416, "GET").kind(), io::ErrorKind::InvalidInput);
+        assert_eq!(status_error(404, "GET").kind(), io::ErrorKind::InvalidInput);
+        assert_ne!(status_error(500, "GET").kind(), io::ErrorKind::InvalidInput);
+        assert_ne!(status_error(503, "GET").kind(), io::ErrorKind::InvalidInput);
+    }
+}

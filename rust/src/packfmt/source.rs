@@ -59,6 +59,21 @@ impl SectionBytes<'_> {
     }
 }
 
+/// Fetch counters of a range-request transport ([`ChunkedSource`],
+/// [`HttpSource`](super::remote::HttpSource)), folded into
+/// [`super::ReaderStats`] so cold/warm serving checks can assert on them
+/// uniformly whatever the transport.  Local sources (mmap/file/mem) report
+/// `None` — every byte is already at hand.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SourceStats {
+    /// Ranges fetched from the transport so far.
+    pub ranges_fetched: u64,
+    /// Bytes moved by those fetches (chunk/window rounding included).
+    pub bytes_fetched: u64,
+    /// Failed attempts that were retried (always 0 for in-memory chunking).
+    pub retries: u64,
+}
+
 /// Thread-safe random-access byte source behind a [`super::PocketReader`].
 ///
 /// `read_at` takes `&self`: sources must support concurrent reads (readers
@@ -91,6 +106,12 @@ pub trait SectionSource: Send + Sync {
         self.read_at(offset, &mut buf)?;
         Ok(SectionBytes::Owned(buf))
     }
+
+    /// Fetch counters, for sources that model a range-request transport.
+    /// Local sources keep the default `None`.
+    fn fetch_stats(&self) -> Option<SourceStats> {
+        None
+    }
 }
 
 fn eof(offset: u64, want: usize, have: u64) -> io::Error {
@@ -102,7 +123,7 @@ fn eof(offset: u64, want: usize, have: u64) -> io::Error {
 
 /// Bounds-check a `(offset, len)` range against a source of `total` bytes,
 /// returning the usize span.
-fn span(offset: u64, len: usize, total: u64) -> io::Result<(usize, usize)> {
+pub(crate) fn span(offset: u64, len: usize, total: u64) -> io::Result<(usize, usize)> {
     let end = offset
         .checked_add(len as u64)
         .filter(|&e| e <= total)
@@ -411,6 +432,14 @@ impl SectionSource for ChunkedSource {
         buf.copy_from_slice(&self.bytes[start..end]);
         Ok(())
     }
+
+    fn fetch_stats(&self) -> Option<SourceStats> {
+        Some(SourceStats {
+            ranges_fetched: self.ranges_fetched(),
+            bytes_fetched: self.bytes_fetched(),
+            retries: 0,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -510,6 +539,17 @@ mod tests {
         let clone = src.clone();
         clone.read_at(0, &mut buf).unwrap();
         assert_eq!(src.ranges_fetched(), clone.ranges_fetched());
+    }
+
+    #[test]
+    fn chunked_source_surfaces_fetch_stats() {
+        let src = ChunkedSource::new(vec![1u8; 64], 16);
+        let mut b = [0u8; 8];
+        src.read_at(0, &mut b).unwrap();
+        let st = src.fetch_stats().unwrap();
+        assert_eq!(st, SourceStats { ranges_fetched: 1, bytes_fetched: 16, retries: 0 });
+        // local sources have no transport to count
+        assert!(MemSource::new(vec![0u8; 4]).fetch_stats().is_none());
     }
 
     #[test]

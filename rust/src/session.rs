@@ -224,6 +224,17 @@ impl Session {
         PocketReader::open(path)
     }
 
+    /// Open a pocket container **streamed over HTTP range requests** (see
+    /// [`PocketReader::open_url`]): only the header + TOC cross the wire at
+    /// open, sections are fetched on demand through a TOC-guided prefetch
+    /// plan that coalesces adjacent sections into bounded windows, and
+    /// transport failures retry with backoff before surfacing as
+    /// [`Error::Io`].  The edge deployment story: serve a model without
+    /// ever downloading the whole container.
+    pub fn open_pocket_url(&self, url: &str) -> Result<PocketReader, Error> {
+        PocketReader::open_url(url)
+    }
+
     /// Build a concurrent [`PocketServer`] over a shared reader: N worker
     /// threads fan requests against one decode cache.  See
     /// [`crate::serve`].

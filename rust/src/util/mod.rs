@@ -11,4 +11,5 @@ pub mod json;
 pub mod prng;
 pub mod quickcheck;
 pub mod stats;
+pub mod testserver;
 pub mod threadpool;

@@ -39,6 +39,16 @@ impl Gen {
         self.int_in(lo as i64, hi as i64) as usize
     }
 
+    /// Unsigned range helper for byte offsets/lengths (chunk sizes, prefetch
+    /// windows) that exceed `int_in`'s i64 domain.  Scales down under shrink
+    /// pressure like every other generator.
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi >= lo);
+        let span = (hi - lo).saturating_add(1);
+        let scaled = ((span as f64 * self.scale).ceil() as u64).max(1);
+        lo + self.rng.next_u64() % scaled.min(span)
+    }
+
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         lo + self.rng.next_f32() * (hi - lo)
     }
@@ -153,6 +163,8 @@ mod tests {
             prop_assert((1..=3).contains(&u), "usize_in range")?;
             let f = g.f32_in(0.0, 2.0);
             prop_assert((0.0..=2.0).contains(&f), "f32_in range")?;
+            let u = g.u64_in(1 << 40, (1 << 40) + 10);
+            prop_assert(((1 << 40)..=(1 << 40) + 10).contains(&u), "u64_in range")?;
             let v = g.vec_u32_below(10, 0, 20);
             prop_assert(v.iter().all(|&x| x < 10), "vec bound")
         });

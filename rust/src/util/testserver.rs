@@ -1,0 +1,493 @@
+//! `RangeServer` — a deterministic in-process HTTP/1.1 range server on
+//! loopback, so the remote streaming path
+//! ([`HttpSource`](crate::packfmt::remote::HttpSource)) is exercised
+//! end-to-end with **zero** network dependence: CI stays hermetic, yet every
+//! byte of the wire client — request framing, `206` partial content,
+//! `416` bounds, keep-alive reuse, retry and resume — runs against a real
+//! `TcpListener`.
+//!
+//! The server serves one `&[u8]` body (a pocket container in the tests) and
+//! supports:
+//!
+//! * `GET` with `Range: bytes=a-b` → `206 Partial Content` with a
+//!   `Content-Range`, `GET` without a range → `200` with the whole body,
+//!   `HEAD` → headers only, out-of-range or malformed ranges → `416`;
+//! * **per-request logging** ([`RequestLog`]): method, path, parsed range,
+//!   response status and any fault applied — tests assert on exactly what
+//!   the client put on the wire;
+//! * **scripted fault injection** ([`Fault`]): each queued fault is consumed
+//!   by one request, in order — drop before responding, drop after K body
+//!   bytes, stall past the client's read timeout, reply with an arbitrary
+//!   status, or send a short body under a correct `Content-Length`.  This
+//!   is what makes retry/backoff/resume behaviour *assertable*.
+//!
+//! Connections are keep-alive: one handler thread per connection loops over
+//! requests until the peer (or a fault) closes it.  Dropping the server
+//! stops the accept loop and unbinds the port.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One scripted server-side failure, consumed by exactly one request.
+#[derive(Clone, Copy, Debug)]
+pub enum Fault {
+    /// Drop the connection before sending any response bytes.
+    CloseBeforeResponse,
+    /// Send correct headers, then only the first K body bytes, then drop.
+    DropAfter(usize),
+    /// Sleep this long (past the client's read timeout), then drop without
+    /// responding.
+    Stall(Duration),
+    /// Respond with this status code and an empty body (500/503/416/...).
+    Status(u16),
+    /// Send a correct `Content-Length` but K fewer body bytes, then drop.
+    ShortBody(usize),
+}
+
+impl Fault {
+    fn name(&self) -> &'static str {
+        match self {
+            Fault::CloseBeforeResponse => "close-before-response",
+            Fault::DropAfter(_) => "drop-after",
+            Fault::Stall(_) => "stall",
+            Fault::Status(_) => "status",
+            Fault::ShortBody(_) => "short-body",
+        }
+    }
+}
+
+/// What one request looked like on the wire, and how it was answered.
+#[derive(Clone, Debug)]
+pub struct RequestLog {
+    pub method: String,
+    pub path: String,
+    /// Parsed `Range` header as `(offset, len)`, when present and valid.
+    pub range: Option<(u64, u64)>,
+    /// Status sent (0 when the connection was dropped before a response).
+    pub status: u16,
+    /// Name of the fault applied to this request, if any.
+    pub fault: Option<&'static str>,
+}
+
+struct Shared {
+    body: Arc<[u8]>,
+    faults: Mutex<VecDeque<Fault>>,
+    log: Mutex<Vec<RequestLog>>,
+    stop: AtomicBool,
+}
+
+/// In-process loopback HTTP/1.1 range server.  See the module docs.
+pub struct RangeServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl RangeServer {
+    /// Serve `body` on an ephemeral loopback port.  The listener and every
+    /// handler run on background threads; drop the server to stop.
+    pub fn serve(body: impl Into<Arc<[u8]>>) -> io::Result<RangeServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            body: body.into(),
+            faults: Mutex::new(VecDeque::new()),
+            log: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+        });
+        let accept_shared = shared.clone();
+        let accept = std::thread::spawn(move || {
+            while !accept_shared.stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let conn_shared = accept_shared.clone();
+                        // handlers are detached: they exit when the peer (or
+                        // a fault) closes the connection
+                        std::thread::spawn(move || handle_connection(stream, &conn_shared));
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(RangeServer { shared, addr, accept: Some(accept) })
+    }
+
+    /// The bound loopback address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// URL of the served container (`http://127.0.0.1:{port}/pocket`).
+    pub fn url(&self) -> String {
+        format!("http://127.0.0.1:{}/pocket", self.addr.port())
+    }
+
+    /// Queue one fault; the next un-faulted request consumes it.
+    pub fn push_fault(&self, fault: Fault) {
+        self.shared.faults.lock().unwrap().push_back(fault);
+    }
+
+    /// Queue a whole fault schedule, consumed one fault per request.
+    pub fn script_faults(&self, faults: impl IntoIterator<Item = Fault>) {
+        self.shared.faults.lock().unwrap().extend(faults);
+    }
+
+    /// Faults queued but not yet consumed.
+    pub fn pending_faults(&self) -> usize {
+        self.shared.faults.lock().unwrap().len()
+    }
+
+    /// Every request handled so far, in arrival order.
+    pub fn requests(&self) -> Vec<RequestLog> {
+        self.shared.log.lock().unwrap().clone()
+    }
+
+    /// Number of requests handled so far.
+    pub fn request_count(&self) -> usize {
+        self.shared.log.lock().unwrap().len()
+    }
+}
+
+impl Drop for RangeServer {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+    }
+}
+
+/// Keep-alive loop: serve requests on one connection until the peer closes
+/// it, a fault kills it, or the server is stopping.
+fn handle_connection(mut stream: TcpStream, shared: &Shared) {
+    // the listener is nonblocking (stop-flag polling); on Windows accepted
+    // sockets inherit that flag, so reset it before blocking reads
+    stream.set_nonblocking(false).ok();
+    // an idle keep-alive socket must not pin the handler forever
+    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    stream.set_nodelay(true).ok();
+    while !shared.stop.load(Ordering::Relaxed) {
+        let head = match read_request_head(&mut stream) {
+            Ok(Some(h)) => h,
+            _ => return, // peer closed, timed out, or garbage
+        };
+        let (method, path, range_header) = match parse_request(&head) {
+            Some(r) => r,
+            None => return,
+        };
+        let fault = shared.faults.lock().unwrap().pop_front();
+        let keep = respond(&mut stream, shared, &method, &path, range_header.as_deref(), fault);
+        if !keep {
+            stream.shutdown(Shutdown::Both).ok();
+            return;
+        }
+    }
+}
+
+/// Answer one request (applying `fault` if any); returns whether the
+/// connection stays usable.
+fn respond(
+    stream: &mut TcpStream,
+    shared: &Shared,
+    method: &str,
+    path: &str,
+    range_header: Option<&str>,
+    fault: Option<Fault>,
+) -> bool {
+    let total = shared.body.len() as u64;
+    let range = range_header.and_then(|r| parse_range(r, total));
+    let fault_name = fault.as_ref().map(Fault::name);
+    let log = |status: u16| {
+        shared.log.lock().unwrap().push(RequestLog {
+            method: method.to_string(),
+            path: path.to_string(),
+            range,
+            status,
+            fault: fault_name,
+        });
+    };
+
+    match fault {
+        Some(Fault::CloseBeforeResponse) => {
+            log(0);
+            return false;
+        }
+        Some(Fault::Stall(d)) => {
+            log(0);
+            std::thread::sleep(d);
+            return false;
+        }
+        Some(Fault::Status(code)) => {
+            log(code);
+            let head = format!(
+                "HTTP/1.1 {code} Scripted Fault\r\nContent-Length: 0\r\n\r\n"
+            );
+            return stream.write_all(head.as_bytes()).is_ok();
+        }
+        _ => {}
+    }
+
+    // normal resolution: 416 for a present-but-invalid range, 206 for a
+    // valid one, 200 for a plain GET/HEAD
+    let (status, slice): (u16, &[u8]) = match (range_header, range) {
+        (Some(_), None) => (416, &[]),
+        (Some(_), Some((off, len))) => (206, &shared.body[off as usize..(off + len) as usize]),
+        (None, _) => (200, &shared.body[..]),
+    };
+    log(status);
+
+    let mut head = format!("HTTP/1.1 {status} {}\r\n", status_text(status));
+    match (status, range) {
+        (206, Some((off, len))) => {
+            head.push_str(&format!("Content-Range: bytes {}-{}/{total}\r\n", off, off + len - 1));
+        }
+        (416, _) => {
+            head.push_str(&format!("Content-Range: bytes */{total}\r\n"));
+        }
+        _ => {}
+    }
+    head.push_str("Accept-Ranges: bytes\r\n");
+    head.push_str(&format!("Content-Length: {}\r\n\r\n", slice.len()));
+    if stream.write_all(head.as_bytes()).is_err() {
+        return false;
+    }
+    if method == "HEAD" {
+        // a body-level fault on a bodiless response degrades to dropping
+        // the connection after the headers — still observable by the
+        // client, never a silently-eaten script entry
+        return !matches!(fault, Some(Fault::DropAfter(_) | Fault::ShortBody(_)));
+    }
+    match fault {
+        Some(Fault::DropAfter(k)) => {
+            let k = k.min(slice.len());
+            stream.write_all(&slice[..k]).ok();
+            false
+        }
+        Some(Fault::ShortBody(missing)) => {
+            let k = slice.len().saturating_sub(missing.max(1));
+            stream.write_all(&slice[..k]).ok();
+            false
+        }
+        _ => stream.write_all(slice).is_ok(),
+    }
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        206 => "Partial Content",
+        416 => "Range Not Satisfiable",
+        _ => "Response",
+    }
+}
+
+/// Read one request head through the final `\r\n\r\n`.  `Ok(None)` on a
+/// clean peer close before any bytes.
+fn read_request_head(stream: &mut TcpStream) -> io::Result<Option<Vec<u8>>> {
+    let mut head = Vec::with_capacity(256);
+    let mut b = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        if head.len() > 16 << 10 {
+            return Err(io::Error::other("request head too large"));
+        }
+        match stream.read(&mut b) {
+            // clean close and mid-head truncation both end the connection
+            Ok(0) => return Ok(None),
+            Ok(_) => head.push(b[0]),
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(head))
+}
+
+/// Parse `(method, path, range-header-value)` out of a request head.
+fn parse_request(head: &[u8]) -> Option<(String, String, Option<String>)> {
+    let text = std::str::from_utf8(head).ok()?;
+    let mut lines = text.split("\r\n");
+    let mut req = lines.next()?.split_whitespace();
+    let method = req.next()?.to_string();
+    let path = req.next()?.to_string();
+    let mut range = None;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("range") {
+                range = Some(v.trim().to_string());
+            }
+        }
+    }
+    Some((method, path, range))
+}
+
+/// Resolve a `bytes=a-b` / `bytes=a-` header against `total` body bytes to
+/// `(offset, len)`.  `None` for malformed or unsatisfiable ranges (→ 416).
+fn parse_range(header: &str, total: u64) -> Option<(u64, u64)> {
+    let spec = header.strip_prefix("bytes=")?;
+    let (a, b) = spec.split_once('-')?;
+    let start: u64 = a.trim().parse().ok()?;
+    if start >= total {
+        return None;
+    }
+    let end_incl: u64 = match b.trim() {
+        "" => total - 1,
+        s => s.parse::<u64>().ok()?.min(total - 1),
+    };
+    if end_incl < start {
+        return None;
+    }
+    Some((start, end_incl - start + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw_request(addr: SocketAddr, req: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(req.as_bytes()).unwrap();
+        s.shutdown(Shutdown::Write).ok();
+        let mut out = Vec::new();
+        s.read_to_end(&mut out).unwrap();
+        // bodies are arbitrary bytes; the heads under test are ASCII
+        String::from_utf8_lossy(&out).into_owned()
+    }
+
+    #[test]
+    fn range_parsing_resolves_and_rejects() {
+        assert_eq!(parse_range("bytes=0-9", 100), Some((0, 10)));
+        assert_eq!(parse_range("bytes=90-", 100), Some((90, 10)));
+        assert_eq!(parse_range("bytes=90-1000", 100), Some((90, 10)), "end clamps to body");
+        assert_eq!(parse_range("bytes=100-110", 100), None, "start past end is 416");
+        assert_eq!(parse_range("bytes=9-3", 100), None);
+        assert_eq!(parse_range("chunks=0-9", 100), None);
+        assert_eq!(parse_range("bytes=x-9", 100), None);
+    }
+
+    #[test]
+    fn serves_200_206_416_and_head() {
+        let body: Vec<u8> = (0u8..200).collect();
+        let srv = RangeServer::serve(body.clone()).unwrap();
+
+        let full = raw_request(srv.addr(), "GET /pocket HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(full.starts_with("HTTP/1.1 200"), "{full}");
+        assert!(full.contains("Content-Length: 200"));
+
+        let part = raw_request(
+            srv.addr(),
+            "GET /pocket HTTP/1.1\r\nHost: x\r\nRange: bytes=10-19\r\n\r\n",
+        );
+        assert!(part.starts_with("HTTP/1.1 206"), "{part}");
+        assert!(part.contains("Content-Range: bytes 10-19/200"), "{part}");
+        assert!(part.contains("Content-Length: 10"));
+
+        let over = raw_request(
+            srv.addr(),
+            "GET /pocket HTTP/1.1\r\nHost: x\r\nRange: bytes=500-600\r\n\r\n",
+        );
+        assert!(over.starts_with("HTTP/1.1 416"), "{over}");
+        assert!(over.contains("Content-Range: bytes */200"), "{over}");
+
+        let head = raw_request(srv.addr(), "HEAD /pocket HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(head.contains("Content-Length: 200"));
+        assert!(head.ends_with("\r\n\r\n"), "HEAD must carry no body: {head:?}");
+
+        let log = srv.requests();
+        assert_eq!(log.len(), 4);
+        assert_eq!(log[0].status, 200);
+        assert_eq!((log[1].status, log[1].range), (206, Some((10, 10))));
+        assert_eq!((log[2].status, log[2].range), (416, None));
+        assert_eq!((log[3].method.as_str(), log[3].status), ("HEAD", 200));
+    }
+
+    #[test]
+    fn keep_alive_serves_multiple_requests_on_one_connection() {
+        let srv = RangeServer::serve(vec![7u8; 64]).unwrap();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        for i in 0..3u64 {
+            let req = format!(
+                "GET /pocket HTTP/1.1\r\nHost: x\r\nRange: bytes={}-{}\r\n\r\n",
+                i * 8,
+                i * 8 + 7
+            );
+            s.write_all(req.as_bytes()).unwrap();
+            // read the head, then exactly 8 body bytes
+            let mut head = Vec::new();
+            let mut b = [0u8; 1];
+            while !head.ends_with(b"\r\n\r\n") {
+                s.read_exact(&mut b).unwrap();
+                head.push(b[0]);
+            }
+            let mut body = [0u8; 8];
+            s.read_exact(&mut body).unwrap();
+            assert_eq!(body, [7u8; 8]);
+        }
+        assert_eq!(srv.request_count(), 3, "all three requests rode one socket");
+    }
+
+    #[test]
+    fn faults_apply_in_script_order_then_clear() {
+        let srv = RangeServer::serve(vec![1u8; 32]).unwrap();
+        srv.script_faults([Fault::Status(500), Fault::CloseBeforeResponse]);
+        assert_eq!(srv.pending_faults(), 2);
+
+        let r1 = raw_request(srv.addr(), "GET /pocket HTTP/1.1\r\nRange: bytes=0-3\r\n\r\n");
+        assert!(r1.starts_with("HTTP/1.1 500"), "{r1}");
+
+        // fault 2 drops the connection with no bytes at all
+        let r2 = raw_request(srv.addr(), "GET /pocket HTTP/1.1\r\nRange: bytes=0-3\r\n\r\n");
+        assert!(r2.is_empty(), "close-before-response leaked bytes: {r2:?}");
+
+        // script exhausted: back to normal service
+        let r3 = raw_request(srv.addr(), "GET /pocket HTTP/1.1\r\nRange: bytes=0-3\r\n\r\n");
+        assert!(r3.starts_with("HTTP/1.1 206"), "{r3}");
+        assert_eq!(srv.pending_faults(), 0);
+
+        let log = srv.requests();
+        assert_eq!(log[0].fault, Some("status"));
+        assert_eq!(log[1].fault, Some("close-before-response"));
+        assert_eq!(log[2].fault, None);
+    }
+
+    #[test]
+    fn head_with_body_fault_drops_connection_after_headers() {
+        let srv = RangeServer::serve(vec![2u8; 16]).unwrap();
+        srv.push_fault(Fault::ShortBody(4));
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.write_all(b"HEAD /pocket HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut head = Vec::new();
+        let mut b = [0u8; 1];
+        while !head.ends_with(b"\r\n\r\n") {
+            s.read_exact(&mut b).unwrap();
+            head.push(b[0]);
+        }
+        assert!(head.starts_with(b"HTTP/1.1 200"));
+        // a body-level fault on a bodiless HEAD is not silently eaten: it
+        // degrades to a connection drop the client can observe
+        s.write_all(b"HEAD /pocket HTTP/1.1\r\nHost: x\r\n\r\n").ok();
+        let mut rest = Vec::new();
+        let n = s.read_to_end(&mut rest).unwrap_or(0);
+        assert_eq!(n, 0, "connection must be closed after the faulted HEAD");
+        assert_eq!(srv.pending_faults(), 0);
+        assert_eq!(srv.requests()[0].fault, Some("short-body"));
+    }
+
+    #[test]
+    fn short_body_fault_underdelivers_against_its_content_length() {
+        let srv = RangeServer::serve(vec![9u8; 64]).unwrap();
+        srv.push_fault(Fault::ShortBody(4));
+        let r = raw_request(srv.addr(), "GET /pocket HTTP/1.1\r\nRange: bytes=0-15\r\n\r\n");
+        assert!(r.starts_with("HTTP/1.1 206"), "{r}");
+        assert!(r.contains("Content-Length: 16"));
+        let body_start = r.find("\r\n\r\n").unwrap() + 4;
+        assert_eq!(r.len() - body_start, 12, "exactly 4 bytes short");
+    }
+}

@@ -1,0 +1,26 @@
+//! Shared fixtures for the serving-path integration suites.
+
+use pocketllm::coordinator::lm;
+use pocketllm::data::Corpus;
+use pocketllm::packfmt::PocketFile;
+use pocketllm::session::Session;
+
+/// One quick two-group compression, shared across suites.  Every suite
+/// builds exactly this pocket — the cross-suite bit-identity claims
+/// (reader-vs-eager, remote-vs-local) rely on the fixture never diverging
+/// between copies, which is why it lives here.
+pub fn compressed_pocket(session: &Session) -> PocketFile {
+    let corpus = Corpus::new(512, 77);
+    let (ws, _) = lm::train_lm(session.runtime(), "tiny", &corpus, 6, 3, 0).unwrap();
+    session
+        .compress(&ws)
+        .preset("p16x")
+        .groups(["q", "up"])
+        .steps(40)
+        .kmeans_iters(1)
+        .post_steps(8)
+        .seed(1)
+        .run()
+        .unwrap()
+        .pocket
+}

@@ -20,22 +20,8 @@ use pocketllm::packfmt::{PocketFile, PocketReader};
 use pocketllm::session::Session;
 use pocketllm::Error;
 
-/// One quick two-group compression, shared by the tests below.
-fn compressed_pocket(session: &Session) -> PocketFile {
-    let corpus = Corpus::new(512, 77);
-    let (ws, _) = lm::train_lm(session.runtime(), "tiny", &corpus, 6, 3, 0).unwrap();
-    let res = session
-        .compress(&ws)
-        .preset("p16x")
-        .groups(["q", "up"])
-        .steps(40)
-        .kmeans_iters(1)
-        .post_steps(8)
-        .seed(1)
-        .run()
-        .unwrap();
-    res.pocket
-}
+mod common;
+use common::compressed_pocket;
 
 #[test]
 fn pocket02_reconstructs_bit_identically_to_eager_path() {

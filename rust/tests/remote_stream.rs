@@ -1,0 +1,230 @@
+//! Integration tests for the remote streaming path — `HttpSource` against
+//! the in-process loopback range server (`util::testserver::RangeServer`),
+//! fully offline:
+//!
+//! * a remote open reads only the header + TOC, and a full decode through
+//!   `HttpSource` is **bit-identical** to the in-memory (`MemSource`) path;
+//! * the TOC-guided `PrefetchPlan` coalesces adjacent sections: a full
+//!   decode issues exactly **one fetch per coalesced window** — strictly
+//!   fewer round trips than per-section reads — and a warm decode touches
+//!   the wire not at all;
+//! * retry-with-backoff recovers from every scripted fault class (drop
+//!   before response, drop mid-body, stall past the read timeout, 5xx,
+//!   short body) and the recovered bytes are still bit-identical;
+//! * out-of-bounds reads fail locally (no wire traffic), a `416` is a
+//!   permanent fail-fast error, and the server's own 416 framing is
+//!   correct on the wire;
+//! * a property over arbitrary coalescing policies, window-cache sizes and
+//!   eventually-successful fault schedules: reconstruction through
+//!   `HttpSource` always matches the eager decode bit for bit.
+//!
+//! Everything runs on the pure-Rust reference backend over 127.0.0.1.
+
+use std::io;
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use pocketllm::packfmt::{HttpOptions, HttpSource, PocketReader, RetryPolicy};
+use pocketllm::session::Session;
+use pocketllm::util::quickcheck::{prop_assert, property_cases};
+use pocketllm::util::testserver::{Fault, RangeServer};
+use pocketllm::SectionSource;
+
+mod common;
+use common::compressed_pocket;
+
+/// Fast-retry client options so fault tests don't sleep through CI.
+fn fast_opts() -> HttpOptions {
+    HttpOptions {
+        timeout: Duration::from_millis(200),
+        retry: RetryPolicy { attempts: 5, backoff: Duration::from_millis(2) },
+        max_windows: 16,
+    }
+}
+
+#[test]
+fn http_decode_is_bit_identical_to_mem_and_open_stays_lazy() {
+    let session = Session::reference();
+    let pocket = compressed_pocket(&session);
+    let bytes = pocket.to_bytes();
+    let total = bytes.len() as u64;
+    let server = RangeServer::serve(bytes.clone()).unwrap();
+    assert!(server.addr().ip().is_loopback(), "harness must stay on loopback");
+
+    let remote = PocketReader::open_url(&server.url()).unwrap();
+    let s0 = remote.stats();
+    assert_eq!(s0.bytes_read, remote.header_bytes());
+    let at_open = s0.source.expect("http transport must report fetch stats");
+    assert!(at_open.bytes_fetched < total, "open must not download the container");
+    assert_eq!(at_open.retries, 0);
+
+    let mem = PocketReader::from_bytes(bytes).unwrap();
+    let a = remote.reconstruct_all(session.runtime()).unwrap();
+    let b = mem.reconstruct_all(session.runtime()).unwrap();
+    assert_eq!(a.flat, b.flat, "remote decode diverged from the in-memory path");
+
+    // every byte travelled as loopback HTTP the server saw and logged
+    assert!(server.request_count() > 0);
+    assert!(server.requests().iter().all(|r| r.method == "HEAD" || r.method == "GET"));
+    assert!(server.requests().iter().all(|r| r.fault.is_none()));
+}
+
+#[test]
+fn coalesced_windows_fetch_once_and_beat_per_section_reads() {
+    let session = Session::reference();
+    let pocket = compressed_pocket(&session);
+    let server = RangeServer::serve(pocket.to_bytes()).unwrap();
+
+    let src = HttpSource::connect(&server.url()).unwrap();
+    let handle = src.clone();
+    let reader = PocketReader::open_http(src).unwrap();
+    let plan = handle.plan();
+    let mut names = reader.group_names();
+    names.extend(reader.dense_names());
+    assert!(!plan.is_empty(), "open_http must install a TOC-guided plan");
+    assert!(plan.len() < names.len(), "adjacent sections must coalesce");
+
+    let after_open = handle.range_log().len();
+    reader.reconstruct_all(session.runtime()).unwrap();
+    let log = handle.range_log();
+    let fetched = &log[after_open..];
+    assert_eq!(
+        fetched.len(),
+        plan.len(),
+        "expected exactly one fetch per coalesced window, got {fetched:?}"
+    );
+    for r in fetched {
+        assert!(plan.windows().contains(r), "fetch {r:?} is not a whole planned window");
+    }
+    // the coalescing claim: strictly fewer round trips than sections
+    assert!(fetched.len() < names.len(), "windows did not beat per-section reads");
+
+    // a second full decode rides the decode cache: zero new wire traffic
+    let before = server.request_count();
+    reader.reconstruct_all(session.runtime()).unwrap();
+    assert_eq!(server.request_count(), before, "warm reconstruct touched the wire");
+    // ... which also covers the dense residue: no per-request re-reads
+    let st = reader.stats();
+    assert_eq!(st.dense_sections_read, reader.dense_names().len() as u64);
+    assert!(st.dense_hits >= reader.dense_names().len() as u64);
+}
+
+#[test]
+fn retry_recovers_from_every_scripted_fault_class() {
+    let session = Session::reference();
+    let pocket = compressed_pocket(&session);
+    let bytes = pocket.to_bytes();
+    let expect = PocketReader::from_bytes(bytes.clone())
+        .unwrap()
+        .reconstruct_all(session.runtime())
+        .unwrap();
+
+    let faults = [
+        ("close-before-response", Fault::CloseBeforeResponse),
+        ("drop-after", Fault::DropAfter(7)),
+        ("stall", Fault::Stall(Duration::from_millis(500))),
+        ("status-500", Fault::Status(500)),
+        ("short-body", Fault::ShortBody(3)),
+    ];
+    for (name, fault) in faults {
+        let server = RangeServer::serve(bytes.clone()).unwrap();
+        let src = HttpSource::connect_with(&server.url(), fast_opts()).unwrap();
+        let handle = src.clone();
+        let reader = PocketReader::open_http(src).unwrap();
+
+        server.push_fault(fault);
+        let ws = reader
+            .reconstruct_all(session.runtime())
+            .unwrap_or_else(|e| panic!("fault {name}: decode failed to recover: {e}"));
+        assert_eq!(ws.flat, expect.flat, "fault {name}: recovered decode diverged");
+        assert!(handle.retries() >= 1, "fault {name}: recovery happened without a retry");
+        assert_eq!(server.pending_faults(), 0, "fault {name}: fault never fired");
+        let log = server.requests();
+        assert!(log.iter().any(|r| r.fault.is_some()), "fault {name}: not logged");
+    }
+}
+
+#[test]
+fn out_of_bounds_reads_fail_locally_and_416_fails_fast() {
+    let body: Vec<u8> = (0u8..200).collect();
+    let server = RangeServer::serve(body).unwrap();
+    let src = HttpSource::connect(&server.url()).unwrap();
+    assert_eq!(src.len(), 200);
+    let after_connect = server.request_count();
+
+    // the client bounds-checks before the wire: an overrun read is a local
+    // typed EOF and produces zero traffic
+    let mut buf = [0u8; 16];
+    let e = src.read_at(192, &mut buf).unwrap_err();
+    assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof);
+    let e = src.read_at(u64::MAX, &mut buf).unwrap_err();
+    assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof, "offset overflow must not wrap");
+    assert_eq!(server.request_count(), after_connect, "overrun read reached the wire");
+
+    // a scripted 416 (a mirror serving a shorter container than its HEAD
+    // promised) is permanent: exactly one request, no retries
+    server.push_fault(Fault::Status(416));
+    let e = src.read_at(0, &mut buf).unwrap_err();
+    assert_eq!(e.kind(), io::ErrorKind::InvalidInput, "4xx must be permanent: {e}");
+    assert_eq!(server.request_count(), after_connect + 1, "a 4xx response was retried");
+    assert_eq!(src.retries(), 0);
+
+    // the source recovers on the next (reconnected) request
+    src.read_at(10, &mut buf).unwrap();
+    assert_eq!(&buf[..4], &[10, 11, 12, 13]);
+
+    // and on the wire, a genuinely unsatisfiable range gets the full 416
+    // framing (status + `Content-Range: bytes */total`)
+    let mut s = std::net::TcpStream::connect(server.addr()).unwrap();
+    s.write_all(b"GET /pocket HTTP/1.1\r\nHost: x\r\nRange: bytes=900-950\r\n\r\n").unwrap();
+    s.shutdown(std::net::Shutdown::Write).ok();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 416"), "{resp}");
+    assert!(resp.contains("Content-Range: bytes */200"), "{resp}");
+}
+
+#[test]
+fn property_http_reconstruction_is_bit_identical_under_faults() {
+    let session = Session::reference();
+    let pocket = compressed_pocket(&session);
+    let bytes = pocket.to_bytes();
+    let expect = PocketReader::from_bytes(bytes.clone())
+        .unwrap()
+        .reconstruct_all(session.runtime())
+        .unwrap();
+
+    property_cases("http streaming reconstruction", 8, |g| {
+        let server = RangeServer::serve(bytes.clone()).map_err(|e| e.to_string())?;
+        let opts = HttpOptions {
+            timeout: Duration::from_millis(200),
+            retry: RetryPolicy { attempts: 5, backoff: Duration::from_millis(1) },
+            // arbitrary window-cache pressure, down to a single window
+            max_windows: g.usize_in(1, 8),
+        };
+        let src = HttpSource::connect_with(&server.url(), opts).map_err(|e| e.to_string())?;
+        let handle = src.clone();
+        let reader = PocketReader::open_http(src).map_err(|e| e.to_string())?;
+        // arbitrary coalescing policy, from per-section to everything-merges
+        let max_gap = g.u64_in(0, 8192);
+        let max_window = g.u64_in(64, 1 << 22);
+        handle.install_plan(reader.prefetch_plan(max_gap, max_window));
+
+        // a fault schedule that eventually succeeds: at most two queued
+        // faults, each absorbed by the 5-attempt retry budget
+        for _ in 0..g.usize_in(0, 2) {
+            let fault = match g.int_in(0, 3) {
+                0 => Fault::CloseBeforeResponse,
+                1 => Fault::DropAfter(g.usize_in(0, 64)),
+                2 => Fault::Status(503),
+                _ => Fault::ShortBody(g.usize_in(1, 32)),
+            };
+            server.push_fault(fault);
+        }
+
+        let ws = reader
+            .reconstruct_all(session.runtime())
+            .map_err(|e| format!("decode failed under faults: {e}"))?;
+        prop_assert(ws.flat == expect.flat, "remote reconstruction diverged")
+    });
+}

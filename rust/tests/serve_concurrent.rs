@@ -12,9 +12,12 @@
 //! * two readers sharing one `DecodeCache` compete under one byte budget
 //!   (cross-reader eviction, no key aliasing);
 //! * the `Session::serve` / `PocketServer` layer fans a mixed request list
-//!   over worker threads against the shared cache.
+//!   over worker threads against the shared cache — and dense residue
+//!   sections ride the same cache (fetched once, never per request).
 //!
 //! Everything runs hermetically on the pure-Rust reference backend.
+//! The remote streaming path (`HttpSource` + loopback range server) has its
+//! own suite in `tests/remote_stream.rs`.
 
 use std::sync::Arc;
 
@@ -25,24 +28,8 @@ use pocketllm::serve::ServeRequest;
 use pocketllm::session::Session;
 use pocketllm::DecodeCache;
 
-/// One quick two-group compression, shared by the tests below.
-fn compressed_pocket(session: &Session) -> PocketFile {
-    use pocketllm::coordinator::lm;
-    use pocketllm::data::Corpus;
-    let corpus = Corpus::new(512, 77);
-    let (ws, _) = lm::train_lm(session.runtime(), "tiny", &corpus, 6, 3, 0).unwrap();
-    session
-        .compress(&ws)
-        .preset("p16x")
-        .groups(["q", "up"])
-        .steps(40)
-        .kmeans_iters(1)
-        .post_steps(8)
-        .seed(1)
-        .run()
-        .unwrap()
-        .pocket
-}
+mod common;
+use common::compressed_pocket;
 
 #[test]
 fn concurrent_threads_share_one_fetch_and_decode_per_group() {
@@ -172,6 +159,11 @@ fn chunked_source_open_and_single_decode_fetch_only_their_ranges() {
     let before = src.ranges_fetched();
     reader.decode_group(session.runtime(), "q").unwrap();
     assert_eq!(src.ranges_fetched(), before, "cache hit re-fetched ranges");
+
+    // the transport counters surface uniformly through ReaderStats
+    let fetched = reader.stats().source.expect("chunked transport must report stats");
+    assert_eq!(fetched.ranges_fetched, src.ranges_fetched());
+    assert_eq!(fetched.bytes_fetched, src.bytes_fetched());
 }
 
 #[cfg(unix)]
@@ -261,6 +253,17 @@ fn serve_layer_fans_mixed_requests_over_workers() {
     assert_eq!(st.group_sections_read, 2, "each group section fetched exactly once");
     assert_eq!(st.group_decodes, 2);
     assert!(report.cache_hit_rate() > 0.5, "warm serving must mostly hit the cache");
+    // dense residue rides the same shared cache: every dense section is
+    // fetched at most once across all 20 b0.wv requests + the eval probe
+    // (which reconstructs through the reader), never once per request
+    assert_eq!(
+        st.dense_sections_read,
+        reader.dense_names().len() as u64,
+        "a dense residue section was re-read"
+    );
+    assert!(st.dense_hits >= 19, "warm dense requests must hit the cache: {st:?}");
+    // in-memory source: no range-transport counters
+    assert!(st.source.is_none());
 
     // unknown names surface as typed errors, not hangs
     let err = session
