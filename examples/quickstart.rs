@@ -77,5 +77,19 @@ fn main() -> Result<(), pocketllm::Error> {
         stats.cache_hits,
         stats.cache.resident_bytes / 1024
     );
+
+    // 7. pocket-native inference: generate text straight off the pocket.
+    //    Weights resolve one transformer block at a time through the shared
+    //    decode cache, so memory follows the budget — not the model size.
+    let provider = session.pocket_provider(std::sync::Arc::new(reader))?;
+    let out = session.generate(&provider).prompt(vec![1, 2, 3]).max_new(12).run()?;
+    let st = provider.reader().stats();
+    println!(
+        "generated {:?} at {:.0} tok/s ({} chunk decodes, peak resident {} KiB)",
+        out.continuation(),
+        out.tokens_per_sec(),
+        st.chunk_decodes,
+        st.cache.peak_resident_bytes / 1024
+    );
     Ok(())
 }

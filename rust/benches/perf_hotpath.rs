@@ -4,18 +4,24 @@
 //!   marshalling (gather_rows), linear k-means baseline;
 //! * runtime: per-dispatch latency of the meta train/assign/decode
 //!   executables and the LM step (XLA-CPU), plus the per-artifact dispatch
-//!   totals the coordinator accumulated.
+//!   totals the coordinator accumulated;
+//! * generation: per-step latency of the incremental KV-cached decode loop
+//!   over an `InMemoryProvider` (the compute floor under the pocket
+//!   streaming paths measured end-to-end by the CLI `gen-bench`).
 //!
 //!     cargo bench --bench perf_hotpath
 
 use pocketllm::data::Corpus;
+use pocketllm::model::WeightStore;
 use pocketllm::quant::vq_linear::VqLinear;
 use pocketllm::quant::Baseline;
+use pocketllm::runtime::reference::lm::{gen_step, GenState};
 use pocketllm::runtime::{Arg, Runtime};
 use pocketllm::tensor::{TensorF32, TensorI32};
 use pocketllm::util::benchlib::{bench, Measurement};
 use pocketllm::util::bitpack::BitPacked;
 use pocketllm::util::prng::Pcg32;
+use pocketllm::InMemoryProvider;
 
 fn main() -> anyhow::Result<()> {
     let mut results: Vec<Measurement> = Vec::new();
@@ -102,6 +108,18 @@ fn main() -> anyhow::Result<()> {
             ],
         )
         .unwrap();
+    }));
+
+    // --- incremental generation step (provider compute floor) ---------------
+    let ws = WeightStore::init(&cfg, &mut Pcg32::seeded(5));
+    let provider = InMemoryProvider::new(&ws);
+    results.push(bench("gen_step tiny (KV-cached, in-memory)", 1, 5, || {
+        let mut st = GenState::new(&cfg);
+        for t in 0..16 {
+            std::hint::black_box(
+                gen_step(&provider, &mut st, (t * 13 + 1) % cfg.vocab as i32, |_| {}).unwrap(),
+            );
+        }
     }));
 
     println!("\n== perf_hotpath ==");

@@ -401,15 +401,44 @@ pub fn decode_group(
     row_scales: &[f32],
     n_rows: usize,
 ) -> Result<TensorF32> {
-    anyhow::ensure!(indices.len() == n_rows * mc.l, "index count mismatch");
-    anyhow::ensure!(row_scales.len() == 2 * n_rows, "row scale count mismatch");
-    anyhow::ensure!(n_rows % mc.r == 0, "rows not divisible by dispatch size");
+    decode_group_rows(rt, mc, decoder, codebook, indices, row_scales, n_rows, 0, n_rows)
+}
+
+/// Reconstruct only rows `[row0, row0 + n_rows)` of a group — the unit of
+/// the layer-streaming read path (`PocketReader::tensor_chunk` /
+/// `runtime::weights::PocketProvider`), where one transformer block's slice
+/// of a group decodes without materializing the other blocks.  `row0` and
+/// `n_rows` must be multiples of the meta config's dispatch chunk `R`, so
+/// the chunk grid matches a whole-group decode exactly and the returned
+/// rows are bit-identical to the same rows of [`decode_group`].
+#[allow(clippy::too_many_arguments)]
+pub fn decode_group_rows(
+    rt: &Runtime,
+    mc: &MetaCfg,
+    decoder: &[f32],
+    codebook: &TensorF32,
+    indices: &[u32],
+    row_scales: &[f32],
+    total_rows: usize,
+    row0: usize,
+    n_rows: usize,
+) -> Result<TensorF32> {
+    anyhow::ensure!(indices.len() == total_rows * mc.l, "index count mismatch");
+    anyhow::ensure!(row_scales.len() == 2 * total_rows, "row scale count mismatch");
+    anyhow::ensure!(total_rows % mc.r == 0, "rows not divisible by dispatch size");
+    anyhow::ensure!(
+        row0 % mc.r == 0 && n_rows % mc.r == 0,
+        "row range {row0}+{n_rows} not aligned to dispatch chunk R={}",
+        mc.r
+    );
+    anyhow::ensure!(row0 + n_rows <= total_rows, "row range out of bounds");
     let theta = theta_from_decoder(mc, decoder);
     let decode_name = format!("meta_decode_{}", mc.name);
+    let first_chunk = row0 / mc.r;
     let n_chunks = n_rows / mc.r;
     let chunk_rows = scoped_map(
         default_workers(n_chunks.max(1)),
-        (0..n_chunks).collect::<Vec<_>>(),
+        (first_chunk..first_chunk + n_chunks).collect::<Vec<_>>(),
         |chunk_i| -> Result<TensorF32> {
             let idx_chunk: Vec<i32> = indices
                 [chunk_i * mc.r * mc.l..(chunk_i + 1) * mc.r * mc.l]
@@ -434,8 +463,8 @@ pub fn decode_group(
         },
     );
     let mut out = TensorF32::zeros(vec![n_rows, mc.w]);
-    for (chunk_i, rows_hat) in chunk_rows.into_iter().enumerate() {
-        let rows_idx: Vec<usize> = (chunk_i * mc.r..(chunk_i + 1) * mc.r).collect();
+    for (local, rows_hat) in chunk_rows.into_iter().enumerate() {
+        let rows_idx: Vec<usize> = (local * mc.r..(local + 1) * mc.r).collect();
         out.scatter_rows(&rows_idx, &rows_hat?);
     }
     Ok(out)

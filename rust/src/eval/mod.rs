@@ -7,6 +7,8 @@ use anyhow::Result;
 use crate::data::tasks::{generate, pack_choice, SuiteSpec, TaskInstance, ZERO_SHOT_SUITES};
 use crate::data::Corpus;
 use crate::model::WeightStore;
+use crate::runtime::reference::lm;
+use crate::runtime::weights::WeightProvider;
 use crate::runtime::{Arg, Runtime};
 use crate::tensor::{TensorF32, TensorI32};
 use crate::util::stats::{central_range, Histogram};
@@ -60,6 +62,28 @@ pub fn perplexity_reader(
 ) -> Result<f64> {
     let ws = reader.reconstruct_all(rt).map_err(anyhow::Error::new)?;
     perplexity(rt, &ws, corpus, n_batches)
+}
+
+/// Perplexity through a [`WeightProvider`] — the **layer-streaming** read
+/// path: weights resolve per transformer block, so a pocket-backed
+/// provider never materializes the dense model and memory stays bounded by
+/// its reader's decode-cache budget.  Runs the reference per-layer math
+/// directly; on the reference backend the result is numerically identical
+/// to [`perplexity`] over the same (reconstructed) weights.
+pub fn perplexity_provider(
+    provider: &dyn WeightProvider,
+    corpus: &Corpus,
+    n_batches: usize,
+) -> Result<f64> {
+    let cfg = provider.cfg();
+    let mut total = 0.0f64;
+    let mut count = 0.0f64;
+    for b in corpus.eval_batches(n_batches, cfg.eval_batch, cfg.seq_len) {
+        let (t, c) = lm::eval_nll_provider(provider, &b.data, cfg.eval_batch)?;
+        total += t;
+        count += c as f64;
+    }
+    Ok((total / count).exp())
 }
 
 /// Perplexity of a model over `n_batches` held-out batches of a corpus.

@@ -58,6 +58,30 @@
 //!   }
 //!   ```
 //!
+//! The payoff on top of both: **pocket-native inference**.  A
+//! [`WeightProvider`] ([`runtime::weights`]) resolves named tensors on
+//! demand — eagerly from a flat vector ([`InMemoryProvider`]) or lazily,
+//! one transformer block at a time, from a pocket ([`PocketProvider`]) —
+//! and `Session::generate` runs an incremental KV-cached decode loop over
+//! it (greedy or seeded temperature/top-k), with next-layer prefetch
+//! overlapping decode and compute.  Generation memory is bounded by the
+//! decode-cache budget, not the model size:
+//!
+//!   ```no_run
+//!   use pocketllm::{PocketReader, Session};
+//!   use std::sync::Arc;
+//!
+//!   fn main() -> Result<(), pocketllm::Error> {
+//!       let session = Session::builder().build()?;
+//!       let reader = PocketReader::open(std::path::Path::new("model.pocket"))?
+//!           .with_cache_budget(6 << 20); // ~2 layers resident
+//!       let provider = session.pocket_provider(Arc::new(reader))?;
+//!       let out = session.generate(&provider).prompt(vec![1, 2, 3]).max_new(16).run()?;
+//!       println!("{:?} ({:.0} tok/s)", out.continuation(), out.tokens_per_sec());
+//!       Ok(())
+//!   }
+//!   ```
+//!
 //! Around them: per-layer-group compression jobs ([`coordinator`]), the
 //! synthetic data/task substrates ([`data`]), the on-disk pocket format
 //! with exact Eq. 13/14 ratio accounting ([`packfmt`]), the
@@ -92,8 +116,9 @@ pub use packfmt::{
     HttpOptions, HttpSource, PocketReader, PrefetchPlan, ReaderStats, RetryPolicy, SectionSource,
     SourceStats,
 };
+pub use runtime::weights::{InMemoryProvider, PocketProvider, WeightProvider, WeightView};
 pub use serve::{PocketServer, ServeReport, ServeRequest};
-pub use session::{BackendKind, Session, SessionBuilder};
+pub use session::{BackendKind, GenerateBuilder, Generated, Session, SessionBuilder};
 pub use util::cache::{CacheStats, DecodeCache};
 
 /// Crate-wide result alias (anyhow-based: the only error-handling crate

@@ -67,6 +67,13 @@ pub struct ReaderStats {
     pub cache_hits: u64,
     /// Dense-residue requests answered from the cache.
     pub dense_hits: u64,
+    /// Backend decode runs of *row-range chunks*
+    /// ([`PocketReader::decode_group_rows`], the layer-streaming read path).
+    /// Each chunk miss re-reads its group's section, so these also count
+    /// into `group_sections_read`.
+    pub chunk_decodes: u64,
+    /// Chunk requests answered from the cache.
+    pub chunk_hits: u64,
     /// Shared decode-cache counters (hits/misses/evictions/resident bytes).
     pub cache: CacheStats,
     /// Range-transport fetch counters ([`ChunkedSource`](super::ChunkedSource)
@@ -102,6 +109,8 @@ pub struct PocketReader {
     group_decodes: AtomicU64,
     cache_hits: AtomicU64,
     dense_hits: AtomicU64,
+    chunk_decodes: AtomicU64,
+    chunk_hits: AtomicU64,
 }
 
 impl PocketReader {
@@ -265,6 +274,8 @@ impl PocketReader {
             group_decodes: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             dense_hits: AtomicU64::new(0),
+            chunk_decodes: AtomicU64::new(0),
+            chunk_hits: AtomicU64::new(0),
         }
     }
 
@@ -308,6 +319,8 @@ impl PocketReader {
             group_decodes: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             dense_hits: AtomicU64::new(0),
+            chunk_decodes: AtomicU64::new(0),
+            chunk_hits: AtomicU64::new(0),
         })
     }
 
@@ -421,6 +434,8 @@ impl PocketReader {
             group_decodes: self.group_decodes.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             dense_hits: self.dense_hits.load(Ordering::Relaxed),
+            chunk_decodes: self.chunk_decodes.load(Ordering::Relaxed),
+            chunk_hits: self.chunk_hits.load(Ordering::Relaxed),
             cache: self.cache.stats(),
             source: match &self.inner {
                 Inner::Lazy { src, .. } => src.fetch_stats(),
@@ -480,6 +495,19 @@ impl PocketReader {
     /// misses single-flight exactly like group decodes.
     pub fn dense_tensor(&self, name: &str) -> Result<Vec<f32>, Error> {
         match &self.inner {
+            Inner::Lazy { .. } => Ok(self.dense_tensor_arc(name)?.data.clone()),
+            Inner::Eager(pf) => pf.dense.get(name).cloned().ok_or_else(|| {
+                Error::UnknownConfig { kind: "dense tensor", name: name.to_string() }
+            }),
+        }
+    }
+
+    /// [`PocketReader::dense_tensor`] as a shared handle: in lazy mode this
+    /// is the cache-resident `Arc` itself (the hot path of a
+    /// [`WeightProvider`](crate::runtime::weights::WeightProvider) clones a
+    /// pointer, not the payload); the eager fallback wraps a fresh copy.
+    pub fn dense_tensor_arc(&self, name: &str) -> Result<Arc<TensorF32>, Error> {
+        match &self.inner {
             Inner::Lazy { src, dense, .. } => {
                 let e = dense.get(name).ok_or_else(|| Error::UnknownConfig {
                     kind: "dense tensor",
@@ -495,11 +523,14 @@ impl PocketReader {
                 if hit {
                     self.dense_hits.fetch_add(1, Ordering::Relaxed);
                 }
-                Ok(t.data.clone())
+                Ok(t)
             }
-            Inner::Eager(pf) => pf.dense.get(name).cloned().ok_or_else(|| {
-                Error::UnknownConfig { kind: "dense tensor", name: name.to_string() }
-            }),
+            Inner::Eager(pf) => {
+                let buf = pf.dense.get(name).cloned().ok_or_else(|| {
+                    Error::UnknownConfig { kind: "dense tensor", name: name.to_string() }
+                })?;
+                Ok(Arc::new(TensorF32::new(vec![buf.len()], buf)))
+            }
         }
     }
 
@@ -521,17 +552,167 @@ impl PocketReader {
         Ok(rows)
     }
 
-    fn has_dense(&self, name: &str) -> bool {
+    /// Decode only rows `[row_start, row_start + row_len)` of one group —
+    /// the **layer-streaming** unit: one transformer block's slice of a
+    /// group decodes (and caches) without materializing the other blocks,
+    /// so generation memory is bounded by the cache budget instead of the
+    /// model size.  The range is widened to the meta config's dispatch
+    /// chunk `R`, which keeps every decoded value bit-identical to the
+    /// same row of [`PocketReader::decode_group`]; the return value is the
+    /// cached `[aligned_rows, width]` chunk plus the aligned start row, so
+    /// callers can slice their exact range back out.  Chunks live in the
+    /// same shared [`DecodeCache`] as whole groups (distinct key
+    /// namespace) with the same single-flight miss semantics.
+    pub fn decode_group_rows(
+        &self,
+        rt: &Runtime,
+        group: &str,
+        row_start: usize,
+        row_len: usize,
+    ) -> Result<(Arc<TensorF32>, usize), Error> {
+        let (rows_total, _) = self.group_shape(group).ok_or_else(|| Error::UnknownGroup {
+            group: group.to_string(),
+            known: self.group_names(),
+        })?;
+        if row_start + row_len > rows_total {
+            return Err(Error::ShapeMismatch {
+                what: format!("group {group} row range"),
+                expected: format!("<= {rows_total} rows"),
+                got: format!("{} rows", row_start + row_len),
+            });
+        }
+        let meta_name = self.group_meta_cfg(group).expect("group_shape implies a record");
+        let mc = rt
+            .manifest
+            .meta_cfg(&meta_name)
+            .map_err(|_| Error::UnknownConfig { kind: "meta config", name: meta_name.clone() })?
+            .clone();
+        let a0 = row_start - row_start % mc.r;
+        let a1 = (row_start + row_len).div_ceil(mc.r) * mc.r;
+        let key = chunk_key(group, a0, a1 - a0);
+        let (chunk, hit) = self.cache.get_or_try_insert_with(self.pocket_id, &key, || {
+            let rec = self.group_record(group)?;
+            if a1 > rec.rows || rec.row_scales.len() < 2 * a1 || rec.indices.len() < a1 * mc.l
+            {
+                return Err(Error::ShapeMismatch {
+                    what: format!("group {group} record"),
+                    expected: format!(">= {a1} rows of indices/scales"),
+                    got: format!("{} rows", rec.rows),
+                });
+            }
+            // unpack only this chunk's index range; a0 is R-aligned, so
+            // decoding the range relative to a0 runs the exact same
+            // per-chunk executions as a whole-group decode of these rows
+            let indices = rec.indices.unpack_range(a0 * mc.l, (a1 - a0) * mc.l);
+            let rows = job::decode_group_rows(
+                rt,
+                &mc,
+                &rec.decoder,
+                &rec.codebook,
+                &indices,
+                &rec.row_scales[2 * a0..2 * a1],
+                a1 - a0,
+                0,
+                a1 - a0,
+            )
+            .map_err(Error::from)?;
+            self.chunk_decodes.fetch_add(1, Ordering::Relaxed);
+            Ok::<_, Error>(Arc::new(rows))
+        })?;
+        if hit {
+            self.chunk_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok((chunk, a0))
+    }
+
+    /// Tensor-level resolution for the layer-streaming read path: one named
+    /// layout tensor as a zero-copy view — `(shared buffer, element range)`
+    /// — backed by the dense-section cache or by a per-block group chunk
+    /// ([`PocketReader::decode_group_rows`]).  Unlike
+    /// [`PocketReader::tensor`], this never decodes a whole group and never
+    /// copies the rows out; it is what
+    /// [`PocketProvider`](crate::runtime::weights::PocketProvider) serves
+    /// the per-layer transformer forward from.
+    pub fn tensor_chunk(
+        &self,
+        rt: &Runtime,
+        name: &str,
+    ) -> Result<(Arc<TensorF32>, std::ops::Range<usize>), Error> {
+        if self.has_dense(name) {
+            let t = self.dense_tensor_arc(name)?;
+            let n = t.data.len();
+            return Ok((t, 0..n));
+        }
+        let cfg = rt
+            .manifest
+            .lm_cfg(&self.lm_cfg)
+            .map_err(|_| Error::UnknownConfig { kind: "lm config", name: self.lm_cfg.clone() })?;
+        if let Some((block, tname)) = split_block_name(name) {
+            if block < cfg.n_layers {
+                for (gname, gi) in &cfg.groups {
+                    if !self.has_group(gname) {
+                        continue;
+                    }
+                    let ti = match gi.tensors.iter().position(|t| t == tname) {
+                        Some(ti) => ti,
+                        None => continue,
+                    };
+                    let row_start = gi.block_row_start(block, ti);
+                    let (chunk, a0) =
+                        self.decode_group_rows(rt, gname, row_start, gi.rows_per_block)?;
+                    let start = (row_start - a0) * gi.width;
+                    let len = gi.rows_per_block * gi.width;
+                    if start + len > chunk.data.len() {
+                        return Err(Error::ShapeMismatch {
+                            what: format!("group {gname} chunk"),
+                            expected: format!(">= {} values", start + len),
+                            got: format!("{} values", chunk.data.len()),
+                        });
+                    }
+                    return Ok((chunk, start..start + len));
+                }
+            }
+        }
+        Err(Error::UnknownConfig { kind: "tensor", name: name.to_string() })
+    }
+
+    /// True when this container is seekable (has a POCKET02 TOC).  Eager
+    /// containers (legacy POCKET01, in-memory [`PocketFile`]s) are fully
+    /// parsed at open, so section-level laziness does not apply to them.
+    pub fn seekable(&self) -> bool {
+        matches!(self.inner, Inner::Lazy { .. })
+    }
+
+    /// Whether `name` is a dense residue section of this container.
+    pub fn has_dense(&self, name: &str) -> bool {
         match &self.inner {
             Inner::Lazy { dense, .. } => dense.contains_key(name),
             Inner::Eager(pf) => pf.dense.contains_key(name),
         }
     }
 
-    fn has_group(&self, name: &str) -> bool {
+    /// Whether `name` is a compressed group of this container.
+    pub fn has_group(&self, name: &str) -> bool {
         match &self.inner {
             Inner::Lazy { groups, .. } => groups.contains_key(name),
             Inner::Eager(pf) => pf.groups.contains_key(name),
+        }
+    }
+
+    /// `(rows, width)` of one compressed group, from the TOC (lazy) or the
+    /// parsed records (eager).
+    fn group_shape(&self, group: &str) -> Option<(usize, usize)> {
+        match &self.inner {
+            Inner::Lazy { groups, .. } => groups.get(group).map(|e| (e.rows, e.width)),
+            Inner::Eager(pf) => pf.groups.get(group).map(|g| (g.rows, g.width)),
+        }
+    }
+
+    /// Meta-config name of one compressed group.
+    fn group_meta_cfg(&self, group: &str) -> Option<String> {
+        match &self.inner {
+            Inner::Lazy { groups, .. } => groups.get(group).map(|e| e.meta_cfg.clone()),
+            Inner::Eager(pf) => pf.groups.get(group).map(|g| g.meta_cfg.clone()),
         }
     }
 
@@ -559,7 +740,7 @@ impl PocketReader {
                         None => continue,
                     };
                     let rows = self.decode_group(rt, gname)?;
-                    let row_start = (block * gi.tensors.len() + ti) * gi.rows_per_block;
+                    let row_start = gi.block_row_start(block, ti);
                     let start = row_start * gi.width;
                     let len = gi.rows_per_block * gi.width;
                     if start + len > rows.data.len() {
@@ -649,6 +830,14 @@ impl PocketReader {
 /// two namespaces never collide inside one shared cache.
 fn dense_key(name: &str) -> String {
     format!("dense\0{name}")
+}
+
+/// Decode-cache key for a row-range chunk of a group
+/// ([`PocketReader::decode_group_rows`]).  Same reasoning as [`dense_key`]:
+/// the `\u{1}` separator cannot occur in a section name, so chunk keys
+/// never alias whole-group or dense keys.
+fn chunk_key(group: &str, row0: usize, rows: usize) -> String {
+    format!("{group}\u{1}{row0}+{rows}")
 }
 
 /// Parse a layout tensor name of the form `b{block}.{tensor}` without
@@ -776,9 +965,28 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn cache_capacity_shim_converts_group_count_to_bytes() {
+    fn cache_budget_is_absolute_and_replaces_the_default() {
+        // in-tree code sizes caches in bytes (the deprecated
+        // with_cache_capacity(groups) shim remains only for embedders)
         let pf = sample_file(17);
+        let max_bytes = pf
+            .groups
+            .values()
+            .map(|g| (g.rows * g.width) as u64 * 4)
+            .max()
+            .unwrap();
+        let r = PocketReader::from_bytes(pf.to_bytes()).unwrap().with_cache_budget(3 * max_bytes);
+        assert_eq!(r.decode_cache().budget(), 3 * max_bytes);
+        let r0 = PocketReader::from_bytes(pf.to_bytes()).unwrap().with_cache_budget(0);
+        assert_eq!(r0.decode_cache().budget(), 0);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn cache_capacity_shim_still_converts_group_count_for_embedders() {
+        // no in-tree caller remains, but the shim is public API: keep the
+        // group-count -> bytes conversion pinned for external embedders
+        let pf = sample_file(21);
         let max_bytes = pf
             .groups
             .values()

@@ -12,7 +12,9 @@
 //!
 //! * **Wire client** — a minimal HTTP/1.1 subset: `GET` with
 //!   `Range: bytes=a-b` (and one `HEAD` at connect to learn the container
-//!   length), `Connection: keep-alive` reuse of a single socket, responses
+//!   length — falling back to a one-byte `bytes=0-0` probe whose
+//!   `Content-Range` total covers mirrors that reject `HEAD`),
+//!   `Connection: keep-alive` reuse of a single socket, responses
 //!   `200`/`206` honoured, `4xx` treated as permanent errors and `5xx` /
 //!   transport failures as retryable.  No chunked transfer-encoding, no TLS,
 //!   no redirects — pocket mirrors are dumb byte ranges.
@@ -227,11 +229,25 @@ impl HttpSource {
                 log: Mutex::new(Vec::new()),
             }),
         };
-        let len = src.with_retry(|s| Self::head_len(s, &src.inner))?;
+        let len = src.probe_len()?;
         // `len` is immutable after connect: no clones exist yet, so the
         // unique-Arc write below is the only writer it will ever see
         Arc::get_mut(&mut src.inner).expect("no clones exist at connect").len = len;
         Ok(src)
+    }
+
+    /// Learn the container length at connect: a `HEAD` first, and when the
+    /// server rejects or bungles it (405/501, missing `Content-Length`, a
+    /// mirror that only implements `GET`), fall back to a one-byte
+    /// `Range: bytes=0-0` probe and parse the total out of the `206`'s
+    /// `Content-Range`.  Both probes run under the retry policy; neither
+    /// counts toward the fetch counters (connect overhead, like the
+    /// historical HEAD).
+    fn probe_len(&self) -> io::Result<u64> {
+        match self.with_retry(|s| Self::head_len(s, &self.inner)) {
+            Ok(len) => Ok(len),
+            Err(_) => self.with_retry(|s| Self::range_probe_len(s, &self.inner)),
+        }
     }
 
     /// The URL this source fetches from.
@@ -353,6 +369,48 @@ impl HttpSource {
         let len = header_u64(&headers, "content-length")
             .ok_or_else(|| io::Error::other("HEAD response missing Content-Length"))?;
         Ok((len, !wants_close(&headers)))
+    }
+
+    /// HEAD-less length probe: one `GET Range: bytes=0-0` round trip, total
+    /// parsed from the `206`'s `Content-Range: bytes 0-0/TOTAL`.  A `200`
+    /// (server without range support) reads the total from
+    /// `Content-Length` and drops the connection instead of draining the
+    /// whole resource body.
+    fn range_probe_len(stream: &mut TcpStream, inner: &Inner) -> io::Result<(u64, bool)> {
+        write!(
+            stream,
+            "GET {} HTTP/1.1\r\nHost: {}:{}\r\nRange: bytes=0-0\r\nConnection: keep-alive\r\n\r\n",
+            inner.path, inner.host, inner.port
+        )?;
+        stream.flush()?;
+        let head = read_head(stream)?;
+        let (status, headers) = parse_head(&head)?;
+        match status {
+            206 => {
+                let total = content_range_total(&headers).ok_or_else(|| {
+                    io::Error::other("206 probe without a parsable Content-Range total")
+                })?;
+                // consume the one-byte probe body so keep-alive framing
+                // stays intact for the next request on this socket
+                let n = header_u64(&headers, "content-length").unwrap_or(1);
+                if n > 16 {
+                    return Err(io::Error::other(format!(
+                        "probe body is {n} bytes, expected 1"
+                    )));
+                }
+                let mut body = [0u8; 16];
+                stream.read_exact(&mut body[..n as usize])?;
+                Ok((total, !wants_close(&headers)))
+            }
+            200 => {
+                // no range support at all: Content-Length is the total;
+                // drop the socket rather than draining the whole resource
+                let total = header_u64(&headers, "content-length")
+                    .ok_or_else(|| io::Error::other("200 probe without Content-Length"))?;
+                Ok((total, false))
+            }
+            other => Err(status_error(other, "GET")),
+        }
     }
 
     /// One `GET Range` round trip filling `buf` with `[start, end)`.
@@ -589,6 +647,13 @@ fn header_u64(headers: &[(String, String)], name: &str) -> Option<u64> {
     headers.iter().find(|(k, _)| k == name).and_then(|(_, v)| v.parse().ok())
 }
 
+/// Total resource length out of a `Content-Range: bytes a-b/TOTAL` header
+/// (the HEAD-less probe's source of truth).
+fn content_range_total(headers: &[(String, String)]) -> Option<u64> {
+    let v = headers.iter().find(|(k, _)| k == "content-range").map(|(_, v)| v)?;
+    v.rsplit_once('/')?.1.trim().parse().ok()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -657,6 +722,17 @@ mod tests {
         assert_eq!(status, 206);
         assert_eq!(header_u64(&headers, "content-length"), Some(42));
         assert!(parse_head(b"SMTP nope\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn content_range_total_parses_and_rejects() {
+        let h = |v: &str| vec![("content-range".to_string(), v.to_string())];
+        assert_eq!(content_range_total(&h("bytes 0-0/4096")), Some(4096));
+        assert_eq!(content_range_total(&h("bytes 10-19/200")), Some(200));
+        assert_eq!(content_range_total(&h("bytes 0-0/ 77 ")), Some(77));
+        assert_eq!(content_range_total(&h("bytes 0-0/*")), None);
+        assert_eq!(content_range_total(&h("garbage")), None);
+        assert_eq!(content_range_total(&[]), None);
     }
 
     #[test]

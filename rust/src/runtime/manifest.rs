@@ -93,6 +93,16 @@ pub struct GroupInfo {
     pub tensors: Vec<String>,
 }
 
+impl GroupInfo {
+    /// First row of `tensors[ti]` for transformer block `block` inside the
+    /// group's block-major `[rows_total, width]` packing — the one place
+    /// that encodes the packing order (tensor resolution, layer prefetch
+    /// and the serve path all slice rows through this).
+    pub fn block_row_start(&self, block: usize, ti: usize) -> usize {
+        (block * self.tensors.len() + ti) * self.rows_per_block
+    }
+}
+
 /// LM substrate configuration (mirrors `configs.LMConfig`).
 #[derive(Clone, Debug)]
 pub struct LmCfg {

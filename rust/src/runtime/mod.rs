@@ -19,6 +19,7 @@
 pub mod manifest;
 pub mod pjrt;
 pub mod reference;
+pub mod weights;
 
 use std::path::Path;
 

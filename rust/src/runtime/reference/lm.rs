@@ -8,6 +8,13 @@
 //! `jax.value_and_grad` to ~1e-6 relative error before porting.  Attention
 //! fans out over (batch, head) pairs and the big matmuls split their rows
 //! over `util::threadpool`, all bit-deterministically.
+//!
+//! The forward pass executes **per layer** over [`BlockWeights`] — borrowed
+//! slices that either come straight out of a flat parameter vector (the
+//! train/eval entry points, unchanged numerics) or out of a
+//! [`WeightProvider`]'s on-demand views ([`forward_logits`], the KV-cached
+//! [`gen_step`]) — so a pocket-backed provider streams one layer at a time
+//! instead of materializing the model.
 
 use anyhow::{ensure, Context, Result};
 
@@ -16,6 +23,7 @@ use super::ops::{
 };
 use super::{f32_arg, i32_arg, scalar_arg, scalar_out};
 use crate::runtime::manifest::{HyperParams, Layout, LmCfg};
+use crate::runtime::weights::{WeightProvider, WeightView};
 use crate::runtime::{Arg, Out};
 use crate::tensor::TensorF32;
 use crate::util::threadpool::{default_workers, in_scoped_worker, scoped_map};
@@ -244,25 +252,95 @@ struct Forward {
     rf: Vec<f32>,
 }
 
-/// Causal LM forward over `[B, S]` input tokens -> `[B*S, V]` logits.
-fn lm_forward(
+/// Borrowed weight slices of one transformer block, in forward order.  The
+/// flat train/eval path and the provider-backed streaming path both lower
+/// to this before touching the math, so the numerics cannot diverge.
+struct BlockWeights<'a> {
+    norm1: &'a [f32],
+    wq: &'a [f32],
+    wk: &'a [f32],
+    wv: &'a [f32],
+    wo: &'a [f32],
+    norm2: &'a [f32],
+    wgate: &'a [f32],
+    wup: &'a [f32],
+    wdown: &'a [f32],
+}
+
+/// Block `b`'s weights sliced out of a flat parameter vector.
+fn block_weights<'a>(lay: &Layout, flat: &'a [f32], b: usize) -> Result<BlockWeights<'a>> {
+    let pre = format!("b{b}.");
+    Ok(BlockWeights {
+        norm1: lay.slice(flat, &format!("{pre}norm1"))?,
+        wq: lay.slice(flat, &format!("{pre}wq"))?,
+        wk: lay.slice(flat, &format!("{pre}wk"))?,
+        wv: lay.slice(flat, &format!("{pre}wv"))?,
+        wo: lay.slice(flat, &format!("{pre}wo"))?,
+        norm2: lay.slice(flat, &format!("{pre}norm2"))?,
+        wgate: lay.slice(flat, &format!("{pre}wgate"))?,
+        wup: lay.slice(flat, &format!("{pre}wup"))?,
+        wdown: lay.slice(flat, &format!("{pre}wdown"))?,
+    })
+}
+
+/// Block `b`'s weights resolved through a provider.  The views are owned
+/// here so the borrowed [`BlockWeights`] handed to the math stays valid
+/// for exactly one block — which is what lets a pocket-backed provider
+/// release (evict) a layer as soon as the next one starts.
+struct BlockViews {
+    norm1: WeightView,
+    wq: WeightView,
+    wk: WeightView,
+    wv: WeightView,
+    wo: WeightView,
+    norm2: WeightView,
+    wgate: WeightView,
+    wup: WeightView,
+    wdown: WeightView,
+}
+
+fn load_block(provider: &dyn WeightProvider, b: usize) -> Result<BlockViews> {
+    let get = |t: &str| provider.tensor(&format!("b{b}.{t}"));
+    Ok(BlockViews {
+        norm1: get("norm1")?,
+        wq: get("wq")?,
+        wk: get("wk")?,
+        wv: get("wv")?,
+        wo: get("wo")?,
+        norm2: get("norm2")?,
+        wgate: get("wgate")?,
+        wup: get("wup")?,
+        wdown: get("wdown")?,
+    })
+}
+
+impl BlockViews {
+    fn weights(&self) -> BlockWeights<'_> {
+        BlockWeights {
+            norm1: self.norm1.as_slice(),
+            wq: self.wq.as_slice(),
+            wk: self.wk.as_slice(),
+            wv: self.wv.as_slice(),
+            wo: self.wo.as_slice(),
+            norm2: self.norm2.as_slice(),
+            wgate: self.wgate.as_slice(),
+            wup: self.wup.as_slice(),
+            wdown: self.wdown.as_slice(),
+        }
+    }
+}
+
+/// Token + positional embedding of `[B, S]` inputs -> `[B*S, D]` hidden.
+fn embed_tokens(
     cfg: &LmCfg,
-    lay: &Layout,
-    flat: &[f32],
+    embed: &[f32],
+    pos: &[f32],
     inp: &[i32],
     bsz: usize,
     s: usize,
-    want_cache: bool,
-) -> Result<Forward> {
+) -> Result<Vec<f32>> {
     let d = cfg.d_model;
-    let nh = cfg.n_heads;
-    let hd = d / nh;
-    let ffh = cfg.ffn_hidden;
-    let bs = bsz * s;
-    let embed = lay.slice(flat, "embed")?;
-    let pos = lay.slice(flat, "pos")?;
-
-    let mut h = vec![0.0f32; bs * d];
+    let mut h = vec![0.0f32; bsz * s * d];
     for bi in 0..bsz {
         for si in 0..s {
             let tok = inp[bi * s + si];
@@ -279,57 +357,114 @@ fn lm_forward(
             }
         }
     }
+    Ok(h)
+}
+
+/// One transformer block over `[B*S, D]` hidden state: pre-norm causal
+/// attention + SwiGLU FFN, both with residuals.  Returns the next hidden
+/// state, plus the saved forward state when the backward pass needs it.
+fn block_forward(
+    cfg: &LmCfg,
+    w: &BlockWeights<'_>,
+    h: Vec<f32>,
+    bsz: usize,
+    s: usize,
+    workers: usize,
+    want_cache: bool,
+) -> (Vec<f32>, Option<LayerCache>) {
+    let d = cfg.d_model;
+    let nh = cfg.n_heads;
+    let hd = d / nh;
+    let ffh = cfg.ffn_hidden;
+    let bs = bsz * s;
+
+    let s1 = scale1p(w.norm1);
+    let (x1, r1) = rmsnorm_fwd(&h, &s1, bs, d);
+    let qf = matmul(&x1, w.wq, bs, d, d);
+    let kf = matmul(&x1, w.wk, bs, d, d);
+    let vf = matmul(&x1, w.wv, bs, d, d);
+    let q = to_heads(&qf, bsz, s, nh, hd);
+    let k = to_heads(&kf, bsz, s, nh, hd);
+    let v = to_heads(&vf, bsz, s, nh, hd);
+
+    let pairs = bsz * nh;
+    let results = scoped_map(workers, (0..pairs).collect::<Vec<_>>(), |pi| {
+        let off = pi * s * hd;
+        attn_pair(&q[off..off + s * hd], &k[off..off + s * hd], &v[off..off + s * hd], s, hd)
+    });
+    let mut att = vec![0.0f32; pairs * s * s];
+    let mut o_heads = vec![0.0f32; pairs * s * hd];
+    for (pi, (att_p, o_p)) in results.into_iter().enumerate() {
+        att[pi * s * s..(pi + 1) * s * s].copy_from_slice(&att_p);
+        o_heads[pi * s * hd..(pi + 1) * s * hd].copy_from_slice(&o_p);
+    }
+    let o = from_heads(&o_heads, bsz, s, nh, hd);
+    let attn_out = matmul(&o, w.wo, bs, d, d);
+    // the residual inputs are only kept for the backward pass; inference
+    // paths (want_cache false) update the hidden state in place instead
+    let h_in = want_cache.then(|| h.clone());
+    let mut h_mid = h;
+    for (hm, &a) in h_mid.iter_mut().zip(&attn_out) {
+        *hm += a;
+    }
+
+    let s2 = scale1p(w.norm2);
+    let (x2, r2) = rmsnorm_fwd(&h_mid, &s2, bs, d);
+    let gt = matmul(&x2, w.wgate, bs, d, ffh);
+    let u = matmul(&x2, w.wup, bs, d, ffh);
+    let mut mm = vec![0.0f32; bs * ffh];
+    for ((m, &g), &uv) in mm.iter_mut().zip(&gt).zip(&u) {
+        *m = silu(g) * uv;
+    }
+    let ff = matmul(&mm, w.wdown, bs, ffh, d);
+    let h_mid_saved = want_cache.then(|| h_mid.clone());
+    let mut h_next = h_mid;
+    for (hn, &f) in h_next.iter_mut().zip(&ff) {
+        *hn += f;
+    }
+    let cache = want_cache.then(|| LayerCache {
+        h_in: h_in.expect("h_in saved when caching"),
+        x1,
+        r1,
+        q,
+        k,
+        v,
+        att,
+        o,
+        h_mid: h_mid_saved.expect("h_mid saved when caching"),
+        x2,
+        r2,
+        gt,
+        u,
+        mm,
+    });
+    (h_next, cache)
+}
+
+/// Causal LM forward over `[B, S]` input tokens -> `[B*S, V]` logits.
+fn lm_forward(
+    cfg: &LmCfg,
+    lay: &Layout,
+    flat: &[f32],
+    inp: &[i32],
+    bsz: usize,
+    s: usize,
+    want_cache: bool,
+) -> Result<Forward> {
+    let d = cfg.d_model;
+    let bs = bsz * s;
+    let embed = lay.slice(flat, "embed")?;
+    let pos = lay.slice(flat, "pos")?;
+    let mut h = embed_tokens(cfg, embed, pos, inp, bsz, s)?;
 
     let workers = attn_workers();
     let mut caches = Vec::with_capacity(if want_cache { cfg.n_layers } else { 0 });
     for b in 0..cfg.n_layers {
-        let pre = format!("b{b}.");
-        let s1 = scale1p(lay.slice(flat, &format!("{pre}norm1"))?);
-        let (x1, r1) = rmsnorm_fwd(&h, &s1, bs, d);
-        let qf = matmul(&x1, lay.slice(flat, &format!("{pre}wq"))?, bs, d, d);
-        let kf = matmul(&x1, lay.slice(flat, &format!("{pre}wk"))?, bs, d, d);
-        let vf = matmul(&x1, lay.slice(flat, &format!("{pre}wv"))?, bs, d, d);
-        let q = to_heads(&qf, bsz, s, nh, hd);
-        let k = to_heads(&kf, bsz, s, nh, hd);
-        let v = to_heads(&vf, bsz, s, nh, hd);
-
-        let pairs = bsz * nh;
-        let results = scoped_map(workers, (0..pairs).collect::<Vec<_>>(), |pi| {
-            let off = pi * s * hd;
-            attn_pair(&q[off..off + s * hd], &k[off..off + s * hd], &v[off..off + s * hd], s, hd)
-        });
-        let mut att = vec![0.0f32; pairs * s * s];
-        let mut o_heads = vec![0.0f32; pairs * s * hd];
-        for (pi, (att_p, o_p)) in results.into_iter().enumerate() {
-            att[pi * s * s..(pi + 1) * s * s].copy_from_slice(&att_p);
-            o_heads[pi * s * hd..(pi + 1) * s * hd].copy_from_slice(&o_p);
-        }
-        let o = from_heads(&o_heads, bsz, s, nh, hd);
-        let attn_out = matmul(&o, lay.slice(flat, &format!("{pre}wo"))?, bs, d, d);
-        let h_in = std::mem::take(&mut h);
-        let mut h_mid = h_in.clone();
-        for (hm, &a) in h_mid.iter_mut().zip(&attn_out) {
-            *hm += a;
-        }
-
-        let s2 = scale1p(lay.slice(flat, &format!("{pre}norm2"))?);
-        let (x2, r2) = rmsnorm_fwd(&h_mid, &s2, bs, d);
-        let gt = matmul(&x2, lay.slice(flat, &format!("{pre}wgate"))?, bs, d, ffh);
-        let u = matmul(&x2, lay.slice(flat, &format!("{pre}wup"))?, bs, d, ffh);
-        let mut mm = vec![0.0f32; bs * ffh];
-        for ((m, &g), &uv) in mm.iter_mut().zip(&gt).zip(&u) {
-            *m = silu(g) * uv;
-        }
-        let ff = matmul(&mm, lay.slice(flat, &format!("{pre}wdown"))?, bs, ffh, d);
-        let mut h_next = h_mid.clone();
-        for (hn, &f) in h_next.iter_mut().zip(&ff) {
-            *hn += f;
-        }
+        let w = block_weights(lay, flat, b)?;
+        let (h_next, cache) = block_forward(cfg, &w, h, bsz, s, workers, want_cache);
         h = h_next;
-        if want_cache {
-            caches.push(LayerCache {
-                h_in, x1, r1, q, k, v, att, o, h_mid, x2, r2, gt, u, mm,
-            });
+        if let Some(c) = cache {
+            caches.push(c);
         }
     }
 
@@ -337,6 +472,228 @@ fn lm_forward(
     let (hf, rf) = rmsnorm_fwd(&h, &sf, bs, d);
     let logits = matmul_nt(&hf, embed, bs, d, cfg.vocab);
     Ok(Forward { logits, caches, h_last: h, hf, rf })
+}
+
+/// Full-context logits (`[B*S, V]`) with weights resolved through a
+/// [`WeightProvider`] — the layer-streaming counterpart of [`lm_forward`],
+/// numerically identical per position (same per-block math, same op
+/// order).  A pocket-backed provider holds at most one block's views at a
+/// time, so memory follows the decode-cache budget rather than the model.
+pub fn forward_logits(
+    provider: &dyn WeightProvider,
+    inp: &[i32],
+    bsz: usize,
+    s: usize,
+) -> Result<Vec<f32>> {
+    let cfg = provider.cfg();
+    ensure!(
+        (1..=cfg.seq_len).contains(&s),
+        "sequence length {s} outside 1..={}",
+        cfg.seq_len
+    );
+    ensure!(inp.len() == bsz * s, "input length {} != {bsz}x{s}", inp.len());
+    let d = cfg.d_model;
+    let bs = bsz * s;
+    let embed = provider.tensor("embed")?;
+    let pos = provider.tensor("pos")?;
+    let mut h = embed_tokens(cfg, &embed, &pos, inp, bsz, s)?;
+    drop(pos);
+
+    let workers = attn_workers();
+    for b in 0..cfg.n_layers {
+        let views = load_block(provider, b)?;
+        let (h_next, _) = block_forward(cfg, &views.weights(), h, bsz, s, workers, false);
+        h = h_next;
+    }
+
+    let fin = provider.tensor("final_norm")?;
+    let sf = scale1p(&fin);
+    let (hf, _) = rmsnorm_fwd(&h, &sf, bs, d);
+    Ok(matmul_nt(&hf, &embed, bs, d, cfg.vocab))
+}
+
+/// Held-out NLL scoring through a provider: `(sum NLL, token count)` over
+/// one `[B, S+1]` token batch — the layer-streaming counterpart of the
+/// `lm_eval_nll_*` entry point, numerically identical on the reference
+/// backend.
+pub fn eval_nll_provider(
+    provider: &dyn WeightProvider,
+    tokens: &[i32],
+    bsz: usize,
+) -> Result<(f64, usize)> {
+    let cfg = provider.cfg();
+    let s = cfg.seq_len;
+    ensure!(
+        tokens.len() == bsz * (s + 1),
+        "tokens length {} != {bsz}x{}",
+        tokens.len(),
+        s + 1
+    );
+    let (inp, tgt) = split_tokens(tokens, bsz, s + 1);
+    let logits = forward_logits(provider, &inp, bsz, s)?;
+    let nll = nll_from_logits(&logits, &tgt, cfg.vocab)?;
+    Ok((nll.iter().map(|&x| x as f64).sum(), nll.len()))
+}
+
+/// Rolling KV state of one decode stream (batch 1).  Keys and values are
+/// stored head-major per layer (`[n_heads, seq_len, head_dim]`) and
+/// appended once per step, so each incremental step attends over every
+/// previous position without recomputing it.
+pub struct GenState {
+    pos: usize,
+    cap: usize,
+    nh: usize,
+    hd: usize,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl GenState {
+    /// Fresh state for `cfg`; capacity is the model's context window
+    /// (`seq_len` — the positional table has nothing beyond it).
+    pub fn new(cfg: &LmCfg) -> GenState {
+        let hd = cfg.d_model / cfg.n_heads;
+        let per_layer = cfg.n_heads * cfg.seq_len * hd;
+        GenState {
+            pos: 0,
+            cap: cfg.seq_len,
+            nh: cfg.n_heads,
+            hd,
+            k: (0..cfg.n_layers).map(|_| vec![0.0f32; per_layer]).collect(),
+            v: (0..cfg.n_layers).map(|_| vec![0.0f32; per_layer]).collect(),
+        }
+    }
+
+    /// Positions consumed so far.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Positions left in the context window.
+    pub fn remaining(&self) -> usize {
+        self.cap - self.pos
+    }
+}
+
+/// One KV-cached incremental decode step: feed `token` at the next
+/// position and return the `[V]` next-token logits row.
+///
+/// Bit-identical to the last row of a full-context [`forward_logits`] over
+/// the same prefix: every per-row op is the shared block math, and the
+/// causal softmax over `pos + 1` keys equals the masked full-row softmax
+/// exactly (masked scores sit at `-1e9`, whose exp underflows to +0.0 —
+/// contributing nothing to the max, the sum, or the weighted values).
+///
+/// `layer_hook(b)` fires just before block `b` resolves its weights — the
+/// generation engine uses it to ask a helper thread for next-layer
+/// prefetch, overlapping decode with compute.
+pub fn gen_step(
+    provider: &dyn WeightProvider,
+    st: &mut GenState,
+    token: i32,
+    mut layer_hook: impl FnMut(usize),
+) -> Result<Vec<f32>> {
+    let cfg = provider.cfg();
+    let d = cfg.d_model;
+    let nh = cfg.n_heads;
+    let hd = d / nh;
+    let ffh = cfg.ffn_hidden;
+    ensure!(
+        st.k.len() == cfg.n_layers && st.cap == cfg.seq_len && st.nh == nh && st.hd == hd,
+        "GenState does not match config {}",
+        cfg.name
+    );
+    ensure!(st.pos < st.cap, "context window exhausted ({} positions)", st.cap);
+    ensure!(
+        (0..cfg.vocab as i32).contains(&token),
+        "token {token} out of vocab range (V={})",
+        cfg.vocab
+    );
+    let p = st.pos;
+    let cap = st.cap;
+    let inv = 1.0 / (hd as f32).sqrt();
+
+    let embed = provider.tensor("embed")?;
+    let pos_t = provider.tensor("pos")?;
+    let mut h = vec![0.0f32; d];
+    {
+        let erow = &embed[token as usize * d..(token as usize + 1) * d];
+        let prow = &pos_t[p * d..(p + 1) * d];
+        for ((o, &e), &pv) in h.iter_mut().zip(erow).zip(prow) {
+            *o = e + pv;
+        }
+    }
+    drop(pos_t);
+
+    for b in 0..cfg.n_layers {
+        layer_hook(b);
+        let views = load_block(provider, b)?;
+        let w = views.weights();
+        let s1 = scale1p(w.norm1);
+        let (x1, _) = rmsnorm_fwd(&h, &s1, 1, d);
+        let qf = matmul(&x1, w.wq, 1, d, d);
+        let kf = matmul(&x1, w.wk, 1, d, d);
+        let vf = matmul(&x1, w.wv, 1, d, d);
+        let kl = &mut st.k[b];
+        let vl = &mut st.v[b];
+        for hh in 0..nh {
+            let dst = (hh * cap + p) * hd;
+            kl[dst..dst + hd].copy_from_slice(&kf[hh * hd..(hh + 1) * hd]);
+            vl[dst..dst + hd].copy_from_slice(&vf[hh * hd..(hh + 1) * hd]);
+        }
+
+        let mut o = vec![0.0f32; d];
+        for hh in 0..nh {
+            let qh = &qf[hh * hd..(hh + 1) * hd];
+            let mut row = vec![0.0f32; p + 1];
+            for (j, rj) in row.iter_mut().enumerate() {
+                let kr = &kl[(hh * cap + j) * hd..(hh * cap + j + 1) * hd];
+                let mut acc = 0.0f32;
+                for (&qv, &kv) in qh.iter().zip(kr) {
+                    acc += qv * kv;
+                }
+                *rj = acc * inv;
+            }
+            softmax_row(&mut row);
+            let oh = &mut o[hh * hd..(hh + 1) * hd];
+            for (j, &aij) in row.iter().enumerate() {
+                if aij == 0.0 {
+                    continue;
+                }
+                let vr = &vl[(hh * cap + j) * hd..(hh * cap + j + 1) * hd];
+                for (ov, &vv) in oh.iter_mut().zip(vr) {
+                    *ov += aij * vv;
+                }
+            }
+        }
+        let attn_out = matmul(&o, w.wo, 1, d, d);
+        let mut h_mid = h;
+        for (hm, &a) in h_mid.iter_mut().zip(&attn_out) {
+            *hm += a;
+        }
+
+        let s2 = scale1p(w.norm2);
+        let (x2, _) = rmsnorm_fwd(&h_mid, &s2, 1, d);
+        let gt = matmul(&x2, w.wgate, 1, d, ffh);
+        let u = matmul(&x2, w.wup, 1, d, ffh);
+        let mut mm = vec![0.0f32; ffh];
+        for ((m, &g), &uv) in mm.iter_mut().zip(&gt).zip(&u) {
+            *m = silu(g) * uv;
+        }
+        let ff = matmul(&mm, w.wdown, 1, ffh, d);
+        let mut h_next = h_mid;
+        for (hn, &f) in h_next.iter_mut().zip(&ff) {
+            *hn += f;
+        }
+        h = h_next;
+    }
+
+    let fin = provider.tensor("final_norm")?;
+    let sf = scale1p(&fin);
+    let (hf, _) = rmsnorm_fwd(&h, &sf, 1, d);
+    let logits = matmul_nt(&hf, &embed, 1, d, cfg.vocab);
+    st.pos += 1;
+    Ok(logits)
 }
 
 /// Per-position NLL from logits: logsumexp(row) - row[target].  Targets are

@@ -1,0 +1,298 @@
+//! `WeightProvider` — resolve named model tensors on demand.
+//!
+//! The transformer forward in `runtime::reference::lm` used to require one
+//! fully-materialized flat parameter vector; serving a pocket model meant
+//! decoding *everything* first.  This module is the weight-access seam that
+//! removes that requirement: per-layer execution (full-context forward,
+//! KV-cached generation) asks a `WeightProvider` for each tensor as it is
+//! needed and holds the returned [`WeightView`] only while the layer runs.
+//!
+//! Two implementations:
+//!
+//! * [`InMemoryProvider`] — today's eager path with zero behavior change:
+//!   every view is a slice of one shared flat buffer.
+//! * [`PocketProvider`] — lazy, backed by a [`PocketReader`] and its shared
+//!   byte-budget [`DecodeCache`](crate::DecodeCache).  A tensor resolves to
+//!   a slice of its *block chunk* (`PocketReader::tensor_chunk`), so only
+//!   the layers currently in flight are decoded; with a budget of about two
+//!   layers, generation memory is bounded by the budget, not the model
+//!   size, on every `SectionSource` (mmap, file, memory, HTTP streaming).
+//!   [`WeightProvider::prefetch_layer`] lets a helper thread decode the
+//!   next layer while the current one computes — the engine in
+//!   `Session::generate` drives it, and the cache's single-flight decode
+//!   makes the overlap safe.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+use crate::error::Error;
+use crate::model::WeightStore;
+use crate::packfmt::PocketReader;
+use crate::runtime::manifest::LmCfg;
+use crate::runtime::Runtime;
+use crate::tensor::TensorF32;
+
+/// A shared, read-only view of one resolved tensor: an `Arc`'d buffer plus
+/// the element range inside it.  Cloning is pointer-cheap; the decoded
+/// bytes stay owned by the provider's cache (or flat vector).
+#[derive(Clone, Debug)]
+pub struct WeightView {
+    buf: Arc<TensorF32>,
+    range: Range<usize>,
+}
+
+impl WeightView {
+    /// View of a whole buffer.
+    pub fn whole(buf: Arc<TensorF32>) -> WeightView {
+        let n = buf.data.len();
+        WeightView { buf, range: 0..n }
+    }
+
+    /// View of `range` inside `buf`.
+    pub fn part(buf: Arc<TensorF32>, range: Range<usize>) -> Result<WeightView, Error> {
+        if range.start > range.end || range.end > buf.data.len() {
+            return Err(Error::ShapeMismatch {
+                what: "weight view range".to_string(),
+                expected: format!("within {} values", buf.data.len()),
+                got: format!("{}..{}", range.start, range.end),
+            });
+        }
+        Ok(WeightView { buf, range })
+    }
+
+    /// The viewed values.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf.data[self.range.clone()]
+    }
+
+    /// Number of viewed values.
+    pub fn len(&self) -> usize {
+        self.range.end - self.range.start
+    }
+
+    /// True when the view covers no values.
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+}
+
+impl std::ops::Deref for WeightView {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+/// Resolve named tensors of one LM on demand.  Implementations are shared
+/// across threads (the generation engine overlaps prefetch with compute),
+/// so resolution takes `&self`.
+pub trait WeightProvider: Send + Sync {
+    /// The LM configuration the resolved tensors instantiate.
+    fn cfg(&self) -> &LmCfg;
+
+    /// Resolve one layout tensor (`"embed"`, `"pos"`, `"b3.wq"`,
+    /// `"final_norm"`, ...) to a view of exactly
+    /// `cfg().layout.find(name).size` values.
+    fn tensor(&self, name: &str) -> Result<WeightView, Error>;
+
+    /// Advisory: warm whatever layer `layer` will need soon (decode its
+    /// group chunks into the cache).  Called from a helper thread by the
+    /// generation engine; errors are deferred to the on-demand
+    /// [`WeightProvider::tensor`] call.  Default: no-op.
+    fn prefetch_layer(&self, layer: usize) {
+        let _ = layer;
+    }
+
+    /// Whether spawning a prefetch helper thread is worthwhile (i.e.
+    /// [`WeightProvider::prefetch_layer`] populates a cache that
+    /// [`WeightProvider::tensor`] will hit).  Default: false.
+    fn wants_prefetch(&self) -> bool {
+        false
+    }
+}
+
+/// The eager path: every tensor is a slice of one shared flat parameter
+/// vector.  Construction copies the weights once; resolution never
+/// allocates.
+pub struct InMemoryProvider {
+    cfg: LmCfg,
+    flat: Arc<TensorF32>,
+}
+
+impl InMemoryProvider {
+    /// Wrap a dense [`WeightStore`] (one copy of the flat vector).
+    pub fn new(ws: &WeightStore) -> InMemoryProvider {
+        let flat = Arc::new(TensorF32::new(vec![ws.flat.len()], ws.flat.clone()));
+        InMemoryProvider { cfg: ws.cfg.clone(), flat }
+    }
+
+    /// Wrap an already-shared flat parameter buffer without copying.
+    pub fn from_flat(cfg: LmCfg, flat: Arc<TensorF32>) -> Result<InMemoryProvider, Error> {
+        if flat.data.len() != cfg.layout.total {
+            return Err(Error::ShapeMismatch {
+                what: format!("flat params for {}", cfg.name),
+                expected: format!("{} values", cfg.layout.total),
+                got: format!("{} values", flat.data.len()),
+            });
+        }
+        Ok(InMemoryProvider { cfg, flat })
+    }
+}
+
+impl WeightProvider for InMemoryProvider {
+    fn cfg(&self) -> &LmCfg {
+        &self.cfg
+    }
+
+    fn tensor(&self, name: &str) -> Result<WeightView, Error> {
+        let e = self
+            .cfg
+            .layout
+            .find(name)
+            .map_err(|_| Error::UnknownConfig { kind: "tensor", name: name.to_string() })?;
+        WeightView::part(self.flat.clone(), e.offset..e.offset + e.size)
+    }
+}
+
+/// The lazy path: tensors resolve through a [`PocketReader`], one block
+/// chunk (or dense section) at a time, all riding the reader's shared
+/// byte-budget decode cache.  See the module docs for the memory bound.
+pub struct PocketProvider<'rt> {
+    rt: &'rt Runtime,
+    cfg: LmCfg,
+    reader: Arc<PocketReader>,
+    /// Eager (TOC-less) readers re-wrap dense buffers on every request;
+    /// memoize those here.  Lazy readers serve dense sections straight from
+    /// the shared cache, so residency stays accounted under the budget.
+    dense_memo: Mutex<HashMap<String, Arc<TensorF32>>>,
+}
+
+impl<'rt> PocketProvider<'rt> {
+    /// Build a provider over an open reader.  Fails when the container
+    /// names an LM config the runtime's manifest does not know.
+    pub fn new(rt: &'rt Runtime, reader: Arc<PocketReader>) -> Result<PocketProvider<'rt>, Error> {
+        let cfg = rt
+            .manifest
+            .lm_cfg(reader.lm_cfg())
+            .map_err(|_| Error::UnknownConfig {
+                kind: "lm config",
+                name: reader.lm_cfg().to_string(),
+            })?
+            .clone();
+        Ok(PocketProvider { rt, cfg, reader, dense_memo: Mutex::new(HashMap::new()) })
+    }
+
+    /// The reader behind this provider (counter snapshots, cache handle).
+    pub fn reader(&self) -> &Arc<PocketReader> {
+        &self.reader
+    }
+}
+
+impl WeightProvider for PocketProvider<'_> {
+    fn cfg(&self) -> &LmCfg {
+        &self.cfg
+    }
+
+    fn tensor(&self, name: &str) -> Result<WeightView, Error> {
+        let e = self
+            .cfg
+            .layout
+            .find(name)
+            .map_err(|_| Error::UnknownConfig { kind: "tensor", name: name.to_string() })?;
+        let view = if !self.reader.seekable() && self.reader.has_dense(name) {
+            let mut memo = self.dense_memo.lock().unwrap();
+            let buf = match memo.get(name) {
+                Some(buf) => buf.clone(),
+                None => {
+                    let buf = self.reader.dense_tensor_arc(name)?;
+                    memo.insert(name.to_string(), buf.clone());
+                    buf
+                }
+            };
+            WeightView::whole(buf)
+        } else {
+            let (buf, range) = self.reader.tensor_chunk(self.rt, name)?;
+            WeightView::part(buf, range)?
+        };
+        if view.len() != e.size {
+            return Err(Error::ShapeMismatch {
+                what: format!("tensor {name}"),
+                expected: format!("{} values", e.size),
+                got: format!("{} values", view.len()),
+            });
+        }
+        Ok(view)
+    }
+
+    fn prefetch_layer(&self, layer: usize) {
+        if layer >= self.cfg.n_layers {
+            return;
+        }
+        for (gname, gi) in &self.cfg.groups {
+            if !self.reader.has_group(gname) {
+                continue;
+            }
+            for ti in 0..gi.tensors.len() {
+                let row_start = gi.block_row_start(layer, ti);
+                // advisory warm-up: a failure here surfaces (typed) on the
+                // synchronous tensor() call instead
+                let _ = self.reader.decode_group_rows(self.rt, gname, row_start, gi.rows_per_block);
+            }
+        }
+    }
+
+    fn wants_prefetch(&self) -> bool {
+        self.reader.decode_cache().budget() > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn tiny_ws() -> WeightStore {
+        let cfg = crate::runtime::manifest::Manifest::builtin().lm_cfg("tiny").unwrap().clone();
+        WeightStore::init(&cfg, &mut Pcg32::seeded(3))
+    }
+
+    #[test]
+    fn in_memory_views_alias_the_flat_vector() {
+        let ws = tiny_ws();
+        let p = InMemoryProvider::new(&ws);
+        for name in ["embed", "pos", "b0.wq", "b3.wdown", "final_norm"] {
+            let e = ws.cfg.layout.find(name).unwrap();
+            let v = p.tensor(name).unwrap();
+            assert_eq!(v.len(), e.size, "{name}");
+            assert_eq!(v.as_slice(), &ws.flat[e.offset..e.offset + e.size], "{name}");
+        }
+        assert!(matches!(
+            p.tensor("b9.wq"),
+            Err(Error::UnknownConfig { kind: "tensor", .. })
+        ));
+        assert!(!p.wants_prefetch());
+    }
+
+    #[test]
+    fn from_flat_validates_length() {
+        let ws = tiny_ws();
+        let short = Arc::new(TensorF32::new(vec![3], vec![0.0; 3]));
+        assert!(matches!(
+            InMemoryProvider::from_flat(ws.cfg.clone(), short),
+            Err(Error::ShapeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn weight_view_bounds_are_checked() {
+        let buf = Arc::new(TensorF32::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]));
+        let v = WeightView::part(buf.clone(), 1..3).unwrap();
+        assert_eq!(v.as_slice(), &[2.0, 3.0]);
+        assert_eq!(v.len(), 2);
+        assert!(!v.is_empty());
+        assert!(WeightView::part(buf.clone(), 2..6).is_err());
+        assert_eq!(WeightView::whole(buf).len(), 4);
+    }
+}

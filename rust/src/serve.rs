@@ -31,7 +31,8 @@ use crate::data::Corpus;
 use crate::error::Error;
 use crate::eval;
 use crate::packfmt::{PocketReader, ReaderStats};
-use crate::session::Session;
+use crate::runtime::weights::PocketProvider;
+use crate::session::{generate_tokens, GenOpts, Session};
 use crate::util::threadpool::{default_workers, scoped_map};
 
 /// One serving request against a pocket model.
@@ -44,6 +45,11 @@ pub enum ServeRequest {
     /// Perplexity over `ppl_batches` held-out batches, on weights
     /// reconstructed lazily through the reader.
     Eval { ppl_batches: usize },
+    /// Greedy KV-cached text generation straight off the pocket: weights
+    /// resolve per transformer block through the shared decode cache
+    /// (layer streaming), so even generation never materializes the dense
+    /// model on the serve path.
+    Generate { prompt: Vec<i32>, max_new: usize },
 }
 
 /// Outcome of one [`PocketServer::run`]: wall time plus the reader's
@@ -84,6 +90,9 @@ pub struct PocketServer<'s> {
     /// deterministic in (vocab, seed), so rebuilding it per request would
     /// only burn worker time.
     corpus: std::sync::OnceLock<Corpus>,
+    /// Built once, on the first [`ServeRequest::Generate`]: one lazy
+    /// provider over the shared reader, reused by every generation request.
+    provider: std::sync::OnceLock<PocketProvider<'s>>,
 }
 
 impl<'s> PocketServer<'s> {
@@ -94,6 +103,7 @@ impl<'s> PocketServer<'s> {
             workers: default_workers(8),
             corpus_seed: 1001,
             corpus: std::sync::OnceLock::new(),
+            provider: std::sync::OnceLock::new(),
         }
     }
 
@@ -137,6 +147,29 @@ impl<'s> PocketServer<'s> {
                     self.corpus.get_or_init(|| Corpus::new(cfg.vocab, self.corpus_seed));
                 eval::perplexity_reader(rt, &self.reader, corpus, *ppl_batches)
                     .map_err(Error::from)?;
+            }
+            ServeRequest::Generate { prompt, max_new } => {
+                let provider = match self.provider.get() {
+                    Some(p) => p,
+                    None => {
+                        // first Generate on this server: build the shared
+                        // provider (a racing thread's spare is dropped)
+                        let p = PocketProvider::new(
+                            self.session.runtime(),
+                            self.reader.clone(),
+                        )?;
+                        let _ = self.provider.set(p);
+                        self.provider.get().expect("just set")
+                    }
+                };
+                let opts = GenOpts {
+                    max_new: *max_new,
+                    temperature: 0.0,
+                    top_k: 0,
+                    seed: 0,
+                    trace: false,
+                };
+                generate_tokens(provider, prompt, &opts)?;
             }
         }
         Ok(())

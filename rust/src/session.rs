@@ -39,9 +39,14 @@ use crate::eval::{evaluate, EvalReport};
 use crate::model::WeightStore;
 use crate::packfmt::PocketReader;
 use crate::runtime::manifest::Manifest;
+use crate::runtime::reference::lm::{gen_step, GenState};
+use crate::runtime::weights::{InMemoryProvider, PocketProvider, WeightProvider};
 use crate::runtime::Runtime;
 use crate::serve::PocketServer;
+use crate::util::prng::Pcg32;
+use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Which execution backend a [`SessionBuilder`] should construct.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -240,6 +245,37 @@ impl Session {
     /// [`crate::serve`].
     pub fn serve(&self, reader: Arc<PocketReader>) -> PocketServer<'_> {
         PocketServer::new(self, reader)
+    }
+
+    /// Wrap dense weights as an eager [`WeightProvider`] (one copy of the
+    /// flat vector, zero behavior change vs. the historical full-tensor
+    /// path).
+    pub fn memory_provider(&self, ws: &WeightStore) -> InMemoryProvider {
+        InMemoryProvider::new(ws)
+    }
+
+    /// Wrap an open pocket reader as a lazy [`WeightProvider`]: tensors
+    /// resolve per transformer block through the reader's shared decode
+    /// cache, so generation/eval memory is bounded by the cache budget —
+    /// not the model size — on every `SectionSource` (mmap, file, memory,
+    /// HTTP streaming).
+    pub fn pocket_provider(&self, reader: Arc<PocketReader>) -> Result<PocketProvider<'_>, Error> {
+        PocketProvider::new(&self.rt, reader)
+    }
+
+    /// Start an incremental KV-cached text-generation run over any
+    /// [`WeightProvider`] — greedy by default; temperature/top-k sampling
+    /// via the deterministic [`Pcg32`] stream.  See [`GenerateBuilder`].
+    pub fn generate<'p>(&self, provider: &'p dyn WeightProvider) -> GenerateBuilder<'p> {
+        GenerateBuilder {
+            provider,
+            prompt: Vec::new(),
+            max_new: 16,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 7,
+            trace: false,
+        }
     }
 
     /// Decode a whole pocket into a dense weight store through the reader's
@@ -489,6 +525,231 @@ impl<'s, 'w> EvalBuilder<'s, 'w> {
     }
 }
 
+/// Builder for one generation run (`session.generate(&provider)`).
+///
+/// Runs the incremental KV-cached decode loop of
+/// [`crate::runtime::reference::lm::gen_step`]: the prompt is fed one token
+/// at a time (each step bit-identical to a full-context forward over that
+/// prefix), then `max_new` tokens are sampled.  When the provider caches
+/// (`wants_prefetch`), a scoped helper thread decodes each next layer
+/// while the current one computes, so pocket decode overlaps compute.
+pub struct GenerateBuilder<'p> {
+    provider: &'p dyn WeightProvider,
+    prompt: Vec<i32>,
+    max_new: usize,
+    temperature: f32,
+    top_k: usize,
+    seed: u64,
+    trace: bool,
+}
+
+impl<'p> GenerateBuilder<'p> {
+    /// The prompt tokens (required, non-empty).
+    pub fn prompt(mut self, tokens: impl Into<Vec<i32>>) -> Self {
+        self.prompt = tokens.into();
+        self
+    }
+
+    /// Tokens to generate after the prompt (default 16).
+    pub fn max_new(mut self, n: usize) -> Self {
+        self.max_new = n;
+        self
+    }
+
+    /// Sampling temperature; `0.0` (the default) is greedy argmax.
+    pub fn temperature(mut self, t: f32) -> Self {
+        self.temperature = t;
+        self
+    }
+
+    /// Restrict sampling to the `k` highest-logit tokens (0 = no limit).
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.top_k = k;
+        self
+    }
+
+    /// Sampling seed (default 7); greedy runs ignore it.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Record the full logits row of every step in
+    /// [`Generated::logits_trace`] (parity tests; costs `V` floats/step).
+    pub fn logits_trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
+    /// Run the generation loop.
+    pub fn run(self) -> Result<Generated, Error> {
+        let opts = GenOpts {
+            max_new: self.max_new,
+            temperature: self.temperature,
+            top_k: self.top_k,
+            seed: self.seed,
+            trace: self.trace,
+        };
+        generate_tokens(self.provider, &self.prompt, &opts)
+    }
+}
+
+/// Outcome of one generation run.
+#[derive(Clone, Debug)]
+pub struct Generated {
+    /// Prompt followed by the generated continuation.
+    pub tokens: Vec<i32>,
+    /// Length of the prompt prefix inside [`Generated::tokens`].
+    pub prompt_len: usize,
+    /// Wall time of the decode loop (prompt feed + generation).
+    pub elapsed: Duration,
+    /// Per-step logits rows, when requested via
+    /// [`GenerateBuilder::logits_trace`]; one entry per consumed position.
+    pub logits_trace: Option<Vec<Vec<f32>>>,
+}
+
+impl Generated {
+    /// The generated continuation (everything after the prompt).
+    pub fn continuation(&self) -> &[i32] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    /// Incremental forward steps executed (prompt + generated positions).
+    pub fn steps(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Decode-loop throughput in positions per second.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.steps() as f64 / self.elapsed.as_secs_f64().max(1e-12)
+    }
+}
+
+pub(crate) struct GenOpts {
+    pub max_new: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+    pub trace: bool,
+}
+
+/// The generation engine shared by [`GenerateBuilder`] and
+/// [`crate::serve::ServeRequest::Generate`].
+pub(crate) fn generate_tokens(
+    provider: &dyn WeightProvider,
+    prompt: &[i32],
+    opts: &GenOpts,
+) -> Result<Generated, Error> {
+    let cfg = provider.cfg();
+    if prompt.is_empty() {
+        return Err(Error::ShapeMismatch {
+            what: "generation prompt".to_string(),
+            expected: "at least 1 token".to_string(),
+            got: "0 tokens".to_string(),
+        });
+    }
+    let total = prompt.len() + opts.max_new;
+    if total > cfg.seq_len {
+        return Err(Error::ShapeMismatch {
+            what: format!("prompt + max_new for {}", cfg.name),
+            expected: format!("<= {} positions (context window)", cfg.seq_len),
+            got: format!("{total} positions"),
+        });
+    }
+    let n_layers = cfg.n_layers;
+    let mut rng = Pcg32::seeded(opts.seed);
+    let t0 = Instant::now();
+    type StepTrace = Option<Vec<Vec<f32>>>;
+    let (tokens, trace) = std::thread::scope(|scope| -> Result<(Vec<i32>, StepTrace), Error> {
+        // advisory next-layer prefetch: the helper decodes layer i while the
+        // main thread computes layer i-1; the decode cache's single-flight
+        // makes a race on one chunk cost exactly one decode.  try_send never
+        // blocks the compute thread — a full queue just skips a hint.
+        let (tx, rx) = mpsc::sync_channel::<usize>(n_layers.max(1) + 1);
+        if provider.wants_prefetch() {
+            scope.spawn(move || {
+                while let Ok(i) = rx.recv() {
+                    provider.prefetch_layer(i);
+                }
+            });
+        } else {
+            drop(rx);
+        }
+        let mut hook = |b: usize| {
+            let _ = tx.try_send((b + 1) % n_layers.max(1));
+        };
+
+        let mut st = GenState::new(cfg);
+        let mut tokens = prompt.to_vec();
+        let mut trace = if opts.trace { Some(Vec::with_capacity(total)) } else { None };
+        let _ = tx.try_send(0);
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = gen_step(provider, &mut st, t, &mut hook).map_err(Error::from)?;
+            if let Some(tr) = trace.as_mut() {
+                tr.push(logits.clone());
+            }
+        }
+        for _ in 0..opts.max_new {
+            let next = sample_logits(&logits, opts.temperature, opts.top_k, &mut rng);
+            tokens.push(next);
+            logits = gen_step(provider, &mut st, next, &mut hook).map_err(Error::from)?;
+            if let Some(tr) = trace.as_mut() {
+                tr.push(logits.clone());
+            }
+        }
+        drop(hook);
+        drop(tx);
+        Ok((tokens, trace))
+    })?;
+    Ok(Generated {
+        tokens,
+        prompt_len: prompt.len(),
+        elapsed: t0.elapsed(),
+        logits_trace: trace,
+    })
+}
+
+/// Pick the next token from a logits row: greedy argmax at temperature 0,
+/// otherwise temperature-scaled softmax over the `top_k` highest logits
+/// (0 = all), sampled from the deterministic PRNG.  Ties break toward the
+/// lower token id, so runs are reproducible bit-for-bit.
+fn sample_logits(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Pcg32) -> i32 {
+    debug_assert!(!logits.is_empty());
+    if temperature <= 0.0 {
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        return best as i32;
+    }
+    // top-k filter: sort candidate ids by (logit desc, id asc) and keep k
+    let mut ids: Vec<usize> = (0..logits.len()).collect();
+    ids.sort_by(|&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    if top_k > 0 && top_k < ids.len() {
+        ids.truncate(top_k);
+    }
+    // temperature softmax over the survivors (stable: subtract the max)
+    let m = logits[ids[0]];
+    let weights: Vec<f64> = ids
+        .iter()
+        .map(|&i| (((logits[i] - m) / temperature) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.next_f64() * total;
+    for (&i, &w) in ids.iter().zip(&weights) {
+        if u < w {
+            return i as i32;
+        }
+        u -= w;
+    }
+    *ids.last().expect("non-empty logits") as i32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -557,6 +818,70 @@ mod tests {
         let s = Session::reference();
         let e = s.train_lm("giant").steps(1).run().unwrap_err();
         assert!(matches!(e, Error::UnknownConfig { kind: "lm config", .. }), "{e:?}");
+    }
+
+    #[test]
+    fn greedy_generate_is_deterministic_and_validates_window() {
+        let s = Session::reference();
+        let ws = tiny_ws(&s);
+        let p = s.memory_provider(&ws);
+        let a = s.generate(&p).prompt(vec![1, 2, 3]).max_new(4).run().unwrap();
+        let b = s.generate(&p).prompt(vec![1, 2, 3]).max_new(4).run().unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.prompt_len, 3);
+        assert_eq!(a.continuation().len(), 4);
+        assert_eq!(a.steps(), 7);
+        assert!(a.tokens_per_sec() > 0.0);
+        // context window and empty prompts are typed errors
+        let e = s.generate(&p).prompt(vec![0]).max_new(10_000).run().unwrap_err();
+        assert!(matches!(e, Error::ShapeMismatch { .. }), "{e:?}");
+        let e = s.generate(&p).prompt(Vec::<i32>::new()).run().unwrap_err();
+        assert!(matches!(e, Error::ShapeMismatch { .. }), "{e:?}");
+        // the logits trace records one row per consumed position
+        let tr =
+            s.generate(&p).prompt(vec![1, 2, 3]).max_new(2).logits_trace(true).run().unwrap();
+        let trace = tr.logits_trace.as_ref().unwrap();
+        assert_eq!(trace.len(), tr.steps());
+        assert!(trace.iter().all(|row| row.len() == s.manifest().lm_cfg("tiny").unwrap().vocab));
+    }
+
+    #[test]
+    fn sampling_is_seeded_and_top_k_one_is_greedy() {
+        let s = Session::reference();
+        let ws = tiny_ws(&s);
+        let p = s.memory_provider(&ws);
+        let greedy = s.generate(&p).prompt(vec![5, 6]).max_new(5).run().unwrap();
+        let k1 = s
+            .generate(&p)
+            .prompt(vec![5, 6])
+            .max_new(5)
+            .temperature(0.8)
+            .top_k(1)
+            .run()
+            .unwrap();
+        assert_eq!(greedy.tokens, k1.tokens, "top-k=1 must reduce to greedy");
+        let a =
+            s.generate(&p).prompt(vec![5, 6]).max_new(5).temperature(1.2).seed(9).run().unwrap();
+        let b =
+            s.generate(&p).prompt(vec![5, 6]).max_new(5).temperature(1.2).seed(9).run().unwrap();
+        assert_eq!(a.tokens, b.tokens, "same seed, same stream");
+    }
+
+    #[test]
+    fn sample_logits_units() {
+        let mut rng = Pcg32::seeded(1);
+        let logits = vec![0.0f32, 3.0, 1.0];
+        assert_eq!(sample_logits(&logits, 0.0, 0, &mut rng), 1);
+        assert_eq!(sample_logits(&logits, 0.5, 1, &mut rng), 1);
+        // greedy ties break toward the lower token id
+        let tied = vec![2.0f32, 2.0];
+        assert_eq!(sample_logits(&tied, 0.0, 0, &mut rng), 0);
+        // with a hot temperature every id eventually appears
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[sample_logits(&logits, 5.0, 0, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "{seen:?}");
     }
 
     #[test]

@@ -100,6 +100,35 @@ impl BitPacked {
         out
     }
 
+    /// Unpack `count` values starting at `start` (same word-at-a-time walk
+    /// as [`BitPacked::unpack`], seeded mid-stream) — the layer-streaming
+    /// decode path pulls one block's index range without materializing the
+    /// whole group's indices.
+    pub fn unpack_range(&self, start: usize, count: usize) -> Vec<u32> {
+        assert!(start + count <= self.len, "range {start}+{count} exceeds {}", self.len);
+        let bits = self.bits;
+        let mask = ones(bits);
+        let first_bit = start as u64 * bits as u64;
+        let mut word_i = (first_bit / 64) as usize;
+        let mut bit_off = (first_bit % 64) as u32;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            let lo = self.words[word_i] >> bit_off;
+            let v = if bit_off + bits > 64 {
+                lo | (self.words[word_i + 1] << (64 - bit_off))
+            } else {
+                lo
+            };
+            out.push((v & mask) as u32);
+            bit_off += bits;
+            if bit_off >= 64 {
+                bit_off -= 64;
+                word_i += 1;
+            }
+        }
+        out
+    }
+
     /// Serialize: `bits (u32) | len (u64) | words...` little-endian.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(12 + self.words.len() * 8);
@@ -153,6 +182,28 @@ mod tests {
             assert_eq!(p.unpack(), vals, "width {bits}");
             for (i, &v) in vals.iter().enumerate().step_by(37) {
                 assert_eq!(p.get(i), v, "get width {bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_range_matches_full_unpack_at_any_offset() {
+        let mut rng = Pcg32::seeded(9);
+        for bits in [1u32, 7, 10, 13, 32] {
+            let cap = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let vals: Vec<u32> = (0..300)
+                .map(|_| {
+                    if cap == u32::MAX { rng.next_u32() } else { rng.below(cap + 1) }
+                })
+                .collect();
+            let p = BitPacked::pack(&vals, bits);
+            let full = p.unpack();
+            for (start, count) in [(0usize, 300usize), (0, 0), (17, 64), (64, 128), (299, 1)] {
+                assert_eq!(
+                    p.unpack_range(start, count),
+                    full[start..start + count].to_vec(),
+                    "width {bits} range {start}+{count}"
+                );
             }
         }
     }

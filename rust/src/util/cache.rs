@@ -40,6 +40,10 @@ pub struct CacheStats {
     /// Values larger than the whole budget: served, never cached.
     pub uncacheable: u64,
     pub resident_bytes: u64,
+    /// High-water mark of `resident_bytes` over the cache's lifetime — the
+    /// number `gen-bench` checks against the budget to prove that layer
+    /// streaming really is memory-bounded.
+    pub peak_resident_bytes: u64,
     pub entries: u64,
 }
 
@@ -54,6 +58,8 @@ struct State {
     /// Most-recently-used first.
     entries: Vec<Entry>,
     resident: u64,
+    /// High-water mark of `resident` (never decreases).
+    peak_resident: u64,
     /// In-flight decodes, for single-flight coordination.
     flights: Vec<(DecodeKey, Arc<Mutex<()>>)>,
 }
@@ -216,6 +222,7 @@ impl DecodeCache {
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
         st.resident += bytes;
+        st.peak_resident = st.peak_resident.max(st.resident);
         st.entries.insert(0, Entry { key, value, bytes });
     }
 
@@ -228,6 +235,7 @@ impl DecodeCache {
             evictions: self.evictions.load(Ordering::Relaxed),
             uncacheable: self.uncacheable.load(Ordering::Relaxed),
             resident_bytes: st.resident,
+            peak_resident_bytes: st.peak_resident,
             entries: st.entries.len() as u64,
         }
     }
@@ -365,6 +373,22 @@ mod tests {
         assert_eq!((st.misses, st.hits), (6, 0));
         assert_eq!(st.uncacheable, 6);
         assert_eq!(st.entries, 0);
+    }
+
+    #[test]
+    fn peak_resident_tracks_high_water_and_never_exceeds_budget() {
+        let c = DecodeCache::with_budget(100); // room for 25 f32s
+        c.get_or_try_insert_with(1, "a", || Ok::<_, ()>(t(12))).unwrap(); // 48 B
+        c.get_or_try_insert_with(1, "b", || Ok::<_, ()>(t(12))).unwrap(); // 96 B
+        assert_eq!(c.stats().peak_resident_bytes, 96);
+        // evicting the 48 B "a" to admit a 40 B "c" shrinks resident, but
+        // the high-water mark stays
+        c.get_or_try_insert_with(1, "c", || Ok::<_, ()>(t(10))).unwrap();
+        let st = c.stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.resident_bytes, 88);
+        assert_eq!(st.peak_resident_bytes, 96);
+        assert!(st.peak_resident_bytes <= 100, "peak must respect the budget");
     }
 
     #[test]

@@ -79,6 +79,10 @@ struct Shared {
     faults: Mutex<VecDeque<Fault>>,
     log: Mutex<Vec<RequestLog>>,
     stop: AtomicBool,
+    /// Reject every `HEAD` with `405 Method Not Allowed` — models mirrors
+    /// that only implement `GET`, so clients must length-probe with a
+    /// `bytes=0-0` range request instead.
+    head_405: AtomicBool,
 }
 
 /// In-process loopback HTTP/1.1 range server.  See the module docs.
@@ -100,6 +104,7 @@ impl RangeServer {
             faults: Mutex::new(VecDeque::new()),
             log: Mutex::new(Vec::new()),
             stop: AtomicBool::new(false),
+            head_405: AtomicBool::new(false),
         });
         let accept_shared = shared.clone();
         let accept = std::thread::spawn(move || {
@@ -129,6 +134,14 @@ impl RangeServer {
     /// URL of the served container (`http://127.0.0.1:{port}/pocket`).
     pub fn url(&self) -> String {
         format!("http://127.0.0.1:{}/pocket", self.addr.port())
+    }
+
+    /// Reject every `HEAD` from now on with `405 Method Not Allowed` (a
+    /// GET-only mirror).  `HEAD`s neither consume scripted faults nor serve
+    /// headers; range `GET`s keep working, so a client must discover the
+    /// body length via a `bytes=0-0` probe's `Content-Range`.
+    pub fn disable_head(&self) {
+        self.shared.head_405.store(true, Ordering::Relaxed);
     }
 
     /// Queue one fault; the next un-faulted request consumes it.
@@ -184,7 +197,11 @@ fn handle_connection(mut stream: TcpStream, shared: &Shared) {
             Some(r) => r,
             None => return,
         };
-        let fault = shared.faults.lock().unwrap().pop_front();
+        // a disabled-HEAD rejection is not a scripted fault: it must not
+        // consume a queued fault meant for the range GETs that follow
+        let head_rejected = method == "HEAD" && shared.head_405.load(Ordering::Relaxed);
+        let fault =
+            if head_rejected { None } else { shared.faults.lock().unwrap().pop_front() };
         let keep = respond(&mut stream, shared, &method, &path, range_header.as_deref(), fault);
         if !keep {
             stream.shutdown(Shutdown::Both).ok();
@@ -234,6 +251,12 @@ fn respond(
             return stream.write_all(head.as_bytes()).is_ok();
         }
         _ => {}
+    }
+
+    if method == "HEAD" && shared.head_405.load(Ordering::Relaxed) {
+        log(405);
+        let head = "HTTP/1.1 405 Method Not Allowed\r\nAllow: GET\r\nContent-Length: 0\r\n\r\n";
+        return stream.write_all(head.as_bytes()).is_ok();
     }
 
     // normal resolution: 416 for a present-but-invalid range, 206 for a
@@ -431,6 +454,28 @@ mod tests {
             assert_eq!(body, [7u8; 8]);
         }
         assert_eq!(srv.request_count(), 3, "all three requests rode one socket");
+    }
+
+    #[test]
+    fn disabled_head_rejects_with_405_and_spares_scripted_faults() {
+        let srv = RangeServer::serve(vec![3u8; 64]).unwrap();
+        srv.disable_head();
+        srv.push_fault(Fault::Status(500));
+
+        let head = raw_request(srv.addr(), "HEAD /pocket HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(head.starts_with("HTTP/1.1 405"), "{head}");
+        assert_eq!(srv.pending_faults(), 1, "a rejected HEAD must not eat a fault");
+
+        // range GETs still work (after the scripted 500 is consumed)
+        let r1 = raw_request(srv.addr(), "GET /pocket HTTP/1.1\r\nRange: bytes=0-0\r\n\r\n");
+        assert!(r1.starts_with("HTTP/1.1 500"), "{r1}");
+        let r2 = raw_request(srv.addr(), "GET /pocket HTTP/1.1\r\nRange: bytes=0-0\r\n\r\n");
+        assert!(r2.starts_with("HTTP/1.1 206"), "{r2}");
+        assert!(r2.contains("Content-Range: bytes 0-0/64"), "{r2}");
+
+        let log = srv.requests();
+        assert_eq!((log[0].method.as_str(), log[0].status), ("HEAD", 405));
+        assert_eq!(log[0].fault, None);
     }
 
     #[test]

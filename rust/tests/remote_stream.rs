@@ -228,3 +228,56 @@ fn property_http_reconstruction_is_bit_identical_under_faults() {
         prop_assert(ws.flat == expect.flat, "remote reconstruction diverged")
     });
 }
+
+#[test]
+fn headless_mirror_opens_via_range_probe_and_decodes_identically() {
+    // a GET-only mirror: every HEAD is 405, so the client must learn the
+    // container length from a one-byte range probe's Content-Range total
+    let session = Session::reference();
+    let pocket = compressed_pocket(&session);
+    let bytes = pocket.to_bytes();
+    let total = bytes.len() as u64;
+    let server = RangeServer::serve(bytes.clone()).unwrap();
+    server.disable_head();
+
+    let remote = PocketReader::open_url(&server.url()).unwrap();
+    let src_stats = remote.stats().source.expect("http transport reports fetch stats");
+    assert!(src_stats.bytes_fetched < total, "open must not download the container");
+
+    let mem = PocketReader::from_bytes(bytes).unwrap();
+    let a = remote.reconstruct_all(session.runtime()).unwrap();
+    let b = mem.reconstruct_all(session.runtime()).unwrap();
+    assert_eq!(a.flat, b.flat, "HEAD-less decode diverged from the in-memory path");
+
+    // the wire shows the fallback: a rejected HEAD, then the 0-0 probe
+    let log = server.requests();
+    assert_eq!((log[0].method.as_str(), log[0].status), ("HEAD", 405));
+    let probe = &log[1];
+    assert_eq!((probe.method.as_str(), probe.status), ("GET", 206));
+    assert_eq!(probe.range, Some((0, 1)), "length probe must ask for bytes=0-0");
+    // 405 is permanent: the client must not have retried the HEAD
+    assert_eq!(log.iter().filter(|r| r.method == "HEAD").count(), 1);
+}
+
+#[test]
+fn scripted_405_on_head_also_triggers_the_probe_fallback() {
+    // same fallback via the fault scripting (one-shot 405 instead of a
+    // permanently GET-only server)
+    let session = Session::reference();
+    let pocket = compressed_pocket(&session);
+    let bytes = pocket.to_bytes();
+    let server = RangeServer::serve(bytes.clone()).unwrap();
+    server.push_fault(Fault::Status(405));
+
+    let remote =
+        PocketReader::open_url_with(&server.url(), fast_opts()).unwrap();
+    let mem = PocketReader::from_bytes(bytes).unwrap();
+    let a = remote.reconstruct_all(session.runtime()).unwrap();
+    let b = mem.reconstruct_all(session.runtime()).unwrap();
+    assert_eq!(a.flat, b.flat);
+    let log = server.requests();
+    assert_eq!((log[0].method.as_str(), log[0].status), ("HEAD", 405));
+    assert_eq!(log[0].fault, Some("status"));
+    assert_eq!((log[1].method.as_str(), log[1].status), ("GET", 206));
+    assert_eq!(log[1].range, Some((0, 1)));
+}
