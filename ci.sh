@@ -40,6 +40,12 @@ test -f ../BENCH_gen.json
 echo "BENCH_gen.json:"
 cat ../BENCH_gen.json
 
+echo "== load-bench (persistent generation server, continuous batching -> BENCH_load.json) =="
+./target/release/pocketllm load-bench --backend reference --check --json ../BENCH_load.json
+test -f ../BENCH_load.json
+echo "BENCH_load.json:"
+cat ../BENCH_load.json
+
 echo "== lint (rustfmt + clippy, crate builds warning-free) =="
 cargo fmt --check
 cargo clippy -- -D warnings

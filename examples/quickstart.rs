@@ -91,5 +91,36 @@ fn main() -> Result<(), pocketllm::Error> {
         st.chunk_decodes,
         st.cache.peak_resident_bytes / 1024
     );
+
+    // 8. the persistent generation server: a continuous-batching engine over
+    //    the same provider, fronted by a loopback HTTP endpoint.  Two
+    //    concurrent clients share every per-block weight resolution, and
+    //    each stream is bit-identical to a solo run with the same seed.
+    let opts = pocketllm::GenEngineOpts::default();
+    let (streams, stats) = pocketllm::serve_generation(&provider, opts, |srv| {
+        println!("serving GET {}?prompt=1,2,3&max_new=8&seed=N", srv.url());
+        std::thread::scope(|scope| {
+            let clients: Vec<_> = (0..2u64)
+                .map(|i| {
+                    let params = pocketllm::GenParams {
+                        max_new: 8,
+                        temperature: 0.8,
+                        top_k: 5,
+                        seed: 60 + i,
+                    };
+                    let addr = srv.addr();
+                    scope.spawn(move || pocketllm::http_generate(addr, &[1, 2, 3], &params))
+                })
+                .collect();
+            clients.into_iter().map(|c| c.join().unwrap()).collect::<Vec<_>>()
+        })
+    })?;
+    for (i, s) in streams.into_iter().enumerate() {
+        println!("client {i} got {:?}", s?);
+    }
+    println!(
+        "server: {} completed, {} batched steps for {} lane-steps (peak batch {})",
+        stats.completed, stats.steps, stats.lane_steps, stats.peak_batch
+    );
     Ok(())
 }

@@ -50,6 +50,13 @@ pub enum Error {
         path: String,
         source: std::io::Error,
     },
+    /// A generation step produced a logits row with no finite entry (all
+    /// NaN/±inf): sampling from it has no deterministic meaning, so the
+    /// step fails instead of silently returning an arbitrary token.
+    NonFiniteLogits {
+        /// Length of the offending logits row (the vocabulary size).
+        vocab: usize,
+    },
     /// Anything else bubbling up from the anyhow-based internals.
     Other(anyhow::Error),
 }
@@ -86,6 +93,9 @@ impl fmt::Display for Error {
             }
             Error::Io { path, source } => {
                 write!(f, "io error on {path}: {source}")
+            }
+            Error::NonFiniteLogits { vocab } => {
+                write!(f, "generation logits have no finite entry (vocab {vocab})")
             }
             Error::Other(e) => write!(f, "{e:#}"),
         }

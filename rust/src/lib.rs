@@ -117,7 +117,10 @@ pub use packfmt::{
     SourceStats,
 };
 pub use runtime::weights::{InMemoryProvider, PocketProvider, WeightProvider, WeightView};
-pub use serve::{PocketServer, ServeReport, ServeRequest};
+pub use serve::{
+    http_generate, serve_generation, GenEngineOpts, GenParams, GenServeStats, GenServerHandle,
+    PocketServer, ServeReport, ServeRequest,
+};
 pub use session::{BackendKind, GenerateBuilder, Generated, Session, SessionBuilder};
 pub use util::cache::{CacheStats, DecodeCache};
 

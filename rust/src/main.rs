@@ -15,17 +15,21 @@
 //!                                 decode cache; reports req/s + cache stats
 
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 use pocketllm::coordinator::ProgressSink;
 use pocketllm::packfmt::{ChunkedSource, PocketReader};
 use pocketllm::runtime::weights::WeightProvider;
-use pocketllm::serve::ServeRequest;
+use pocketllm::serve::{
+    http_generate, serve_generation, GenEngineOpts, GenParams, GenServeStats, ServeRequest,
+};
 use pocketllm::session::{BackendKind, Session};
 use pocketllm::util::benchlib::Table;
 use pocketllm::util::cli::Args;
-use pocketllm::util::json::{num, obj, s, Json};
+use pocketllm::util::json::{arr, num, obj, s, Json};
+use pocketllm::util::stats::percentile;
 use pocketllm::util::testserver::RangeServer;
 use pocketllm::DecodeCache;
 
@@ -61,6 +65,7 @@ fn run() -> Result<()> {
         "serve-bench" => cmd_serve_bench(&args),
         "generate" => cmd_generate(&args),
         "gen-bench" => cmd_gen_bench(&args),
+        "load-bench" => cmd_load_bench(&args),
         "help" | "--help" | "-h" => {
             println!(
                 "pocketllm — PocketLLM compression coordinator\n\
@@ -85,6 +90,12 @@ fn run() -> Result<()> {
                  \x20              HTTP; [--pocket m.pocket] [--prompt-len 4] [--max-new 8]\n\
                  \x20              [--json out.json] [--check]; --check enforces identical\n\
                  \x20              token streams, warm >= cold, peak resident <= budget)\n\
+                 \x20 load-bench   persistent generation server under a concurrency ramp\n\
+                 \x20              ([--pocket m.pocket] [--requests 12] [--prompt-len 3]\n\
+                 \x20              [--max-new 6] [--ramp 1,2,4] [--max-batch 8] [--json out.json]\n\
+                 \x20              [--check]; reports p50/p99 latency + tok/s per level;\n\
+                 \x20              --check pins every stream bit-identical to sequential B=1\n\
+                 \x20              and batched tok/s >= the concurrency-1 baseline)\n\
                  \n\
                  global options:\n\
                  \x20 --backend pjrt|reference|auto   execution backend (default auto:\n\
@@ -825,6 +836,294 @@ fn cmd_gen_bench(args: &Args) -> Result<()> {
              warm >= cold, peak resident <= bounded budget ({} KiB < model {} KiB)",
             bounded_budget / 1024,
             decoded_model / 1024
+        );
+    }
+    Ok(())
+}
+
+/// One concurrency level of the load bench.
+struct LoadLevel {
+    concurrency: usize,
+    /// Aggregate generated tokens per second over the level's wall time.
+    tps: f64,
+    p50_ms: f32,
+    p99_ms: f32,
+    stats: GenServeStats,
+    /// Requests whose streamed continuation diverged from the sequential
+    /// B=1 reference (or failed outright).
+    mismatches: usize,
+}
+
+/// `load-bench`: drive the persistent generation server ([`serve_generation`])
+/// end to end under a concurrency ramp.  A fixed request mix (deterministic
+/// prompts, mixed greedy/sampled params, per-request seeds) is first run
+/// sequentially in-process (B=1, the reference streams), then replayed
+/// through the loopback HTTP front end at each `--ramp` level with that many
+/// client threads, the engine batching up to the level's concurrency.  Every
+/// phase shares the same bounded 2-layer decode budget as `gen-bench`, so
+/// batching's win is decode amortization: one weight resolution per block
+/// serves the whole batch.  Reports per-level p50/p99 request latency and
+/// aggregate tok/s; `--json` writes the snapshot (BENCH_load.json in CI);
+/// `--check` pins every streamed continuation bit-identical to the
+/// sequential reference, exact request accounting (no rejects/drops/fails),
+/// real batching (peak batch >= 2), and batched tok/s >= the concurrency-1
+/// HTTP baseline.
+fn cmd_load_bench(args: &Args) -> Result<()> {
+    let session = session_for(args)?;
+    let requests = args.usize_or("requests", 12)?;
+    let prompt_len = args.usize_or("prompt-len", 3)?;
+    let max_new = args.usize_or("max-new", 6)?;
+    let max_batch = args.usize_or("max-batch", 8)?;
+    let ramp_s = args.str_or("ramp", "1,2,4");
+    let mut ramp: Vec<usize> = Vec::new();
+    for part in ramp_s.split(',').filter(|p| !p.is_empty()) {
+        let c: usize =
+            part.parse().map_err(|_| anyhow::anyhow!("bad --ramp level {part:?}"))?;
+        ensure!(c >= 1, "--ramp levels must be >= 1");
+        ramp.push(c);
+    }
+    ensure!(!ramp.is_empty(), "--ramp needs at least one concurrency level");
+    ensure!(requests >= 1 && max_new >= 1, "load-bench needs requests >= 1 and max-new >= 1");
+    eprintln!("[load-bench] backend: {}", session.backend_name());
+
+    let bytes: Vec<u8> = match args.get("pocket") {
+        Some(p) => std::fs::read(p)?,
+        None => {
+            eprintln!(
+                "[load-bench] no --pocket given: synthesizing one (train + compress all groups)"
+            );
+            let (ws, _) = session.train_lm("tiny").steps(10).run()?;
+            let res = session
+                .compress(&ws)
+                .preset("p16x")
+                .steps(25)
+                .kmeans_iters(1)
+                .post_steps(5)
+                .run()?;
+            res.pocket.to_bytes()
+        }
+    };
+    let buf: Arc<[u8]> = bytes.into();
+    let probe = PocketReader::from_bytes(buf.clone())?;
+    let cfg = session
+        .manifest()
+        .lm_cfg(probe.lm_cfg())
+        .map_err(|_| anyhow::anyhow!("pocket names unknown lm config {:?}", probe.lm_cfg()))?
+        .clone();
+    ensure!(
+        prompt_len >= 1 && prompt_len + max_new <= cfg.seq_len,
+        "prompt {prompt_len} + max_new {max_new} exceeds the {} context window",
+        cfg.seq_len
+    );
+
+    // the same bounded 2-layer decode budget as gen-bench: cyclic layer
+    // access evicts continuously, so every step re-decodes — the cost the
+    // batch amortizes
+    let per_layer: u64 = cfg
+        .groups
+        .iter()
+        .filter(|(g, _)| probe.has_group(g.as_str()))
+        .map(|(_, gi)| (gi.tensors.len() * gi.rows_per_block * gi.width * 4) as u64)
+        .sum();
+    let dense_bytes: u64 =
+        probe.dense_names().iter().filter_map(|n| probe.section_length(n)).sum();
+    let bounded_budget = 2 * per_layer + dense_bytes;
+
+    // the request mix: deterministic prompts, greedy and sampled params
+    // interleaved, one private seed per request
+    let specs: Vec<(Vec<i32>, GenParams)> = (0..requests)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..prompt_len)
+                .map(|j| ((i * 31 + j * 17 + 3) % cfg.vocab) as i32)
+                .collect();
+            let (temperature, top_k) = match i % 3 {
+                0 => (0.0, 0),
+                1 => (0.8, 5),
+                _ => (1.1, 0),
+            };
+            (prompt, GenParams { max_new, temperature, top_k, seed: 100 + i as u64 })
+        })
+        .collect();
+
+    // sequential B=1 reference: the continuation every concurrent replay
+    // must reproduce bit-for-bit, whatever the batch composition
+    let seq_reader =
+        Arc::new(PocketReader::from_bytes(buf.clone())?.with_cache_budget(bounded_budget));
+    let seq_provider = session.pocket_provider(seq_reader)?;
+    let seq_t0 = Instant::now();
+    let mut reference: Vec<Vec<i32>> = Vec::new();
+    for (prompt, p) in &specs {
+        let g = session
+            .generate(&seq_provider)
+            .prompt(prompt.clone())
+            .max_new(p.max_new)
+            .temperature(p.temperature)
+            .top_k(p.top_k)
+            .seed(p.seed)
+            .run()?;
+        reference.push(g.continuation().to_vec());
+    }
+    let seq_tps =
+        (requests * max_new) as f64 / seq_t0.elapsed().as_secs_f64().max(1e-12);
+
+    let mut levels: Vec<LoadLevel> = Vec::new();
+    for &c in &ramp {
+        let reader =
+            Arc::new(PocketReader::from_bytes(buf.clone())?.with_cache_budget(bounded_budget));
+        let provider = session.pocket_provider(reader)?;
+        let opts = GenEngineOpts { max_batch: c.min(max_batch).max(1), stream_capacity: 64 };
+        let specs_ref = &specs;
+        let ((results, elapsed), stats) = serve_generation(&provider, opts, |h| {
+            let addr = h.addr();
+            let collected: Mutex<Vec<(usize, Result<Vec<i32>, pocketllm::Error>, f32)>> =
+                Mutex::new(Vec::new());
+            let t0 = Instant::now();
+            std::thread::scope(|scope| {
+                for w in 0..c {
+                    let collected = &collected;
+                    scope.spawn(move || {
+                        // round-robin assignment: worker w takes requests
+                        // w, w+c, w+2c, ... and runs them back to back
+                        let mut i = w;
+                        while i < specs_ref.len() {
+                            let (prompt, params) = &specs_ref[i];
+                            let r0 = Instant::now();
+                            let got = http_generate(addr, prompt, params);
+                            let ms = (r0.elapsed().as_secs_f64() * 1e3) as f32;
+                            collected.lock().unwrap().push((i, got, ms));
+                            i += c;
+                        }
+                    });
+                }
+            });
+            (collected.into_inner().unwrap(), t0.elapsed())
+        })?;
+        let mut latencies: Vec<f32> = Vec::with_capacity(results.len());
+        let mut mismatches = 0usize;
+        let mut tokens = 0usize;
+        for (i, got, ms) in &results {
+            latencies.push(*ms);
+            match got {
+                Ok(ts) => {
+                    tokens += ts.len();
+                    if ts != &reference[*i] {
+                        mismatches += 1;
+                    }
+                }
+                Err(_) => mismatches += 1,
+            }
+        }
+        levels.push(LoadLevel {
+            concurrency: c,
+            tps: tokens as f64 / elapsed.as_secs_f64().max(1e-12),
+            p50_ms: percentile(&latencies, 50.0),
+            p99_ms: percentile(&latencies, 99.0),
+            stats,
+            mismatches,
+        });
+    }
+
+    let mut t = Table::new(
+        &format!("load-bench ({} backend, {requests} requests)", session.backend_name()),
+        &["clients", "tok/s", "p50 ms", "p99 ms", "avg batch", "peak", "ok"],
+    );
+    for l in &levels {
+        let avg_batch = l.stats.lane_steps as f64 / l.stats.steps.max(1) as f64;
+        t.row(vec![
+            format!("{}", l.concurrency),
+            format!("{:.0}", l.tps),
+            format!("{:.1}", l.p50_ms),
+            format!("{:.1}", l.p99_ms),
+            format!("{avg_batch:.2}"),
+            format!("{}", l.stats.peak_batch),
+            if l.mismatches == 0 { "yes".into() } else { format!("{} bad", l.mismatches) },
+        ]);
+    }
+    t.emit(None);
+    println!(
+        "sequential B=1 in-process: {seq_tps:.0} tok/s ({requests} requests, prompt {prompt_len} \
+         + {max_new} new tokens, bounded budget {} KiB)",
+        bounded_budget / 1024
+    );
+
+    if let Some(path) = args.get("json") {
+        let level_obj = |l: &LoadLevel| -> Json {
+            obj(vec![
+                ("concurrency", num(l.concurrency as f64)),
+                ("tps", num(l.tps)),
+                ("p50_ms", num(l.p50_ms as f64)),
+                ("p99_ms", num(l.p99_ms as f64)),
+                ("avg_batch", num(l.stats.lane_steps as f64 / l.stats.steps.max(1) as f64)),
+                ("peak_batch", num(l.stats.peak_batch as f64)),
+                ("completed", num(l.stats.completed as f64)),
+                ("rejected", num(l.stats.rejected as f64)),
+                ("dropped", num(l.stats.dropped as f64)),
+                ("failed", num(l.stats.failed as f64)),
+                ("mismatches", num(l.mismatches as f64)),
+            ])
+        };
+        let j = obj(vec![
+            ("backend", s(session.backend_name())),
+            ("model", s(probe.lm_cfg())),
+            ("requests", num(requests as f64)),
+            ("prompt_len", num(prompt_len as f64)),
+            ("max_new", num(max_new as f64)),
+            ("bounded_budget_bytes", num(bounded_budget as f64)),
+            ("sequential_tps", num(seq_tps)),
+            ("levels", arr(levels.iter().map(level_obj).collect())),
+        ]);
+        pocketllm::util::benchlib::write_report(path, &j);
+        println!("[load-bench] wrote {path}");
+    }
+
+    if args.flag("check") {
+        for l in &levels {
+            ensure!(
+                l.mismatches == 0,
+                "concurrency {}: {} streamed continuations diverged from the sequential \
+                 B=1 reference",
+                l.concurrency,
+                l.mismatches
+            );
+            ensure!(
+                l.stats.completed == requests as u64
+                    && l.stats.rejected == 0
+                    && l.stats.dropped == 0
+                    && l.stats.failed == 0,
+                "concurrency {}: request accounting off ({:?}, expected {requests} completed)",
+                l.concurrency,
+                l.stats
+            );
+        }
+        let base = levels.iter().find(|l| l.concurrency == 1).ok_or_else(|| {
+            anyhow::anyhow!("--check needs concurrency level 1 in --ramp as the B=1 baseline")
+        })?;
+        let best = levels
+            .iter()
+            .filter(|l| l.concurrency > 1)
+            .max_by(|a, b| a.tps.total_cmp(&b.tps))
+            .ok_or_else(|| {
+                anyhow::anyhow!("--check needs a concurrency level > 1 in --ramp")
+            })?;
+        ensure!(
+            best.stats.peak_batch >= 2,
+            "concurrency {} never actually batched (peak batch {})",
+            best.concurrency,
+            best.stats.peak_batch
+        );
+        ensure!(
+            best.tps >= base.tps,
+            "batched throughput {:.1} tok/s fell below the sequential B=1 HTTP baseline {:.1}",
+            best.tps,
+            base.tps
+        );
+        println!(
+            "[load-bench] checks passed: {} bit-identical streams per level, batched {:.0} \
+             tok/s >= sequential {:.0} tok/s (peak batch {})",
+            requests,
+            best.tps,
+            base.tps,
+            best.stats.peak_batch
         );
     }
     Ok(())

@@ -535,10 +535,12 @@ pub fn eval_nll_provider(
     Ok((nll.iter().map(|&x| x as f64).sum(), nll.len()))
 }
 
-/// Rolling KV state of one decode stream (batch 1).  Keys and values are
+/// Rolling KV state of one decode stream (one lane).  Keys and values are
 /// stored head-major per layer (`[n_heads, seq_len, head_dim]`) and
 /// appended once per step, so each incremental step attends over every
-/// previous position without recomputing it.
+/// previous position without recomputing it.  Batched decode
+/// ([`gen_step_batch`]) advances many independent `GenState` lanes against
+/// one shared weight resolution per block.
 pub struct GenState {
     pos: usize,
     cap: usize,
@@ -587,41 +589,86 @@ impl GenState {
 /// `layer_hook(b)` fires just before block `b` resolves its weights — the
 /// generation engine uses it to ask a helper thread for next-layer
 /// prefetch, overlapping decode with compute.
+///
+/// Delegates to [`gen_step_batch`] with a single lane, so the single- and
+/// batched-decode paths are one code path by construction.
 pub fn gen_step(
     provider: &dyn WeightProvider,
     st: &mut GenState,
     token: i32,
-    mut layer_hook: impl FnMut(usize),
+    layer_hook: impl FnMut(usize),
 ) -> Result<Vec<f32>> {
+    let mut rows = gen_step_batch(provider, &mut [st], &[token], layer_hook)?;
+    Ok(rows.pop().expect("one lane in, one logits row out"))
+}
+
+/// Batched KV-cached decode: advance every lane in `states` by one token
+/// and return one `[V]` logits row per lane.
+///
+/// This is the continuous-batching amortization step: each block's weights
+/// are resolved **once** per call (one `load_block` — on a pocket provider
+/// one bounded chunk decode) and every lane's forward runs against the
+/// shared views.  Lanes may sit at *different* positions: each owns its KV
+/// cache and hidden state, and the per-lane math is exactly the single-lane
+/// [`gen_step`] body, so each lane's logits are bit-identical to running
+/// that lane alone — batch composition cannot change any stream.
+///
+/// Validation covers every lane before any lane mutates, so a bad lane
+/// (wrong config, exhausted window, out-of-vocab token) fails the call
+/// with all states unchanged.  `layer_hook(b)` fires once per block for
+/// the whole batch.
+pub fn gen_step_batch(
+    provider: &dyn WeightProvider,
+    states: &mut [&mut GenState],
+    tokens: &[i32],
+    mut layer_hook: impl FnMut(usize),
+) -> Result<Vec<Vec<f32>>> {
     let cfg = provider.cfg();
     let d = cfg.d_model;
     let nh = cfg.n_heads;
     let hd = d / nh;
     let ffh = cfg.ffn_hidden;
+    ensure!(!states.is_empty(), "gen_step_batch needs at least one lane");
     ensure!(
-        st.k.len() == cfg.n_layers && st.cap == cfg.seq_len && st.nh == nh && st.hd == hd,
-        "GenState does not match config {}",
-        cfg.name
+        states.len() == tokens.len(),
+        "lane/token mismatch: {} states vs {} tokens",
+        states.len(),
+        tokens.len()
     );
-    ensure!(st.pos < st.cap, "context window exhausted ({} positions)", st.cap);
-    ensure!(
-        (0..cfg.vocab as i32).contains(&token),
-        "token {token} out of vocab range (V={})",
-        cfg.vocab
-    );
-    let p = st.pos;
-    let cap = st.cap;
+    for (lane, st) in states.iter().enumerate() {
+        ensure!(
+            st.k.len() == cfg.n_layers && st.cap == cfg.seq_len && st.nh == nh && st.hd == hd,
+            "GenState in lane {lane} does not match config {}",
+            cfg.name
+        );
+        ensure!(
+            st.pos < st.cap,
+            "context window exhausted in lane {lane} ({} positions)",
+            st.cap
+        );
+    }
+    for (lane, &token) in tokens.iter().enumerate() {
+        ensure!(
+            (0..cfg.vocab as i32).contains(&token),
+            "token {token} in lane {lane} out of vocab range (V={})",
+            cfg.vocab
+        );
+    }
+    let cap = cfg.seq_len;
     let inv = 1.0 / (hd as f32).sqrt();
 
     let embed = provider.tensor("embed")?;
     let pos_t = provider.tensor("pos")?;
-    let mut h = vec![0.0f32; d];
-    {
+    let mut hs: Vec<Vec<f32>> = Vec::with_capacity(states.len());
+    for (st, &token) in states.iter().zip(tokens) {
+        let p = st.pos;
+        let mut h = vec![0.0f32; d];
         let erow = &embed[token as usize * d..(token as usize + 1) * d];
         let prow = &pos_t[p * d..(p + 1) * d];
         for ((o, &e), &pv) in h.iter_mut().zip(erow).zip(prow) {
             *o = e + pv;
         }
+        hs.push(h);
     }
     drop(pos_t);
 
@@ -629,71 +676,79 @@ pub fn gen_step(
         layer_hook(b);
         let views = load_block(provider, b)?;
         let w = views.weights();
-        let s1 = scale1p(w.norm1);
-        let (x1, _) = rmsnorm_fwd(&h, &s1, 1, d);
-        let qf = matmul(&x1, w.wq, 1, d, d);
-        let kf = matmul(&x1, w.wk, 1, d, d);
-        let vf = matmul(&x1, w.wv, 1, d, d);
-        let kl = &mut st.k[b];
-        let vl = &mut st.v[b];
-        for hh in 0..nh {
-            let dst = (hh * cap + p) * hd;
-            kl[dst..dst + hd].copy_from_slice(&kf[hh * hd..(hh + 1) * hd]);
-            vl[dst..dst + hd].copy_from_slice(&vf[hh * hd..(hh + 1) * hd]);
-        }
-
-        let mut o = vec![0.0f32; d];
-        for hh in 0..nh {
-            let qh = &qf[hh * hd..(hh + 1) * hd];
-            let mut row = vec![0.0f32; p + 1];
-            for (j, rj) in row.iter_mut().enumerate() {
-                let kr = &kl[(hh * cap + j) * hd..(hh * cap + j + 1) * hd];
-                let mut acc = 0.0f32;
-                for (&qv, &kv) in qh.iter().zip(kr) {
-                    acc += qv * kv;
-                }
-                *rj = acc * inv;
+        for (st, h) in states.iter_mut().zip(hs.iter_mut()) {
+            let p = st.pos;
+            let s1 = scale1p(w.norm1);
+            let (x1, _) = rmsnorm_fwd(h.as_slice(), &s1, 1, d);
+            let qf = matmul(&x1, w.wq, 1, d, d);
+            let kf = matmul(&x1, w.wk, 1, d, d);
+            let vf = matmul(&x1, w.wv, 1, d, d);
+            let kl = &mut st.k[b];
+            let vl = &mut st.v[b];
+            for hh in 0..nh {
+                let dst = (hh * cap + p) * hd;
+                kl[dst..dst + hd].copy_from_slice(&kf[hh * hd..(hh + 1) * hd]);
+                vl[dst..dst + hd].copy_from_slice(&vf[hh * hd..(hh + 1) * hd]);
             }
-            softmax_row(&mut row);
-            let oh = &mut o[hh * hd..(hh + 1) * hd];
-            for (j, &aij) in row.iter().enumerate() {
-                if aij == 0.0 {
-                    continue;
+
+            let mut o = vec![0.0f32; d];
+            for hh in 0..nh {
+                let qh = &qf[hh * hd..(hh + 1) * hd];
+                let mut row = vec![0.0f32; p + 1];
+                for (j, rj) in row.iter_mut().enumerate() {
+                    let kr = &kl[(hh * cap + j) * hd..(hh * cap + j + 1) * hd];
+                    let mut acc = 0.0f32;
+                    for (&qv, &kv) in qh.iter().zip(kr) {
+                        acc += qv * kv;
+                    }
+                    *rj = acc * inv;
                 }
-                let vr = &vl[(hh * cap + j) * hd..(hh * cap + j + 1) * hd];
-                for (ov, &vv) in oh.iter_mut().zip(vr) {
-                    *ov += aij * vv;
+                softmax_row(&mut row);
+                let oh = &mut o[hh * hd..(hh + 1) * hd];
+                for (j, &aij) in row.iter().enumerate() {
+                    if aij == 0.0 {
+                        continue;
+                    }
+                    let vr = &vl[(hh * cap + j) * hd..(hh * cap + j + 1) * hd];
+                    for (ov, &vv) in oh.iter_mut().zip(vr) {
+                        *ov += aij * vv;
+                    }
                 }
             }
-        }
-        let attn_out = matmul(&o, w.wo, 1, d, d);
-        let mut h_mid = h;
-        for (hm, &a) in h_mid.iter_mut().zip(&attn_out) {
-            *hm += a;
-        }
+            let attn_out = matmul(&o, w.wo, 1, d, d);
+            let mut h_mid = std::mem::take(h);
+            for (hm, &a) in h_mid.iter_mut().zip(&attn_out) {
+                *hm += a;
+            }
 
-        let s2 = scale1p(w.norm2);
-        let (x2, _) = rmsnorm_fwd(&h_mid, &s2, 1, d);
-        let gt = matmul(&x2, w.wgate, 1, d, ffh);
-        let u = matmul(&x2, w.wup, 1, d, ffh);
-        let mut mm = vec![0.0f32; ffh];
-        for ((m, &g), &uv) in mm.iter_mut().zip(&gt).zip(&u) {
-            *m = silu(g) * uv;
+            let s2 = scale1p(w.norm2);
+            let (x2, _) = rmsnorm_fwd(&h_mid, &s2, 1, d);
+            let gt = matmul(&x2, w.wgate, 1, d, ffh);
+            let u = matmul(&x2, w.wup, 1, d, ffh);
+            let mut mm = vec![0.0f32; ffh];
+            for ((m, &g), &uv) in mm.iter_mut().zip(&gt).zip(&u) {
+                *m = silu(g) * uv;
+            }
+            let ff = matmul(&mm, w.wdown, 1, ffh, d);
+            let mut h_next = h_mid;
+            for (hn, &f) in h_next.iter_mut().zip(&ff) {
+                *hn += f;
+            }
+            *h = h_next;
         }
-        let ff = matmul(&mm, w.wdown, 1, ffh, d);
-        let mut h_next = h_mid;
-        for (hn, &f) in h_next.iter_mut().zip(&ff) {
-            *hn += f;
-        }
-        h = h_next;
     }
 
     let fin = provider.tensor("final_norm")?;
     let sf = scale1p(&fin);
-    let (hf, _) = rmsnorm_fwd(&h, &sf, 1, d);
-    let logits = matmul_nt(&hf, &embed, 1, d, cfg.vocab);
-    st.pos += 1;
-    Ok(logits)
+    let mut out = Vec::with_capacity(states.len());
+    for h in &hs {
+        let (hf, _) = rmsnorm_fwd(h, &sf, 1, d);
+        out.push(matmul_nt(&hf, &embed, 1, d, cfg.vocab));
+    }
+    for st in states.iter_mut() {
+        st.pos += 1;
+    }
+    Ok(out)
 }
 
 /// Per-position NLL from logits: logsumexp(row) - row[target].  Targets are

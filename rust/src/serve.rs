@@ -23,7 +23,28 @@
 //! The CLI `serve-bench` subcommand and `examples/serve_concurrent.rs` sit
 //! on top of this; `cargo test` exercises it in
 //! `tests/serve_concurrent.rs`.
+//!
+//! # The persistent generation front end
+//!
+//! [`serve_generation`] is the production-shaped serving loop: a
+//! **continuous-batching engine** thread owns one [`WeightProvider`] and
+//! advances up to `max_batch` KV-cached decode lanes per
+//! [`gen_step_batch`] call — one bounded weight resolution per block per
+//! step, amortized across every in-flight request — while an
+//! [`HttpServer`](crate::util::httpserver::HttpServer) front end accepts
+//! concurrent `GET /generate` requests on loopback and streams
+//! newline-delimited token ids back as they decode.  Requests join the
+//! batch mid-flight and leave as they finish; per-lane sampling state
+//! (seed / temperature / top-k) keeps every stream bit-identical to a solo
+//! sequential run regardless of batch composition.  Slow or vanished
+//! clients exert per-lane backpressure (a full stream buffer parks only
+//! that lane; a dropped receiver retires it) without stalling the batch.
+//! The CLI `load-bench` subcommand drives this end-to-end and
+//! `tests/gen_server.rs` pins the determinism and drop semantics.
 
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -31,8 +52,12 @@ use crate::data::Corpus;
 use crate::error::Error;
 use crate::eval;
 use crate::packfmt::{PocketReader, ReaderStats};
-use crate::runtime::weights::PocketProvider;
-use crate::session::{generate_tokens, GenOpts, Session};
+use crate::runtime::manifest::LmCfg;
+use crate::runtime::reference::lm::{gen_step_batch, GenState};
+use crate::runtime::weights::{PocketProvider, WeightProvider};
+use crate::session::{generate_tokens, sample_logits, GenOpts, Session};
+use crate::util::httpserver::{HttpServer, Request};
+use crate::util::prng::Pcg32;
 use crate::util::threadpool::{default_workers, scoped_map};
 
 /// One serving request against a pocket model.
@@ -194,6 +219,566 @@ impl<'s> PocketServer<'s> {
             stats: self.reader.stats(),
         })
     }
+}
+
+/// Per-request sampling parameters accepted by the generation server.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GenParams {
+    /// Tokens to generate after the prompt.
+    pub max_new: usize,
+    /// Sampling temperature; `0.0` is greedy argmax.
+    pub temperature: f32,
+    /// Restrict sampling to the `k` highest-logit tokens (0 = no limit).
+    pub top_k: usize,
+    /// Seed of the request's private deterministic sampling stream.
+    pub seed: u64,
+}
+
+impl Default for GenParams {
+    fn default() -> GenParams {
+        GenParams { max_new: 16, temperature: 0.0, top_k: 0, seed: 7 }
+    }
+}
+
+/// Policy knobs of the continuous-batching engine.
+#[derive(Clone, Copy, Debug)]
+pub struct GenEngineOpts {
+    /// Admission control: at most this many lanes decode together; further
+    /// requests queue in the inbox until a lane retires.
+    pub max_batch: usize,
+    /// Per-request stream buffer in tokens.  When a client stops reading,
+    /// its lane parks after this many undelivered tokens (backpressure on
+    /// that lane only) until the client catches up or goes away.
+    pub stream_capacity: usize,
+}
+
+impl Default for GenEngineOpts {
+    fn default() -> GenEngineOpts {
+        GenEngineOpts { max_batch: 8, stream_capacity: 64 }
+    }
+}
+
+/// Counters of one [`serve_generation`] run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GenServeStats {
+    /// Requests admitted into the batch.
+    pub requests: u64,
+    /// Requests that streamed every token.
+    pub completed: u64,
+    /// Requests refused at admission (bad prompt / window overflow).
+    pub rejected: u64,
+    /// Requests whose client vanished mid-stream.
+    pub dropped: u64,
+    /// Requests killed by an engine or sampling error mid-stream.
+    pub failed: u64,
+    /// Batched decode steps executed.
+    pub steps: u64,
+    /// Sum of lanes advanced over all steps (`lane_steps / steps` is the
+    /// average effective batch size).
+    pub lane_steps: u64,
+    /// Most lanes ever resident in the batch at once (parked lanes count:
+    /// they hold a slot until they retire).
+    pub peak_batch: usize,
+}
+
+/// One queued request: prompt, sampling parameters and the token sink.
+struct EngineMsg {
+    prompt: Vec<i32>,
+    params: GenParams,
+    tx: SyncSender<Result<i32, Error>>,
+}
+
+/// Why a lane stops participating in the batch.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum LaneExit {
+    Active,
+    /// The client's receiver is gone.
+    Dropped,
+    /// A step or sampling error was reported to the client.
+    Failed,
+}
+
+/// One in-flight request inside the engine.
+struct Lane {
+    state: GenState,
+    rng: Pcg32,
+    prompt: Vec<i32>,
+    params: GenParams,
+    /// Prompt/feedback tokens consumed so far (= engine steps taken).
+    fed: usize,
+    /// Tokens sampled so far.
+    emitted: usize,
+    /// Last sampled token (the next step's input once the prompt is fed).
+    last: i32,
+    /// A sampled token the client has not accepted yet (backpressure).
+    pending: Option<i32>,
+    tx: SyncSender<Result<i32, Error>>,
+    exit: LaneExit,
+}
+
+impl Lane {
+    /// Should this lane advance in the next batched step?
+    fn wants_step(&self) -> bool {
+        self.exit == LaneExit::Active
+            && self.pending.is_none()
+            && self.emitted < self.params.max_new
+    }
+
+    /// The next step's input token: the prompt, then self-feedback.
+    fn next_input(&self) -> i32 {
+        if self.fed < self.prompt.len() { self.prompt[self.fed] } else { self.last }
+    }
+
+    /// Every token generated and delivered: ready to retire cleanly.
+    fn complete(&self) -> bool {
+        self.exit == LaneExit::Active
+            && self.emitted >= self.params.max_new
+            && self.pending.is_none()
+    }
+}
+
+/// Validate one request against the model window; admit it as a fresh lane
+/// or answer with a typed rejection.
+fn admit_lane(cfg: &LmCfg, msg: EngineMsg, lanes: &mut Vec<Lane>, stats: &mut GenServeStats) {
+    let EngineMsg { prompt, params, tx } = msg;
+    let reject = |what: String, expected: String, got: String| {
+        Err(Error::ShapeMismatch { what, expected, got })
+    };
+    let verdict = if prompt.is_empty() {
+        Some(reject(
+            "generation prompt".to_string(),
+            "at least 1 token".to_string(),
+            "0 tokens".to_string(),
+        ))
+    } else if prompt.len() + params.max_new > cfg.seq_len {
+        Some(reject(
+            format!("prompt + max_new for {}", cfg.name),
+            format!("<= {} positions (context window)", cfg.seq_len),
+            format!("{} positions", prompt.len() + params.max_new),
+        ))
+    } else {
+        prompt
+            .iter()
+            .find(|&&t| !(0..cfg.vocab as i32).contains(&t))
+            .map(|&bad| {
+                reject(
+                    "generation prompt".to_string(),
+                    format!("tokens in 0..{}", cfg.vocab),
+                    format!("token {bad}"),
+                )
+            })
+    };
+    if let Some(err) = verdict {
+        stats.rejected += 1;
+        let _ = tx.try_send(err);
+        return;
+    }
+    stats.requests += 1;
+    lanes.push(Lane {
+        state: GenState::new(cfg),
+        rng: Pcg32::seeded(params.seed),
+        prompt,
+        params,
+        fed: 0,
+        emitted: 0,
+        last: 0,
+        pending: None,
+        tx,
+        exit: LaneExit::Active,
+    });
+}
+
+/// The continuous-batching engine loop.  Owns every lane; admits queued
+/// requests up to `max_batch`, advances all unparked lanes with one
+/// [`gen_step_batch`] per iteration (one weight resolution per block for
+/// the whole batch), streams sampled tokens to per-request sinks, and
+/// retires lanes as they complete, fail, or lose their client.  Returns
+/// when the inbox disconnects and the last lane retires.
+fn run_gen_engine(
+    provider: &dyn WeightProvider,
+    inbox: Receiver<EngineMsg>,
+    opts: &GenEngineOpts,
+) -> GenServeStats {
+    let cfg = provider.cfg();
+    let n_layers = cfg.n_layers;
+    let max_batch = opts.max_batch.max(1);
+    let mut stats = GenServeStats::default();
+    std::thread::scope(|scope| {
+        // advisory next-layer prefetch, same idiom as `generate_tokens`:
+        // a helper decodes layer i while the engine computes layer i-1
+        let (ptx, prx) = mpsc::sync_channel::<usize>(n_layers.max(1) + 1);
+        if provider.wants_prefetch() {
+            scope.spawn(move || {
+                while let Ok(i) = prx.recv() {
+                    provider.prefetch_layer(i);
+                }
+            });
+        } else {
+            drop(prx);
+        }
+
+        let mut lanes: Vec<Lane> = Vec::new();
+        let mut inbox_open = true;
+        loop {
+            // admission: join new requests (continuous batching — lanes at
+            // any position mix freely).  An idle engine blocks briefly
+            // instead of spinning.
+            while inbox_open && lanes.len() < max_batch {
+                let msg = if lanes.is_empty() {
+                    match inbox.recv_timeout(Duration::from_millis(20)) {
+                        Ok(m) => m,
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            inbox_open = false;
+                            break;
+                        }
+                    }
+                } else {
+                    match inbox.try_recv() {
+                        Ok(m) => m,
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            inbox_open = false;
+                            break;
+                        }
+                    }
+                };
+                admit_lane(cfg, msg, &mut lanes, &mut stats);
+            }
+            if lanes.is_empty() {
+                if inbox_open {
+                    continue;
+                }
+                break;
+            }
+            stats.peak_batch = stats.peak_batch.max(lanes.len());
+
+            // deliver tokens parked by backpressure; a gone receiver
+            // retires its lane (client-drop handling)
+            for lane in lanes.iter_mut() {
+                if let Some(t) = lane.pending {
+                    match lane.tx.try_send(Ok(t)) {
+                        Ok(()) => lane.pending = None,
+                        Err(TrySendError::Full(_)) => {}
+                        Err(TrySendError::Disconnected(_)) => lane.exit = LaneExit::Dropped,
+                    }
+                }
+            }
+
+            // retire finished lanes; dropping the sender is the stream EOF
+            // (buffered tokens still reach the client first)
+            let mut i = 0;
+            while i < lanes.len() {
+                match lanes[i].exit {
+                    LaneExit::Dropped => {
+                        stats.dropped += 1;
+                        lanes.swap_remove(i);
+                    }
+                    LaneExit::Failed => {
+                        stats.failed += 1;
+                        lanes.swap_remove(i);
+                    }
+                    LaneExit::Active if lanes[i].complete() => {
+                        stats.completed += 1;
+                        lanes.swap_remove(i);
+                    }
+                    LaneExit::Active => i += 1,
+                }
+            }
+            if lanes.is_empty() {
+                continue;
+            }
+
+            // one batched decode step over every unparked lane.  The three
+            // wants_step() passes agree: nothing between them mutates the
+            // fields the predicate reads.
+            let toks: Vec<i32> =
+                lanes.iter().filter(|l| l.wants_step()).map(|l| l.next_input()).collect();
+            if toks.is_empty() {
+                // every lane is parked on a slow client: wait, don't spin
+                std::thread::sleep(Duration::from_micros(200));
+                continue;
+            }
+            let mut refs: Vec<&mut GenState> =
+                lanes.iter_mut().filter(|l| l.wants_step()).map(|l| &mut l.state).collect();
+            let step = gen_step_batch(provider, &mut refs, &toks, |b| {
+                let _ = ptx.try_send((b + 1) % n_layers.max(1));
+            });
+            drop(refs);
+            let rows = match step {
+                Ok(rows) => rows,
+                Err(e) => {
+                    // a failed batch poisons the stepped lanes (their KV
+                    // caches may be partially written): report and retire
+                    let msg = format!("{e:#}");
+                    for lane in lanes.iter_mut().filter(|l| l.wants_step()) {
+                        let _ = lane.tx.try_send(Err(Error::Other(anyhow::anyhow!("{msg}"))));
+                        lane.exit = LaneExit::Failed;
+                    }
+                    continue;
+                }
+            };
+            stats.steps += 1;
+            stats.lane_steps += rows.len() as u64;
+            let mut rows_it = rows.into_iter();
+            for lane in lanes.iter_mut().filter(|l| l.wants_step()) {
+                let row = rows_it.next().expect("one logits row per stepped lane");
+                lane.fed += 1;
+                if lane.fed < lane.prompt.len() {
+                    continue; // still consuming the prompt
+                }
+                let sampled =
+                    sample_logits(&row, lane.params.temperature, lane.params.top_k, &mut lane.rng);
+                match sampled {
+                    Ok(t) => {
+                        lane.emitted += 1;
+                        lane.last = t;
+                        match lane.tx.try_send(Ok(t)) {
+                            Ok(()) => {}
+                            Err(TrySendError::Full(_)) => lane.pending = Some(t),
+                            Err(TrySendError::Disconnected(_)) => lane.exit = LaneExit::Dropped,
+                        }
+                    }
+                    Err(e) => {
+                        let _ = lane.tx.try_send(Err(e));
+                        lane.exit = LaneExit::Failed;
+                    }
+                }
+            }
+        }
+        drop(ptx);
+    });
+    stats
+}
+
+/// Handle to a running generation server: submit in-process requests or
+/// point HTTP clients at [`GenServerHandle::addr`].  Clone it to hand to
+/// other threads.
+#[derive(Clone)]
+pub struct GenServerHandle {
+    addr: SocketAddr,
+    tx: mpsc::Sender<EngineMsg>,
+    stream_capacity: usize,
+}
+
+impl GenServerHandle {
+    /// The loopback address of the HTTP front end.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// URL of the generation endpoint.
+    pub fn url(&self) -> String {
+        format!("http://{}/generate", self.addr)
+    }
+
+    /// Submit a request straight to the engine (no HTTP).  The receiver
+    /// streams one `Ok(token)` per generated token and closes at end of
+    /// stream; a rejected or failed request yields one `Err`.  Dropping
+    /// the receiver mid-stream retires the request (client drop).
+    pub fn submit(&self, prompt: Vec<i32>, params: GenParams) -> Receiver<Result<i32, Error>> {
+        let (tx, rx) = mpsc::sync_channel(self.stream_capacity.max(1));
+        // a send error means the engine already shut down; the dropped
+        // sender then closes the stream immediately
+        let _ = self.tx.send(EngineMsg { prompt, params, tx });
+        rx
+    }
+}
+
+/// Parse `/generate` query parameters into a prompt and [`GenParams`].
+fn parse_gen_query(req: &Request) -> Result<(Vec<i32>, GenParams), String> {
+    let prompt_s = req
+        .query_param("prompt")
+        .ok_or_else(|| "missing prompt= query parameter".to_string())?;
+    let mut prompt = Vec::new();
+    for part in prompt_s.split(',').filter(|p| !p.is_empty()) {
+        prompt.push(part.parse::<i32>().map_err(|_| format!("bad prompt token {part:?}"))?);
+    }
+    let mut params = GenParams::default();
+    if let Some(v) = req.query_param("max_new") {
+        params.max_new = v.parse().map_err(|_| format!("bad max_new {v:?}"))?;
+    }
+    if let Some(v) = req.query_param("temperature") {
+        params.temperature = v.parse().map_err(|_| format!("bad temperature {v:?}"))?;
+    }
+    if let Some(v) = req.query_param("top_k") {
+        params.top_k = v.parse().map_err(|_| format!("bad top_k {v:?}"))?;
+    }
+    if let Some(v) = req.query_param("seed") {
+        params.seed = v.parse().map_err(|_| format!("bad seed {v:?}"))?;
+    }
+    Ok((prompt, params))
+}
+
+/// Answer one `GET /generate?prompt=1,2,3&max_new=8&temperature=0.8&
+/// top_k=5&seed=42` request by streaming newline-delimited token ids.
+///
+/// The first engine event picks the status line — `400` for a rejected
+/// request, `200` for an accepted one — after which tokens stream as they
+/// decode.  The response deliberately carries no `Content-Length` and
+/// `Connection: close`: end-of-connection is end-of-stream.  A write
+/// failure (client gone) drops the engine-side receiver, which the engine
+/// notices as a client drop.
+fn handle_generate_request(
+    req: &Request,
+    stream: &mut TcpStream,
+    engine_tx: &mpsc::Sender<EngineMsg>,
+    stream_capacity: usize,
+) -> bool {
+    fn simple(stream: &mut TcpStream, status: &str, body: &str) {
+        let head = format!(
+            "HTTP/1.1 {status}\r\nContent-Type: text/plain\r\nConnection: close\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        stream.write_all(head.as_bytes()).ok();
+    }
+    const STREAM_HEAD: &[u8] =
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/plain\r\nConnection: close\r\n\r\n";
+
+    if req.route() != "/generate" {
+        simple(stream, "404 Not Found", "unknown route\n");
+        return false;
+    }
+    let (prompt, params) = match parse_gen_query(req) {
+        Ok(x) => x,
+        Err(msg) => {
+            simple(stream, "400 Bad Request", &format!("error: {msg}\n"));
+            return false;
+        }
+    };
+    let (rtx, rrx) = mpsc::sync_channel(stream_capacity.max(1));
+    if engine_tx.send(EngineMsg { prompt, params, tx: rtx }).is_err() {
+        simple(stream, "503 Service Unavailable", "generation engine is shut down\n");
+        return false;
+    }
+    // peek the first event so rejections get a real 400 status line
+    match rrx.recv() {
+        Err(_) => {
+            // zero tokens requested: an empty but successful stream
+            stream.write_all(STREAM_HEAD).ok();
+        }
+        Ok(Err(e)) => {
+            simple(stream, "400 Bad Request", &format!("error: {e}\n"));
+        }
+        Ok(Ok(t0)) => {
+            if stream.write_all(STREAM_HEAD).is_err()
+                || stream.write_all(format!("{t0}\n").as_bytes()).is_err()
+            {
+                return false;
+            }
+            loop {
+                match rrx.recv() {
+                    Ok(Ok(t)) => {
+                        if stream.write_all(format!("{t}\n").as_bytes()).is_err() {
+                            // client went away: dropping rrx tells the engine
+                            return false;
+                        }
+                    }
+                    Ok(Err(e)) => {
+                        let _ = stream.write_all(format!("error: {e}\n").as_bytes());
+                        break;
+                    }
+                    Err(_) => break, // engine closed the stream: done
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Run a persistent generation server over `provider` for the duration of
+/// `f`: a continuous-batching engine thread plus a loopback HTTP front end
+/// accepting concurrent `GET /generate` requests (see
+/// [`handle_generate_request`]'s wire format).  `f` drives the server —
+/// through HTTP against [`GenServerHandle::addr`] (e.g. with
+/// [`http_generate`]) and/or in-process via [`GenServerHandle::submit`] —
+/// and when it returns, the server stops accepting, drains in-flight
+/// lanes, and the engine's counters come back with `f`'s result.
+///
+/// The provider is borrowed, not `'static` (a [`PocketProvider`] borrows
+/// its runtime), which is why the server lives inside a scope instead of
+/// being a free-running value.
+pub fn serve_generation<R>(
+    provider: &dyn WeightProvider,
+    opts: GenEngineOpts,
+    f: impl FnOnce(&GenServerHandle) -> R,
+) -> Result<(R, GenServeStats), Error> {
+    let (tx, rx) = mpsc::channel::<EngineMsg>();
+    let opts_ref = &opts;
+    std::thread::scope(|scope| {
+        let engine = scope.spawn(move || run_gen_engine(provider, rx, opts_ref));
+        let http_tx = tx.clone();
+        let capacity = opts.stream_capacity;
+        // a short idle timeout bounds how long a silent connection can
+        // keep the engine inbox alive after shutdown begins
+        let server = HttpServer::bind(Duration::from_secs(2), move |req, stream| {
+            handle_generate_request(req, stream, &http_tx, capacity)
+        })
+        .map_err(|e| Error::Other(anyhow::anyhow!("bind generation server: {e}")))?;
+        let handle = GenServerHandle {
+            addr: server.addr(),
+            tx: tx.clone(),
+            stream_capacity: opts.stream_capacity,
+        };
+        let out = f(&handle);
+        // teardown: stop accepting, then drop every inbox sender so the
+        // engine drains its lanes and exits
+        drop(handle);
+        drop(server);
+        drop(tx);
+        let stats = engine.join().expect("generation engine thread panicked");
+        Ok((out, stats))
+    })
+}
+
+/// Blocking loopback client for the generation server: send one request,
+/// collect the full streamed continuation.  Mid-stream `error:` lines and
+/// non-200 responses surface as [`Error`].
+pub fn http_generate(
+    addr: SocketAddr,
+    prompt: &[i32],
+    params: &GenParams,
+) -> Result<Vec<i32>, Error> {
+    let wire = |e: std::io::Error| Error::Other(anyhow::anyhow!("generation request: {e}"));
+    let mut stream = TcpStream::connect(addr).map_err(wire)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).ok();
+    let prompt_s: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let path = format!(
+        "/generate?prompt={}&max_new={}&temperature={}&top_k={}&seed={}",
+        prompt_s.join(","),
+        params.max_new,
+        params.temperature,
+        params.top_k,
+        params.seed
+    );
+    let req = format!("GET {path} HTTP/1.1\r\nHost: pocket\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes()).map_err(wire)?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).map_err(wire)?;
+    let text = String::from_utf8_lossy(&raw);
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| Error::Other(anyhow::anyhow!("malformed response: {text:?}")))?;
+    let status = head.split_whitespace().nth(1).unwrap_or("<none>");
+    if status != "200" {
+        return Err(Error::Other(anyhow::anyhow!(
+            "generation request failed: HTTP {status}: {}",
+            body.trim()
+        )));
+    }
+    let mut tokens = Vec::new();
+    for line in body.lines().map(str::trim).filter(|l| !l.is_empty()) {
+        if let Some(msg) = line.strip_prefix("error:") {
+            return Err(Error::Other(anyhow::anyhow!("generation failed mid-stream:{msg}")));
+        }
+        tokens.push(
+            line.parse::<i32>()
+                .map_err(|_| Error::Other(anyhow::anyhow!("bad token line {line:?}")))?,
+        );
+    }
+    Ok(tokens)
 }
 
 #[cfg(test)]

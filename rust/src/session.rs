@@ -691,7 +691,7 @@ pub(crate) fn generate_tokens(
             }
         }
         for _ in 0..opts.max_new {
-            let next = sample_logits(&logits, opts.temperature, opts.top_k, &mut rng);
+            let next = sample_logits(&logits, opts.temperature, opts.top_k, &mut rng)?;
             tokens.push(next);
             logits = gen_step(provider, &mut st, next, &mut hook).map_err(Error::from)?;
             if let Some(tr) = trace.as_mut() {
@@ -714,22 +714,41 @@ pub(crate) fn generate_tokens(
 /// otherwise temperature-scaled softmax over the `top_k` highest logits
 /// (0 = all), sampled from the deterministic PRNG.  Ties break toward the
 /// lower token id, so runs are reproducible bit-for-bit.
-fn sample_logits(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Pcg32) -> i32 {
+///
+/// Non-finite policy: NaN poisons comparisons (a NaN softmax weight makes
+/// every `u < w` false, which used to fall through to the *last* — lowest
+/// probability — candidate) and ±inf breaks the softmax, so any row with a
+/// non-finite entry degrades to deterministic greedy argmax over its finite
+/// entries; a row with *no* finite entry is a typed
+/// [`Error::NonFiniteLogits`].
+pub(crate) fn sample_logits(
+    logits: &[f32],
+    temperature: f32,
+    top_k: usize,
+    rng: &mut Pcg32,
+) -> Result<i32, Error> {
     debug_assert!(!logits.is_empty());
-    if temperature <= 0.0 {
-        let mut best = 0usize;
+    let n_finite = logits.iter().filter(|v| v.is_finite()).count();
+    if n_finite == 0 {
+        return Err(Error::NonFiniteLogits { vocab: logits.len() });
+    }
+    if temperature <= 0.0 || n_finite < logits.len() {
+        // greedy argmax over the finite entries, ties toward the lower id
+        let mut best: Option<usize> = None;
         for (i, &v) in logits.iter().enumerate() {
-            if v > logits[best] {
-                best = i;
+            let better = match best {
+                None => v.is_finite(),
+                Some(b) => v.is_finite() && v > logits[b],
+            };
+            if better {
+                best = Some(i);
             }
         }
-        return best as i32;
+        return Ok(best.expect("n_finite > 0") as i32);
     }
     // top-k filter: sort candidate ids by (logit desc, id asc) and keep k
     let mut ids: Vec<usize> = (0..logits.len()).collect();
-    ids.sort_by(|&a, &b| {
-        logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
-    });
+    ids.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]).then(a.cmp(&b)));
     if top_k > 0 && top_k < ids.len() {
         ids.truncate(top_k);
     }
@@ -743,11 +762,11 @@ fn sample_logits(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Pcg32
     let mut u = rng.next_f64() * total;
     for (&i, &w) in ids.iter().zip(&weights) {
         if u < w {
-            return i as i32;
+            return Ok(i as i32);
         }
         u -= w;
     }
-    *ids.last().expect("non-empty logits") as i32
+    Ok(*ids.last().expect("non-empty logits") as i32)
 }
 
 #[cfg(test)]
@@ -871,17 +890,41 @@ mod tests {
     fn sample_logits_units() {
         let mut rng = Pcg32::seeded(1);
         let logits = vec![0.0f32, 3.0, 1.0];
-        assert_eq!(sample_logits(&logits, 0.0, 0, &mut rng), 1);
-        assert_eq!(sample_logits(&logits, 0.5, 1, &mut rng), 1);
+        assert_eq!(sample_logits(&logits, 0.0, 0, &mut rng).unwrap(), 1);
+        assert_eq!(sample_logits(&logits, 0.5, 1, &mut rng).unwrap(), 1);
         // greedy ties break toward the lower token id
         let tied = vec![2.0f32, 2.0];
-        assert_eq!(sample_logits(&tied, 0.0, 0, &mut rng), 0);
+        assert_eq!(sample_logits(&tied, 0.0, 0, &mut rng).unwrap(), 0);
         // with a hot temperature every id eventually appears
         let mut seen = [false; 3];
         for _ in 0..200 {
-            seen[sample_logits(&logits, 5.0, 0, &mut rng) as usize] = true;
+            seen[sample_logits(&logits, 5.0, 0, &mut rng).unwrap() as usize] = true;
         }
         assert!(seen.iter().all(|&x| x), "{seen:?}");
+    }
+
+    #[test]
+    fn sample_logits_non_finite_rows_degrade_deterministically() {
+        let mut rng = Pcg32::seeded(1);
+        // regression: a NaN weight used to make every `u < w` comparison
+        // false, silently returning the *last* (lowest-probability)
+        // candidate.  Now any non-finite entry forces deterministic greedy
+        // argmax over the finite entries — the rng is not even consulted.
+        let poisoned = vec![f32::NAN, 1.0f32, 0.5, f32::NAN];
+        for _ in 0..8 {
+            assert_eq!(sample_logits(&poisoned, 1.3, 0, &mut rng).unwrap(), 1);
+        }
+        // ±inf also breaks softmax: same deterministic fallback, and the
+        // infinite entries themselves are excluded
+        let inf = vec![f32::NEG_INFINITY, 2.0f32, f32::INFINITY];
+        assert_eq!(sample_logits(&inf, 0.9, 0, &mut rng).unwrap(), 1);
+        assert_eq!(sample_logits(&inf, 0.0, 0, &mut rng).unwrap(), 1);
+        // a row with no finite entry at all is a typed error, not a token
+        let hopeless = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+        let e = sample_logits(&hopeless, 0.7, 0, &mut rng).unwrap_err();
+        assert!(matches!(e, Error::NonFiniteLogits { vocab: 3 }), "{e:?}");
+        let e = sample_logits(&[f32::NAN], 0.0, 0, &mut rng).unwrap_err();
+        assert!(matches!(e, Error::NonFiniteLogits { vocab: 1 }), "{e:?}");
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Shared HTTP/1.1 server substrate on loopback `TcpListener`.
+//!
+//! This is the framing layer factored out of the hermetic range server
+//! ([`testserver::RangeServer`](crate::util::testserver::RangeServer)) and
+//! promoted so the *production* generation front end
+//! ([`serve_generation`](crate::serve::serve_generation)) runs on the same
+//! wire code the tests exercise: one accept loop on an ephemeral loopback
+//! port, one detached handler thread per connection, keep-alive iteration
+//! driven by the handler's return value.
+//!
+//! The split of responsibilities:
+//!
+//! * this module owns **framing** — reading a request head byte-exactly
+//!   through `\r\n\r\n`, parsing method/path/headers/query, the accept and
+//!   connection loops, and shutdown on drop;
+//! * the caller owns **semantics** — the handler writes the full response
+//!   (status line, headers, body, streamed or not) straight to the
+//!   `TcpStream` and returns whether the connection may serve another
+//!   request.
+//!
+//! No keep-alive header negotiation is attempted: a handler that streams an
+//! unbounded body should send `Connection: close` and return `false`.
+
+use std::io::{self, Read};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One parsed request head: method, full path (including any query string)
+/// and the header lines.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    headers: Vec<(String, String)>,
+}
+
+impl Request {
+    /// Header value by case-insensitive name, whitespace-trimmed.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The path with any `?query` suffix removed.
+    pub fn route(&self) -> &str {
+        match self.path.split_once('?') {
+            Some((route, _)) => route,
+            None => &self.path,
+        }
+    }
+
+    /// The raw query string after `?`, if any.
+    pub fn query(&self) -> Option<&str> {
+        self.path.split_once('?').map(|(_, q)| q)
+    }
+
+    /// Value of one `key=value` query pair (no percent-decoding — our
+    /// clients send plain integers, floats and commas).
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        self.query()?
+            .split('&')
+            .find_map(|kv| kv.split_once('=').filter(|(k, _)| *k == key).map(|(_, v)| v))
+    }
+}
+
+/// Per-request handler: write the complete response to `stream`, return
+/// whether the connection stays open for another request (keep-alive).
+type Handler = dyn Fn(&Request, &mut TcpStream) -> bool + Send + Sync;
+
+struct Shared {
+    handler: Box<Handler>,
+    stop: AtomicBool,
+    /// Idle-socket read timeout: an open connection that sends no request
+    /// head within this window is dropped, which also bounds how long a
+    /// lingering connection can outlive the server.
+    read_timeout: Duration,
+}
+
+/// A loopback HTTP/1.1 server on an ephemeral port.  The accept loop and
+/// every connection handler run on background threads; dropping the server
+/// stops the accept loop, unbinds the port and flags open connections to
+/// finish their current request and exit.
+pub struct HttpServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind an ephemeral loopback port and serve every request through
+    /// `handler`.  `read_timeout` bounds how long an idle keep-alive socket
+    /// may sit between requests.
+    pub fn bind<H>(read_timeout: Duration, handler: H) -> io::Result<HttpServer>
+    where
+        H: Fn(&Request, &mut TcpStream) -> bool + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            handler: Box::new(handler),
+            stop: AtomicBool::new(false),
+            read_timeout,
+        });
+        let accept_shared = shared.clone();
+        let accept = std::thread::spawn(move || {
+            while !accept_shared.stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let conn_shared = accept_shared.clone();
+                        // handlers are detached: they exit when the peer
+                        // closes, the handler declines keep-alive, or the
+                        // idle timeout fires
+                        std::thread::spawn(move || handle_connection(stream, &conn_shared));
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(HttpServer { shared, addr, accept: Some(accept) })
+    }
+
+    /// The bound loopback address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+    }
+}
+
+/// Keep-alive loop: serve requests on one connection until the peer closes
+/// it, the handler declines keep-alive, or the server is stopping.
+fn handle_connection(mut stream: TcpStream, shared: &Shared) {
+    // the listener is nonblocking (stop-flag polling); on Windows accepted
+    // sockets inherit that flag, so reset it before blocking reads
+    stream.set_nonblocking(false).ok();
+    stream.set_read_timeout(Some(shared.read_timeout)).ok();
+    stream.set_nodelay(true).ok();
+    while !shared.stop.load(Ordering::Relaxed) {
+        let head = match read_request_head(&mut stream) {
+            Ok(Some(h)) => h,
+            _ => return, // peer closed, timed out, or garbage
+        };
+        let req = match parse_request(&head) {
+            Some(r) => r,
+            None => return,
+        };
+        if !(shared.handler)(&req, &mut stream) {
+            stream.shutdown(Shutdown::Both).ok();
+            return;
+        }
+    }
+}
+
+/// Read one request head through the final `\r\n\r\n`.  `Ok(None)` on a
+/// clean peer close before any bytes.
+pub fn read_request_head(stream: &mut TcpStream) -> io::Result<Option<Vec<u8>>> {
+    let mut head = Vec::with_capacity(256);
+    let mut b = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        if head.len() > 16 << 10 {
+            return Err(io::Error::other("request head too large"));
+        }
+        match stream.read(&mut b) {
+            // clean close and mid-head truncation both end the connection
+            Ok(0) => return Ok(None),
+            Ok(_) => head.push(b[0]),
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(head))
+}
+
+/// Parse a request head into method, path and headers.  `None` for heads
+/// that are not valid HTTP/1.1 (the connection is then dropped).
+pub fn parse_request(head: &[u8]) -> Option<Request> {
+    let text = std::str::from_utf8(head).ok()?;
+    let mut lines = text.split("\r\n");
+    let mut req = lines.next()?.split_whitespace();
+    let method = req.next()?.to_string();
+    let path = req.next()?.to_string();
+    let mut headers = Vec::new();
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+    Some(Request { method, path, headers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn parses_method_path_headers_and_query() {
+        let head = b"GET /generate?prompt=1,2&seed=9 HTTP/1.1\r\nHost: x\r\nRange: bytes=0-3\r\n\r\n";
+        let req = parse_request(head).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/generate?prompt=1,2&seed=9");
+        assert_eq!(req.route(), "/generate");
+        assert_eq!(req.query(), Some("prompt=1,2&seed=9"));
+        assert_eq!(req.query_param("prompt"), Some("1,2"));
+        assert_eq!(req.query_param("seed"), Some("9"));
+        assert_eq!(req.query_param("missing"), None);
+        assert_eq!(req.header("range"), Some("bytes=0-3"));
+        assert_eq!(req.header("RANGE"), Some("bytes=0-3"));
+        assert_eq!(req.header("nope"), None);
+        assert!(parse_request(b"garbage\r\n\r\n").is_none());
+    }
+
+    #[test]
+    fn routes_without_query_pass_through() {
+        let req = parse_request(b"HEAD /pocket HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.route(), "/pocket");
+        assert_eq!(req.query(), None);
+        assert_eq!(req.query_param("x"), None);
+    }
+
+    #[test]
+    fn serves_keep_alive_requests_until_handler_closes() {
+        let srv = HttpServer::bind(Duration::from_secs(5), |req, stream| {
+            let body = format!("echo {}", req.route());
+            let keep = req.query_param("close").is_none();
+            let conn = if keep { "keep-alive" } else { "close" };
+            let head = format!(
+                "HTTP/1.1 200 OK\r\nConnection: {conn}\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            stream.write_all(head.as_bytes()).is_ok() && keep
+        })
+        .unwrap();
+
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        for i in 0..2 {
+            s.write_all(format!("GET /r{i} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
+            let mut buf = [0u8; 256];
+            let n = s.read(&mut buf).unwrap();
+            let text = String::from_utf8_lossy(&buf[..n]).into_owned();
+            assert!(text.contains(&format!("echo /r{i}")), "{text}");
+        }
+        // the handler declines keep-alive on ?close=1 and the server
+        // shuts the socket down after responding
+        s.write_all(b"GET /last?close=1 HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut rest = Vec::new();
+        s.read_to_end(&mut rest).unwrap();
+        let text = String::from_utf8_lossy(&rest).into_owned();
+        assert!(text.contains("echo /last"), "{text}");
+
+        // dropping the server joins the accept loop and unbinds the port
+        // (another test may immediately reuse it, so no connect assertion)
+        drop(srv);
+    }
+}

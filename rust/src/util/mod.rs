@@ -7,6 +7,7 @@ pub mod bitpack;
 pub mod cache;
 pub mod cli;
 pub mod f16;
+pub mod httpserver;
 pub mod json;
 pub mod prng;
 pub mod quickcheck;

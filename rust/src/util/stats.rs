@@ -104,18 +104,30 @@ impl Histogram {
 }
 
 /// Exact percentile by sorting a copy (fine at our sample sizes).
+///
+/// NaN policy: NaN samples carry no ordering information and are dropped
+/// before ranking; an empty input (or one that is all NaN) returns NaN
+/// rather than panicking, so a live latency report can never take down the
+/// server producing it.  `p` outside `[0, 100]` is still a programmer
+/// error and asserts.
 pub fn percentile(xs: &[f32], p: f64) -> f32 {
-    assert!(!xs.is_empty() && (0.0..=100.0).contains(&p));
-    let mut s: Vec<f32> = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!((0.0..=100.0).contains(&p));
+    let mut s: Vec<f32> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if s.is_empty() {
+        return f32::NAN;
+    }
+    s.sort_by(f32::total_cmp);
     let rank = (p / 100.0 * (s.len() - 1) as f64).round() as usize;
     s[rank]
 }
 
 /// Sum of the k largest values (the paper's `mse_top100`).
+///
+/// NaN samples are ignored (they are neither large nor small); an empty or
+/// all-NaN input sums to 0.0.
 pub fn top_k_sum(xs: &[f32], k: usize) -> f64 {
-    let mut s: Vec<f32> = xs.to_vec();
-    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut s: Vec<f32> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    s.sort_by(|a, b| b.total_cmp(a));
     s.iter().take(k).map(|&x| x as f64).sum()
 }
 
@@ -163,6 +175,24 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
         assert_eq!(top_k_sum(&xs, 3), 100.0 + 99.0 + 98.0);
+    }
+
+    #[test]
+    fn percentile_and_topk_survive_nan_and_empty_input() {
+        // NaN samples are dropped before ranking, never compared
+        let xs = [3.0f32, f32::NAN, 1.0, 2.0, f32::NAN];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        assert_eq!(top_k_sum(&xs, 2), 5.0);
+        // k larger than the finite sample count just sums what exists
+        assert_eq!(top_k_sum(&xs, 10), 6.0);
+        // empty and all-NaN inputs degrade to NaN / 0.0 instead of panicking
+        assert!(percentile(&[], 50.0).is_nan());
+        assert!(percentile(&[f32::NAN, f32::NAN], 50.0).is_nan());
+        assert_eq!(top_k_sum(&[], 3), 0.0);
+        assert_eq!(top_k_sum(&[f32::NAN], 3), 0.0);
+        // infinities are ordered values and still participate
+        assert_eq!(percentile(&[f32::NEG_INFINITY, 0.0, f32::INFINITY], 100.0), f32::INFINITY);
     }
 
     #[test]

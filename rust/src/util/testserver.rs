@@ -9,9 +9,10 @@
 //! The server serves one `&[u8]` body (a pocket container in the tests) and
 //! supports:
 //!
-//! * `GET` with `Range: bytes=a-b` → `206 Partial Content` with a
-//!   `Content-Range`, `GET` without a range → `200` with the whole body,
-//!   `HEAD` → headers only, out-of-range or malformed ranges → `416`;
+//! * `GET` with `Range: bytes=a-b` (or an open-ended `bytes=a-` / RFC 7233
+//!   suffix `bytes=-n`) → `206 Partial Content` with a `Content-Range`,
+//!   `GET` without a range → `200` with the whole body, `HEAD` → headers
+//!   only, out-of-range or malformed ranges → `416`;
 //! * **per-request logging** ([`RequestLog`]): method, path, parsed range,
 //!   response status and any fault applied — tests assert on exactly what
 //!   the client put on the wire;
@@ -24,14 +25,20 @@
 //! Connections are keep-alive: one handler thread per connection loops over
 //! requests until the peer (or a fault) closes it.  Dropping the server
 //! stops the accept loop and unbinds the port.
+//!
+//! The accept loop, connection loop and request-head framing live in the
+//! shared [`util::httpserver`](crate::util::httpserver) module (promoted
+//! from here so the production generation server runs on the same wire
+//! code); this module keeps only range semantics and fault injection.
 
 use std::collections::VecDeque;
-use std::io::{self, Read, Write};
-use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::io::{self, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::Duration;
+
+use crate::util::httpserver::{HttpServer, Request};
 
 /// One scripted server-side failure, consumed by exactly one request.
 #[derive(Clone, Copy, Debug)]
@@ -78,7 +85,6 @@ struct Shared {
     body: Arc<[u8]>,
     faults: Mutex<VecDeque<Fault>>,
     log: Mutex<Vec<RequestLog>>,
-    stop: AtomicBool,
     /// Reject every `HEAD` with `405 Method Not Allowed` — models mirrors
     /// that only implement `GET`, so clients must length-probe with a
     /// `bytes=0-0` range request instead.
@@ -88,52 +94,36 @@ struct Shared {
 /// In-process loopback HTTP/1.1 range server.  See the module docs.
 pub struct RangeServer {
     shared: Arc<Shared>,
-    addr: SocketAddr,
-    accept: Option<JoinHandle<()>>,
+    server: HttpServer,
 }
 
 impl RangeServer {
     /// Serve `body` on an ephemeral loopback port.  The listener and every
     /// handler run on background threads; drop the server to stop.
     pub fn serve(body: impl Into<Arc<[u8]>>) -> io::Result<RangeServer> {
-        let listener = TcpListener::bind("127.0.0.1:0")?;
-        let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let shared = Arc::new(Shared {
             body: body.into(),
             faults: Mutex::new(VecDeque::new()),
             log: Mutex::new(Vec::new()),
-            stop: AtomicBool::new(false),
             head_405: AtomicBool::new(false),
         });
-        let accept_shared = shared.clone();
-        let accept = std::thread::spawn(move || {
-            while !accept_shared.stop.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let conn_shared = accept_shared.clone();
-                        // handlers are detached: they exit when the peer (or
-                        // a fault) closes the connection
-                        std::thread::spawn(move || handle_connection(stream, &conn_shared));
-                    }
-                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(2));
-                    }
-                    Err(_) => break,
-                }
-            }
-        });
-        Ok(RangeServer { shared, addr, accept: Some(accept) })
+        let conn_shared = shared.clone();
+        // a long idle timeout: pocket clients hold keep-alive connections
+        // across decode gaps and must not be disconnected between fetches
+        let server = HttpServer::bind(Duration::from_secs(30), move |req, stream| {
+            serve_range_request(req, stream, &conn_shared)
+        })?;
+        Ok(RangeServer { shared, server })
     }
 
     /// The bound loopback address.
     pub fn addr(&self) -> SocketAddr {
-        self.addr
+        self.server.addr()
     }
 
     /// URL of the served container (`http://127.0.0.1:{port}/pocket`).
     pub fn url(&self) -> String {
-        format!("http://127.0.0.1:{}/pocket", self.addr.port())
+        format!("http://127.0.0.1:{}/pocket", self.addr().port())
     }
 
     /// Reject every `HEAD` from now on with `405 Method Not Allowed` (a
@@ -170,44 +160,14 @@ impl RangeServer {
     }
 }
 
-impl Drop for RangeServer {
-    fn drop(&mut self) {
-        self.shared.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.accept.take() {
-            h.join().ok();
-        }
-    }
-}
-
-/// Keep-alive loop: serve requests on one connection until the peer closes
-/// it, a fault kills it, or the server is stopping.
-fn handle_connection(mut stream: TcpStream, shared: &Shared) {
-    // the listener is nonblocking (stop-flag polling); on Windows accepted
-    // sockets inherit that flag, so reset it before blocking reads
-    stream.set_nonblocking(false).ok();
-    // an idle keep-alive socket must not pin the handler forever
-    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
-    stream.set_nodelay(true).ok();
-    while !shared.stop.load(Ordering::Relaxed) {
-        let head = match read_request_head(&mut stream) {
-            Ok(Some(h)) => h,
-            _ => return, // peer closed, timed out, or garbage
-        };
-        let (method, path, range_header) = match parse_request(&head) {
-            Some(r) => r,
-            None => return,
-        };
-        // a disabled-HEAD rejection is not a scripted fault: it must not
-        // consume a queued fault meant for the range GETs that follow
-        let head_rejected = method == "HEAD" && shared.head_405.load(Ordering::Relaxed);
-        let fault =
-            if head_rejected { None } else { shared.faults.lock().unwrap().pop_front() };
-        let keep = respond(&mut stream, shared, &method, &path, range_header.as_deref(), fault);
-        if !keep {
-            stream.shutdown(Shutdown::Both).ok();
-            return;
-        }
-    }
+/// Answer one framed request: consume a scripted fault (unless this is a
+/// rejected `HEAD`) and respond with range semantics.
+fn serve_range_request(req: &Request, stream: &mut TcpStream, shared: &Shared) -> bool {
+    // a disabled-HEAD rejection is not a scripted fault: it must not
+    // consume a queued fault meant for the range GETs that follow
+    let head_rejected = req.method == "HEAD" && shared.head_405.load(Ordering::Relaxed);
+    let fault = if head_rejected { None } else { shared.faults.lock().unwrap().pop_front() };
+    respond(stream, shared, &req.method, &req.path, req.header("range"), fault)
 }
 
 /// Answer one request (applying `fault` if any); returns whether the
@@ -313,48 +273,23 @@ fn status_text(status: u16) -> &'static str {
     }
 }
 
-/// Read one request head through the final `\r\n\r\n`.  `Ok(None)` on a
-/// clean peer close before any bytes.
-fn read_request_head(stream: &mut TcpStream) -> io::Result<Option<Vec<u8>>> {
-    let mut head = Vec::with_capacity(256);
-    let mut b = [0u8; 1];
-    while !head.ends_with(b"\r\n\r\n") {
-        if head.len() > 16 << 10 {
-            return Err(io::Error::other("request head too large"));
-        }
-        match stream.read(&mut b) {
-            // clean close and mid-head truncation both end the connection
-            Ok(0) => return Ok(None),
-            Ok(_) => head.push(b[0]),
-            Err(e) => return Err(e),
-        }
-    }
-    Ok(Some(head))
-}
-
-/// Parse `(method, path, range-header-value)` out of a request head.
-fn parse_request(head: &[u8]) -> Option<(String, String, Option<String>)> {
-    let text = std::str::from_utf8(head).ok()?;
-    let mut lines = text.split("\r\n");
-    let mut req = lines.next()?.split_whitespace();
-    let method = req.next()?.to_string();
-    let path = req.next()?.to_string();
-    let mut range = None;
-    for line in lines {
-        if let Some((k, v)) = line.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("range") {
-                range = Some(v.trim().to_string());
-            }
-        }
-    }
-    Some((method, path, range))
-}
-
-/// Resolve a `bytes=a-b` / `bytes=a-` header against `total` body bytes to
-/// `(offset, len)`.  `None` for malformed or unsatisfiable ranges (→ 416).
+/// Resolve a `bytes=a-b` / `bytes=a-` / `bytes=-n` header against `total`
+/// body bytes to `(offset, len)`.  `None` for malformed or unsatisfiable
+/// ranges (→ 416).
 fn parse_range(header: &str, total: u64) -> Option<(u64, u64)> {
     let spec = header.strip_prefix("bytes=")?;
     let (a, b) = spec.split_once('-')?;
+    if a.trim().is_empty() {
+        // RFC 7233 suffix range `bytes=-n`: the final n bytes, clamped to
+        // the body (an over-long suffix means "the whole body").  A zero
+        // or missing suffix length is unsatisfiable.
+        let n: u64 = b.trim().parse().ok()?;
+        if n == 0 || total == 0 {
+            return None;
+        }
+        let len = n.min(total);
+        return Some((total - len, len));
+    }
     let start: u64 = a.trim().parse().ok()?;
     if start >= total {
         return None;
@@ -372,6 +307,8 @@ fn parse_range(header: &str, total: u64) -> Option<(u64, u64)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::Read;
+    use std::net::Shutdown;
 
     fn raw_request(addr: SocketAddr, req: &str) -> String {
         let mut s = TcpStream::connect(addr).unwrap();
@@ -392,6 +329,38 @@ mod tests {
         assert_eq!(parse_range("bytes=9-3", 100), None);
         assert_eq!(parse_range("chunks=0-9", 100), None);
         assert_eq!(parse_range("bytes=x-9", 100), None);
+    }
+
+    #[test]
+    fn suffix_ranges_resolve_clamped_to_the_body() {
+        // RFC 7233 `bytes=-n` means "the final n bytes"
+        assert_eq!(parse_range("bytes=-10", 100), Some((90, 10)));
+        assert_eq!(parse_range("bytes=-100", 100), Some((0, 100)), "exact-length suffix");
+        assert_eq!(parse_range("bytes=-1000", 100), Some((0, 100)), "over-long suffix clamps");
+        assert_eq!(parse_range("bytes=-1", 100), Some((99, 1)));
+        assert_eq!(parse_range("bytes=-0", 100), None, "zero-length suffix is unsatisfiable");
+        assert_eq!(parse_range("bytes=-", 100), None, "missing suffix length is malformed");
+        assert_eq!(parse_range("bytes=-x", 100), None);
+        assert_eq!(parse_range("bytes=-5", 0), None, "empty body has no suffix");
+    }
+
+    #[test]
+    fn suffix_range_requests_get_206_on_the_wire() {
+        // ASCII body: raw_request goes through from_utf8_lossy
+        let body: Vec<u8> = (0u8..200).map(|i| b'a' + i % 26).collect();
+        let srv = RangeServer::serve(body.clone()).unwrap();
+        let r = raw_request(
+            srv.addr(),
+            "GET /pocket HTTP/1.1\r\nHost: x\r\nRange: bytes=-16\r\n\r\n",
+        );
+        assert!(r.starts_with("HTTP/1.1 206"), "{r}");
+        assert!(r.contains("Content-Range: bytes 184-199/200"), "{r}");
+        assert!(r.contains("Content-Length: 16"), "{r}");
+        let body_start = r.find("\r\n\r\n").unwrap() + 4;
+        assert_eq!(&r.as_bytes()[body_start..], &body[184..200], "suffix body is the final 16 bytes");
+
+        let log = srv.requests();
+        assert_eq!((log[0].status, log[0].range), (206, Some((184, 16))));
     }
 
     #[test]

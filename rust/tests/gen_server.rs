@@ -1,0 +1,245 @@
+//! Integration tests for the persistent generation server
+//! (`serve_generation`) — the continuous-batching engine plus its loopback
+//! HTTP front end:
+//!
+//! * **concurrent determinism**: streams served under contention, with
+//!   requests joining and leaving the batch mid-flight, are bit-identical
+//!   to sequential B=1 runs with the same seed/params;
+//! * **backpressure**: a full per-request stream buffer parks only its own
+//!   lane, and two lanes capped below their request length must overlap
+//!   (`peak_batch == 2`);
+//! * **client drops**: a vanished HTTP client retires its lane instead of
+//!   wedging the engine;
+//! * **rejection semantics**: bad prompts get a real `400`, unknown routes
+//!   a `404`, and `max_new=0` an empty-but-successful stream.
+//!
+//! Everything runs hermetically on the pure-Rust reference backend.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+
+use pocketllm::model::WeightStore;
+use pocketllm::serve::{http_generate, serve_generation, GenEngineOpts, GenParams};
+use pocketllm::session::Session;
+use pocketllm::util::prng::Pcg32;
+use pocketllm::InMemoryProvider;
+
+/// Send one raw HTTP request and return the whole response as text.
+fn raw_http(addr: SocketAddr, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).unwrap();
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+#[test]
+fn concurrent_http_streams_are_bit_identical_to_sequential() {
+    let session = Session::reference();
+    let cfg = session.manifest().lm_cfg("tiny").unwrap().clone();
+    let ws = WeightStore::init(&cfg, &mut Pcg32::seeded(33));
+    let provider = InMemoryProvider::new(&ws);
+
+    // the mix: greedy and sampled requests, one private seed each
+    let specs: Vec<(Vec<i32>, GenParams)> = (0..6)
+        .map(|i| {
+            let prompt = vec![(i * 7 + 1) as i32, (i * 3 + 2) as i32, 5];
+            let (temperature, top_k) = match i % 3 {
+                0 => (0.0, 0),
+                1 => (0.9, 4),
+                _ => (1.2, 0),
+            };
+            (prompt, GenParams { max_new: 5, temperature, top_k, seed: 40 + i as u64 })
+        })
+        .collect();
+
+    // sequential B=1 references through the library path
+    let reference: Vec<Vec<i32>> = specs
+        .iter()
+        .map(|(p, gp)| {
+            session
+                .generate(&provider)
+                .prompt(p.clone())
+                .max_new(gp.max_new)
+                .temperature(gp.temperature)
+                .top_k(gp.top_k)
+                .seed(gp.seed)
+                .run()
+                .unwrap()
+                .continuation()
+                .to_vec()
+        })
+        .collect();
+
+    // replay concurrently: three client threads against a batch-4 engine,
+    // so batch composition shifts as requests join and finish
+    let opts = GenEngineOpts { max_batch: 4, stream_capacity: 8 };
+    let (got, stats) = serve_generation(&provider, opts, |h| {
+        let addr = h.addr();
+        let results: Mutex<Vec<Vec<i32>>> = Mutex::new(vec![Vec::new(); specs.len()]);
+        std::thread::scope(|scope| {
+            for w in 0..3 {
+                let specs = &specs;
+                let results = &results;
+                scope.spawn(move || {
+                    let mut i = w;
+                    while i < specs.len() {
+                        let (p, gp) = &specs[i];
+                        let toks = http_generate(addr, p, gp).unwrap();
+                        results.lock().unwrap()[i] = toks;
+                        i += 3;
+                    }
+                });
+            }
+        });
+        results.into_inner().unwrap()
+    })
+    .unwrap();
+
+    assert_eq!(got, reference, "concurrent streams diverged from sequential B=1");
+    assert_eq!(stats.requests, 6);
+    assert_eq!(stats.completed, 6);
+    assert_eq!((stats.rejected, stats.dropped, stats.failed), (0, 0, 0));
+    // each request is exactly prompt(3) + max_new(5) - 1 = 7 engine steps,
+    // whatever the batching; batching can only shrink the step count
+    assert_eq!(stats.lane_steps, 6 * 7);
+    assert!(stats.steps <= stats.lane_steps, "{stats:?}");
+    assert!(stats.peak_batch >= 1 && stats.peak_batch <= 4, "{stats:?}");
+}
+
+#[test]
+fn submitted_lanes_overlap_and_respect_backpressure() {
+    let session = Session::reference();
+    let cfg = session.manifest().lm_cfg("tiny").unwrap().clone();
+    let ws = WeightStore::init(&cfg, &mut Pcg32::seeded(34));
+    let provider = InMemoryProvider::new(&ws);
+
+    let params = |seed: u64| GenParams { max_new: 6, temperature: 0.7, top_k: 3, seed };
+    let prompts = [vec![1i32, 2], vec![9i32, 8, 7]];
+    let reference: Vec<Vec<i32>> = prompts
+        .iter()
+        .zip([50u64, 51])
+        .map(|(p, seed)| {
+            let gp = params(seed);
+            session
+                .generate(&provider)
+                .prompt(p.clone())
+                .max_new(gp.max_new)
+                .temperature(gp.temperature)
+                .top_k(gp.top_k)
+                .seed(gp.seed)
+                .run()
+                .unwrap()
+                .continuation()
+                .to_vec()
+        })
+        .collect();
+
+    // stream_capacity 2 < max_new 6: neither lane can finish until its
+    // receiver drains, and both are submitted before either is read — so
+    // the two lanes MUST coexist in the batch, deterministically
+    let opts = GenEngineOpts { max_batch: 4, stream_capacity: 2 };
+    let ((a, b), stats) = serve_generation(&provider, opts, |h| {
+        let ra = h.submit(prompts[0].clone(), params(50));
+        let rb = h.submit(prompts[1].clone(), params(51));
+        let drain = |rx: std::sync::mpsc::Receiver<Result<i32, pocketllm::Error>>| {
+            rx.iter().map(|r| r.unwrap()).collect::<Vec<i32>>()
+        };
+        (drain(ra), drain(rb))
+    })
+    .unwrap();
+
+    assert_eq!(a, reference[0], "lane A diverged under backpressure");
+    assert_eq!(b, reference[1], "lane B diverged under backpressure");
+    assert_eq!(stats.peak_batch, 2, "lanes never overlapped: {stats:?}");
+    assert_eq!(stats.completed, 2);
+    assert_eq!((stats.rejected, stats.dropped, stats.failed), (0, 0, 0));
+}
+
+#[test]
+fn a_vanished_client_retires_its_lane() {
+    let session = Session::reference();
+    let cfg = session.manifest().lm_cfg("tiny").unwrap().clone();
+    let ws = WeightStore::init(&cfg, &mut Pcg32::seeded(35));
+    let provider = InMemoryProvider::new(&ws);
+
+    // 80 tokens against a 4-token stream buffer: the request cannot finish
+    // without a live reader, so a dropped client must retire the lane
+    let opts = GenEngineOpts { max_batch: 2, stream_capacity: 4 };
+    let ((), stats) = serve_generation(&provider, opts, |h| {
+        let mut s = TcpStream::connect(h.addr()).unwrap();
+        s.write_all(
+            b"GET /generate?prompt=1,2&max_new=80&seed=3 HTTP/1.1\r\n\
+              Host: x\r\nConnection: close\r\n\r\n",
+        )
+        .unwrap();
+        // wait for proof the stream started, then vanish mid-stream
+        let mut first = [0u8; 16];
+        let n = s.read(&mut first).unwrap();
+        assert!(n > 0, "no response bytes before the drop");
+        drop(s);
+        // serve_generation's teardown joins the engine, so the stats below
+        // are final: the drop must be detected, not waited out
+    })
+    .unwrap();
+
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.dropped, 1, "{stats:?}");
+    assert_eq!(stats.completed, 0);
+    assert!(
+        (stats.lane_steps as usize) < 2 + 80,
+        "engine generated the full stream for a dead client: {stats:?}"
+    );
+}
+
+#[test]
+fn bad_requests_get_400_and_zero_max_new_an_empty_200() {
+    let session = Session::reference();
+    let cfg = session.manifest().lm_cfg("tiny").unwrap().clone();
+    let ws = WeightStore::init(&cfg, &mut Pcg32::seeded(36));
+    let provider = InMemoryProvider::new(&ws);
+
+    let ((), stats) = serve_generation(&provider, GenEngineOpts::default(), |h| {
+        let addr = h.addr();
+        // admission rejects surface as HTTP 400 with the typed message
+        let e = http_generate(addr, &[], &GenParams::default()).unwrap_err();
+        assert!(e.to_string().contains("400"), "{e}");
+        let e = http_generate(
+            addr,
+            &[1, 2],
+            &GenParams { max_new: 10_000, ..GenParams::default() },
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("400"), "{e}");
+        let e = http_generate(addr, &[-5], &GenParams::default()).unwrap_err();
+        assert!(e.to_string().contains("400"), "{e}");
+
+        // malformed queries are refused before they reach the engine
+        let resp = raw_http(
+            addr,
+            "GET /generate?prompt=abc HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        let resp =
+            raw_http(addr, "GET /nope HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+
+        // zero tokens requested: a successful, empty stream
+        let got = http_generate(
+            addr,
+            &[3, 1],
+            &GenParams { max_new: 0, ..GenParams::default() },
+        )
+        .unwrap();
+        assert!(got.is_empty(), "{got:?}");
+    })
+    .unwrap();
+
+    // three engine-level rejects, one empty completion; the malformed
+    // query and the 404 never reached the engine
+    assert_eq!(stats.rejected, 3, "{stats:?}");
+    assert_eq!(stats.completed, 1, "{stats:?}");
+    assert_eq!(stats.requests, 1, "{stats:?}");
+    assert_eq!((stats.dropped, stats.failed), (0, 0));
+}

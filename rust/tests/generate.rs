@@ -20,7 +20,7 @@ use std::sync::Arc;
 use pocketllm::eval;
 use pocketllm::model::WeightStore;
 use pocketllm::packfmt::PocketReader;
-use pocketllm::runtime::reference::lm::{forward_logits, gen_step, GenState};
+use pocketllm::runtime::reference::lm::{forward_logits, gen_step, gen_step_batch, GenState};
 use pocketllm::serve::ServeRequest;
 use pocketllm::session::Session;
 use pocketllm::util::prng::Pcg32;
@@ -155,6 +155,62 @@ fn tensor_chunk_is_bit_identical_to_whole_group_decode() {
     assert!(matches!(e, pocketllm::Error::ShapeMismatch { .. }), "{e:?}");
     let e = reader.decode_group_rows(rt, "nope", 0, 64).unwrap_err();
     assert!(matches!(e, pocketllm::Error::UnknownGroup { .. }), "{e:?}");
+}
+
+#[test]
+fn batched_gen_steps_are_bit_identical_to_single_lane() {
+    let session = Session::reference();
+    let cfg = session.manifest().lm_cfg("tiny").unwrap().clone();
+    let ws = WeightStore::init(&cfg, &mut Pcg32::seeded(17));
+    let provider = InMemoryProvider::new(&ws);
+
+    // solo references: each stream advanced alone through gen_step
+    let solo = |tokens: &[i32]| -> Vec<Vec<f32>> {
+        let mut st = GenState::new(&cfg);
+        tokens.iter().map(|&t| gen_step(&provider, &mut st, t, |_| {}).unwrap()).collect()
+    };
+    let t0 = [3i32, 1, 4, 1, 5];
+    let t1 = [9i32, 2, 6];
+    let s0 = solo(&t0);
+    let s1 = solo(&t1);
+
+    // batched: lane 0 runs alone for two steps, then lane 1 joins the
+    // half-full batch mid-flight at position 0 while lane 0 is at 2
+    let mut st0 = GenState::new(&cfg);
+    let mut st1 = GenState::new(&cfg);
+    let mut got0 = Vec::new();
+    let mut got1 = Vec::new();
+    for &t in &t0[..2] {
+        let rows = gen_step_batch(&provider, &mut [&mut st0], &[t], |_| {}).unwrap();
+        got0.extend(rows);
+    }
+    let mut hooked = Vec::new();
+    for i in 0..3 {
+        let rows = gen_step_batch(
+            &provider,
+            &mut [&mut st0, &mut st1],
+            &[t0[2 + i], t1[i]],
+            |b| hooked.push(b),
+        )
+        .unwrap();
+        let mut it = rows.into_iter();
+        got0.push(it.next().unwrap());
+        got1.push(it.next().unwrap());
+    }
+    assert_eq!(got0, s0, "lane 0 diverged from its solo stream");
+    assert_eq!(got1, s1, "lane 1 diverged from its solo stream");
+    assert_eq!(st0.pos(), t0.len());
+    assert_eq!(st1.pos(), t1.len());
+    // one hook per block per batched call, not per lane
+    assert_eq!(hooked.len(), 3 * cfg.n_layers);
+
+    // a bad lane fails the whole call before any lane advances
+    let pos_before = (st0.pos(), st1.pos());
+    let e = gen_step_batch(&provider, &mut [&mut st0, &mut st1], &[0, -1], |_| {}).unwrap_err();
+    assert!(format!("{e:#}").contains("lane 1"), "{e:#}");
+    assert_eq!((st0.pos(), st1.pos()), pos_before, "failed batch must not advance");
+    let e = gen_step_batch(&provider, &mut [&mut st0], &[1, 2], |_| {}).unwrap_err();
+    assert!(format!("{e:#}").contains("mismatch"), "{e:#}");
 }
 
 #[test]
