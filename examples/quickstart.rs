@@ -5,9 +5,10 @@
 //!
 //! Walks the whole public API surface in ~1 minute, entirely through the
 //! `Session` / `PocketReader` front door: session -> LM training -> group
-//! compression -> POCKET02 packing -> lazy per-group device decode.
+//! compression -> POCKET02 packing -> lazy per-group device decode ->
+//! entropy-coded POCKET03 round trip (the CLI's `--codec rans`).
 
-use pocketllm::packfmt::PocketReader;
+use pocketllm::packfmt::{CodecOpts, PocketReader};
 use pocketllm::session::Session;
 
 fn main() -> Result<(), pocketllm::Error> {
@@ -78,7 +79,26 @@ fn main() -> Result<(), pocketllm::Error> {
         stats.cache.resident_bytes / 1024
     );
 
-    // 7. pocket-native inference: generate text straight off the pocket.
+    // 7. the same pocket entropy-coded (what the CLI's `--codec rans`
+    //    emits): every section is rANS-coded per chunk-grid block into a
+    //    POCKET03 container, and the reader inflates it transparently —
+    //    fewer bytes to download, bit-identical tensors out
+    let coded = res.pocket.to_bytes_with(&CodecOpts::rans());
+    println!(
+        "rans pocket: {} bytes ({:.1}% of the raw container)",
+        coded.len(),
+        100.0 * coded.len() as f64 / res.pocket.file_bytes() as f64
+    );
+    let coded_reader = PocketReader::from_bytes(coded)?.with_cache_budget(8 << 20);
+    let v_coded = coded_reader.decode_group(session.runtime(), "v")?;
+    assert_eq!(v_coded.data, v_rows.data, "coded container must decode bit-identically");
+    let cs = coded_reader.stats();
+    println!(
+        "coded read path: {} wire bytes inflated to {} raw section bytes, decode identical",
+        cs.coded_bytes_read, cs.coded_raw_bytes
+    );
+
+    // 8. pocket-native inference: generate text straight off the pocket.
     //    Weights resolve one transformer block at a time through the shared
     //    decode cache, so memory follows the budget — not the model size.
     let provider = session.pocket_provider(std::sync::Arc::new(reader))?;
@@ -92,7 +112,7 @@ fn main() -> Result<(), pocketllm::Error> {
         st.cache.peak_resident_bytes / 1024
     );
 
-    // 8. the persistent generation server: a continuous-batching engine over
+    // 9. the persistent generation server: a continuous-batching engine over
     //    the same provider, fronted by a loopback HTTP endpoint.  Two
     //    concurrent clients share every per-block weight resolution, and
     //    each stream is bit-identical to a solo run with the same seed.

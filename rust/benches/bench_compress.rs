@@ -11,7 +11,7 @@
 
 use std::time::Instant;
 
-use pocketllm::packfmt::PocketReader;
+use pocketllm::packfmt::{CodecOpts, PocketReader};
 use pocketllm::session::Session;
 use pocketllm::util::benchlib::bench;
 use pocketllm::util::json::{num, obj, s};
@@ -37,6 +37,9 @@ fn main() -> anyhow::Result<()> {
     let path = std::env::temp_dir().join("pocketllm_bench_compress.pocket");
     res.pocket.save(&path)?;
     let pocket_bytes = res.pocket.file_bytes();
+    // the entropy layer rides on top of quantization: same container, rANS
+    // section coding — track how much of the raw POCKET02 bytes it saves
+    let rans_bytes = res.pocket.to_bytes_with(&CodecOpts::rans()).len();
 
     // --- lazy decode timings ----------------------------------------------
     // cold: fresh reader each iteration (header + one section + backend run)
@@ -59,9 +62,11 @@ fn main() -> anyhow::Result<()> {
     println!("{warm}");
     println!("{full}");
     println!(
-        "compress 2 groups: {compress_secs:.2}s; pocket {pocket_bytes} bytes; \
-         avg {:.2} bits ({:.1}x)",
-        res.report.avg_bits, res.report.ratio_fp32
+        "compress 2 groups: {compress_secs:.2}s; pocket {pocket_bytes} bytes \
+         (rans {rans_bytes}, {:.1}% of raw); avg {:.2} bits ({:.1}x)",
+        100.0 * rans_bytes as f64 / pocket_bytes.max(1) as f64,
+        res.report.avg_bits,
+        res.report.ratio_fp32
     );
 
     let out = format!("{}/../BENCH_compress.json", env!("CARGO_MANIFEST_DIR"));
@@ -72,6 +77,8 @@ fn main() -> anyhow::Result<()> {
         ("warm_decode_group_us", num(warm.mean.as_secs_f64() * 1e6)),
         ("reconstruct_all_ms", num(full.mean.as_secs_f64() * 1e3)),
         ("pocket_bytes", num(pocket_bytes as f64)),
+        ("pocket_rans_bytes", num(rans_bytes as f64)),
+        ("rans_over_raw", num(rans_bytes as f64 / pocket_bytes.max(1) as f64)),
         ("avg_bits", num(res.report.avg_bits)),
         ("ratio_fp32", num(res.report.ratio_fp32)),
     ]);

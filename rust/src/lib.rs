@@ -35,7 +35,10 @@
 //!   ```
 //!
 //! * [`PocketReader`] — the serving side.  Opens the seekable **POCKET02**
-//!   container (legacy POCKET01 reads transparently) through a
+//!   container — or its entropy-coded **POCKET03** revision
+//!   ([`packfmt::entropy`], written via [`CodecOpts`]), whose sections
+//!   travel the wire rANS-coded and decode losslessly behind the same
+//!   checksum path; legacy POCKET01 reads transparently — through a
 //!   [`SectionSource`] (mmap / file / shared memory / HTTP range streaming
 //!   via [`PocketReader::open_url`], with TOC-guided prefetch coalescing
 //!   and retry-with-backoff), pulls only the header + table of contents,
@@ -113,8 +116,8 @@ pub mod util;
 
 pub use error::Error;
 pub use packfmt::{
-    HttpOptions, HttpSource, PocketReader, PrefetchPlan, ReaderStats, RetryPolicy, SectionSource,
-    SourceStats,
+    CodecOpts, HttpOptions, HttpSource, PocketReader, PrefetchPlan, ReaderStats, RetryPolicy,
+    SectionCoding, SectionSource, SourceStats,
 };
 pub use runtime::weights::{InMemoryProvider, PocketProvider, WeightProvider, WeightView};
 pub use serve::{

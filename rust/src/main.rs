@@ -20,7 +20,7 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 use pocketllm::coordinator::ProgressSink;
-use pocketllm::packfmt::{ChunkedSource, PocketReader};
+use pocketllm::packfmt::{ChunkedSource, CodecOpts, PocketFile, PocketReader, SectionCoding};
 use pocketllm::runtime::weights::WeightProvider;
 use pocketllm::serve::{
     http_generate, serve_generation, GenEngineOpts, GenParams, GenServeStats, ServeRequest,
@@ -75,13 +75,17 @@ fn run() -> Result<()> {
                  commands:\n\
                  \x20 info         show manifest summary and Eq.14 preset ratios\n\
                  \x20 train-lm     train the substrate LM     (--model tiny --steps 300 --out w.bin)\n\
-                 \x20 compress     compress trained weights   (--model tiny --weights w.bin --preset p8x --out m.pocket)\n\
+                 \x20 compress     compress trained weights   (--model tiny --weights w.bin --preset p8x --out m.pocket\n\
+                 \x20              [--codec raw|rans]; rans entropy-codes sections into a\n\
+                 \x20              POCKET03 container, raw pins the POCKET02 byte layout)\n\
                  \x20 reconstruct  pocket -> dense weights    (--pocket m.pocket --out w2.bin)\n\
                  \x20 eval         ppl + zero-shot accuracy   (--model tiny --weights w.bin | --pocket m.pocket)\n\
                  \x20 serve-bench  concurrent serve path      (--pocket m.pocket --threads 4 --requests 200\n\
                  \x20              [--eval-every K] [--chunk BYTES] [--remote] [--json out.json]\n\
-                 \x20              [--check]; no --pocket: a tiny pocket is synthesized;\n\
-                 \x20              --remote adds a loopback HTTP range-streaming phase)\n\
+                 \x20              [--codec raw|rans] [--check]; no --pocket: a tiny pocket is\n\
+                 \x20              synthesized; --remote adds a loopback HTTP range-streaming\n\
+                 \x20              phase; --codec rans serves the entropy-coded container and,\n\
+                 \x20              with --remote, adds a coded-vs-raw bytes-over-wire phase)\n\
                  \x20 generate     KV-cached text generation  (--pocket m.pocket | --url http://h/p |\n\
                  \x20              --model tiny --weights w.bin; --prompt 1,2,3 --max-new 32\n\
                  \x20              [--temperature T] [--top-k K] [--seed N] [--budget BYTES];\n\
@@ -180,15 +184,26 @@ fn cmd_compress(args: &Args) -> Result<()> {
     }
     let res = b.run()?;
     let out = args.str_or("out", "model.pocket");
-    res.pocket.save(Path::new(&out))?;
+    let codec = CodecOpts::from_name(&args.str_or("codec", "raw"))?;
+    let container = res.pocket.to_bytes_with(&codec);
+    std::fs::write(&out, &container)?;
     println!(
         "compressed {model} with {preset}: avg_bits {:.2} (ratio {:.1}x vs fp32), \
          mean mse {:.2e}, file {} bytes -> {out}",
         res.report.avg_bits,
         res.report.ratio_fp32,
         res.report.mean_mse(),
-        res.pocket.file_bytes(),
+        container.len(),
     );
+    if codec.codec != SectionCoding::Raw {
+        let raw_bytes = res.pocket.file_bytes();
+        println!(
+            "entropy coding (rans): {} -> {} container bytes ({:.1}% of raw POCKET02)",
+            raw_bytes,
+            container.len(),
+            100.0 * container.len() as f64 / raw_bytes.max(1) as f64
+        );
+    }
     Ok(())
 }
 
@@ -224,12 +239,20 @@ fn cmd_reconstruct(args: &Args) -> Result<()> {
 /// the `ReaderStats` proof that each group's section was fetched exactly
 /// once across all workers.  `--json PATH` writes the snapshot
 /// (BENCH_serve.json in CI); `--check` makes the expectations hard errors.
+///
+/// `--codec rans` re-encodes the container as entropy-coded POCKET03 and
+/// serves that; combined with `--remote` it adds a coded-vs-raw comparison
+/// (the same cold request mix against a raw and a coded loopback server,
+/// comparing the bytes that actually crossed the wire) and `--check` then
+/// also pins bit-identical decodes plus a strict wire-byte saving.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     let session = session_for(args)?;
     let threads = args.usize_or("threads", 4)?;
     let n_requests = args.usize_or("requests", 200)?;
     let eval_every = args.usize_or("eval-every", 0)?;
     let chunk = args.u64_or("chunk", 0)?;
+    let codec_name = args.str_or("codec", "raw");
+    let codec = CodecOpts::from_name(&codec_name)?;
     eprintln!("[serve-bench] backend: {}", session.backend_name());
 
     let bytes: Vec<u8> = match args.get("pocket") {
@@ -248,7 +271,24 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             res.pocket.to_bytes()
         }
     };
-    let buf: Arc<[u8]> = bytes.into();
+    // --codec raw serves the container bytes exactly as given; --codec rans
+    // normalizes through PocketFile and serves the entropy-coded POCKET03
+    // emission, keeping the raw emission around for the coded-vs-raw phase
+    let (buf, raw_buf): (Arc<[u8]>, Option<Arc<[u8]>>) =
+        if codec.codec == SectionCoding::Raw {
+            (bytes.into(), None)
+        } else {
+            let pf = PocketFile::from_bytes(&bytes)?;
+            let raw = pf.to_bytes();
+            let coded = pf.to_bytes_with(&codec);
+            eprintln!(
+                "[serve-bench] codec rans: container {} -> {} bytes ({:.1}% of raw)",
+                raw.len(),
+                coded.len(),
+                100.0 * coded.len() as f64 / raw.len().max(1) as f64
+            );
+            (coded.into(), Some(raw.into()))
+        };
 
     // request mixes + budget sizing, derived from the container's own TOC
     let probe = PocketReader::from_bytes(buf.clone())?;
@@ -259,12 +299,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let n_requests = n_requests.max(2 * groups.len());
     // size the warm budget from the container so the fetch-once invariant
     // holds even for pockets whose decoded groups exceed the default budget;
-    // dense residue rides the same cache now, so budget for it too
+    // dense residue rides the same cache now, so budget for it too (raw
+    // payload length, not the entropy-coded on-wire length, is what lands
+    // in the cache)
     let warm_budget = {
         let group_bytes: u64 =
             groups.iter().filter_map(|g| probe.decoded_group_bytes(g)).sum();
         let dense_bytes: u64 =
-            probe.dense_names().iter().filter_map(|n| probe.section_length(n)).sum();
+            probe.dense_names().iter().filter_map(|n| probe.section_raw_length(n)).sum();
         (group_bytes + dense_bytes).max(DecodeCache::DEFAULT_BUDGET)
     };
 
@@ -313,6 +355,16 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 
     // optional remote streaming phase: the same container served by an
     // in-process loopback HTTP/1.1 range server, decoded through HttpSource
+    struct CodecCompare {
+        raw_container_bytes: u64,
+        coded_container_bytes: u64,
+        /// Wire bytes for the cold decode mix against the raw container.
+        raw_cold_bytes: u64,
+        /// Wire bytes for the same mix against the entropy-coded container.
+        coded_cold_bytes: u64,
+        /// Every group and dense tensor decodes identically from both.
+        decode_identical: bool,
+    }
     struct RemotePhase {
         cold_rps: f64,
         warm_rps: f64,
@@ -322,6 +374,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         warm_bytes: u64,
         retries: u64,
         ranges_are_windows: bool,
+        codec: Option<CodecCompare>,
     }
     let remote: Option<RemotePhase> = if args.flag("remote") {
         use pocketllm::packfmt::{HttpOptions, HttpSource, PrefetchPlan};
@@ -332,9 +385,11 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         // remote-cold: no prefetch plan, no decode cache — every group
         // request is one per-section HTTP range fetch + backend decode
         let cold_src = HttpSource::connect(&range_server.url())?;
+        let cold_handle = cold_src.clone();
         let cold_reader =
             Arc::new(PocketReader::with_source(cold_src)?.with_cache_budget(0));
         let remote_cold = session.serve(cold_reader).workers(threads).run(&decode_mix)?;
+        let cold_bytes = cold_handle.bytes_fetched();
 
         // remote-warm: TOC-guided prefetch plan + shared decode cache — one
         // coalesced window fetch per window, then cache hits.  The window
@@ -366,6 +421,42 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         let log = warm_handle.range_log();
         let ranges_are_windows =
             log[open_log_len..].iter().all(|r| plan.windows().contains(r));
+
+        // coded-vs-raw: replay the identical cold mix (no plan, budget 0)
+        // against a second loopback server holding the raw POCKET02 bytes,
+        // then compare what each transfer actually cost on the wire and
+        // prove the coded container decodes to the same tensors
+        let codec_cmp: Option<CodecCompare> = if let Some(raw) = &raw_buf {
+            let raw_server = RangeServer::serve(raw.clone())?;
+            let raw_src = HttpSource::connect(&raw_server.url())?;
+            let raw_handle = raw_src.clone();
+            let raw_reader =
+                Arc::new(PocketReader::with_source(raw_src)?.with_cache_budget(0));
+            session.serve(raw_reader).workers(threads).run(&decode_mix)?;
+            let raw_cold_bytes = raw_handle.bytes_fetched();
+
+            let rt = session.runtime();
+            let coded_probe = PocketReader::from_bytes(buf.clone())?;
+            let raw_probe = PocketReader::from_bytes(raw.clone())?;
+            let mut identical = true;
+            for g in &groups {
+                identical &= coded_probe.decode_group(rt, g)?.data
+                    == raw_probe.decode_group(rt, g)?.data;
+            }
+            for n in raw_probe.dense_names() {
+                identical &= coded_probe.dense_tensor(&n)? == raw_probe.dense_tensor(&n)?;
+            }
+            Some(CodecCompare {
+                raw_container_bytes: raw.len() as u64,
+                coded_container_bytes: buf.len() as u64,
+                raw_cold_bytes,
+                coded_cold_bytes: cold_bytes,
+                decode_identical: identical,
+            })
+        } else {
+            None
+        };
+
         Some(RemotePhase {
             cold_rps: remote_cold.rps(),
             warm_rps: remote_warm.rps(),
@@ -375,6 +466,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             warm_bytes: warm_handle.bytes_fetched() - open_bytes,
             retries: warm_handle.retries(),
             ranges_are_windows,
+            codec: codec_cmp,
         })
     } else {
         None
@@ -424,6 +516,20 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 r.warm_ranges, r.plan_windows, r.retries
             ),
         ]);
+        if let Some(c) = &r.codec {
+            t.row(vec![
+                "coded-vs-raw".into(),
+                format!("{n_requests}"),
+                "-".into(),
+                format!(
+                    "cold wire {} KiB coded vs {} KiB raw ({:.1}%), decode {}",
+                    c.coded_cold_bytes / 1024,
+                    c.raw_cold_bytes / 1024,
+                    100.0 * c.coded_cold_bytes as f64 / c.raw_cold_bytes.max(1) as f64,
+                    if c.decode_identical { "identical" } else { "DIVERGED" },
+                ),
+            ]);
+        }
     }
     t.emit(None);
     println!(
@@ -446,6 +552,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             ("groups", num(groups.len() as f64)),
             ("evals", num(n_evals as f64)),
             ("chunk_bytes", num(chunk as f64)),
+            ("codec", s(&codec_name)),
             ("cold_rps", num(cold.rps())),
             ("warm_rps", num(warm.rps())),
             ("warm_over_cold", num(speedup)),
@@ -456,19 +563,37 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             ("cache_resident_bytes", num(st.cache.resident_bytes as f64)),
         ];
         if let Some(r) = &remote {
-            fields.push((
-                "remote",
-                obj(vec![
-                    ("cold_rps", num(r.cold_rps)),
-                    ("warm_rps", num(r.warm_rps)),
-                    ("warm_over_cold", num(r.warm_rps / r.cold_rps.max(1e-12))),
-                    ("plan_windows", num(r.plan_windows as f64)),
-                    ("windows_touched", num(r.windows_touched as f64)),
-                    ("warm_window_fetches", num(r.warm_ranges as f64)),
-                    ("warm_bytes_fetched", num(r.warm_bytes as f64)),
-                    ("retries", num(r.retries as f64)),
-                ]),
-            ));
+            let mut rfields = vec![
+                ("cold_rps", num(r.cold_rps)),
+                ("warm_rps", num(r.warm_rps)),
+                ("warm_over_cold", num(r.warm_rps / r.cold_rps.max(1e-12))),
+                ("plan_windows", num(r.plan_windows as f64)),
+                ("windows_touched", num(r.windows_touched as f64)),
+                ("warm_window_fetches", num(r.warm_ranges as f64)),
+                ("warm_bytes_fetched", num(r.warm_bytes as f64)),
+                ("retries", num(r.retries as f64)),
+            ];
+            if let Some(c) = &r.codec {
+                rfields.push((
+                    "codec",
+                    obj(vec![
+                        ("name", s("rans")),
+                        ("raw_container_bytes", num(c.raw_container_bytes as f64)),
+                        ("coded_container_bytes", num(c.coded_container_bytes as f64)),
+                        ("raw_cold_bytes_fetched", num(c.raw_cold_bytes as f64)),
+                        ("coded_cold_bytes_fetched", num(c.coded_cold_bytes as f64)),
+                        (
+                            "coded_over_raw_wire",
+                            num(c.coded_cold_bytes as f64 / c.raw_cold_bytes.max(1) as f64),
+                        ),
+                        (
+                            "decode_identical",
+                            num(if c.decode_identical { 1.0 } else { 0.0 }),
+                        ),
+                    ]),
+                ));
+            }
+            fields.push(("remote", obj(rfields)));
         }
         let j = obj(fields);
         pocketllm::util::benchlib::write_report(path, &j);
@@ -509,10 +634,27 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 r.ranges_are_windows,
                 "a warm remote fetch was not a whole coalesced window"
             );
+            if let Some(c) = &r.codec {
+                ensure!(
+                    c.decode_identical,
+                    "entropy-coded container decoded differently from the raw container"
+                );
+                ensure!(
+                    c.coded_cold_bytes < c.raw_cold_bytes,
+                    "coded cold transfer ({} bytes) is not below raw ({} bytes)",
+                    c.coded_cold_bytes,
+                    c.raw_cold_bytes
+                );
+            }
         }
         println!(
-            "[serve-bench] checks passed: warm {speedup:.1}x cold, one fetch per group{}",
-            if remote.is_some() { ", one remote fetch per coalesced window" } else { "" }
+            "[serve-bench] checks passed: warm {speedup:.1}x cold, one fetch per group{}{}",
+            if remote.is_some() { ", one remote fetch per coalesced window" } else { "" },
+            if remote.as_ref().is_some_and(|r| r.codec.is_some()) {
+                ", coded decode identical and strictly cheaper on the wire"
+            } else {
+                ""
+            }
         );
     }
     Ok(())
@@ -661,7 +803,7 @@ fn cmd_gen_bench(args: &Args) -> Result<()> {
         .map(|(_, gi)| (gi.tensors.len() * gi.rows_per_block * gi.width * 4) as u64)
         .sum();
     let dense_bytes: u64 =
-        probe.dense_names().iter().filter_map(|n| probe.section_length(n)).sum();
+        probe.dense_names().iter().filter_map(|n| probe.section_raw_length(n)).sum();
     let bounded_budget = 2 * per_layer + dense_bytes;
     let decoded_groups: u64 = groups.iter().filter_map(|g| probe.decoded_group_bytes(g)).sum();
     let decoded_model = decoded_groups + dense_bytes;
@@ -926,7 +1068,7 @@ fn cmd_load_bench(args: &Args) -> Result<()> {
         .map(|(_, gi)| (gi.tensors.len() * gi.rows_per_block * gi.width * 4) as u64)
         .sum();
     let dense_bytes: u64 =
-        probe.dense_names().iter().filter_map(|n| probe.section_length(n)).sum();
+        probe.dense_names().iter().filter_map(|n| probe.section_raw_length(n)).sum();
     let bounded_budget = 2 * per_layer + dense_bytes;
 
     // the request mix: deterministic prompts, greedy and sampled params

@@ -18,9 +18,17 @@
 //!
 //! # Containers
 //!
-//! Two container revisions share the group-payload encoding above:
+//! Three container revisions share the group-payload encoding above:
 //!
-//! * **POCKET02** (current, written by [`PocketFile::to_bytes`]) — a
+//! * **POCKET03** (written by [`PocketFile::to_bytes_with`] when a
+//!   non-raw codec is selected) — POCKET02 plus an optional lossless
+//!   entropy layer: each TOC entry carries a coding tag and both the
+//!   stored (on-wire) and raw (decoded) payload lengths, and section
+//!   payloads may be rANS-coded per chunk-grid block by the
+//!   [`entropy`] module.  Offsets/lengths in the TOC describe the
+//!   *stored* bytes, so range prefetch plans coalesce over the smaller
+//!   coded spans.
+//! * **POCKET02** (default, written by [`PocketFile::to_bytes`]) — a
 //!   *seekable* container: fixed header, then a table of contents with one
 //!   entry per section (compressed group or dense residue tensor) carrying
 //!   absolute byte offsets, lengths and FNV-1a checksums, then the payload
@@ -42,6 +50,7 @@
 //! All parse failures surface as [`crate::Error::Format`] with the byte
 //! offset where the problem was detected.
 
+pub mod entropy;
 pub mod reader;
 pub mod remote;
 pub mod source;
@@ -63,6 +72,7 @@ use crate::util::f16;
 
 pub(crate) const MAGIC_V1: &[u8; 8] = b"POCKET01";
 pub(crate) const MAGIC_V2: &[u8; 8] = b"POCKET02";
+pub(crate) const MAGIC_V3: &[u8; 8] = b"POCKET03";
 
 /// One compressed layer group.
 #[derive(Clone, Debug)]
@@ -159,7 +169,54 @@ pub enum SectionKind {
     Dense,
 }
 
-/// One POCKET02 table-of-contents entry.
+/// How a section payload is stored on the wire (POCKET03 coding tag).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SectionCoding {
+    /// Stored verbatim — POCKET01/02 semantics.
+    #[default]
+    Raw,
+    /// Entropy-coded per chunk-grid block by [`entropy::encode_section`].
+    Rans,
+}
+
+/// Codec selection for [`PocketFile::to_bytes_with`].  The default is
+/// [`SectionCoding::Raw`], which produces bytes *identical* to
+/// [`PocketFile::to_bytes`] (a POCKET02 container) — the entropy layer is
+/// strictly opt-in.
+#[derive(Clone, Copy, Debug)]
+pub struct CodecOpts {
+    /// Section payload coding.  With [`SectionCoding::Rans`] each section
+    /// is coded independently and falls back to raw storage whenever
+    /// coding would not shrink it, so a coded container is never larger.
+    pub codec: SectionCoding,
+    /// Entropy-coding block size (bytes).  Blocks decode independently so
+    /// the seekable chunk grid survives; clamped to `[1 KiB, 16 MiB]`.
+    pub block_bytes: usize,
+}
+
+impl Default for CodecOpts {
+    fn default() -> Self {
+        CodecOpts { codec: SectionCoding::Raw, block_bytes: entropy::DEFAULT_BLOCK_BYTES }
+    }
+}
+
+impl CodecOpts {
+    /// rANS entropy coding at the default block size.
+    pub fn rans() -> Self {
+        CodecOpts { codec: SectionCoding::Rans, ..Default::default() }
+    }
+
+    /// Parse a CLI-style codec name (`raw` | `rans`).
+    pub fn from_name(name: &str) -> Result<Self, Error> {
+        match name {
+            "raw" => Ok(CodecOpts::default()),
+            "rans" => Ok(CodecOpts::rans()),
+            other => Err(Error::format(format!("unknown codec {other:?} (raw|rans)"), 0)),
+        }
+    }
+}
+
+/// One POCKET02/03 table-of-contents entry.
 #[derive(Clone, Debug)]
 pub struct TocEntry {
     pub kind: SectionKind,
@@ -169,11 +226,19 @@ pub struct TocEntry {
     /// Group rows/width for group sections; 0 for dense sections.
     pub rows: usize,
     pub width: usize,
-    /// Absolute byte offset of the payload from the start of the container.
+    /// Absolute byte offset of the stored payload from the start of the
+    /// container.  For coded sections this addresses the *coded* bytes —
+    /// the spans range prefetch plans coalesce over.
     pub offset: u64,
-    /// Payload length in bytes.
+    /// Stored (on-wire) payload length in bytes.
     pub length: u64,
-    /// FNV-1a 64 checksum of the payload bytes.
+    /// How the payload is stored.  Always [`SectionCoding::Raw`] in
+    /// POCKET01/02 containers.
+    pub coding: SectionCoding,
+    /// Decoded payload length in bytes; equals `length` for raw sections.
+    pub raw_length: u64,
+    /// FNV-1a 64 checksum of the *stored* payload bytes (what travels the
+    /// wire), so transport integrity is verified before entropy decoding.
     pub checksum: u64,
 }
 
@@ -219,9 +284,8 @@ impl PocketFile {
 
     // -- serialization ------------------------------------------------------
 
-    /// Serialize as the current seekable **POCKET02** container.
-    pub fn to_bytes(&self) -> Vec<u8> {
-        // payload sections in TOC order: groups (BTreeMap order) then dense
+    /// Raw payload sections in TOC order: groups (BTreeMap order) then dense.
+    fn collect_payloads(&self) -> Vec<(SectionKind, &str, &str, usize, usize, Vec<u8>)> {
         let mut payloads: Vec<(SectionKind, &str, &str, usize, usize, Vec<u8>)> = Vec::new();
         for (name, g) in &self.groups {
             let mut p = Vec::new();
@@ -242,6 +306,12 @@ impl PocketFile {
             }
             payloads.push((SectionKind::Dense, name.as_str(), "", 0, 0, p));
         }
+        payloads
+    }
+
+    /// Serialize as the current seekable **POCKET02** container.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payloads = self.collect_payloads();
 
         // fixed-size part of a TOC entry: kind(1) + rows/width/offset/length/
         // checksum (5 x u64) + two string length prefixes (2 x u32)
@@ -282,6 +352,78 @@ impl PocketFile {
         out
     }
 
+    /// Serialize under explicit codec options.  With the default (raw)
+    /// codec this returns bytes **identical** to [`PocketFile::to_bytes`]
+    /// — a POCKET02 container.  With [`SectionCoding::Rans`] it writes a
+    /// **POCKET03** container whose sections are entropy-coded per block;
+    /// any section the coder cannot shrink is stored raw (per-section
+    /// fallback), so the result is never larger than the raw payloads
+    /// plus the slightly wider TOC.
+    pub fn to_bytes_with(&self, opts: &CodecOpts) -> Vec<u8> {
+        if opts.codec == SectionCoding::Raw {
+            return self.to_bytes();
+        }
+        let payloads = self.collect_payloads();
+
+        // code each section; keep whichever of coded/raw is smaller
+        let stored: Vec<(SectionCoding, u64, Vec<u8>)> = payloads
+            .iter()
+            .map(|(.., p)| {
+                let coded = entropy::encode_section(p, opts.block_bytes);
+                if coded.len() < p.len() {
+                    (SectionCoding::Rans, p.len() as u64, coded)
+                } else {
+                    (SectionCoding::Raw, p.len() as u64, p.clone())
+                }
+            })
+            .collect();
+
+        // POCKET03 TOC entry: kind(1) + coding(1) + two length-prefixed
+        // strings + rows/width/offset/stored_len/raw_len/checksum (6 x u64)
+        let header_len: usize = 8
+            + 8
+            + 4
+            + self.lm_cfg.len()
+            + 4
+            + payloads
+                .iter()
+                .map(|(_, name, meta, ..)| 1 + 1 + 4 + name.len() + 4 + meta.len() + 6 * 8)
+                .sum::<usize>();
+
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC_V3);
+        out.extend_from_slice(&(header_len as u64).to_le_bytes());
+        write_str(&mut out, &self.lm_cfg);
+        out.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
+        let mut offset = header_len as u64;
+        for ((kind, name, meta, rows, width, _), (coding, raw_len, s)) in
+            payloads.iter().zip(&stored)
+        {
+            out.push(match kind {
+                SectionKind::Group => 0u8,
+                SectionKind::Dense => 1u8,
+            });
+            out.push(match coding {
+                SectionCoding::Raw => 0u8,
+                SectionCoding::Rans => 1u8,
+            });
+            write_str(&mut out, name);
+            write_str(&mut out, meta);
+            out.extend_from_slice(&(*rows as u64).to_le_bytes());
+            out.extend_from_slice(&(*width as u64).to_le_bytes());
+            out.extend_from_slice(&offset.to_le_bytes());
+            out.extend_from_slice(&(s.len() as u64).to_le_bytes());
+            out.extend_from_slice(&raw_len.to_le_bytes());
+            out.extend_from_slice(&fnv1a64(s).to_le_bytes());
+            offset += s.len() as u64;
+        }
+        debug_assert_eq!(out.len(), header_len, "TOC size accounting drifted");
+        for (_, _, s) in &stored {
+            out.extend_from_slice(s);
+        }
+        out
+    }
+
     /// Serialize as the legacy streaming **POCKET01** blob (no TOC).  Kept
     /// for back-compat tests and for tooling that still expects v1.
     pub fn to_bytes_v1(&self) -> Vec<u8> {
@@ -316,7 +458,7 @@ impl PocketFile {
         }
         if &b[..8] == MAGIC_V1.as_slice() {
             Self::from_bytes_v1(b)
-        } else if &b[..8] == MAGIC_V2.as_slice() {
+        } else if &b[..8] == MAGIC_V2.as_slice() || &b[..8] == MAGIC_V3.as_slice() {
             Self::from_bytes_v2(b)
         } else {
             Err(Error::format("bad pocket magic", 0))
@@ -343,11 +485,12 @@ impl PocketFile {
                     e.offset as usize,
                 ));
             }
-            let payload = &b[e.offset as usize..end as usize];
-            verify_checksum(payload, e)?;
+            let stored = &b[e.offset as usize..end as usize];
+            verify_checksum(stored, e)?;
+            let payload = decode_stored_payload(stored, e)?;
             match e.kind {
                 SectionKind::Group => {
-                    let g = parse_group_payload(payload, e)?;
+                    let g = parse_group_payload(&payload, e)?;
                     if groups.insert(e.name.clone(), g).is_some() {
                         return Err(Error::format(
                             format!("duplicate group section {:?}", e.name),
@@ -356,7 +499,7 @@ impl PocketFile {
                     }
                 }
                 SectionKind::Dense => {
-                    let buf = parse_dense_payload(payload, e)?;
+                    let buf = parse_dense_payload(&payload, e)?;
                     if dense.insert(e.name.clone(), buf).is_some() {
                         return Err(Error::format(
                             format!("duplicate dense section {:?}", e.name),
@@ -437,6 +580,11 @@ impl PocketFile {
 
     pub fn save(&self, path: &Path) -> Result<(), Error> {
         std::fs::write(path, self.to_bytes()).map_err(|e| Error::io(path, e))
+    }
+
+    /// [`PocketFile::save`] under explicit [`CodecOpts`].
+    pub fn save_with(&self, path: &Path, opts: &CodecOpts) -> Result<(), Error> {
+        std::fs::write(path, self.to_bytes_with(opts)).map_err(|e| Error::io(path, e))
     }
 
     pub fn load(path: &Path) -> Result<PocketFile, Error> {
@@ -567,13 +715,38 @@ pub(crate) fn verify_checksum(payload: &[u8], e: &TocEntry) -> Result<(), Error>
     Ok(())
 }
 
-/// Parse a POCKET02 header (magic + header length + lm config + TOC) out of
-/// `b`, which must contain at least the full header.  Returns the LM config
-/// name, the TOC and the header length (== the payload base offset).
+/// Turn a section's stored (possibly entropy-coded) bytes into its raw
+/// payload.  Raw sections borrow; coded sections decode into a fresh
+/// buffer.  Call *after* [`verify_checksum`] — the checksum covers the
+/// stored bytes, the rANS decoder's strict closure covers the rest.
+pub(crate) fn decode_stored_payload<'a>(
+    stored: &'a [u8],
+    e: &TocEntry,
+) -> Result<std::borrow::Cow<'a, [u8]>, Error> {
+    match e.coding {
+        SectionCoding::Raw => Ok(std::borrow::Cow::Borrowed(stored)),
+        SectionCoding::Rans => entropy::decode_section(stored, e.raw_length, e.offset as usize)
+            .map(std::borrow::Cow::Owned)
+            .map_err(|err| match err {
+                Error::Format { detail, offset } => Error::format(
+                    format!("coded section {:?}: {detail}", e.name),
+                    offset,
+                ),
+                other => other,
+            }),
+    }
+}
+
+/// Parse a POCKET02/POCKET03 header (magic + header length + lm config +
+/// TOC) out of `b`, which must contain at least the full header.  Returns
+/// the LM config name, the TOC and the header length (== the payload base
+/// offset).  The revision is sniffed from the magic: POCKET03 entries
+/// additionally carry a coding tag and a raw (decoded) length.
 pub(crate) fn parse_header_v2(b: &[u8]) -> Result<(String, Vec<TocEntry>, usize), Error> {
     let mut c = Cursor { b, i: 0, base: 0 };
     let magic = c.take(8, "magic")?;
-    if magic != MAGIC_V2.as_slice() {
+    let v3 = magic == MAGIC_V3.as_slice();
+    if !v3 && magic != MAGIC_V2.as_slice() {
         return Err(Error::format("bad pocket magic", 0));
     }
     let header_len = c.u64("header length")? as usize;
@@ -599,6 +772,17 @@ pub(crate) fn parse_header_v2(b: &[u8]) -> Result<(String, Vec<TocEntry>, usize)
                 return Err(Error::format(format!("unknown section kind {other}"), c.i - 1));
             }
         };
+        let coding = if v3 {
+            match c.u8("section coding")? {
+                0 => SectionCoding::Raw,
+                1 => SectionCoding::Rans,
+                other => {
+                    return Err(Error::format(format!("unknown section coding {other}"), c.i - 1));
+                }
+            }
+        } else {
+            SectionCoding::Raw
+        };
         let name = c.string("section name")?;
         let meta_cfg = c.string("section meta config")?;
         let rows = c.u64("section rows")?;
@@ -612,6 +796,7 @@ pub(crate) fn parse_header_v2(b: &[u8]) -> Result<(String, Vec<TocEntry>, usize)
         let (rows, width) = (rows as usize, width as usize);
         let offset = c.u64("section offset")?;
         let length = c.u64("section length")?;
+        let raw_length = if v3 { c.u64("section raw length")? } else { length };
         let checksum = c.u64("section checksum")?;
         if offset < header_len as u64 || offset.checked_add(length).is_none() {
             return Err(Error::format(
@@ -619,7 +804,32 @@ pub(crate) fn parse_header_v2(b: &[u8]) -> Result<(String, Vec<TocEntry>, usize)
                 c.i,
             ));
         }
-        toc.push(TocEntry { kind, name, meta_cfg, rows, width, offset, length, checksum });
+        if raw_length > 1 << 31 {
+            return Err(Error::format(
+                format!("absurd raw length {raw_length} for section {name:?}"),
+                c.i,
+            ));
+        }
+        if coding == SectionCoding::Raw && raw_length != length {
+            return Err(Error::format(
+                format!(
+                    "raw section {name:?} declares raw length {raw_length} != stored {length}"
+                ),
+                c.i,
+            ));
+        }
+        toc.push(TocEntry {
+            kind,
+            name,
+            meta_cfg,
+            rows,
+            width,
+            offset,
+            length,
+            coding,
+            raw_length,
+            checksum,
+        });
     }
     if c.i != header_len {
         return Err(Error::format("trailing bytes in TOC", c.i));
@@ -738,6 +948,53 @@ pub(crate) mod tests {
         for (x, y) in a.codebook.data.iter().zip(&b.codebook.data) {
             assert!((x - y).abs() < 2e-3);
         }
+    }
+
+    #[test]
+    fn raw_codec_pins_pocket02_bytes() {
+        // POCKET03-with-raw-codec is *defined* as POCKET02: byte-identical
+        let pf = sample_file(11);
+        assert_eq!(pf.to_bytes_with(&CodecOpts::default()), pf.to_bytes());
+    }
+
+    #[test]
+    fn roundtrip_file_v3_coded() {
+        let pf = sample_file(5);
+        let raw = pf.to_bytes();
+        let coded = pf.to_bytes_with(&CodecOpts::rans());
+        assert_eq!(&coded[..8], MAGIC_V3.as_slice());
+        // the f16 codebooks/scales and constant dense residue compress,
+        // so the coded container must be strictly smaller
+        assert!(coded.len() < raw.len(), "coded {} !< raw {}", coded.len(), raw.len());
+        let a = PocketFile::from_bytes(&raw).unwrap();
+        let b = PocketFile::from_bytes(&coded).unwrap();
+        assert_eq!(a.lm_cfg, b.lm_cfg);
+        assert_eq!(a.dense, b.dense);
+        for (name, ga) in &a.groups {
+            let gb = &b.groups[name];
+            assert_eq!(ga.indices, gb.indices);
+            assert_eq!(ga.decoder, gb.decoder);
+            assert_eq!(ga.codebook.data, gb.codebook.data);
+            assert_eq!(ga.row_scales, gb.row_scales);
+        }
+    }
+
+    #[test]
+    fn coded_container_truncation_and_corruption_fail_typed() {
+        let pf = sample_file(6);
+        let bytes = pf.to_bytes_with(&CodecOpts::rans());
+        for cut in [4usize, 9, 20, bytes.len() / 2, bytes.len() - 1] {
+            let e = PocketFile::from_bytes(&bytes[..cut]);
+            assert!(
+                matches!(e, Err(crate::Error::Format { .. })),
+                "cut at {cut}: {e:?}"
+            );
+        }
+        let mut bad = bytes.clone();
+        let at = bad.len() - 3;
+        bad[at] ^= 0x55;
+        let e = PocketFile::from_bytes(&bad).unwrap_err();
+        assert!(matches!(e, crate::Error::Format { .. }), "{e:?}");
     }
 
     #[test]
@@ -868,8 +1125,9 @@ pub(crate) mod tests {
                 rng.fill_normal(&mut buf, 0.04);
                 pf.dense.insert("embed".into(), buf);
             }
-            // exercise both container revisions on the same logical file
-            let encodings = [pf.to_bytes(), pf.to_bytes_v1()];
+            // exercise all three container revisions on the same logical file
+            let encodings =
+                [pf.to_bytes(), pf.to_bytes_v1(), pf.to_bytes_with(&CodecOpts::rans())];
             for bytes in &encodings {
                 let back = PocketFile::from_bytes(bytes).map_err(|e| e.to_string())?;
                 prop_assert(back.lm_cfg == pf.lm_cfg, "lm_cfg")?;

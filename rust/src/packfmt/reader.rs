@@ -3,13 +3,17 @@
 //! The paper's edge story is that a device downloads "a small decoder, a
 //! concise codebook, and an index" — it should not have to materialize the
 //! whole dense model to answer a query that touches one layer group.  A
-//! `PocketReader` opens a **POCKET02** container through a
+//! `PocketReader` opens a **POCKET02/POCKET03** container through a
 //! [`SectionSource`] (mmap, positional file reads, shared memory, or a
 //! range-request transport — including real HTTP streaming via
 //! [`PocketReader::open_url`]), reads only the header + table of contents, and
 //! then decodes *one group or one named tensor at a time* through the
 //! backend, pulling exactly that group's section (verified by checksum) —
-//! zero-copy when the source supports borrowed slices.
+//! zero-copy when the source supports borrowed slices.  POCKET03 sections
+//! may additionally be entropy-coded ([`super::entropy`]): the checksum
+//! and all source offsets describe the *stored* (smaller, on-wire) bytes,
+//! and the section is losslessly decoded right after verification, inside
+//! the same single-flight fetch.
 //!
 //! Decoded groups land in a [`DecodeCache`]: a thread-safe LRU bounded by a
 //! **byte budget**, shareable across readers and threads (`decode_group`
@@ -41,8 +45,9 @@ use crate::util::cache::{CacheStats, DecodeCache};
 use super::remote::{HttpOptions, HttpSource, PrefetchPlan};
 use super::source::{open_path, MemSource, SectionBytes, SectionSource, SourceStats};
 use super::{
-    decoded_bytes, parse_dense_payload, parse_group_payload, parse_header_v2, verify_checksum, GroupRecord,
-    PocketFile, SectionKind, TocEntry, MAGIC_V1, MAGIC_V2,
+    decode_stored_payload, decoded_bytes, parse_dense_payload, parse_group_payload,
+    parse_header_v2, verify_checksum, GroupRecord, PocketFile, SectionCoding, SectionKind,
+    TocEntry, MAGIC_V1, MAGIC_V2, MAGIC_V3,
 };
 
 /// Snapshot of a reader's I/O and decode counters.  The `cache` field is
@@ -74,6 +79,15 @@ pub struct ReaderStats {
     pub chunk_decodes: u64,
     /// Chunk requests answered from the cache.
     pub chunk_hits: u64,
+    /// Entropy-coded (POCKET03) sections fetched.  Zero for raw containers.
+    pub coded_sections_read: u64,
+    /// Stored (on-wire) bytes of those coded sections — what actually
+    /// crossed the source.  Compare with `coded_raw_bytes` for the
+    /// realized wire saving; `bytes_read` already counts these.
+    pub coded_bytes_read: u64,
+    /// Decoded payload bytes produced from coded sections — what the same
+    /// reads would have transferred from a raw (POCKET02) container.
+    pub coded_raw_bytes: u64,
     /// Shared decode-cache counters (hits/misses/evictions/resident bytes).
     pub cache: CacheStats,
     /// Range-transport fetch counters ([`ChunkedSource`](super::ChunkedSource)
@@ -111,6 +125,9 @@ pub struct PocketReader {
     dense_hits: AtomicU64,
     chunk_decodes: AtomicU64,
     chunk_hits: AtomicU64,
+    coded_sections_read: AtomicU64,
+    coded_bytes_read: AtomicU64,
+    coded_raw_bytes: AtomicU64,
 }
 
 impl PocketReader {
@@ -176,7 +193,7 @@ impl PocketReader {
             let pf = PocketFile::from_bytes(&rest)?;
             return Ok(Self::eager(pf, total));
         }
-        if prefix[..8] != *MAGIC_V2 {
+        if prefix[..8] != *MAGIC_V2 && prefix[..8] != *MAGIC_V3 {
             return Err(Error::format("bad pocket magic", 0));
         }
         if magic_only {
@@ -230,7 +247,10 @@ impl PocketReader {
 
     /// The TOC-guided fetch-coalescing plan for this container: every group
     /// and dense section span, coalesced under `(max_gap, max_window)`.
-    /// Empty for eager (TOC-less) containers.
+    /// Spans are *stored* (on-wire) extents, so for an entropy-coded
+    /// POCKET03 container the windows coalesce over the smaller coded
+    /// offsets — a cold client fetches the coded bytes, never the raw
+    /// expansion.  Empty for eager (TOC-less) containers.
     pub fn prefetch_plan(&self, max_gap: u64, max_window: u64) -> PrefetchPlan {
         match &self.inner {
             Inner::Lazy { groups, dense, .. } => PrefetchPlan::coalesce(
@@ -276,6 +296,9 @@ impl PocketReader {
             dense_hits: AtomicU64::new(0),
             chunk_decodes: AtomicU64::new(0),
             chunk_hits: AtomicU64::new(0),
+            coded_sections_read: AtomicU64::new(0),
+            coded_bytes_read: AtomicU64::new(0),
+            coded_raw_bytes: AtomicU64::new(0),
         }
     }
 
@@ -285,17 +308,38 @@ impl PocketReader {
         total_bytes: u64,
     ) -> Result<PocketReader, Error> {
         let (lm_cfg, toc, header_len) = parse_header_v2(header)?;
+        // strict-open TOC geometry checks: every section must lie inside
+        // the file and no two sections may overlap — fail at open with a
+        // typed Format error instead of deferring to the first decode
+        let mut spans: Vec<(u64, u64, &str)> =
+            toc.iter().map(|e| (e.offset, e.length, e.name.as_str())).collect();
+        spans.sort_unstable();
+        for (i, &(off, len, name)) in spans.iter().enumerate() {
+            let end = off.saturating_add(len);
+            if end > total_bytes {
+                return Err(Error::format(
+                    format!(
+                        "section {name:?} extends to byte {end} past end of file \
+                         ({total_bytes} bytes; file truncated?)"
+                    ),
+                    off as usize,
+                ));
+            }
+            if let Some(&(next_off, _, next_name)) = spans.get(i + 1) {
+                if end > next_off {
+                    return Err(Error::format(
+                        format!(
+                            "section {name:?} (ends at byte {end}) overlaps \
+                             section {next_name:?} (starts at byte {next_off})"
+                        ),
+                        next_off as usize,
+                    ));
+                }
+            }
+        }
         let mut groups = BTreeMap::new();
         let mut dense = BTreeMap::new();
         for e in toc {
-            // bound every section against the real source size up front, so
-            // a corrupt TOC length can never drive a huge allocation later
-            if e.offset.saturating_add(e.length) > total_bytes {
-                return Err(Error::format(
-                    format!("section {:?} out of bounds (file truncated?)", e.name),
-                    e.offset as usize,
-                ));
-            }
             let map = match e.kind {
                 SectionKind::Group => &mut groups,
                 SectionKind::Dense => &mut dense,
@@ -321,6 +365,9 @@ impl PocketReader {
             dense_hits: AtomicU64::new(0),
             chunk_decodes: AtomicU64::new(0),
             chunk_hits: AtomicU64::new(0),
+            coded_sections_read: AtomicU64::new(0),
+            coded_bytes_read: AtomicU64::new(0),
+            coded_raw_bytes: AtomicU64::new(0),
         })
     }
 
@@ -406,9 +453,25 @@ impl PocketReader {
         self.header_bytes
     }
 
-    /// Payload length of one named section, if this reader has a TOC.
+    /// Stored (on-wire) payload length of one named section, if this
+    /// reader has a TOC.  For entropy-coded sections this is the coded
+    /// length; see [`PocketReader::section_raw_length`] for the decoded
+    /// size.
     pub fn section_length(&self, name: &str) -> Option<u64> {
         self.toc_entry(name).map(|e| e.length)
+    }
+
+    /// Decoded (raw) payload length of one named section, if this reader
+    /// has a TOC.  Equals [`PocketReader::section_length`] for raw
+    /// sections — use this when sizing buffers or cache budgets.
+    pub fn section_raw_length(&self, name: &str) -> Option<u64> {
+        self.toc_entry(name).map(|e| e.raw_length)
+    }
+
+    /// How one named section is stored on the wire, if this reader has a
+    /// TOC.  Always [`SectionCoding::Raw`] for POCKET01/02 containers.
+    pub fn section_coding(&self, name: &str) -> Option<SectionCoding> {
+        self.toc_entry(name).map(|e| e.coding)
     }
 
     /// Absolute `(offset, length)` of one named section's payload, if this
@@ -436,6 +499,9 @@ impl PocketReader {
             dense_hits: self.dense_hits.load(Ordering::Relaxed),
             chunk_decodes: self.chunk_decodes.load(Ordering::Relaxed),
             chunk_hits: self.chunk_hits.load(Ordering::Relaxed),
+            coded_sections_read: self.coded_sections_read.load(Ordering::Relaxed),
+            coded_bytes_read: self.coded_bytes_read.load(Ordering::Relaxed),
+            coded_raw_bytes: self.coded_raw_bytes.load(Ordering::Relaxed),
             cache: self.cache.stats(),
             source: match &self.inner {
                 Inner::Lazy { src, .. } => src.fetch_stats(),
@@ -451,11 +517,13 @@ impl PocketReader {
     ) -> Result<SectionBytes<'s>, Error> {
         // genuine I/O failures are Error::Io (retryable by embedders);
         // Error::Format is reserved for actual container corruption
-        let payload = src.section(e.offset, e.length).map_err(|err| Error::Io {
+        let stored = src.section(e.offset, e.length).map_err(|err| Error::Io {
             path: format!("<pocket section {:?} at offset {}>", e.name, e.offset),
             source: err,
         })?;
-        verify_checksum(&payload, e)?;
+        // the checksum covers the stored (on-wire) bytes, so transport
+        // integrity is verified before any entropy decoding
+        verify_checksum(&stored, e)?;
         self.bytes_read.fetch_add(e.length, Ordering::Relaxed);
         self.sections_read.fetch_add(1, Ordering::Relaxed);
         match e.kind {
@@ -463,7 +531,16 @@ impl PocketReader {
             SectionKind::Dense => &self.dense_sections_read,
         }
         .fetch_add(1, Ordering::Relaxed);
-        Ok(payload)
+        if e.coding == SectionCoding::Raw {
+            return Ok(stored);
+        }
+        // POCKET03 coded section: entropy-decode to the raw payload the
+        // parsers expect.  Decode failures are container corruption.
+        let raw = decode_stored_payload(&stored, e)?.into_owned();
+        self.coded_sections_read.fetch_add(1, Ordering::Relaxed);
+        self.coded_bytes_read.fetch_add(e.length, Ordering::Relaxed);
+        self.coded_raw_bytes.fetch_add(raw.len() as u64, Ordering::Relaxed);
+        Ok(SectionBytes::Owned(raw))
     }
 
     /// The stored (undecoded) record of one compressed group.  Lazy mode
@@ -1034,6 +1111,102 @@ mod tests {
         assert_eq!(s2.dense_hits, 1);
         // local in-memory source: no transport counters
         assert!(s2.source.is_none());
+    }
+
+    #[test]
+    fn coded_container_reads_lazily_and_counts_coded_bytes() {
+        use crate::packfmt::CodecOpts;
+        let pf = sample_file(30);
+        let raw = pf.to_bytes();
+        let coded = pf.to_bytes_with(&CodecOpts::rans());
+        assert!(coded.len() < raw.len());
+        let r_raw = PocketReader::from_bytes(raw).unwrap();
+        let r_coded = PocketReader::from_bytes(coded).unwrap();
+        assert!(r_coded.seekable());
+        // the compressible "q" section is stored coded and reads smaller
+        assert_eq!(r_coded.section_coding("q"), Some(SectionCoding::Rans));
+        assert_eq!(r_coded.section_raw_length("q"), r_raw.section_length("q"));
+        assert!(r_coded.section_length("q").unwrap() < r_raw.section_length("q").unwrap());
+        // ... and decodes to the identical record through the lazy path
+        let a = r_raw.group_record("q").unwrap();
+        let b = r_coded.group_record("q").unwrap();
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.decoder, b.decoder);
+        assert_eq!(a.codebook.data, b.codebook.data);
+        assert_eq!(a.row_scales, b.row_scales);
+        assert_eq!(r_coded.dense_tensor("embed").unwrap(), r_raw.dense_tensor("embed").unwrap());
+        let s = r_coded.stats();
+        assert!(s.coded_sections_read >= 1);
+        assert!(s.coded_bytes_read < s.coded_raw_bytes, "coded wire bytes must shrink");
+        // raw containers never tick the coded counters
+        let s_raw = r_raw.stats();
+        assert_eq!((s_raw.coded_sections_read, s_raw.coded_bytes_read), (0, 0));
+    }
+
+    #[test]
+    fn overlapping_toc_sections_fail_at_open() {
+        let pf = sample_file(31);
+        let mut bytes = pf.to_bytes();
+        let r0 = PocketReader::from_bytes(bytes.clone()).unwrap();
+        let (q_off, _) = r0.section_span("q").unwrap();
+        let (up_off, _) = r0.section_span("up").unwrap();
+        let header = r0.header_bytes() as usize;
+        // retarget the "up" TOC entry's offset at "q"'s span: find its
+        // unique LE encoding inside the header and overwrite it
+        let needle = up_off.to_le_bytes();
+        let at = (0..header - 8)
+            .find(|&i| bytes[i..i + 8] == needle)
+            .expect("offset must appear in the TOC");
+        bytes[at..at + 8].copy_from_slice(&q_off.to_le_bytes());
+        let e = PocketReader::from_bytes(bytes).unwrap_err();
+        match e {
+            Error::Format { detail, .. } => assert!(detail.contains("overlap"), "{detail}"),
+            other => panic!("expected Format, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn final_section_past_eof_fails_at_open_with_offset() {
+        let pf = sample_file(32);
+        let bytes = pf.to_bytes();
+        // drop the tail of the last section: open (not first decode) fails
+        let e = PocketReader::from_bytes(bytes[..bytes.len() - 5].to_vec()).unwrap_err();
+        match e {
+            Error::Format { detail, offset } => {
+                assert!(detail.contains("past end of file"), "{detail}");
+                assert!(offset > 0);
+            }
+            other => panic!("expected Format, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupt_coded_section_with_forged_checksum_is_format_not_panic() {
+        use crate::packfmt::{fnv1a64, CodecOpts};
+        let pf = sample_file(33);
+        let mut bytes = pf.to_bytes_with(&CodecOpts::rans());
+        let r0 = PocketReader::from_bytes(bytes.clone()).unwrap();
+        let name = r0
+            .group_names()
+            .into_iter()
+            .find(|n| r0.section_coding(n) == Some(SectionCoding::Rans))
+            .expect("sample file must have a coded group");
+        let (off, len) = r0.section_span(&name).unwrap();
+        let (off, len) = (off as usize, len as usize);
+        // corrupt the middle of the coded stream, then forge the TOC
+        // checksum so transport verification passes and the rANS decoder's
+        // own strict closure is what must catch it
+        let old_sum = fnv1a64(&bytes[off..off + len]).to_le_bytes();
+        bytes[off + len / 2] ^= 0x10;
+        let new_sum = fnv1a64(&bytes[off..off + len]);
+        let header = r0.header_bytes() as usize;
+        let at = (0..header - 8)
+            .find(|&i| bytes[i..i + 8] == old_sum)
+            .expect("checksum must appear in the TOC");
+        bytes[at..at + 8].copy_from_slice(&new_sum.to_le_bytes());
+        let r = PocketReader::from_bytes(bytes).unwrap();
+        let e = r.group_record(&name).unwrap_err();
+        assert!(matches!(e, Error::Format { .. }), "{e:?}");
     }
 
     #[test]

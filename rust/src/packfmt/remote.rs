@@ -3,10 +3,15 @@
 //!
 //! This is the serving transport the ROADMAP names after the in-memory
 //! [`ChunkedSource`](super::source::ChunkedSource) simulator: an edge device
-//! opens a POCKET02 container *in place* on a remote host, reads only the
-//! header + TOC, and then streams exactly the sections its requests touch —
-//! the paper's "download a small decoder, a concise codebook, and an index"
-//! story without the download.
+//! opens a POCKET02/POCKET03 container *in place* on a remote host, reads
+//! only the header + TOC, and then streams exactly the sections its
+//! requests touch — the paper's "download a small decoder, a concise
+//! codebook, and an index" story without the download.  The transport is
+//! coding-blind: TOC offsets/lengths describe stored bytes, so for an
+//! entropy-coded POCKET03 container the ranges requested (and the windows
+//! a [`PrefetchPlan`] coalesces) are the *coded*, smaller spans — the
+//! entropy layer's saving is realized on the wire with no transport
+//! changes.
 //!
 //! Three pieces:
 //!

@@ -64,6 +64,13 @@ impl SectionBytes<'_> {
 /// [`super::ReaderStats`] so cold/warm serving checks can assert on them
 /// uniformly whatever the transport.  Local sources (mmap/file/mem) report
 /// `None` — every byte is already at hand.
+///
+/// Sources are *coding-blind*: they move stored container bytes, so for an
+/// entropy-coded POCKET03 container `bytes_fetched` already measures the
+/// coded (smaller) on-wire side.  The reader's
+/// `coded_bytes_read`/`coded_raw_bytes` counters
+/// ([`super::ReaderStats`]) relate that wire traffic to the decoded
+/// payload sizes.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SourceStats {
     /// Ranges fetched from the transport so far.

@@ -7,7 +7,11 @@
 //! [`PocketReader`] and therefore one byte-budget
 //! [`DecodeCache`](crate::util::cache::DecodeCache) — decode results are
 //! shared, each group's section is fetched from the source exactly once
-//! (single-flight), and eviction pressure is global.
+//! (single-flight), and eviction pressure is global.  Entropy-coded
+//! (POCKET03) sections ride the same path: the checksum verification and
+//! rANS decode happen inside the single-flight fetch, so N concurrent
+//! misses on one coded section pay for one wire fetch and one entropy
+//! decode, never N.
 //!
 //! Three request shapes cover the serving mix:
 //!

@@ -37,7 +37,7 @@ use crate::data::Corpus;
 use crate::error::Error;
 use crate::eval::{evaluate, EvalReport};
 use crate::model::WeightStore;
-use crate::packfmt::PocketReader;
+use crate::packfmt::{HttpOptions, PocketReader};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::reference::lm::{gen_step, GenState};
 use crate::runtime::weights::{InMemoryProvider, PocketProvider, WeightProvider};
@@ -238,6 +238,34 @@ impl Session {
     /// ever downloading the whole container.
     pub fn open_pocket_url(&self, url: &str) -> Result<PocketReader, Error> {
         PocketReader::open_url(url)
+    }
+
+    /// [`Session::open_pocket_url`] with explicit transport options —
+    /// connect/read timeouts, retry attempts/backoff
+    /// ([`crate::packfmt::RetryPolicy`]) and the fetched-window cache
+    /// size — without dropping down to [`crate::packfmt::remote`]:
+    ///
+    /// ```no_run
+    /// use pocketllm::{HttpOptions, Session};
+    /// use pocketllm::packfmt::RetryPolicy;
+    ///
+    /// fn main() -> Result<(), pocketllm::Error> {
+    ///     let session = Session::builder().build()?;
+    ///     let opts = HttpOptions {
+    ///         retry: RetryPolicy { attempts: 5, ..RetryPolicy::default() },
+    ///         ..HttpOptions::default()
+    ///     };
+    ///     let reader = session.open_pocket_url_with("http://host:8080/model.pocket", opts)?;
+    ///     let _ = reader.stats();
+    ///     Ok(())
+    /// }
+    /// ```
+    pub fn open_pocket_url_with(
+        &self,
+        url: &str,
+        opts: HttpOptions,
+    ) -> Result<PocketReader, Error> {
+        PocketReader::open_url_with(url, opts)
     }
 
     /// Build a concurrent [`PocketServer`] over a shared reader: N worker

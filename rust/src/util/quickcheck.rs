@@ -71,6 +71,13 @@ impl Gen {
         (0..n).map(|_| self.rng.below(bound)).collect()
     }
 
+    /// Uniform random byte vector — adversarial raw streams for codec and
+    /// framing properties (entropy coder, section payloads).
+    pub fn vec_u8(&mut self, len_lo: usize, len_hi: usize) -> Vec<u8> {
+        let n = self.usize_in(len_lo, len_hi);
+        (0..n).map(|_| self.rng.next_u32() as u8).collect()
+    }
+
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.rng.below(xs.len() as u32) as usize]
     }
@@ -166,7 +173,9 @@ mod tests {
             let u = g.u64_in(1 << 40, (1 << 40) + 10);
             prop_assert(((1 << 40)..=(1 << 40) + 10).contains(&u), "u64_in range")?;
             let v = g.vec_u32_below(10, 0, 20);
-            prop_assert(v.iter().all(|&x| x < 10), "vec bound")
+            prop_assert(v.iter().all(|&x| x < 10), "vec bound")?;
+            let b = g.vec_u8(2, 4);
+            prop_assert((2..=4).contains(&b.len()), "vec_u8 len")
         });
     }
 
