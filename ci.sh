@@ -34,8 +34,8 @@ test -f ../BENCH_serve.json
 echo "BENCH_serve.json:"
 cat ../BENCH_serve.json
 
-echo "== gen-bench (layer-streaming generation: eager vs mmap vs loopback HTTP -> BENCH_gen.json) =="
-./target/release/pocketllm gen-bench --backend reference --check --json ../BENCH_gen.json
+echo "== gen-bench (layer-streaming generation: eager vs mmap vs loopback HTTP, plus dense-vs-fused index-GEMM on an ln pocket -> BENCH_gen.json) =="
+./target/release/pocketllm gen-bench --backend reference --repr fused --check --json ../BENCH_gen.json
 test -f ../BENCH_gen.json
 echo "BENCH_gen.json:"
 cat ../BENCH_gen.json

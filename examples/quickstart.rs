@@ -6,7 +6,9 @@
 //! Walks the whole public API surface in ~1 minute, entirely through the
 //! `Session` / `PocketReader` front door: session -> LM training -> group
 //! compression -> POCKET02 packing -> lazy per-group device decode ->
-//! entropy-coded POCKET03 round trip (the CLI's `--codec rans`).
+//! entropy-coded POCKET03 round trip (the CLI's `--codec rans`) ->
+//! pocket-native generation, ending with the fused index-GEMM path that
+//! executes matmuls directly on the pocket.
 
 use pocketllm::packfmt::{CodecOpts, PocketReader};
 use pocketllm::session::Session;
@@ -141,6 +143,35 @@ fn main() -> Result<(), pocketllm::Error> {
     println!(
         "server: {} completed, {} batched steps for {} lane-steps (peak batch {})",
         stats.completed, stats.steps, stats.lane_steps, stats.peak_batch
+    );
+
+    // 10. fused index-GEMM: with a per-subvector ("ln") decoder the pocket
+    //     itself is the execution format — x @ W runs off the decoded-codeword
+    //     table + bitpacked indices + row scales, and the dense weight matrix
+    //     is never materialized.  Tensors without a packed form (here:
+    //     everything but "v") fall back to the dense path per tensor.
+    let ln = session
+        .compress(&ws)
+        .meta_override("w{width}_d8_k1024_m3_ln")
+        .groups(["v"])
+        .steps(60)
+        .kmeans_iters(1)
+        .post_steps(10)
+        .run()?;
+    let ln_reader = std::sync::Arc::new(PocketReader::from_bytes(ln.pocket.to_bytes())?);
+    let ln_provider = session.pocket_provider(ln_reader)?;
+    let dense_out = session.generate(&ln_provider).prompt(vec![1, 2, 3]).max_new(12).run()?;
+    let fused_out = session
+        .generate(&ln_provider)
+        .prompt(vec![1, 2, 3])
+        .max_new(12)
+        .repr(pocketllm::WeightRepr::Fused)
+        .run()?;
+    assert_eq!(fused_out.tokens, dense_out.tokens, "fused must reproduce the dense stream");
+    println!(
+        "fused index-GEMM: {:?} identical to dense; packed forms hold {} KiB",
+        fused_out.continuation(),
+        ln_provider.packed_resident_bytes() / 1024
     );
     Ok(())
 }

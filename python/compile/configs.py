@@ -309,8 +309,11 @@ def _build_meta_configs() -> Dict[str, MetaConfig]:
     # Table 6: codebook-size sweep.
     for K in (256, 4096, 16384):
         add(MetaConfig(W=512, d=8, K=K, m=3))
-    # Table 7: plain LN ablation.
+    # Table 7: plain LN ablation.  The per-subvector ("ln") decoders also
+    # back the rust runtime's fused index-GEMM path, which needs one at
+    # each tiny group width.
     add(MetaConfig(W=512, d=8, K=1024, m=3, norm="ln"))
+    add(MetaConfig(W=256, d=8, K=1024, m=3, norm="ln"))
     return cfgs
 
 

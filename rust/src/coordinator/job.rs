@@ -423,15 +423,48 @@ pub fn decode_group_rows(
     row0: usize,
     n_rows: usize,
 ) -> Result<TensorF32> {
-    anyhow::ensure!(indices.len() == total_rows * mc.l, "index count mismatch");
-    anyhow::ensure!(row_scales.len() == 2 * total_rows, "row scale count mismatch");
-    anyhow::ensure!(total_rows % mc.r == 0, "rows not divisible by dispatch size");
-    anyhow::ensure!(
-        row0 % mc.r == 0 && n_rows % mc.r == 0,
-        "row range {row0}+{n_rows} not aligned to dispatch chunk R={}",
-        mc.r
-    );
-    anyhow::ensure!(row0 + n_rows <= total_rows, "row range out of bounds");
+    // shape violations are typed: callers (the reader's chunk path, the
+    // fused table builder) match on ShapeMismatch, and `From<anyhow::Error>`
+    // for `crate::Error` downcasts so the structure survives the `?` chain
+    let shape_err = |what: &str, expected: String, got: String| -> anyhow::Error {
+        let what = format!("{what} for {}", mc.name);
+        crate::error::Error::ShapeMismatch { what, expected, got }.into()
+    };
+    if indices.len() != total_rows * mc.l {
+        return Err(shape_err(
+            "group indices",
+            format!("{} values ({} rows x L={})", total_rows * mc.l, total_rows, mc.l),
+            format!("{} values", indices.len()),
+        ));
+    }
+    if row_scales.len() != 2 * total_rows {
+        return Err(shape_err(
+            "row scales",
+            format!("{} values (2 per row)", 2 * total_rows),
+            format!("{} values", row_scales.len()),
+        ));
+    }
+    if total_rows % mc.r != 0 {
+        return Err(shape_err(
+            "group rows",
+            format!("a multiple of dispatch chunk R={}", mc.r),
+            format!("{total_rows} rows"),
+        ));
+    }
+    if row0 % mc.r != 0 || n_rows % mc.r != 0 {
+        return Err(shape_err(
+            "decode row range",
+            format!("row0 and n_rows aligned to dispatch chunk R={}", mc.r),
+            format!("rows {row0}..{}", row0 + n_rows),
+        ));
+    }
+    if row0 + n_rows > total_rows {
+        return Err(shape_err(
+            "decode row range",
+            format!("within {total_rows} group rows"),
+            format!("rows {row0}..{}", row0 + n_rows),
+        ));
+    }
     let theta = theta_from_decoder(mc, decoder);
     let decode_name = format!("meta_decode_{}", mc.name);
     let first_chunk = row0 / mc.r;
@@ -468,4 +501,72 @@ pub fn decode_group_rows(
         out.scatter_rows(&rows_idx, &rows_hat?);
     }
     Ok(out)
+}
+
+/// Run each of the K codewords through the meta-decoder **once** and return
+/// the `[K, d]` table of decoded (pre-denormalization) subvectors — the
+/// cache-resident heart of the fused index-GEMM path
+/// (`runtime::fused::PackedGroup`).
+///
+/// Only per-subvector decoders factor this way: with `norm == "ln"` every
+/// meta-net layer normalizes, matmuls and activates each `d`-chunk
+/// independently, so the decoded value of a subvector depends on its
+/// codeword alone.  An `"rln"` decoder layernorms across the whole `[L*d]`
+/// row — subvectors couple and no per-codeword table exists; that is a
+/// typed error here and callers fall back to dense decode.
+///
+/// Mechanically the table rides the existing `meta_decode_*` kernel (so it
+/// works on any backend): the identity indices `0..K` are padded into
+/// `[R, L]` chunk grids with neutral per-row stats `(mu=0, sd=1)`, making
+/// the kernel's trailing denormalize compute `v * 1.0 + 0.0 = v`.  The one
+/// deviation from a raw decoder evaluation: `-0.0` decoded values come
+/// back as `+0.0` (`-0.0 + 0.0 == +0.0`), which can flip the sign of a
+/// zero — documented in DESIGN.md §14, immaterial to every consumer.
+pub fn decode_codeword_table(
+    rt: &Runtime,
+    mc: &MetaCfg,
+    decoder: &[f32],
+    codebook: &TensorF32,
+) -> Result<Vec<f32>> {
+    if mc.norm != "ln" {
+        return Err(crate::error::Error::ShapeMismatch {
+            what: format!("codeword table for {}", mc.name),
+            expected: "a per-subvector decoder (norm == \"ln\")".to_string(),
+            got: format!("norm == {:?} (subvectors couple across the row)", mc.norm),
+        }
+        .into());
+    }
+    let theta = theta_from_decoder(mc, decoder);
+    let decode_name = format!("meta_decode_{}", mc.name);
+    let grid = mc.r * mc.l;
+    let mut table = Vec::with_capacity(mc.k * mc.d);
+    let mut next = 0usize;
+    while next < mc.k {
+        // identity indices 0..K padded into one [R, L] grid per exec; the
+        // pad repeats the last codeword and is sliced off below
+        let idx_chunk: Vec<i32> =
+            (0..grid).map(|i| ((next + i).min(mc.k - 1)) as i32).collect();
+        let stats: Vec<f32> = (0..mc.r).flat_map(|_| [0.0f32, 1.0f32]).collect();
+        let outs = rt.exec(
+            &decode_name,
+            &[
+                Arg::F32(theta.clone()),
+                Arg::F32(codebook.clone()),
+                Arg::I32(TensorI32::new(vec![mc.r, mc.l], idx_chunk)),
+                Arg::F32(TensorF32::new(vec![mc.r, 2], stats)),
+            ],
+        )?;
+        let rows = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("decode returned no outputs"))?
+            .f32()?;
+        // rows is [R, W] = [R, L*d]: subvector (r, l) decodes codeword
+        // idx[r*L + l]; take the first k - next of them
+        let take = (mc.k - next).min(grid);
+        table.extend_from_slice(&rows.data[..take * mc.d]);
+        next += take;
+    }
+    debug_assert_eq!(table.len(), mc.k * mc.d);
+    Ok(table)
 }

@@ -68,7 +68,12 @@
 //! and `Session::generate` runs an incremental KV-cached decode loop over
 //! it (greedy or seeded temperature/top-k), with next-layer prefetch
 //! overlapping decode and compute.  Generation memory is bounded by the
-//! decode-cache budget, not the model size:
+//! decode-cache budget, not the model size — and with
+//! [`WeightRepr::Fused`] (`.repr(WeightRepr::Fused)` on the builder) the
+//! matmuls execute *directly on the pocket* ([`runtime::fused`]): a
+//! decoded-codeword table plus the bitpacked indices and row scales
+//! replace the dense weight matrix entirely where the meta-decoder
+//! factors per subvector:
 //!
 //!   ```no_run
 //!   use pocketllm::{PocketReader, Session};
@@ -119,6 +124,7 @@ pub use packfmt::{
     CodecOpts, HttpOptions, HttpSource, PocketReader, PrefetchPlan, ReaderStats, RetryPolicy,
     SectionCoding, SectionSource, SourceStats,
 };
+pub use runtime::fused::{FusedAcc, PackedGroup, PackedMatmul, WeightRepr};
 pub use runtime::weights::{InMemoryProvider, PocketProvider, WeightProvider, WeightView};
 pub use serve::{
     http_generate, serve_generation, GenEngineOpts, GenParams, GenServeStats, GenServerHandle,

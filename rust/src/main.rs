@@ -21,6 +21,7 @@ use std::time::Instant;
 use anyhow::{bail, ensure, Result};
 use pocketllm::coordinator::ProgressSink;
 use pocketllm::packfmt::{ChunkedSource, CodecOpts, PocketFile, PocketReader, SectionCoding};
+use pocketllm::runtime::fused::WeightRepr;
 use pocketllm::runtime::weights::WeightProvider;
 use pocketllm::serve::{
     http_generate, serve_generation, GenEngineOpts, GenParams, GenServeStats, ServeRequest,
@@ -88,12 +89,17 @@ fn run() -> Result<()> {
                  \x20              with --remote, adds a coded-vs-raw bytes-over-wire phase)\n\
                  \x20 generate     KV-cached text generation  (--pocket m.pocket | --url http://h/p |\n\
                  \x20              --model tiny --weights w.bin; --prompt 1,2,3 --max-new 32\n\
-                 \x20              [--temperature T] [--top-k K] [--seed N] [--budget BYTES];\n\
-                 \x20              pocket sources stream weights layer by layer)\n\
+                 \x20              [--temperature T] [--top-k K] [--seed N] [--budget BYTES]\n\
+                 \x20              [--repr dense|fused]; pocket sources stream weights layer\n\
+                 \x20              by layer; --repr fused runs matmuls directly on the pocket\n\
+                 \x20              where the decoder factors per subvector)\n\
                  \x20 gen-bench    layer-streaming generation bench (eager vs mmap vs loopback\n\
                  \x20              HTTP; [--pocket m.pocket] [--prompt-len 4] [--max-new 8]\n\
-                 \x20              [--json out.json] [--check]; --check enforces identical\n\
-                 \x20              token streams, warm >= cold, peak resident <= budget)\n\
+                 \x20              [--json out.json] [--repr dense|fused] [--check]; --check\n\
+                 \x20              enforces identical token streams, warm >= cold, peak\n\
+                 \x20              resident <= budget; --repr fused adds a dense-vs-fused\n\
+                 \x20              phase on an ln pocket, checked for identical tokens and\n\
+                 \x20              fused residency strictly under the two-layer budget)\n\
                  \x20 load-bench   persistent generation server under a concurrency ramp\n\
                  \x20              ([--pocket m.pocket] [--requests 12] [--prompt-len 3]\n\
                  \x20              [--max-new 6] [--ramp 1,2,4] [--max-batch 8] [--json out.json]\n\
@@ -681,6 +687,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let top_k = args.usize_or("top-k", 0)?;
     let seed = args.u64_or("seed", 7)?;
     let budget = args.u64_or("budget", DecodeCache::DEFAULT_BUDGET)?;
+    let repr = WeightRepr::parse(&args.str_or("repr", "dense"))?;
 
     let emit = |provider: &dyn WeightProvider, reader: Option<&PocketReader>| -> Result<()> {
         let out = session
@@ -690,6 +697,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
             .temperature(temperature)
             .top_k(top_k)
             .seed(seed)
+            .repr(repr)
             .run()?;
         println!("prompt:       {:?}", &out.tokens[..out.prompt_len]);
         println!("continuation: {:?}", out.continuation());
@@ -832,6 +840,23 @@ fn cmd_gen_bench(args: &Args) -> Result<()> {
         bounded_uncacheable: u64,
         tokens_match: bool,
     }
+    /// The `--repr fused` comparison: dense vs pocket-native execution of
+    /// the same ln pocket under the same bounded cache budget.
+    struct FusedPhase {
+        dense_tps: f64,
+        fused_tps: f64,
+        /// Dense run's peak resident decoded bytes (chunk cache).
+        dense_peak: u64,
+        /// Fused run's peak resident decoded bytes (dense residue only:
+        /// the compressed matmul weights never materialize).
+        fused_cache_peak: u64,
+        /// Bytes held by the packed forms (codeword tables + bitpacked
+        /// indices + row scales) the fused run executes on instead.
+        packed_resident: u64,
+        /// The ln pocket's own two-layer dense budget.
+        budget: u64,
+        tokens_match: bool,
+    }
     let run_phase = |open: &dyn Fn() -> Result<PocketReader>| -> Result<Phase> {
         // cold: caching disabled — every tensor access re-reads and
         // re-decodes, and the engine spawns no prefetch helper
@@ -881,6 +906,83 @@ fn cmd_gen_bench(args: &Args) -> Result<()> {
     let http = run_phase(&|| Ok(PocketReader::open_url(&url)?))?;
     drop(server);
 
+    // `--repr fused`: pocket-native execution — matmuls run directly on
+    // the pocket's (bitpacked indices, row scales, decoded-codeword table)
+    // with no dense weight matrix ever materialized.  Only per-subvector
+    // ("ln") decoders factor this way (an "rln" decoder layernorms the
+    // whole row, coupling subvectors), so a dedicated ln pocket is
+    // compressed from the same weights and dense-vs-fused compared on it.
+    let repr = WeightRepr::parse(&args.str_or("repr", "dense"))?;
+    let ln_missing: Vec<String> = {
+        let mut widths: Vec<usize> = cfg
+            .groups
+            .iter()
+            .filter(|(g, _)| probe.has_group(g.as_str()))
+            .map(|(_, gi)| gi.width)
+            .collect();
+        widths.sort_unstable();
+        widths.dedup();
+        widths
+            .into_iter()
+            .map(|w| format!("w{w}_d8_k1024_m3_ln"))
+            .filter(|n| session.manifest().meta_cfg(n).is_err())
+            .collect()
+    };
+    let fused = if repr == WeightRepr::Fused && !ln_missing.is_empty() {
+        eprintln!(
+            "[gen-bench] skipping fused phase: no ln meta config at {}",
+            ln_missing.join(", ")
+        );
+        None
+    } else if repr == WeightRepr::Fused {
+        eprintln!("[gen-bench] fused phase: compressing an ln pocket (per-subvector decoders)");
+        let ln_res = session
+            .compress(&eager_ws)
+            .meta_override("w{width}_d8_k1024_m3_ln")
+            .steps(25)
+            .kmeans_iters(1)
+            .post_steps(5)
+            .run()?;
+        let ln_buf: Arc<[u8]> = ln_res.pocket.to_bytes().into();
+        let ln_probe = PocketReader::from_bytes(ln_buf.clone())?;
+        let ln_per_layer: u64 = cfg
+            .groups
+            .iter()
+            .filter(|(g, _)| ln_probe.has_group(g.as_str()))
+            .map(|(_, gi)| (gi.tensors.len() * gi.rows_per_block * gi.width * 4) as u64)
+            .sum();
+        let ln_dense: u64 =
+            ln_probe.dense_names().iter().filter_map(|n| ln_probe.section_raw_length(n)).sum();
+        let ln_budget = 2 * ln_per_layer + ln_dense;
+        let run_ln = |r: WeightRepr| -> Result<(f64, Vec<i32>, u64, u64)> {
+            let reader =
+                Arc::new(PocketReader::from_bytes(ln_buf.clone())?.with_cache_budget(ln_budget));
+            let provider = session.pocket_provider(reader.clone())?;
+            let out = session
+                .generate(&provider)
+                .prompt(prompt.clone())
+                .max_new(max_new)
+                .repr(r)
+                .run()?;
+            let peak = reader.stats().cache.peak_resident_bytes;
+            Ok((out.tokens_per_sec(), out.tokens, peak, provider.packed_resident_bytes()))
+        };
+        let (dense_tps, dense_tokens, dense_peak, _) = run_ln(WeightRepr::Dense)?;
+        let (fused_tps, fused_tokens, fused_cache_peak, packed_resident) =
+            run_ln(WeightRepr::Fused)?;
+        Some(FusedPhase {
+            dense_tps,
+            fused_tps,
+            dense_peak,
+            fused_cache_peak,
+            packed_resident,
+            budget: ln_budget,
+            tokens_match: fused_tokens == dense_tokens,
+        })
+    } else {
+        None
+    };
+
     let mut t = Table::new(
         &format!("gen-bench ({} backend)", session.backend_name()),
         &["source", "cold tok/s", "warm tok/s", "bounded tok/s", "bounded peak", "warm hits"],
@@ -914,6 +1016,19 @@ fn cmd_gen_bench(args: &Args) -> Result<()> {
         prompt_len,
         max_new
     );
+    if let Some(f) = &fused {
+        println!(
+            "fused (ln pocket): dense {:.0} tok/s vs fused {:.0} tok/s; fused resident \
+             {} KiB ({} cache + {} packed) vs dense peak {} KiB, budget {} KiB",
+            f.dense_tps,
+            f.fused_tps,
+            (f.fused_cache_peak + f.packed_resident) / 1024,
+            f.fused_cache_peak / 1024,
+            f.packed_resident / 1024,
+            f.dense_peak / 1024,
+            f.budget / 1024
+        );
+    }
 
     if let Some(path) = args.get("json") {
         let phase_obj = |p: &Phase| -> Json {
@@ -928,7 +1043,7 @@ fn cmd_gen_bench(args: &Args) -> Result<()> {
                 ("tokens_match_eager", num(if p.tokens_match { 1.0 } else { 0.0 })),
             ])
         };
-        let j = obj(vec![
+        let mut fields = vec![
             ("backend", s(session.backend_name())),
             ("model", s(probe.lm_cfg())),
             ("prompt_len", num(prompt_len as f64)),
@@ -938,7 +1053,26 @@ fn cmd_gen_bench(args: &Args) -> Result<()> {
             ("eager_tps", num(eager.tokens_per_sec())),
             ("mmap", phase_obj(&mmap)),
             ("http", phase_obj(&http)),
-        ]);
+        ];
+        if let Some(f) = &fused {
+            fields.push((
+                "fused",
+                obj(vec![
+                    ("dense_tok_s", num(f.dense_tps)),
+                    ("fused_tok_s", num(f.fused_tps)),
+                    ("dense_peak_resident_bytes", num(f.dense_peak as f64)),
+                    ("fused_cache_peak_bytes", num(f.fused_cache_peak as f64)),
+                    ("packed_resident_bytes", num(f.packed_resident as f64)),
+                    (
+                        "peak_resident_bytes",
+                        num((f.fused_cache_peak + f.packed_resident) as f64),
+                    ),
+                    ("bounded_budget_bytes", num(f.budget as f64)),
+                    ("tokens_match_dense", num(if f.tokens_match { 1.0 } else { 0.0 })),
+                ]),
+            ));
+        }
+        let j = obj(fields);
         pocketllm::util::benchlib::write_report(path, &j);
         println!("[gen-bench] wrote {path}");
     }
@@ -973,11 +1107,29 @@ fn cmd_gen_bench(args: &Args) -> Result<()> {
             "bounded budget {bounded_budget} is not sub-model-size \
              (decoded model {decoded_model})"
         );
+        if let Some(f) = &fused {
+            ensure!(
+                f.tokens_match,
+                "fused: token stream diverged from dense on the ln pocket"
+            );
+            let fused_peak = f.fused_cache_peak + f.packed_resident;
+            ensure!(
+                fused_peak < f.budget,
+                "fused: peak resident {fused_peak} bytes (cache + packed) is not \
+                 strictly below the two-layer dense budget {}",
+                f.budget
+            );
+        }
         println!(
             "[gen-bench] checks passed: identical token streams on every source, \
-             warm >= cold, peak resident <= bounded budget ({} KiB < model {} KiB)",
+             warm >= cold, peak resident <= bounded budget ({} KiB < model {} KiB){}",
             bounded_budget / 1024,
-            decoded_model / 1024
+            decoded_model / 1024,
+            if fused.is_some() {
+                "; fused tokens identical to dense, residency under the budget"
+            } else {
+                ""
+            }
         );
     }
     Ok(())
@@ -1113,7 +1265,11 @@ fn cmd_load_bench(args: &Args) -> Result<()> {
         let reader =
             Arc::new(PocketReader::from_bytes(buf.clone())?.with_cache_budget(bounded_budget));
         let provider = session.pocket_provider(reader)?;
-        let opts = GenEngineOpts { max_batch: c.min(max_batch).max(1), stream_capacity: 64 };
+        let opts = GenEngineOpts {
+            max_batch: c.min(max_batch).max(1),
+            stream_capacity: 64,
+            ..GenEngineOpts::default()
+        };
         let specs_ref = &specs;
         let ((results, elapsed), stats) = serve_generation(&provider, opts, |h| {
             let addr = h.addr();

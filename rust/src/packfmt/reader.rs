@@ -33,7 +33,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::job;
 use crate::error::Error;
@@ -79,6 +79,10 @@ pub struct ReaderStats {
     pub chunk_decodes: u64,
     /// Chunk requests answered from the cache.
     pub chunk_hits: u64,
+    /// Packed-record requests ([`PocketReader::packed_record`], the fused
+    /// index-GEMM setup path) answered from the reader's record memo —
+    /// i.e. without re-fetching or re-parsing the group section.
+    pub packed_hits: u64,
     /// Entropy-coded (POCKET03) sections fetched.  Zero for raw containers.
     pub coded_sections_read: u64,
     /// Stored (on-wire) bytes of those coded sections — what actually
@@ -125,9 +129,14 @@ pub struct PocketReader {
     dense_hits: AtomicU64,
     chunk_decodes: AtomicU64,
     chunk_hits: AtomicU64,
+    packed_hits: AtomicU64,
     coded_sections_read: AtomicU64,
     coded_bytes_read: AtomicU64,
     coded_raw_bytes: AtomicU64,
+    /// Memoized stored group records for the fused execution path: the
+    /// packed form (indices + codebook + decoder + scales) is fetched and
+    /// parsed once per group, then shared — never inflated to dense rows.
+    packed_memo: Mutex<BTreeMap<String, Arc<GroupRecord>>>,
 }
 
 impl PocketReader {
@@ -296,9 +305,11 @@ impl PocketReader {
             dense_hits: AtomicU64::new(0),
             chunk_decodes: AtomicU64::new(0),
             chunk_hits: AtomicU64::new(0),
+            packed_hits: AtomicU64::new(0),
             coded_sections_read: AtomicU64::new(0),
             coded_bytes_read: AtomicU64::new(0),
             coded_raw_bytes: AtomicU64::new(0),
+            packed_memo: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -365,9 +376,11 @@ impl PocketReader {
             dense_hits: AtomicU64::new(0),
             chunk_decodes: AtomicU64::new(0),
             chunk_hits: AtomicU64::new(0),
+            packed_hits: AtomicU64::new(0),
             coded_sections_read: AtomicU64::new(0),
             coded_bytes_read: AtomicU64::new(0),
             coded_raw_bytes: AtomicU64::new(0),
+            packed_memo: Mutex::new(BTreeMap::new()),
         })
     }
 
@@ -499,6 +512,7 @@ impl PocketReader {
             dense_hits: self.dense_hits.load(Ordering::Relaxed),
             chunk_decodes: self.chunk_decodes.load(Ordering::Relaxed),
             chunk_hits: self.chunk_hits.load(Ordering::Relaxed),
+            packed_hits: self.packed_hits.load(Ordering::Relaxed),
             coded_sections_read: self.coded_sections_read.load(Ordering::Relaxed),
             coded_bytes_read: self.coded_bytes_read.load(Ordering::Relaxed),
             coded_raw_bytes: self.coded_raw_bytes.load(Ordering::Relaxed),
@@ -562,6 +576,27 @@ impl PocketReader {
                 }
             }),
         }
+    }
+
+    /// [`PocketReader::group_record`] memoized for the fused index-GEMM
+    /// path: the stored record (bitpacked indices, codebook, decoder,
+    /// row scales) is fetched and parsed **once** per group and shared
+    /// behind an `Arc` — repeated resolutions (one per tensor per group)
+    /// never re-read the section and never inflate anything to dense
+    /// rows.  The memo lives outside the byte-budget [`DecodeCache`]: it
+    /// holds the *compressed* form, which is the whole point of executing
+    /// on the pocket, so it is not subject to dense-budget eviction.
+    pub fn packed_record(&self, group: &str) -> Result<Arc<GroupRecord>, Error> {
+        if let Some(rec) = self.packed_memo.lock().unwrap().get(group) {
+            self.packed_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(rec));
+        }
+        let rec = Arc::new(self.group_record(group)?);
+        let mut memo = self.packed_memo.lock().unwrap();
+        // two threads may race the fetch; keep the first insertion so every
+        // caller shares one allocation
+        let entry = memo.entry(group.to_string()).or_insert_with(|| Arc::clone(&rec));
+        Ok(Arc::clone(entry))
     }
 
     /// One dense residue tensor by name.  Lazy mode fetches and parses the
@@ -921,7 +956,7 @@ fn chunk_key(group: &str, row0: usize, rows: usize) -> String {
 /// allocating (the serve path resolves one of these per request).  Only the
 /// canonical spelling matches — `b01.wq` / `b+1.wq` are rejected, exactly
 /// like the historical `format!("b{b}.{t}")` comparison.
-fn split_block_name(name: &str) -> Option<(usize, &str)> {
+pub(crate) fn split_block_name(name: &str) -> Option<(usize, &str)> {
     let rest = name.strip_prefix('b')?;
     let (num, tname) = rest.split_once('.')?;
     let canonical = !num.is_empty()

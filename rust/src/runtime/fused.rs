@@ -1,0 +1,542 @@
+//! Fused index-GEMM: execute matmuls directly on the pocket.
+//!
+//! The pocket stores each weight-group row as `L` codeword indices plus a
+//! per-row `(mean, std)` pair.  The dense path reconstructs every row
+//! (decode + denormalize) before `x @ W`; this module instead decodes each
+//! of the `K` codewords through the meta-decoder **once per group** into a
+//! `[K, d]` table (`K*d*4` bytes — tens of KB, cache-resident) and executes
+//! the matmul as a gather-FMA over that table.  No dense `W` is ever
+//! materialized, so peak resident bytes follow the *stored* footprint
+//! (table + indices + scales), not the decompressed one.  DESIGN.md §14.
+//!
+//! This factoring is exact only for per-subvector normalization
+//! (`norm == "ln"`): a decoded subvector then depends on nothing but its
+//! codeword, so decode(c) can be shared across every site that references
+//! `c`.  Reshaped LayerNorm ("rln") normalizes across the whole row and
+//! couples subvectors — those groups fall back to the dense path
+//! ([`crate::runtime::weights::WeightProvider::resolve_packed`] returns
+//! `None`).
+//!
+//! ## Parity contract
+//!
+//! [`FusedAcc::Exact`] reproduces the dense pipeline bit-for-bit: the
+//! per-element reconstruction `w = t*sd + mu` uses `denormalize_rows`' op
+//! order, reduction rows run ascending, and the dense kernel's
+//! skip-on-zero activation short-circuit is replicated.  The parallel
+//! split (x-rows for GEMM, output subvector columns for GEMV) never
+//! reorders the adds that feed one output element, so parallelism does not
+//! perturb bits either.  The one measure-zero caveat: the codeword table
+//! is built by decoding with identity scales `(mu, sd) = (0, 1)`, which
+//! maps a decoded `-0.0` to `+0.0` (`-0.0 * 1.0 + 0.0 == +0.0`); a bit
+//! difference can only surface if an accumulator is exactly `±0.0`, and it
+//! never changes a comparison (greedy argmax included).
+//!
+//! [`FusedAcc::Partial`] and [`FusedAcc::F16`] are opt-in and
+//! *reassociate*: Partial factors the reduction per distinct codeword
+//! (`out = sum_c coeff[c] * table[c] + bias`), F16 rounds the accumulator
+//! to half precision after every add.  Both are covered by tolerance
+//! tests, not bit-parity.
+
+use std::sync::Arc;
+
+use crate::error::Error;
+use crate::util::bitpack::BitPacked;
+use crate::util::f16;
+use crate::util::threadpool::{default_workers, in_scoped_worker, scoped_map};
+
+/// Weight representation selector for the generation/forward paths.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WeightRepr {
+    /// Decode to dense f32 rows, then run the reference matmuls.
+    #[default]
+    Dense,
+    /// Run matmuls directly on the packed (table + index) form where the
+    /// provider can supply it; weights it cannot pack fall back to dense.
+    Fused,
+}
+
+impl WeightRepr {
+    pub fn parse(s: &str) -> Result<WeightRepr, Error> {
+        match s {
+            "dense" => Ok(WeightRepr::Dense),
+            "fused" => Ok(WeightRepr::Fused),
+            other => Err(Error::UnknownConfig { kind: "weight repr", name: other.to_string() }),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WeightRepr::Dense => "dense",
+            WeightRepr::Fused => "fused",
+        }
+    }
+}
+
+/// Accumulation policy of the fused kernel.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FusedAcc {
+    /// f32 accumulation in the dense kernel's exact operation order —
+    /// bit-identical to decode-then-matmul (modulo the `-0.0` caveat in
+    /// the module docs).
+    #[default]
+    Exact,
+    /// Per-codeword partial products: fold each activation into `L * K`
+    /// codeword coefficients plus one mean-bias term, then expand through
+    /// the table once per distinct codeword.  Reassociates the reduction;
+    /// wins when distinct codewords per column < reduction rows.
+    Partial,
+    /// Half-precision accumulators (rounded to f16 after every add) for
+    /// memory-bound tiles.  Documented tolerance, not bit parity.
+    F16,
+}
+
+/// Output-column tile of the fused kernels, in subvectors.  Keeps the out
+/// tile (`FUSED_LC * d * 4` bytes) plus the touched table rows hot while
+/// streaming the index rows linearly; the table itself is the real cache
+/// block (`K * d * 4` bytes, resident by construction).
+const FUSED_LC: usize = 256;
+
+/// Serial-below thresholds mirroring `reference::ops`: parallel fan-out
+/// only pays past ~4M MACs, and never nested inside a scoped worker.
+const PAR_MACS: usize = 1 << 22;
+const PAR_CAP: usize = 8;
+
+/// One weight group in execution form: the decoded-codeword table, the
+/// bitpacked indices of **all** rows in the group (authoritative compact
+/// form), and the per-row scales.  Shared (`Arc`) by every
+/// [`PackedMatmul`] sliced out of it, so the table is decoded and held
+/// once per group no matter how many layers reference it.
+pub struct PackedGroup {
+    /// Group name ("q", "down", ...) — diagnostics only.
+    pub name: String,
+    /// Subvector length d.
+    pub d: usize,
+    /// Subvectors per row (row width / d).
+    pub l: usize,
+    /// Codebook size K.
+    pub k: usize,
+    /// Total rows stored in the group (all blocks).
+    pub rows_total: usize,
+    /// Decoded codewords, `[K, d]` row-major.
+    pub table: Vec<f32>,
+    /// Bitpacked codeword indices, `rows_total * l` entries.
+    pub indices: BitPacked,
+    /// Per-row `(mean, std)` pairs, `2 * rows_total` floats.
+    pub row_scales: Vec<f32>,
+}
+
+impl PackedGroup {
+    pub fn new(
+        name: &str,
+        d: usize,
+        l: usize,
+        k: usize,
+        rows_total: usize,
+        table: Vec<f32>,
+        indices: BitPacked,
+        row_scales: Vec<f32>,
+    ) -> Result<PackedGroup, Error> {
+        let shape = |what: &str, expected: String, got: String| Error::ShapeMismatch {
+            what: format!("{what} for packed group {name}"),
+            expected,
+            got,
+        };
+        if table.len() != k * d {
+            let got = format!("{}", table.len());
+            return Err(shape("codeword table", format!("{} floats", k * d), got));
+        }
+        if indices.len() != rows_total * l {
+            return Err(shape(
+                "index stream",
+                format!("{} indices", rows_total * l),
+                format!("{}", indices.len()),
+            ));
+        }
+        if row_scales.len() != 2 * rows_total {
+            return Err(shape(
+                "row scales",
+                format!("{} floats", 2 * rows_total),
+                format!("{}", row_scales.len()),
+            ));
+        }
+        Ok(PackedGroup { name: name.to_string(), d, l, k, rows_total, table, indices, row_scales })
+    }
+
+    /// Row width of the group (output columns of each matmul).
+    pub fn width(&self) -> usize {
+        self.l * self.d
+    }
+
+    /// Bytes this group keeps resident while serving fused matmuls:
+    /// decoded table + bitpacked indices + row scales.  The per-tensor
+    /// unpacked index slices are accounted by [`PackedMatmul::resident_bytes`].
+    pub fn resident_bytes(&self) -> usize {
+        let index_bytes = (self.indices.payload_bits() as usize).div_ceil(8);
+        self.table.len() * 4 + index_bytes + self.row_scales.len() * 4
+    }
+
+    /// Slice one tensor's row range out of the group as an executable
+    /// matmul.  Unpacks that range's indices to `u32` once (gather-friendly
+    /// form); ranges of different tensors never overlap, so the unpacked
+    /// total across a model is `rows_total * l * 4` bytes per group.
+    pub fn slice(self: &Arc<Self>, row0: usize, rows: usize) -> Result<PackedMatmul, Error> {
+        if row0 + rows > self.rows_total {
+            return Err(Error::ShapeMismatch {
+                what: format!("row slice of packed group {}", self.name),
+                expected: format!("rows within 0..{}", self.rows_total),
+                got: format!("rows {row0}..{}", row0 + rows),
+            });
+        }
+        let idx = self.indices.unpack_range(row0 * self.l, rows * self.l);
+        for (i, &c) in idx.iter().enumerate() {
+            if c as usize >= self.k {
+                return Err(Error::ShapeMismatch {
+                    what: format!("codeword index in packed group {}", self.name),
+                    expected: format!("index < K={}", self.k),
+                    got: format!("{c} at flat position {}", row0 * self.l + i),
+                });
+            }
+        }
+        Ok(PackedMatmul { group: Arc::clone(self), row0, rows, idx })
+    }
+}
+
+/// One tensor (`b{N}.{name}`) of a packed group, ready to run `x @ W`
+/// without materializing `W`: `W[p, j] = table[idx[p, j/d]][j%d] * sd_p + mu_p`.
+pub struct PackedMatmul {
+    group: Arc<PackedGroup>,
+    row0: usize,
+    rows: usize,
+    /// Unpacked indices of this tensor's rows, `[rows, l]`.
+    idx: Vec<u32>,
+}
+
+impl PackedMatmul {
+    /// Reduction dimension (rows of the virtual dense `W`).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Output dimension (columns of the virtual dense `W`).
+    pub fn width(&self) -> usize {
+        self.group.width()
+    }
+
+    /// Bytes held beyond the shared group: the unpacked `u32` index slice.
+    pub fn resident_bytes(&self) -> usize {
+        self.idx.len() * 4
+    }
+
+    /// `x [m, rows] @ W [rows, width]` with bit-exact accumulation.
+    /// `k`/`n` are caller-side shape assertions against the dense call it
+    /// replaces.
+    pub fn matmul(&self, x: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        assert_eq!(k, self.rows, "fused matmul reduction dim mismatch ({})", self.group.name);
+        assert_eq!(n, self.width(), "fused matmul output dim mismatch ({})", self.group.name);
+        assert_eq!(x.len(), m * k, "fused matmul input len mismatch ({})", self.group.name);
+        self.matmul_with(x, m, FusedAcc::Exact)
+    }
+
+    /// Fused matmul with an explicit accumulation policy.
+    pub fn matmul_with(&self, x: &[f32], m: usize, acc: FusedAcc) -> Vec<f32> {
+        let n = self.width();
+        let l = self.group.l;
+        let d = self.group.d;
+        let macs = m * self.rows * n;
+        let workers = default_workers(PAR_CAP);
+        if workers <= 1 || macs < PAR_MACS || in_scoped_worker() {
+            return self.gemm_rows(x, 0, m, acc);
+        }
+        if m >= 2 {
+            // GEMM: fan out over x-rows; each output element stays with one
+            // worker, so the add order per element is the serial order.
+            let ranges = chunk_ranges(m, workers);
+            let parts =
+                scoped_map(workers, ranges.clone(), |(r0, r1)| self.gemm_rows(x, r0, r1, acc));
+            let mut out = vec![0.0f32; m * n];
+            for ((r0, r1), part) in ranges.into_iter().zip(parts) {
+                out[r0 * n..r1 * n].copy_from_slice(&part);
+            }
+            out
+        } else {
+            // GEMV: the dense kernel runs single-row matmuls serially, but
+            // the fused form can fan out over *output subvector columns* —
+            // each worker owns a disjoint column range and still walks the
+            // reduction rows ascending, so every output element sees the
+            // identical add sequence.
+            let ranges = chunk_ranges(l, workers);
+            let parts = scoped_map(workers, ranges.clone(), |(l0, l1)| {
+                let mut part = vec![0.0f32; (l1 - l0) * d];
+                self.accumulate_row(&x[..self.rows], l0, l1, &mut part, acc);
+                part
+            });
+            let mut out = vec![0.0f32; n];
+            for ((l0, l1), part) in ranges.into_iter().zip(parts) {
+                out[l0 * d..l1 * d].copy_from_slice(&part);
+            }
+            out
+        }
+    }
+
+    /// x-rows `r0..r1`, all output columns, tiled over subvector columns.
+    fn gemm_rows(&self, x: &[f32], r0: usize, r1: usize, acc: FusedAcc) -> Vec<f32> {
+        let n = self.width();
+        let l = self.group.l;
+        let d = self.group.d;
+        let mut out = vec![0.0f32; (r1 - r0) * n];
+        for i in r0..r1 {
+            let xrow = &x[i * self.rows..(i + 1) * self.rows];
+            let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            let mut lb = 0usize;
+            while lb < l {
+                let le = (lb + FUSED_LC).min(l);
+                self.accumulate_row(xrow, lb, le, &mut orow[lb * d..le * d], acc);
+                lb = le;
+            }
+        }
+        out
+    }
+
+    /// Accumulate one x-row against subvector columns `l0..l1` into `out`
+    /// (`(l1-l0)*d` zero-initialized floats).
+    fn accumulate_row(&self, xrow: &[f32], l0: usize, l1: usize, out: &mut [f32], acc: FusedAcc) {
+        match acc {
+            FusedAcc::Exact => self.acc_exact(xrow, l0, l1, out),
+            FusedAcc::Partial => self.acc_partial(xrow, l0, l1, out),
+            FusedAcc::F16 => self.acc_f16(xrow, l0, l1, out),
+        }
+    }
+
+    fn acc_exact(&self, xrow: &[f32], l0: usize, l1: usize, out: &mut [f32]) {
+        let g = &*self.group;
+        let d = g.d;
+        for p in 0..self.rows {
+            let av = xrow[p];
+            if av == 0.0 {
+                continue;
+            }
+            let sp = 2 * (self.row0 + p);
+            let mu = g.row_scales[sp];
+            let sd = g.row_scales[sp + 1];
+            let irow = &self.idx[p * g.l + l0..p * g.l + l1];
+            for (bi, &c) in irow.iter().enumerate() {
+                let cw = &g.table[c as usize * d..(c as usize + 1) * d];
+                let dst = &mut out[bi * d..(bi + 1) * d];
+                for (o, &tv) in dst.iter_mut().zip(cw) {
+                    // denormalize op order (t*sd + mu), then the dense
+                    // kernel's mul-add — the exact dense f32 sequence.
+                    *o += av * (tv * sd + mu);
+                }
+            }
+        }
+    }
+
+    fn acc_partial(&self, xrow: &[f32], l0: usize, l1: usize, out: &mut [f32]) {
+        let g = &*self.group;
+        let d = g.d;
+        let k = g.k;
+        let lw = l1 - l0;
+        // Fold the reduction into per-(column, codeword) coefficients plus
+        // one shared mean bias: W[p,j] = t*sd_p + mu_p, so
+        //   out[li*d+e] = sum_c coeff[li][c] * table[c][e] + bias,
+        //   coeff[li][c] = sum_{p: idx[p,li]=c} x_p * sd_p,
+        //   bias = sum_p x_p * mu_p.
+        let mut coeff = vec![0.0f32; lw * k];
+        let mut bias = 0.0f32;
+        for p in 0..self.rows {
+            let av = xrow[p];
+            if av == 0.0 {
+                continue;
+            }
+            let sp = 2 * (self.row0 + p);
+            bias += av * g.row_scales[sp];
+            let avs = av * g.row_scales[sp + 1];
+            let irow = &self.idx[p * g.l + l0..p * g.l + l1];
+            for (bi, &c) in irow.iter().enumerate() {
+                coeff[bi * k + c as usize] += avs;
+            }
+        }
+        for o in out.iter_mut() {
+            *o += bias;
+        }
+        for bi in 0..lw {
+            let crow = &coeff[bi * k..(bi + 1) * k];
+            let dst = &mut out[bi * d..(bi + 1) * d];
+            for (c, &cf) in crow.iter().enumerate() {
+                if cf == 0.0 {
+                    continue;
+                }
+                let cw = &g.table[c * d..(c + 1) * d];
+                for (o, &tv) in dst.iter_mut().zip(cw) {
+                    *o += cf * tv;
+                }
+            }
+        }
+    }
+
+    fn acc_f16(&self, xrow: &[f32], l0: usize, l1: usize, out: &mut [f32]) {
+        let g = &*self.group;
+        let d = g.d;
+        for p in 0..self.rows {
+            let av = xrow[p];
+            if av == 0.0 {
+                continue;
+            }
+            let sp = 2 * (self.row0 + p);
+            let mu = g.row_scales[sp];
+            let sd = g.row_scales[sp + 1];
+            let irow = &self.idx[p * g.l + l0..p * g.l + l1];
+            for (bi, &c) in irow.iter().enumerate() {
+                let cw = &g.table[c as usize * d..(c as usize + 1) * d];
+                let dst = &mut out[bi * d..(bi + 1) * d];
+                for (o, &tv) in dst.iter_mut().zip(cw) {
+                    let v = *o + av * (tv * sd + mu);
+                    *o = f16::f16_bits_to_f32(f16::f32_to_f16_bits(v));
+                }
+            }
+        }
+    }
+}
+
+/// Split `0..count` into at most `parts` contiguous ranges.
+fn chunk_ranges(count: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.min(count).max(1);
+    let step = count.div_ceil(parts);
+    let mut out = Vec::new();
+    let mut a = 0usize;
+    while a < count {
+        let b = (a + step).min(count);
+        out.push((a, b));
+        a = b;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::reference::ops;
+
+    fn seeded(seed: u64) -> impl FnMut() -> f32 {
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+        move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        }
+    }
+
+    /// Build a random group plus the dense W it represents, reconstructed
+    /// through the same op order as `decode_group_rows` + `denormalize_rows`.
+    fn random_group(
+        d: usize,
+        l: usize,
+        k: usize,
+        rows_total: usize,
+        seed: u64,
+    ) -> (Arc<PackedGroup>, Vec<f32>) {
+        let mut rnd = seeded(seed);
+        let table: Vec<f32> = (0..k * d).map(|_| rnd()).collect();
+        let mut rs = seeded(seed ^ 0xabcd);
+        let row_scales: Vec<f32> = (0..2 * rows_total)
+            .map(|i| if i % 2 == 0 { rs() } else { rs().abs() + 0.25 })
+            .collect();
+        let mut ri = seeded(seed ^ 0x5a5a);
+        let raw: Vec<u32> = (0..rows_total * l)
+            .map(|_| ((ri().abs() * 4.0 * k as f32) as u32) % k as u32)
+            .collect();
+        let bits = 32 - (k as u32 - 1).leading_zeros();
+        let indices = BitPacked::pack(&raw, bits.max(1));
+        let group = Arc::new(
+            PackedGroup::new("t", d, l, k, rows_total, table.clone(), indices, row_scales.clone())
+                .unwrap(),
+        );
+        let mut dense = vec![0.0f32; rows_total * l * d];
+        for p in 0..rows_total {
+            let mu = row_scales[2 * p];
+            let sd = row_scales[2 * p + 1];
+            for li in 0..l {
+                let c = raw[p * l + li] as usize;
+                for e in 0..d {
+                    let v = table[c * d + e];
+                    dense[p * l * d + li * d + e] = v * sd + mu;
+                }
+            }
+        }
+        (group, dense)
+    }
+
+    #[test]
+    fn exact_matches_dense_bitwise_gemm_and_gemv() {
+        let (d, l, k, rows_total) = (8, 6, 17, 40);
+        let (group, dense) = random_group(d, l, k, rows_total, 7);
+        let (row0, rows) = (8, 24);
+        let pm = group.slice(row0, rows).unwrap();
+        let wslice = &dense[row0 * l * d..(row0 + rows) * l * d];
+        let mut rnd = seeded(99);
+        for m in [1usize, 5] {
+            let mut x: Vec<f32> = (0..m * rows).map(|_| rnd()).collect();
+            // exercise the zero-skip branch
+            for v in x.iter_mut().step_by(7) {
+                *v = 0.0;
+            }
+            let want = ops::matmul(&x, wslice, m, rows, l * d);
+            let got = pm.matmul(&x, m, rows, l * d);
+            assert_eq!(want, got, "m={m}");
+        }
+    }
+
+    #[test]
+    fn gemv_column_split_is_bit_identical_to_serial() {
+        let (d, l, k, rows_total) = (4, 9, 12, 16);
+        let (group, _) = random_group(d, l, k, rows_total, 3);
+        let pm = group.slice(0, rows_total).unwrap();
+        let mut rnd = seeded(17);
+        let x: Vec<f32> = (0..rows_total).map(|_| rnd()).collect();
+        let serial = pm.gemm_rows(&x, 0, 1, FusedAcc::Exact);
+        // emulate the column-parallel split with explicit ranges
+        let mut split = vec![0.0f32; l * d];
+        for (l0, l1) in chunk_ranges(l, 4) {
+            let mut part = vec![0.0f32; (l1 - l0) * d];
+            pm.accumulate_row(&x, l0, l1, &mut part, FusedAcc::Exact);
+            split[l0 * d..l1 * d].copy_from_slice(&part);
+        }
+        assert_eq!(serial, split);
+    }
+
+    #[test]
+    fn partial_and_f16_are_within_tolerance() {
+        let (d, l, k, rows_total) = (8, 4, 9, 64);
+        let (group, dense) = random_group(d, l, k, rows_total, 21);
+        let pm = group.slice(0, rows_total).unwrap();
+        let mut rnd = seeded(5);
+        let x: Vec<f32> = (0..rows_total).map(|_| rnd()).collect();
+        let want = ops::matmul(&x, &dense, 1, rows_total, l * d);
+        let scale: f32 = want.iter().fold(1.0f32, |a, &v| a.max(v.abs()));
+        let partial = pm.matmul_with(&x, 1, FusedAcc::Partial);
+        for (w, p) in want.iter().zip(&partial) {
+            assert!((w - p).abs() <= 1e-4 * scale, "partial: {w} vs {p}");
+        }
+        let half = pm.matmul_with(&x, 1, FusedAcc::F16);
+        for (w, p) in want.iter().zip(&half) {
+            assert!((w - p).abs() <= 5e-2 * scale, "f16: {w} vs {p}");
+        }
+    }
+
+    #[test]
+    fn slice_rejects_out_of_range_and_bad_indices() {
+        let (group, _) = random_group(4, 2, 8, 8, 1);
+        let err = group.slice(4, 8).unwrap_err();
+        assert!(matches!(err, Error::ShapeMismatch { .. }), "{err}");
+        // a codeword index >= K (here 9 with K=8) is caught at slice time
+        let packed = BitPacked::pack(&[0, 1, 9, 3], 4);
+        let bad = Arc::new(
+            PackedGroup::new("bad", 4, 2, 8, 2, vec![0.0; 32], packed, vec![0.0; 4]).unwrap(),
+        );
+        let err = bad.slice(0, 2).unwrap_err();
+        assert!(matches!(err, Error::ShapeMismatch { .. }), "{err}");
+        assert!(WeightRepr::parse("fused").is_ok());
+        assert!(WeightRepr::parse("sparse").is_err());
+    }
+}

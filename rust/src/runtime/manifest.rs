@@ -403,7 +403,11 @@ impl Manifest {
         for k in [256usize, 4096, 16384] {
             add(&mut meta, builtin_meta(512, 8, k, 3, "rln"));
         }
+        // the "ln" (per-subvector) decoders also back the fused index-GEMM
+        // path (runtime::fused): only a per-subvector decoder factors into a
+        // per-codeword table, so both tiny group widths get one
         add(&mut meta, builtin_meta(512, 8, 1024, 3, "ln"));
+        add(&mut meta, builtin_meta(256, 8, 1024, 3, "ln"));
 
         let hp = HyperParams {
             adam_b1: 0.9,
@@ -581,8 +585,11 @@ mod tests {
         let linear: usize = tiny.groups.values().map(|g| g.params).sum();
         assert_eq!(linear, tiny.n_layers * (4 * 256 * 256 + 3 * 256 * 512));
         // full grid: 2 widths x 4 presets (8) + 2 widths x 2 presets (4)
-        // + 3 extra depths + 3 extra codebook sizes + 1 ln variant
-        assert_eq!(m.meta.len(), 19);
+        // + 3 extra depths + 3 extra codebook sizes + 2 ln variants
+        assert_eq!(m.meta.len(), 20);
+        // the per-subvector decoders that back the fused index-GEMM path
+        assert_eq!(m.meta_cfg("w512_d8_k1024_m3_ln").unwrap().norm, "ln");
+        assert_eq!(m.meta_cfg("w256_d8_k1024_m3_ln").unwrap().norm, "ln");
     }
 
     #[test]

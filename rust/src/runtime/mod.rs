@@ -16,6 +16,7 @@
 //! shapes (reference) on every call, so drift fails with a clear error
 //! instead of silent corruption.
 
+pub mod fused;
 pub mod manifest;
 pub mod pjrt;
 pub mod reference;

@@ -16,12 +16,15 @@
 //! [`gen_step`]) — so a pocket-backed provider streams one layer at a time
 //! instead of materializing the model.
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Context, Result};
 
 use super::ops::{
     adam_update, matmul, matmul_nt, matmul_tn, silu, silu_grad, softmax_row,
 };
 use super::{f32_arg, i32_arg, scalar_arg, scalar_out};
+use crate::runtime::fused::{PackedMatmul, WeightRepr};
 use crate::runtime::manifest::{HyperParams, Layout, LmCfg};
 use crate::runtime::weights::{WeightProvider, WeightView};
 use crate::runtime::{Arg, Out};
@@ -252,19 +255,40 @@ struct Forward {
     rf: Vec<f32>,
 }
 
+/// One matmul weight in whichever representation resolution produced:
+/// dense rows, or the pocket's packed (table + index) execution form.
+/// Either way `mm` computes the same `x [m,k] @ W [k,n]` — the fused
+/// kernel's exact accumulation mode is bit-identical to the dense one
+/// (see `runtime::fused`), so downstream math cannot tell them apart.
+enum MatRef<'a> {
+    Dense(&'a [f32]),
+    Fused(&'a PackedMatmul),
+}
+
+impl MatRef<'_> {
+    fn mm(&self, x: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        match self {
+            MatRef::Dense(w) => matmul(x, w, m, k, n),
+            MatRef::Fused(pm) => pm.matmul(x, m, k, n),
+        }
+    }
+}
+
 /// Borrowed weight slices of one transformer block, in forward order.  The
 /// flat train/eval path and the provider-backed streaming path both lower
 /// to this before touching the math, so the numerics cannot diverge.
+/// Matmul weights are [`MatRef`]s — dense slices on the flat path, dense
+/// *or* packed on the provider path.
 struct BlockWeights<'a> {
     norm1: &'a [f32],
-    wq: &'a [f32],
-    wk: &'a [f32],
-    wv: &'a [f32],
-    wo: &'a [f32],
+    wq: MatRef<'a>,
+    wk: MatRef<'a>,
+    wv: MatRef<'a>,
+    wo: MatRef<'a>,
     norm2: &'a [f32],
-    wgate: &'a [f32],
-    wup: &'a [f32],
-    wdown: &'a [f32],
+    wgate: MatRef<'a>,
+    wup: MatRef<'a>,
+    wdown: MatRef<'a>,
 }
 
 /// Block `b`'s weights sliced out of a flat parameter vector.
@@ -272,15 +296,32 @@ fn block_weights<'a>(lay: &Layout, flat: &'a [f32], b: usize) -> Result<BlockWei
     let pre = format!("b{b}.");
     Ok(BlockWeights {
         norm1: lay.slice(flat, &format!("{pre}norm1"))?,
-        wq: lay.slice(flat, &format!("{pre}wq"))?,
-        wk: lay.slice(flat, &format!("{pre}wk"))?,
-        wv: lay.slice(flat, &format!("{pre}wv"))?,
-        wo: lay.slice(flat, &format!("{pre}wo"))?,
+        wq: MatRef::Dense(lay.slice(flat, &format!("{pre}wq"))?),
+        wk: MatRef::Dense(lay.slice(flat, &format!("{pre}wk"))?),
+        wv: MatRef::Dense(lay.slice(flat, &format!("{pre}wv"))?),
+        wo: MatRef::Dense(lay.slice(flat, &format!("{pre}wo"))?),
         norm2: lay.slice(flat, &format!("{pre}norm2"))?,
-        wgate: lay.slice(flat, &format!("{pre}wgate"))?,
-        wup: lay.slice(flat, &format!("{pre}wup"))?,
-        wdown: lay.slice(flat, &format!("{pre}wdown"))?,
+        wgate: MatRef::Dense(lay.slice(flat, &format!("{pre}wgate"))?),
+        wup: MatRef::Dense(lay.slice(flat, &format!("{pre}wup"))?),
+        wdown: MatRef::Dense(lay.slice(flat, &format!("{pre}wdown"))?),
     })
+}
+
+/// One resolved matmul weight owned by a [`BlockViews`]: a dense view, or
+/// a shared packed form (the provider memoizes it, so this clone is a
+/// pointer bump — no dense rows were ever decoded for it).
+enum MatView {
+    Dense(WeightView),
+    Fused(Arc<PackedMatmul>),
+}
+
+impl MatView {
+    fn as_ref(&self) -> MatRef<'_> {
+        match self {
+            MatView::Dense(v) => MatRef::Dense(v.as_slice()),
+            MatView::Fused(pm) => MatRef::Fused(pm),
+        }
+    }
 }
 
 /// Block `b`'s weights resolved through a provider.  The views are owned
@@ -289,28 +330,46 @@ fn block_weights<'a>(lay: &Layout, flat: &'a [f32], b: usize) -> Result<BlockWei
 /// release (evict) a layer as soon as the next one starts.
 struct BlockViews {
     norm1: WeightView,
-    wq: WeightView,
-    wk: WeightView,
-    wv: WeightView,
-    wo: WeightView,
+    wq: MatView,
+    wk: MatView,
+    wv: MatView,
+    wo: MatView,
     norm2: WeightView,
-    wgate: WeightView,
-    wup: WeightView,
-    wdown: WeightView,
+    wgate: MatView,
+    wup: MatView,
+    wdown: MatView,
 }
 
-fn load_block(provider: &dyn WeightProvider, b: usize) -> Result<BlockViews> {
+/// Resolve block `b`'s views with a representation selector.  Under
+/// [`WeightRepr::Fused`] each matmul weight first asks the provider for
+/// its packed form; weights the provider cannot pack (dense residue,
+/// non-separable meta configs, providers without a pocket) resolve dense
+/// exactly as before — per-weight fallback, not per-block, so a mixed
+/// container still avoids dense rows wherever it can.
+fn load_block_repr(
+    provider: &dyn WeightProvider,
+    b: usize,
+    repr: WeightRepr,
+) -> Result<BlockViews> {
     let get = |t: &str| provider.tensor(&format!("b{b}.{t}"));
+    let mat = |t: &str| -> Result<MatView> {
+        if repr == WeightRepr::Fused {
+            if let Some(pm) = provider.resolve_packed(&format!("b{b}.{t}"))? {
+                return Ok(MatView::Fused(pm));
+            }
+        }
+        Ok(MatView::Dense(get(t)?))
+    };
     Ok(BlockViews {
         norm1: get("norm1")?,
-        wq: get("wq")?,
-        wk: get("wk")?,
-        wv: get("wv")?,
-        wo: get("wo")?,
+        wq: mat("wq")?,
+        wk: mat("wk")?,
+        wv: mat("wv")?,
+        wo: mat("wo")?,
         norm2: get("norm2")?,
-        wgate: get("wgate")?,
-        wup: get("wup")?,
-        wdown: get("wdown")?,
+        wgate: mat("wgate")?,
+        wup: mat("wup")?,
+        wdown: mat("wdown")?,
     })
 }
 
@@ -318,14 +377,14 @@ impl BlockViews {
     fn weights(&self) -> BlockWeights<'_> {
         BlockWeights {
             norm1: self.norm1.as_slice(),
-            wq: self.wq.as_slice(),
-            wk: self.wk.as_slice(),
-            wv: self.wv.as_slice(),
-            wo: self.wo.as_slice(),
+            wq: self.wq.as_ref(),
+            wk: self.wk.as_ref(),
+            wv: self.wv.as_ref(),
+            wo: self.wo.as_ref(),
             norm2: self.norm2.as_slice(),
-            wgate: self.wgate.as_slice(),
-            wup: self.wup.as_slice(),
-            wdown: self.wdown.as_slice(),
+            wgate: self.wgate.as_ref(),
+            wup: self.wup.as_ref(),
+            wdown: self.wdown.as_ref(),
         }
     }
 }
@@ -380,9 +439,9 @@ fn block_forward(
 
     let s1 = scale1p(w.norm1);
     let (x1, r1) = rmsnorm_fwd(&h, &s1, bs, d);
-    let qf = matmul(&x1, w.wq, bs, d, d);
-    let kf = matmul(&x1, w.wk, bs, d, d);
-    let vf = matmul(&x1, w.wv, bs, d, d);
+    let qf = w.wq.mm(&x1, bs, d, d);
+    let kf = w.wk.mm(&x1, bs, d, d);
+    let vf = w.wv.mm(&x1, bs, d, d);
     let q = to_heads(&qf, bsz, s, nh, hd);
     let k = to_heads(&kf, bsz, s, nh, hd);
     let v = to_heads(&vf, bsz, s, nh, hd);
@@ -399,7 +458,7 @@ fn block_forward(
         o_heads[pi * s * hd..(pi + 1) * s * hd].copy_from_slice(&o_p);
     }
     let o = from_heads(&o_heads, bsz, s, nh, hd);
-    let attn_out = matmul(&o, w.wo, bs, d, d);
+    let attn_out = w.wo.mm(&o, bs, d, d);
     // the residual inputs are only kept for the backward pass; inference
     // paths (want_cache false) update the hidden state in place instead
     let h_in = want_cache.then(|| h.clone());
@@ -410,13 +469,13 @@ fn block_forward(
 
     let s2 = scale1p(w.norm2);
     let (x2, r2) = rmsnorm_fwd(&h_mid, &s2, bs, d);
-    let gt = matmul(&x2, w.wgate, bs, d, ffh);
-    let u = matmul(&x2, w.wup, bs, d, ffh);
+    let gt = w.wgate.mm(&x2, bs, d, ffh);
+    let u = w.wup.mm(&x2, bs, d, ffh);
     let mut mm = vec![0.0f32; bs * ffh];
     for ((m, &g), &uv) in mm.iter_mut().zip(&gt).zip(&u) {
         *m = silu(g) * uv;
     }
-    let ff = matmul(&mm, w.wdown, bs, ffh, d);
+    let ff = w.wdown.mm(&mm, bs, ffh, d);
     let h_mid_saved = want_cache.then(|| h_mid.clone());
     let mut h_next = h_mid;
     for (hn, &f) in h_next.iter_mut().zip(&ff) {
@@ -485,6 +544,20 @@ pub fn forward_logits(
     bsz: usize,
     s: usize,
 ) -> Result<Vec<f32>> {
+    forward_logits_repr(provider, inp, bsz, s, WeightRepr::Dense)
+}
+
+/// [`forward_logits`] with a weight-representation selector.  Under
+/// [`WeightRepr::Fused`] the per-block matmuls run directly on the packed
+/// form wherever the provider supplies one; the exact fused accumulation
+/// keeps the logits bit-identical to the dense path.
+pub fn forward_logits_repr(
+    provider: &dyn WeightProvider,
+    inp: &[i32],
+    bsz: usize,
+    s: usize,
+    repr: WeightRepr,
+) -> Result<Vec<f32>> {
     let cfg = provider.cfg();
     ensure!(
         (1..=cfg.seq_len).contains(&s),
@@ -501,7 +574,7 @@ pub fn forward_logits(
 
     let workers = attn_workers();
     for b in 0..cfg.n_layers {
-        let views = load_block(provider, b)?;
+        let views = load_block_repr(provider, b, repr)?;
         let (h_next, _) = block_forward(cfg, &views.weights(), h, bsz, s, workers, false);
         h = h_next;
     }
@@ -602,11 +675,23 @@ pub fn gen_step(
     Ok(rows.pop().expect("one lane in, one logits row out"))
 }
 
+/// [`gen_step`] with a weight-representation selector.
+pub fn gen_step_repr(
+    provider: &dyn WeightProvider,
+    st: &mut GenState,
+    token: i32,
+    layer_hook: impl FnMut(usize),
+    repr: WeightRepr,
+) -> Result<Vec<f32>> {
+    let mut rows = gen_step_batch_repr(provider, &mut [st], &[token], layer_hook, repr)?;
+    Ok(rows.pop().expect("one lane in, one logits row out"))
+}
+
 /// Batched KV-cached decode: advance every lane in `states` by one token
 /// and return one `[V]` logits row per lane.
 ///
 /// This is the continuous-batching amortization step: each block's weights
-/// are resolved **once** per call (one `load_block` — on a pocket provider
+/// are resolved **once** per call (one block load — on a pocket provider
 /// one bounded chunk decode) and every lane's forward runs against the
 /// shared views.  Lanes may sit at *different* positions: each owns its KV
 /// cache and hidden state, and the per-lane math is exactly the single-lane
@@ -621,7 +706,21 @@ pub fn gen_step_batch(
     provider: &dyn WeightProvider,
     states: &mut [&mut GenState],
     tokens: &[i32],
+    layer_hook: impl FnMut(usize),
+) -> Result<Vec<Vec<f32>>> {
+    gen_step_batch_repr(provider, states, tokens, layer_hook, WeightRepr::Dense)
+}
+
+/// [`gen_step_batch`] with a weight-representation selector: under
+/// [`WeightRepr::Fused`] each block's matmul weights resolve to their
+/// packed form once per call and every lane's GEMVs gather straight off
+/// the codeword table — same math, same bits, no dense rows.
+pub fn gen_step_batch_repr(
+    provider: &dyn WeightProvider,
+    states: &mut [&mut GenState],
+    tokens: &[i32],
     mut layer_hook: impl FnMut(usize),
+    repr: WeightRepr,
 ) -> Result<Vec<Vec<f32>>> {
     let cfg = provider.cfg();
     let d = cfg.d_model;
@@ -674,15 +773,15 @@ pub fn gen_step_batch(
 
     for b in 0..cfg.n_layers {
         layer_hook(b);
-        let views = load_block(provider, b)?;
+        let views = load_block_repr(provider, b, repr)?;
         let w = views.weights();
         for (st, h) in states.iter_mut().zip(hs.iter_mut()) {
             let p = st.pos;
             let s1 = scale1p(w.norm1);
             let (x1, _) = rmsnorm_fwd(h.as_slice(), &s1, 1, d);
-            let qf = matmul(&x1, w.wq, 1, d, d);
-            let kf = matmul(&x1, w.wk, 1, d, d);
-            let vf = matmul(&x1, w.wv, 1, d, d);
+            let qf = w.wq.mm(&x1, 1, d, d);
+            let kf = w.wk.mm(&x1, 1, d, d);
+            let vf = w.wv.mm(&x1, 1, d, d);
             let kl = &mut st.k[b];
             let vl = &mut st.v[b];
             for hh in 0..nh {
@@ -715,7 +814,7 @@ pub fn gen_step_batch(
                     }
                 }
             }
-            let attn_out = matmul(&o, w.wo, 1, d, d);
+            let attn_out = w.wo.mm(&o, 1, d, d);
             let mut h_mid = std::mem::take(h);
             for (hm, &a) in h_mid.iter_mut().zip(&attn_out) {
                 *hm += a;
@@ -723,13 +822,13 @@ pub fn gen_step_batch(
 
             let s2 = scale1p(w.norm2);
             let (x2, _) = rmsnorm_fwd(&h_mid, &s2, 1, d);
-            let gt = matmul(&x2, w.wgate, 1, d, ffh);
-            let u = matmul(&x2, w.wup, 1, d, ffh);
+            let gt = w.wgate.mm(&x2, 1, d, ffh);
+            let u = w.wup.mm(&x2, 1, d, ffh);
             let mut mm = vec![0.0f32; ffh];
             for ((m, &g), &uv) in mm.iter_mut().zip(&gt).zip(&u) {
                 *m = silu(g) * uv;
             }
-            let ff = matmul(&mm, w.wdown, 1, ffh, d);
+            let ff = w.wdown.mm(&mm, 1, ffh, d);
             let mut h_next = h_mid;
             for (hn, &f) in h_next.iter_mut().zip(&ff) {
                 *hn += f;

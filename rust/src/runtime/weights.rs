@@ -26,9 +26,12 @@ use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::{Arc, Mutex};
 
+use crate::coordinator::job;
 use crate::error::Error;
 use crate::model::WeightStore;
+use crate::packfmt::reader::split_block_name;
 use crate::packfmt::PocketReader;
+use crate::runtime::fused::{PackedGroup, PackedMatmul, WeightRepr};
 use crate::runtime::manifest::LmCfg;
 use crate::runtime::Runtime;
 use crate::tensor::TensorF32;
@@ -97,12 +100,34 @@ pub trait WeightProvider: Send + Sync {
     /// `cfg().layout.find(name).size` values.
     fn tensor(&self, name: &str) -> Result<WeightView, Error>;
 
+    /// Resolve one matmul weight (`"b3.wq"`, ...) in its **packed**
+    /// execution form — a [`PackedMatmul`] running `x @ W` directly on the
+    /// pocket's (table, indices, scales) without materializing dense rows.
+    /// `Ok(None)` means "serve this one dense": the default for providers
+    /// without a packed form, for dense residue tensors, and for groups
+    /// whose meta config couples subvectors across the row
+    /// (`norm != "ln"`, where the per-codeword factoring is not exact).
+    fn resolve_packed(&self, name: &str) -> Result<Option<Arc<PackedMatmul>>, Error> {
+        let _ = name;
+        Ok(None)
+    }
+
     /// Advisory: warm whatever layer `layer` will need soon (decode its
     /// group chunks into the cache).  Called from a helper thread by the
     /// generation engine; errors are deferred to the on-demand
     /// [`WeightProvider::tensor`] call.  Default: no-op.
     fn prefetch_layer(&self, layer: usize) {
         let _ = layer;
+    }
+
+    /// Representation-aware prefetch: under [`WeightRepr::Fused`] a
+    /// provider should warm the *packed* form (indices + decoded-codeword
+    /// table) instead of decoding dense chunks.  Default: dense prefetch —
+    /// correct for providers whose [`WeightProvider::resolve_packed`]
+    /// always falls back to dense views.
+    fn prefetch_layer_repr(&self, layer: usize, repr: WeightRepr) {
+        let _ = repr;
+        self.prefetch_layer(layer);
     }
 
     /// Whether spawning a prefetch helper thread is worthwhile (i.e.
@@ -167,6 +192,14 @@ pub struct PocketProvider<'rt> {
     /// memoize those here.  Lazy readers serve dense sections straight from
     /// the shared cache, so residency stays accounted under the budget.
     dense_memo: Mutex<HashMap<String, Arc<TensorF32>>>,
+    /// Packed execution form per group: the decoded-codeword table +
+    /// compact indices + scales, built once per group.  `None` caches the
+    /// negative answer for groups that cannot be packed (`norm != "ln"`).
+    packed_groups: Mutex<HashMap<String, Option<Arc<PackedGroup>>>>,
+    /// Packed per-tensor slices (`"b3.wq"` -> its row range of the group),
+    /// memoized so the u32 index unpack happens once per tensor.  `None`
+    /// caches tensors that must be served dense.
+    packed_tensors: Mutex<HashMap<String, Option<Arc<PackedMatmul>>>>,
 }
 
 impl<'rt> PocketProvider<'rt> {
@@ -181,12 +214,102 @@ impl<'rt> PocketProvider<'rt> {
                 name: reader.lm_cfg().to_string(),
             })?
             .clone();
-        Ok(PocketProvider { rt, cfg, reader, dense_memo: Mutex::new(HashMap::new()) })
+        Ok(PocketProvider {
+            rt,
+            cfg,
+            reader,
+            dense_memo: Mutex::new(HashMap::new()),
+            packed_groups: Mutex::new(HashMap::new()),
+            packed_tensors: Mutex::new(HashMap::new()),
+        })
     }
 
     /// The reader behind this provider (counter snapshots, cache handle).
     pub fn reader(&self) -> &Arc<PocketReader> {
         &self.reader
+    }
+
+    /// Bytes the fused execution form keeps resident right now: every
+    /// built group's decoded-codeword table + bitpacked indices + row
+    /// scales, plus every resolved tensor's unpacked `u32` index slice.
+    /// This — plus whatever dense residue sits in the reader's cache — is
+    /// the whole weight footprint of fused generation; compare it with the
+    /// dense two-layer streaming budget (`gen-bench` does, see DESIGN.md
+    /// §14).
+    pub fn packed_resident_bytes(&self) -> u64 {
+        let groups = self.packed_groups.lock().unwrap();
+        let mut total: u64 =
+            groups.values().flatten().map(|pg| pg.resident_bytes() as u64).sum();
+        drop(groups);
+        let tensors = self.packed_tensors.lock().unwrap();
+        total += tensors.values().flatten().map(|pm| pm.resident_bytes() as u64).sum::<u64>();
+        total
+    }
+
+    /// The packed form of one group, built on first use: fetch the stored
+    /// record (never inflated to dense), run each of the K codewords
+    /// through the meta-decoder once, and keep (table, indices, scales)
+    /// behind an `Arc`.  `None` — memoized — when the group's meta config
+    /// is not separable per subvector.
+    fn packed_group(&self, gname: &str) -> Result<Option<Arc<PackedGroup>>, Error> {
+        if let Some(pg) = self.packed_groups.lock().unwrap().get(gname) {
+            return Ok(pg.clone());
+        }
+        let rec = self.reader.packed_record(gname)?;
+        let mc = self
+            .rt
+            .manifest
+            .meta_cfg(&rec.meta_cfg)
+            .map_err(|_| Error::UnknownConfig {
+                kind: "meta config",
+                name: rec.meta_cfg.clone(),
+            })?
+            .clone();
+        let built = if mc.norm == "ln" && mc.w == rec.width {
+            let table = job::decode_codeword_table(self.rt, &mc, &rec.decoder, &rec.codebook)
+                .map_err(Error::from)?;
+            Some(Arc::new(PackedGroup::new(
+                gname,
+                mc.d,
+                mc.l,
+                mc.k,
+                rec.rows,
+                table,
+                rec.indices.clone(),
+                rec.row_scales.clone(),
+            )?))
+        } else {
+            None
+        };
+        let mut memo = self.packed_groups.lock().unwrap();
+        let entry = memo.entry(gname.to_string()).or_insert(built);
+        Ok(entry.clone())
+    }
+
+    fn resolve_packed_uncached(&self, name: &str) -> Result<Option<Arc<PackedMatmul>>, Error> {
+        if self.reader.has_dense(name) {
+            return Ok(None);
+        }
+        let Some((block, tname)) = split_block_name(name) else {
+            return Ok(None);
+        };
+        if block >= self.cfg.n_layers {
+            return Ok(None);
+        }
+        for (gname, gi) in &self.cfg.groups {
+            if !self.reader.has_group(gname) {
+                continue;
+            }
+            let Some(ti) = gi.tensors.iter().position(|t| t == tname) else {
+                continue;
+            };
+            let Some(pg) = self.packed_group(gname)? else {
+                return Ok(None);
+            };
+            let pm = pg.slice(gi.block_row_start(block, ti), gi.rows_per_block)?;
+            return Ok(Some(Arc::new(pm)));
+        }
+        Ok(None)
     }
 }
 
@@ -226,6 +349,16 @@ impl WeightProvider for PocketProvider<'_> {
         Ok(view)
     }
 
+    fn resolve_packed(&self, name: &str) -> Result<Option<Arc<PackedMatmul>>, Error> {
+        if let Some(pm) = self.packed_tensors.lock().unwrap().get(name) {
+            return Ok(pm.clone());
+        }
+        let resolved = self.resolve_packed_uncached(name)?;
+        let mut memo = self.packed_tensors.lock().unwrap();
+        let entry = memo.entry(name.to_string()).or_insert(resolved);
+        Ok(entry.clone())
+    }
+
     fn prefetch_layer(&self, layer: usize) {
         if layer >= self.cfg.n_layers {
             return;
@@ -239,6 +372,37 @@ impl WeightProvider for PocketProvider<'_> {
                 // advisory warm-up: a failure here surfaces (typed) on the
                 // synchronous tensor() call instead
                 let _ = self.reader.decode_group_rows(self.rt, gname, row_start, gi.rows_per_block);
+            }
+        }
+    }
+
+    fn prefetch_layer_repr(&self, layer: usize, repr: WeightRepr) {
+        if repr == WeightRepr::Dense {
+            return self.prefetch_layer(layer);
+        }
+        if layer >= self.cfg.n_layers {
+            return;
+        }
+        // fused: warm the packed form (stored record + codeword table +
+        // index slices) — never dense chunks.  Groups that cannot pack
+        // fall back to the dense chunk decode the layer will actually use.
+        for (gname, gi) in &self.cfg.groups {
+            if !self.reader.has_group(gname) {
+                continue;
+            }
+            for (ti, tname) in gi.tensors.iter().enumerate() {
+                match self.resolve_packed(&format!("b{layer}.{tname}")) {
+                    Ok(Some(_)) => {}
+                    Ok(None) | Err(_) => {
+                        let row_start = gi.block_row_start(layer, ti);
+                        let _ = self.reader.decode_group_rows(
+                            self.rt,
+                            gname,
+                            row_start,
+                            gi.rows_per_block,
+                        );
+                    }
+                }
             }
         }
     }

@@ -33,7 +33,7 @@
 //! [`serve_generation`] is the production-shaped serving loop: a
 //! **continuous-batching engine** thread owns one [`WeightProvider`] and
 //! advances up to `max_batch` KV-cached decode lanes per
-//! [`gen_step_batch`] call — one bounded weight resolution per block per
+//! [`gen_step_batch_repr`] call — one bounded weight resolution per block per
 //! step, amortized across every in-flight request — while an
 //! [`HttpServer`](crate::util::httpserver::HttpServer) front end accepts
 //! concurrent `GET /generate` requests on loopback and streams
@@ -56,8 +56,9 @@ use crate::data::Corpus;
 use crate::error::Error;
 use crate::eval;
 use crate::packfmt::{PocketReader, ReaderStats};
+use crate::runtime::fused::WeightRepr;
 use crate::runtime::manifest::LmCfg;
-use crate::runtime::reference::lm::{gen_step_batch, GenState};
+use crate::runtime::reference::lm::{gen_step_batch_repr, GenState};
 use crate::runtime::weights::{PocketProvider, WeightProvider};
 use crate::session::{generate_tokens, sample_logits, GenOpts, Session};
 use crate::util::httpserver::{HttpServer, Request};
@@ -197,6 +198,7 @@ impl<'s> PocketServer<'s> {
                     top_k: 0,
                     seed: 0,
                     trace: false,
+                    repr: WeightRepr::Dense,
                 };
                 generate_tokens(provider, prompt, &opts)?;
             }
@@ -254,11 +256,16 @@ pub struct GenEngineOpts {
     /// its lane parks after this many undelivered tokens (backpressure on
     /// that lane only) until the client catches up or goes away.
     pub stream_capacity: usize,
+    /// Weight representation for the batched forward pass.  With
+    /// [`WeightRepr::Fused`] the engine executes matmuls directly on the
+    /// pocket for every tensor the provider can resolve packed, falling
+    /// back to dense per tensor otherwise.
+    pub repr: WeightRepr,
 }
 
 impl Default for GenEngineOpts {
     fn default() -> GenEngineOpts {
-        GenEngineOpts { max_batch: 8, stream_capacity: 64 }
+        GenEngineOpts { max_batch: 8, stream_capacity: 64, repr: WeightRepr::Dense }
     }
 }
 
@@ -394,7 +401,7 @@ fn admit_lane(cfg: &LmCfg, msg: EngineMsg, lanes: &mut Vec<Lane>, stats: &mut Ge
 
 /// The continuous-batching engine loop.  Owns every lane; admits queued
 /// requests up to `max_batch`, advances all unparked lanes with one
-/// [`gen_step_batch`] per iteration (one weight resolution per block for
+/// [`gen_step_batch_repr`] per iteration (one weight resolution per block for
 /// the whole batch), streams sampled tokens to per-request sinks, and
 /// retires lanes as they complete, fail, or lose their client.  Returns
 /// when the inbox disconnects and the last lane retires.
@@ -406,6 +413,7 @@ fn run_gen_engine(
     let cfg = provider.cfg();
     let n_layers = cfg.n_layers;
     let max_batch = opts.max_batch.max(1);
+    let repr = opts.repr;
     let mut stats = GenServeStats::default();
     std::thread::scope(|scope| {
         // advisory next-layer prefetch, same idiom as `generate_tokens`:
@@ -414,7 +422,7 @@ fn run_gen_engine(
         if provider.wants_prefetch() {
             scope.spawn(move || {
                 while let Ok(i) = prx.recv() {
-                    provider.prefetch_layer(i);
+                    provider.prefetch_layer_repr(i, repr);
                 }
             });
         } else {
@@ -505,9 +513,15 @@ fn run_gen_engine(
             }
             let mut refs: Vec<&mut GenState> =
                 lanes.iter_mut().filter(|l| l.wants_step()).map(|l| &mut l.state).collect();
-            let step = gen_step_batch(provider, &mut refs, &toks, |b| {
-                let _ = ptx.try_send((b + 1) % n_layers.max(1));
-            });
+            let step = gen_step_batch_repr(
+                provider,
+                &mut refs,
+                &toks,
+                |b| {
+                    let _ = ptx.try_send((b + 1) % n_layers.max(1));
+                },
+                repr,
+            );
             drop(refs);
             let rows = match step {
                 Ok(rows) => rows,

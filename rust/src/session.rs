@@ -39,7 +39,8 @@ use crate::eval::{evaluate, EvalReport};
 use crate::model::WeightStore;
 use crate::packfmt::{HttpOptions, PocketReader};
 use crate::runtime::manifest::Manifest;
-use crate::runtime::reference::lm::{gen_step, GenState};
+use crate::runtime::fused::WeightRepr;
+use crate::runtime::reference::lm::{gen_step_repr, GenState};
 use crate::runtime::weights::{InMemoryProvider, PocketProvider, WeightProvider};
 use crate::runtime::Runtime;
 use crate::serve::PocketServer;
@@ -303,6 +304,7 @@ impl Session {
             top_k: 0,
             seed: 7,
             trace: false,
+            repr: WeightRepr::Dense,
         }
     }
 
@@ -569,6 +571,7 @@ pub struct GenerateBuilder<'p> {
     top_k: usize,
     seed: u64,
     trace: bool,
+    repr: WeightRepr,
 }
 
 impl<'p> GenerateBuilder<'p> {
@@ -609,6 +612,16 @@ impl<'p> GenerateBuilder<'p> {
         self
     }
 
+    /// Weight representation for the forward pass (default
+    /// [`WeightRepr::Dense`]).  [`WeightRepr::Fused`] executes matmuls
+    /// directly on the pocket via
+    /// [`WeightProvider::resolve_packed`](crate::runtime::weights::WeightProvider::resolve_packed),
+    /// falling back to dense per tensor when no packed form exists.
+    pub fn repr(mut self, repr: WeightRepr) -> Self {
+        self.repr = repr;
+        self
+    }
+
     /// Run the generation loop.
     pub fn run(self) -> Result<Generated, Error> {
         let opts = GenOpts {
@@ -617,6 +630,7 @@ impl<'p> GenerateBuilder<'p> {
             top_k: self.top_k,
             seed: self.seed,
             trace: self.trace,
+            repr: self.repr,
         };
         generate_tokens(self.provider, &self.prompt, &opts)
     }
@@ -659,6 +673,7 @@ pub(crate) struct GenOpts {
     pub top_k: usize,
     pub seed: u64,
     pub trace: bool,
+    pub repr: WeightRepr,
 }
 
 /// The generation engine shared by [`GenerateBuilder`] and
@@ -694,10 +709,11 @@ pub(crate) fn generate_tokens(
         // makes a race on one chunk cost exactly one decode.  try_send never
         // blocks the compute thread — a full queue just skips a hint.
         let (tx, rx) = mpsc::sync_channel::<usize>(n_layers.max(1) + 1);
+        let repr = opts.repr;
         if provider.wants_prefetch() {
             scope.spawn(move || {
                 while let Ok(i) = rx.recv() {
-                    provider.prefetch_layer(i);
+                    provider.prefetch_layer_repr(i, repr);
                 }
             });
         } else {
@@ -713,7 +729,7 @@ pub(crate) fn generate_tokens(
         let _ = tx.try_send(0);
         let mut logits = Vec::new();
         for &t in prompt {
-            logits = gen_step(provider, &mut st, t, &mut hook).map_err(Error::from)?;
+            logits = gen_step_repr(provider, &mut st, t, &mut hook, repr).map_err(Error::from)?;
             if let Some(tr) = trace.as_mut() {
                 tr.push(logits.clone());
             }
@@ -721,7 +737,7 @@ pub(crate) fn generate_tokens(
         for _ in 0..opts.max_new {
             let next = sample_logits(&logits, opts.temperature, opts.top_k, &mut rng)?;
             tokens.push(next);
-            logits = gen_step(provider, &mut st, next, &mut hook).map_err(Error::from)?;
+            logits = gen_step_repr(provider, &mut st, next, &mut hook, repr).map_err(Error::from)?;
             if let Some(tr) = trace.as_mut() {
                 tr.push(logits.clone());
             }

@@ -74,7 +74,7 @@ fn concurrent_http_streams_are_bit_identical_to_sequential() {
 
     // replay concurrently: three client threads against a batch-4 engine,
     // so batch composition shifts as requests join and finish
-    let opts = GenEngineOpts { max_batch: 4, stream_capacity: 8 };
+    let opts = GenEngineOpts { max_batch: 4, stream_capacity: 8, ..GenEngineOpts::default() };
     let (got, stats) = serve_generation(&provider, opts, |h| {
         let addr = h.addr();
         let results: Mutex<Vec<Vec<i32>>> = Mutex::new(vec![Vec::new(); specs.len()]);
@@ -139,7 +139,7 @@ fn submitted_lanes_overlap_and_respect_backpressure() {
     // stream_capacity 2 < max_new 6: neither lane can finish until its
     // receiver drains, and both are submitted before either is read — so
     // the two lanes MUST coexist in the batch, deterministically
-    let opts = GenEngineOpts { max_batch: 4, stream_capacity: 2 };
+    let opts = GenEngineOpts { max_batch: 4, stream_capacity: 2, ..GenEngineOpts::default() };
     let ((a, b), stats) = serve_generation(&provider, opts, |h| {
         let ra = h.submit(prompts[0].clone(), params(50));
         let rb = h.submit(prompts[1].clone(), params(51));
@@ -166,7 +166,7 @@ fn a_vanished_client_retires_its_lane() {
 
     // 80 tokens against a 4-token stream buffer: the request cannot finish
     // without a live reader, so a dropped client must retire the lane
-    let opts = GenEngineOpts { max_batch: 2, stream_capacity: 4 };
+    let opts = GenEngineOpts { max_batch: 2, stream_capacity: 4, ..GenEngineOpts::default() };
     let ((), stats) = serve_generation(&provider, opts, |h| {
         let mut s = TcpStream::connect(h.addr()).unwrap();
         s.write_all(
