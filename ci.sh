@@ -27,9 +27,9 @@ test -f ../BENCH_compress.json
 echo "BENCH_compress.json:"
 cat ../BENCH_compress.json
 
-echo "== serve-bench (concurrent shared-cache serve path + loopback remote streaming, rANS-coded container + coded-vs-raw wire comparison -> BENCH_serve.json) =="
+echo "== serve-bench (concurrent shared-cache serve path + loopback remote streaming, rANS-coded container + coded-vs-raw wire comparison, multi-tenant fleet: base + delta + LoRA over one shared cache -> BENCH_serve.json) =="
 ./target/release/pocketllm serve-bench --backend reference \
-  --threads 4 --requests 200 --eval-every 50 --remote --codec rans --check --json ../BENCH_serve.json
+  --threads 4 --requests 200 --eval-every 50 --remote --codec rans --fleet --check --json ../BENCH_serve.json
 test -f ../BENCH_serve.json
 echo "BENCH_serve.json:"
 cat ../BENCH_serve.json

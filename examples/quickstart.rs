@@ -7,8 +7,10 @@
 //! `Session` / `PocketReader` front door: session -> LM training -> group
 //! compression -> POCKET02 packing -> lazy per-group device decode ->
 //! entropy-coded POCKET03 round trip (the CLI's `--codec rans`) ->
-//! pocket-native generation, ending with the fused index-GEMM path that
-//! executes matmuls directly on the pocket.
+//! pocket-native generation, the fused index-GEMM path that executes
+//! matmuls directly on the pocket, and finally a two-tenant fleet — one
+//! process serving a base pocket and a LoRA-adapted tenant through a
+//! `PocketRegistry` over one shared decode-cache budget.
 
 use pocketllm::packfmt::{CodecOpts, PocketReader};
 use pocketllm::session::Session;
@@ -173,5 +175,40 @@ fn main() -> Result<(), pocketllm::Error> {
         fused_out.continuation(),
         ln_provider.packed_resident_bytes() / 1024
     );
+
+    // 11. multi-tenant fleet: one process serves many pockets.  A
+    //     `PocketRegistry` maps ids to sources, opens readers lazily, and
+    //     attaches every tenant to one shared decode-cache budget; a
+    //     per-tenant LoRA adapter folds in at the provider seam without
+    //     ever materializing a merged model.  HTTP requests carry
+    //     `pocket=<id>` and lanes from different tenants batch together.
+    let registry = pocketllm::PocketRegistry::new(8 << 20);
+    registry.register("base", &path)?;
+    registry.register("tuned", &path)?; // same bytes, its own cache namespace
+    let base_p = session.pocket_provider(registry.reader("base")?)?;
+    let cfg = session.manifest().lm_cfg("tiny").map_err(pocketllm::Error::from)?.clone();
+    let lora: Vec<f32> = (0..cfg.lora_layout.total).map(|i| (i % 13) as f32 / 130.0).collect();
+    let tuned_p =
+        session.lora_provider(session.pocket_provider(registry.reader("tuned")?)?, lora)?;
+    let ((a, b), fstats) = pocketllm::serve_generation_fleet(
+        &[("base", &base_p), ("tuned", &tuned_p)],
+        pocketllm::GenEngineOpts::default(),
+        |srv| {
+            let gp = pocketllm::GenParams { max_new: 8, temperature: 0.0, top_k: 0, seed: 1 };
+            (
+                pocketllm::http_generate_pocket(srv.addr(), "base", &[1, 2, 3], &gp),
+                pocketllm::http_generate_pocket(srv.addr(), "tuned", &[1, 2, 3], &gp),
+            )
+        },
+    )?;
+    println!("fleet: base {:?} / tuned {:?} ({} completed)", a?, b?, fstats.completed);
+    for (id, opens, row) in registry.tenant_stats() {
+        println!(
+            "  tenant {id}: {opens} open(s), {} cache hits / {} misses, {} KiB resident",
+            row.hits,
+            row.misses,
+            row.resident_bytes / 1024
+        );
+    }
     Ok(())
 }

@@ -121,17 +121,19 @@ pub mod util;
 
 pub use error::Error;
 pub use packfmt::{
-    CodecOpts, HttpOptions, HttpSource, PocketReader, PrefetchPlan, ReaderStats, RetryPolicy,
-    SectionCoding, SectionSource, SourceStats,
+    CodecOpts, HttpOptions, HttpSource, PocketReader, PocketRegistry, PrefetchPlan, ReaderStats,
+    RetryPolicy, SectionCoding, SectionSource, SourceStats,
 };
 pub use runtime::fused::{FusedAcc, PackedGroup, PackedMatmul, WeightRepr};
-pub use runtime::weights::{InMemoryProvider, PocketProvider, WeightProvider, WeightView};
+pub use runtime::weights::{
+    InMemoryProvider, LoraProvider, PocketProvider, WeightProvider, WeightView,
+};
 pub use serve::{
-    http_generate, serve_generation, GenEngineOpts, GenParams, GenServeStats, GenServerHandle,
-    PocketServer, ServeReport, ServeRequest,
+    http_generate, http_generate_pocket, serve_generation, serve_generation_fleet, GenEngineOpts,
+    GenParams, GenServeStats, GenServerHandle, PocketServer, ServeReport, ServeRequest,
 };
 pub use session::{BackendKind, GenerateBuilder, Generated, Session, SessionBuilder};
-pub use util::cache::{CacheStats, DecodeCache};
+pub use util::cache::{CacheStats, DecodeCache, TenantCacheStats};
 
 /// Crate-wide result alias (anyhow-based: the only error-handling crate
 /// available in the offline vendor set).  The `Session` / `PocketReader`

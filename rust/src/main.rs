@@ -20,11 +20,14 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 use pocketllm::coordinator::ProgressSink;
-use pocketllm::packfmt::{ChunkedSource, CodecOpts, PocketFile, PocketReader, SectionCoding};
+use pocketllm::packfmt::{
+    ChunkedSource, CodecOpts, PocketFile, PocketReader, PocketRegistry, SectionCoding,
+};
 use pocketllm::runtime::fused::WeightRepr;
 use pocketllm::runtime::weights::WeightProvider;
 use pocketllm::serve::{
-    http_generate, serve_generation, GenEngineOpts, GenParams, GenServeStats, ServeRequest,
+    http_generate, http_generate_pocket, serve_generation, serve_generation_fleet, GenEngineOpts,
+    GenParams, GenServeStats, ServeRequest,
 };
 use pocketllm::session::{BackendKind, Session};
 use pocketllm::util::benchlib::Table;
@@ -32,7 +35,7 @@ use pocketllm::util::cli::Args;
 use pocketllm::util::json::{arr, num, obj, s, Json};
 use pocketllm::util::stats::percentile;
 use pocketllm::util::testserver::RangeServer;
-use pocketllm::DecodeCache;
+use pocketllm::{DecodeCache, TenantCacheStats};
 
 fn main() {
     if let Err(e) = run() {
@@ -56,7 +59,7 @@ fn session_for(args: &Args) -> Result<Session> {
 
 fn run() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_else(|| "help".to_string());
-    let args = Args::parse_env(2, &["no-finetune", "verbose", "check", "remote"])?;
+    let args = Args::parse_env(2, &["no-finetune", "verbose", "check", "remote", "fleet"])?;
     match cmd.as_str() {
         "info" => cmd_info(&args),
         "train-lm" => cmd_train_lm(&args),
@@ -83,10 +86,12 @@ fn run() -> Result<()> {
                  \x20 eval         ppl + zero-shot accuracy   (--model tiny --weights w.bin | --pocket m.pocket)\n\
                  \x20 serve-bench  concurrent serve path      (--pocket m.pocket --threads 4 --requests 200\n\
                  \x20              [--eval-every K] [--chunk BYTES] [--remote] [--json out.json]\n\
-                 \x20              [--codec raw|rans] [--check]; no --pocket: a tiny pocket is\n\
-                 \x20              synthesized; --remote adds a loopback HTTP range-streaming\n\
-                 \x20              phase; --codec rans serves the entropy-coded container and,\n\
-                 \x20              with --remote, adds a coded-vs-raw bytes-over-wire phase)\n\
+                 \x20              [--codec raw|rans] [--check] [--fleet]; no --pocket: a tiny\n\
+                 \x20              pocket is synthesized; --remote adds a loopback HTTP\n\
+                 \x20              range-streaming phase; --codec rans serves the entropy-coded\n\
+                 \x20              container and, with --remote, adds a coded-vs-raw\n\
+                 \x20              bytes-over-wire phase; --fleet serves base + delta + LoRA\n\
+                 \x20              tenants from one process over one shared decode cache)\n\
                  \x20 generate     KV-cached text generation  (--pocket m.pocket | --url http://h/p |\n\
                  \x20              --model tiny --weights w.bin; --prompt 1,2,3 --max-new 32\n\
                  \x20              [--temperature T] [--top-k K] [--seed N] [--budget BYTES]\n\
@@ -251,6 +256,16 @@ fn cmd_reconstruct(args: &Args) -> Result<()> {
 /// (the same cold request mix against a raw and a coded loopback server,
 /// comparing the bytes that actually crossed the wire) and `--check` then
 /// also pins bit-identical decodes plus a strict wire-byte saving.
+///
+/// `--fleet` adds a multi-tenant phase: the container, a delta pocket
+/// derived from it (second model, XOR-delta against the registered base)
+/// and a LoRA-adapted tenant are registered in one [`PocketRegistry`] and
+/// served by one generation engine over one shared decode cache, with
+/// clients round-robining across tenants so batches mix pockets.
+/// `--check` pins every stream bit-identical to its solo B=1 reference,
+/// the delta container strictly smaller than the standalone second
+/// pocket, nonzero per-tenant cache accounting, and a clean idle-eviction
+/// purge.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     let session = session_for(args)?;
     let threads = args.usize_or("threads", 4)?;
@@ -355,8 +370,13 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         .collect();
 
     let cold = session.serve(open(0)?).workers(threads).run(&decode_mix)?;
-    let server = session.serve(open(warm_budget)?).workers(threads);
+    let warm_reader = open(warm_budget)?;
+    let server = session.serve(warm_reader.clone()).workers(threads);
     let warm = server.run(&decode_mix)?;
+    // the warm and mixed phases share one cache; the high-water mark is
+    // monotone, so reset it between them to attribute a peak to each
+    let warm_peak = warm_reader.stats().cache.peak_resident_bytes;
+    warm_reader.decode_cache().reset_peak();
     let mixed = server.run(&mixed_mix)?;
 
     // optional remote streaming phase: the same container served by an
@@ -478,9 +498,244 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         None
     };
 
+    // --fleet: one process serving several registered pockets — the base
+    // container, a delta pocket resolved against it, and a LoRA-adapted
+    // tenant — all through one PocketRegistry and one shared byte-budget
+    // decode cache with per-tenant fairness counters.  Mixed traffic
+    // (clients round-robin across tenants) batches lanes from different
+    // pockets in one engine; every stream must reproduce its solo B=1
+    // reference bit-for-bit.
+    struct FleetTenant {
+        id: &'static str,
+        requests: usize,
+        mismatches: usize,
+        row: TenantCacheStats,
+    }
+    struct FleetPhase {
+        tps: f64,
+        tenants: Vec<FleetTenant>,
+        /// The second model serialized standalone (same codec as the delta).
+        standalone_bytes: u64,
+        /// The delta container on disk — must be strictly smaller.
+        delta_file_bytes: u64,
+        budget: u64,
+        /// Serve-phase peak of the shared cache (reset after the warm-up
+        /// reference pass).
+        peak_resident: u64,
+        resident_after_evict: u64,
+        evicted: Vec<String>,
+        delta_decode_identical: bool,
+        unknown_rejected: bool,
+        stats: GenServeStats,
+    }
+    let fleet: Option<FleetPhase> = if args.flag("fleet") {
+        use pocketllm::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+        eprintln!("[serve-bench] fleet phase: base + delta + lora tenants, one shared cache");
+
+        // the second model: the same pocket with every finite codebook
+        // entry nudged one f16 ulp.  Indices are untouched, so the delta
+        // container elides them (they dominate the payload) and the XOR
+        // stream over the rest is zero-dominant — far below the standalone
+        // second pocket under the same codec
+        let base_pf = PocketFile::from_bytes(&buf)?;
+        let mut second = base_pf.clone();
+        for g in second.groups.values_mut() {
+            for v in g.codebook.data.iter_mut() {
+                if v.is_finite() {
+                    *v = f16_bits_to_f32(f32_to_f16_bits(*v) ^ 1);
+                }
+            }
+        }
+        let rans = CodecOpts::rans();
+        let standalone_bytes = second.to_bytes_with(&rans).len() as u64;
+        let dir = std::env::temp_dir();
+        let base_path = dir.join(format!("pocketllm_fleet_base_{}.pocket", std::process::id()));
+        let delta_path = dir.join(format!("pocketllm_fleet_delta_{}.pocket", std::process::id()));
+        std::fs::write(&base_path, &buf[..])?;
+        second.save_delta(&delta_path, &base_pf, "base", &rans)?;
+        let delta_file_bytes = std::fs::metadata(&delta_path)?.len();
+
+        // the fleet budget: three tenants' decoded bytes (the lora tenant
+        // re-opens the base under its own cache namespace) plus slack
+        let decoded_total: u64 = groups
+            .iter()
+            .filter_map(|g| probe.decoded_group_bytes(g))
+            .sum::<u64>()
+            + probe.dense_names().iter().filter_map(|n| probe.section_raw_length(n)).sum::<u64>();
+        let budget = 3 * decoded_total + decoded_total / 2 + (1 << 20);
+
+        let reg = PocketRegistry::new(budget);
+        reg.register("base", &base_path)?;
+        reg.register("delta", &delta_path)?;
+        reg.register("lora", &base_path)?;
+        // opening "delta" resolves its BaseRef against the registered base
+        let p_base = session.pocket_provider(reg.reader("base")?)?;
+        let p_delta = session.pocket_provider(reg.reader("delta")?)?;
+        // the lora tenant: base weights plus a dense low-rank adapter,
+        // merged lazily at the provider seam.  Deterministic nonzero
+        // values — a fresh init_lora adapter is a zero delta (B starts 0)
+        let lora: Vec<f32> = (0..cfg.lora_layout.total)
+            .map(|i| ((i * 37 + 11) % 97) as f32 / 970.0 - 0.05)
+            .collect();
+        let p_lora = session.lora_provider(session.pocket_provider(reg.reader("lora")?)?, lora)?;
+
+        // the delta tenant must serve the second model bit-exactly
+        let rt = session.runtime();
+        let delta_reader = reg.reader("delta")?;
+        let second_buf: Arc<[u8]> = second.to_bytes().into();
+        let second_probe = PocketReader::from_bytes(second_buf)?;
+        let mut delta_decode_identical = true;
+        for g in &groups {
+            delta_decode_identical &= delta_reader.decode_group(rt, g)?.data
+                == second_probe.decode_group(rt, g)?.data;
+        }
+
+        // per-tenant request specs (deterministic prompts, greedy and
+        // sampled params, per-request seeds) and their solo B=1 reference
+        // streams through the same providers
+        let fleet_max_new = 5.min(cfg.seq_len.saturating_sub(4)).max(1);
+        let n_per_tenant = 6usize;
+        let tenant_ids = ["base", "delta", "lora"];
+        let providers: [&dyn WeightProvider; 3] = [&p_base, &p_delta, &p_lora];
+        let mut specs: Vec<(usize, Vec<i32>, GenParams)> = Vec::new();
+        for t in 0..3usize {
+            for i in 0..n_per_tenant {
+                let prompt: Vec<i32> = (0..3)
+                    .map(|j| ((t * 53 + i * 31 + j * 17 + 5) % cfg.vocab) as i32)
+                    .collect();
+                let (temperature, top_k) = if i % 2 == 0 { (0.0, 0) } else { (0.9, 4) };
+                specs.push((
+                    t,
+                    prompt,
+                    GenParams {
+                        max_new: fleet_max_new,
+                        temperature,
+                        top_k,
+                        seed: 300 + (t * n_per_tenant + i) as u64,
+                    },
+                ));
+            }
+        }
+        let mut reference: Vec<Vec<i32>> = Vec::with_capacity(specs.len());
+        for (t, prompt, p) in &specs {
+            let g = session
+                .generate(providers[*t])
+                .prompt(prompt.clone())
+                .max_new(p.max_new)
+                .temperature(p.temperature)
+                .top_k(p.top_k)
+                .seed(p.seed)
+                .run()?;
+            reference.push(g.continuation().to_vec());
+        }
+        // interleave tenants so one engine batch mixes lanes across pockets
+        let mut order: Vec<usize> = Vec::with_capacity(specs.len());
+        for i in 0..n_per_tenant {
+            for t in 0..3usize {
+                order.push(t * n_per_tenant + i);
+            }
+        }
+
+        // the reference pass warmed the shared cache; attribute the peak
+        // from here to the fleet serve itself
+        reg.cache().reset_peak();
+        let opts =
+            GenEngineOpts { max_batch: 6, stream_capacity: 64, ..GenEngineOpts::default() };
+        let fleet_tenants: [(&str, &dyn WeightProvider); 3] =
+            [("base", &p_base), ("delta", &p_delta), ("lora", &p_lora)];
+        let clients = threads.clamp(1, order.len());
+        let specs_ref = &specs;
+        let order_ref = &order;
+        let ((results, elapsed, unknown_rejected), stats) =
+            serve_generation_fleet(&fleet_tenants, opts, |h| {
+                let addr = h.addr();
+                let collected: Mutex<Vec<(usize, Result<Vec<i32>, pocketllm::Error>)>> =
+                    Mutex::new(Vec::new());
+                let t0 = Instant::now();
+                std::thread::scope(|scope| {
+                    for w in 0..clients {
+                        let collected = &collected;
+                        scope.spawn(move || {
+                            let mut i = w;
+                            while i < order_ref.len() {
+                                let idx = order_ref[i];
+                                let (t, prompt, params) = &specs_ref[idx];
+                                let got =
+                                    http_generate_pocket(addr, tenant_ids[*t], prompt, params);
+                                collected.lock().unwrap().push((idx, got));
+                                i += clients;
+                            }
+                        });
+                    }
+                });
+                // an unregistered id must 400 at the HTTP layer
+                let unknown_rejected = http_generate_pocket(
+                    addr,
+                    "nope",
+                    &[1, 2],
+                    &GenParams { max_new: 1, temperature: 0.0, top_k: 0, seed: 1 },
+                )
+                .is_err();
+                (collected.into_inner().unwrap(), t0.elapsed(), unknown_rejected)
+            })?;
+
+        let mut mismatches = [0usize; 3];
+        let mut tokens = 0usize;
+        for (idx, got) in &results {
+            let t = specs[*idx].0;
+            match got {
+                Ok(ts) => {
+                    tokens += ts.len();
+                    if ts != &reference[*idx] {
+                        mismatches[t] += 1;
+                    }
+                }
+                Err(_) => mismatches[t] += 1,
+            }
+        }
+        let peak_resident = reg.cache().stats().peak_resident_bytes;
+        let rows = reg.tenant_stats();
+        let tenants_out: Vec<FleetTenant> = tenant_ids
+            .iter()
+            .enumerate()
+            .map(|(t, &id)| FleetTenant {
+                id,
+                requests: n_per_tenant,
+                mismatches: mismatches[t],
+                row: rows
+                    .iter()
+                    .find(|(rid, ..)| rid.as_str() == id)
+                    .map(|(_, _, row)| *row)
+                    .unwrap_or_default(),
+            })
+            .collect();
+        // idle-evict everything: all three namespaces purge from the
+        // shared cache and the whole budget returns
+        let evicted = reg.evict_idle(std::time::Duration::ZERO);
+        let resident_after_evict = reg.cache().stats().resident_bytes;
+        std::fs::remove_file(&base_path).ok();
+        std::fs::remove_file(&delta_path).ok();
+        Some(FleetPhase {
+            tps: tokens as f64 / elapsed.as_secs_f64().max(1e-12),
+            tenants: tenants_out,
+            standalone_bytes,
+            delta_file_bytes,
+            budget,
+            peak_resident,
+            resident_after_evict,
+            evicted,
+            delta_decode_identical,
+            unknown_rejected,
+            stats,
+        })
+    } else {
+        None
+    };
+
     let speedup = warm.rps() / cold.rps().max(1e-12);
     // the mixed report carries the warm reader's final counter snapshot
-    let st = mixed.stats;
+    let st = mixed.stats.clone();
+    let mixed_peak = st.cache.peak_resident_bytes;
     let hit_rate = mixed.cache_hit_rate();
     let n_evals = if eval_every > 0 { n_requests.div_ceil(eval_every) } else { 0 };
 
@@ -537,10 +792,22 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             ]);
         }
     }
+    if let Some(f) = &fleet {
+        t.row(vec![
+            "fleet".into(),
+            format!("{}", f.tenants.iter().map(|x| x.requests).sum::<usize>()),
+            format!("{:.0} tok/s", f.tps),
+            format!(
+                "3 tenants, one cache; delta {} KiB vs standalone {} KiB",
+                f.delta_file_bytes / 1024,
+                f.standalone_bytes / 1024
+            ),
+        ]);
+    }
     t.emit(None);
     println!(
         "cache: hit rate {:.1}% ({} hits / {} decodes), resident {} KiB, {} evictions; \
-         group sections fetched {} (groups: {})",
+         group sections fetched {} (groups: {}); peak warm {} KiB / mixed {} KiB",
         hit_rate * 100.0,
         st.cache_hits,
         st.group_decodes,
@@ -548,7 +815,32 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         st.cache.evictions,
         st.group_sections_read,
         groups.len(),
+        warm_peak / 1024,
+        mixed_peak / 1024,
     );
+    if let Some(f) = &fleet {
+        for x in &f.tenants {
+            println!(
+                "fleet tenant {}: {} requests ({} mismatched), cache {} hits / {} misses, \
+                 {} KiB resident, {} KiB evicted",
+                x.id,
+                x.requests,
+                x.mismatches,
+                x.row.hits,
+                x.row.misses,
+                x.row.resident_bytes / 1024,
+                x.row.evicted_bytes / 1024,
+            );
+        }
+        println!(
+            "fleet cache: serve peak {} KiB under budget {} KiB; idle eviction purged {:?} \
+             -> {} bytes resident",
+            f.peak_resident / 1024,
+            f.budget / 1024,
+            f.evicted,
+            f.resident_after_evict,
+        );
+    }
 
     if let Some(path) = args.get("json") {
         let mut fields = vec![
@@ -567,6 +859,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             ("group_sections_read", num(st.group_sections_read as f64)),
             ("group_decodes", num(st.group_decodes as f64)),
             ("cache_resident_bytes", num(st.cache.resident_bytes as f64)),
+            ("warm_peak_resident_bytes", num(warm_peak as f64)),
+            ("mixed_peak_resident_bytes", num(mixed_peak as f64)),
         ];
         if let Some(r) = &remote {
             let mut rfields = vec![
@@ -600,6 +894,47 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 ));
             }
             fields.push(("remote", obj(rfields)));
+        }
+        if let Some(f) = &fleet {
+            let tenant_obj = |x: &FleetTenant| -> Json {
+                obj(vec![
+                    ("id", s(x.id)),
+                    ("requests", num(x.requests as f64)),
+                    ("mismatches", num(x.mismatches as f64)),
+                    ("cache_hits", num(x.row.hits as f64)),
+                    ("cache_misses", num(x.row.misses as f64)),
+                    ("evicted_bytes", num(x.row.evicted_bytes as f64)),
+                    ("resident_bytes", num(x.row.resident_bytes as f64)),
+                ])
+            };
+            fields.push((
+                "fleet",
+                obj(vec![
+                    ("tps", num(f.tps)),
+                    ("tenants", arr(f.tenants.iter().map(tenant_obj).collect())),
+                    ("standalone_second_bytes", num(f.standalone_bytes as f64)),
+                    ("delta_container_bytes", num(f.delta_file_bytes as f64)),
+                    (
+                        "delta_over_standalone",
+                        num(f.delta_file_bytes as f64 / f.standalone_bytes.max(1) as f64),
+                    ),
+                    ("fleet_budget_bytes", num(f.budget as f64)),
+                    ("serve_peak_resident_bytes", num(f.peak_resident as f64)),
+                    ("resident_after_evict_bytes", num(f.resident_after_evict as f64)),
+                    (
+                        "delta_decode_identical",
+                        num(if f.delta_decode_identical { 1.0 } else { 0.0 }),
+                    ),
+                    (
+                        "unknown_pocket_rejected",
+                        num(if f.unknown_rejected { 1.0 } else { 0.0 }),
+                    ),
+                    ("peak_batch", num(f.stats.peak_batch as f64)),
+                    ("completed", num(f.stats.completed as f64)),
+                    ("rejected", num(f.stats.rejected as f64)),
+                    ("failed", num(f.stats.failed as f64)),
+                ]),
+            ));
         }
         let j = obj(fields);
         pocketllm::util::benchlib::write_report(path, &j);
@@ -653,11 +988,74 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 );
             }
         }
+        // per-phase peaks: the reset between warm and mixed means the
+        // mixed-phase high-water mark is its own, bounded by the warm one
+        ensure!(warm_peak > 0, "warm phase never populated the shared cache");
+        ensure!(
+            mixed_peak <= warm_peak && mixed_peak > 0,
+            "mixed-phase peak {mixed_peak} bytes is not within the warm phase's {warm_peak} \
+             after reset_peak"
+        );
+        if let Some(f) = &fleet {
+            for x in &f.tenants {
+                ensure!(
+                    x.mismatches == 0,
+                    "fleet tenant {}: {} streams diverged from the solo B=1 reference",
+                    x.id,
+                    x.mismatches
+                );
+                ensure!(
+                    x.row.hits + x.row.misses > 0,
+                    "fleet tenant {}: no per-tenant cache accounting (hits+misses == 0)",
+                    x.id
+                );
+            }
+            ensure!(
+                f.delta_decode_identical,
+                "delta pocket did not decode bit-identically to the standalone second model"
+            );
+            ensure!(
+                f.delta_file_bytes < f.standalone_bytes,
+                "delta container ({} bytes) is not strictly below the standalone second \
+                 pocket ({} bytes)",
+                f.delta_file_bytes,
+                f.standalone_bytes
+            );
+            ensure!(
+                f.peak_resident > 0 && f.peak_resident <= f.budget,
+                "fleet serve peak resident {} bytes outside (0, {}] budget",
+                f.peak_resident,
+                f.budget
+            );
+            ensure!(f.unknown_rejected, "an unregistered pocket id was not rejected");
+            ensure!(
+                f.evicted.len() == 3 && f.resident_after_evict == 0,
+                "idle eviction left {} bytes resident (evicted {:?})",
+                f.resident_after_evict,
+                f.evicted
+            );
+            let total = f.tenants.iter().map(|x| x.requests).sum::<usize>() as u64;
+            ensure!(
+                f.stats.completed == total && f.stats.rejected == 0 && f.stats.failed == 0,
+                "fleet request accounting off ({:?}, expected {total} completed)",
+                f.stats
+            );
+            ensure!(
+                f.stats.peak_batch >= 2,
+                "fleet engine never batched lanes (peak batch {})",
+                f.stats.peak_batch
+            );
+        }
         println!(
-            "[serve-bench] checks passed: warm {speedup:.1}x cold, one fetch per group{}{}",
+            "[serve-bench] checks passed: warm {speedup:.1}x cold, one fetch per group{}{}{}",
             if remote.is_some() { ", one remote fetch per coalesced window" } else { "" },
             if remote.as_ref().is_some_and(|r| r.codec.is_some()) {
                 ", coded decode identical and strictly cheaper on the wire"
+            } else {
+                ""
+            },
+            if fleet.is_some() {
+                ", fleet streams bit-identical per tenant with a strictly smaller delta pocket"
             } else {
                 ""
             }

@@ -52,10 +52,12 @@
 
 pub mod entropy;
 pub mod reader;
+pub mod registry;
 pub mod remote;
 pub mod source;
 
 pub use reader::{PocketReader, ReaderStats};
+pub use registry::PocketRegistry;
 pub use remote::{HttpOptions, HttpSource, PrefetchPlan, RetryPolicy};
 #[cfg(unix)]
 pub use source::MmapSource;
@@ -167,6 +169,28 @@ pub enum SectionKind {
     Group,
     /// A dense residue tensor (payload: raw little-endian f32).
     Dense,
+    /// A compressed group stored as a **delta** against the same-named
+    /// group of a base pocket (see [`PocketFile::delta_bytes`]): a mode
+    /// byte, then a byte-wise XOR of the two serialized group bodies —
+    /// optionally with the (identical) index record elided.  Only written
+    /// into POCKET03 delta containers; resolving one needs the base
+    /// ([`PocketReader::with_delta_base`]).
+    GroupDelta,
+    /// Zero-length marker naming the base pocket id a delta container's
+    /// [`SectionKind::GroupDelta`] sections resolve against.  At most one
+    /// per container; the id is the entry's `name`.
+    BaseRef,
+}
+
+impl SectionKind {
+    fn tag(self) -> u8 {
+        match self {
+            SectionKind::Group => 0,
+            SectionKind::Dense => 1,
+            SectionKind::GroupDelta => 2,
+            SectionKind::BaseRef => 3,
+        }
+    }
 }
 
 /// How a section payload is stored on the wire (POCKET03 coding tag).
@@ -332,10 +356,7 @@ impl PocketFile {
         out.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
         let mut offset = header_len as u64;
         for (kind, name, meta, rows, width, p) in &payloads {
-            out.push(match kind {
-                SectionKind::Group => 0u8,
-                SectionKind::Dense => 1u8,
-            });
+            out.push(kind.tag());
             write_str(&mut out, name);
             write_str(&mut out, meta);
             out.extend_from_slice(&(*rows as u64).to_le_bytes());
@@ -399,10 +420,7 @@ impl PocketFile {
         for ((kind, name, meta, rows, width, _), (coding, raw_len, s)) in
             payloads.iter().zip(&stored)
         {
-            out.push(match kind {
-                SectionKind::Group => 0u8,
-                SectionKind::Dense => 1u8,
-            });
+            out.push(kind.tag());
             out.push(match coding {
                 SectionCoding::Raw => 0u8,
                 SectionCoding::Rans => 1u8,
@@ -422,6 +440,123 @@ impl PocketFile {
             out.extend_from_slice(s);
         }
         out
+    }
+
+    /// Serialize this model as a **delta pocket** against `base`: a
+    /// POCKET03 container holding a [`SectionKind::BaseRef`] marker (the
+    /// `base_id` a registry resolves) and, for every group with a
+    /// same-named counterpart in `base`, a [`SectionKind::GroupDelta`]
+    /// section — a byte-wise XOR of the two serialized group bodies, with
+    /// an identical index record elided entirely (indices dominate a group
+    /// payload, so a second model sharing the base's assignments shrinks
+    /// even under raw coding).  Groups without a counterpart and all dense
+    /// residue are stored in full.  The XOR stream of two related models
+    /// is zero-dominant, so [`CodecOpts::rans`] compresses it far below
+    /// the standalone second pocket; resolution
+    /// ([`PocketReader::with_delta_base`]) is byte-exact, reconstructing
+    /// this model **bit-identically**.
+    pub fn delta_bytes(&self, base: &PocketFile, base_id: &str, opts: &CodecOpts) -> Vec<u8> {
+        let mut payloads: Vec<(SectionKind, &str, &str, usize, usize, Vec<u8>)> =
+            vec![(SectionKind::BaseRef, base_id, "", 0, 0, Vec::new())];
+        for (name, g) in &self.groups {
+            match base.groups.get(name) {
+                Some(bg) => payloads.push((
+                    SectionKind::GroupDelta,
+                    name,
+                    g.meta_cfg.as_str(),
+                    g.rows,
+                    g.width,
+                    delta_group_payload(g, bg),
+                )),
+                None => {
+                    let mut p = Vec::new();
+                    write_group_body(&mut p, g);
+                    payloads.push((
+                        SectionKind::Group,
+                        name,
+                        g.meta_cfg.as_str(),
+                        g.rows,
+                        g.width,
+                        p,
+                    ));
+                }
+            }
+        }
+        for (name, buf) in &self.dense {
+            let mut p = Vec::with_capacity(buf.len() * 4);
+            for &v in buf {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+            payloads.push((SectionKind::Dense, name, "", 0, 0, p));
+        }
+
+        // per-section coding with raw fallback, exactly like to_bytes_with
+        // (delta kinds only parse under the v3 magic, so the container is
+        // POCKET03 even when every section stores raw)
+        let stored: Vec<(SectionCoding, u64, Vec<u8>)> = payloads
+            .iter()
+            .map(|(.., p)| {
+                if opts.codec == SectionCoding::Rans && !p.is_empty() {
+                    let coded = entropy::encode_section(p, opts.block_bytes);
+                    if coded.len() < p.len() {
+                        return (SectionCoding::Rans, p.len() as u64, coded);
+                    }
+                }
+                (SectionCoding::Raw, p.len() as u64, p.clone())
+            })
+            .collect();
+
+        let header_len: usize = 8
+            + 8
+            + 4
+            + self.lm_cfg.len()
+            + 4
+            + payloads
+                .iter()
+                .map(|(_, name, meta, ..)| 1 + 1 + 4 + name.len() + 4 + meta.len() + 6 * 8)
+                .sum::<usize>();
+
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC_V3);
+        out.extend_from_slice(&(header_len as u64).to_le_bytes());
+        write_str(&mut out, &self.lm_cfg);
+        out.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
+        let mut offset = header_len as u64;
+        for ((kind, name, meta, rows, width, _), (coding, raw_len, s)) in
+            payloads.iter().zip(&stored)
+        {
+            out.push(kind.tag());
+            out.push(match coding {
+                SectionCoding::Raw => 0u8,
+                SectionCoding::Rans => 1u8,
+            });
+            write_str(&mut out, name);
+            write_str(&mut out, meta);
+            out.extend_from_slice(&(*rows as u64).to_le_bytes());
+            out.extend_from_slice(&(*width as u64).to_le_bytes());
+            out.extend_from_slice(&offset.to_le_bytes());
+            out.extend_from_slice(&(s.len() as u64).to_le_bytes());
+            out.extend_from_slice(&raw_len.to_le_bytes());
+            out.extend_from_slice(&fnv1a64(s).to_le_bytes());
+            offset += s.len() as u64;
+        }
+        debug_assert_eq!(out.len(), header_len, "TOC size accounting drifted");
+        for (_, _, s) in &stored {
+            out.extend_from_slice(s);
+        }
+        out
+    }
+
+    /// [`PocketFile::delta_bytes`] straight to disk.
+    pub fn save_delta(
+        &self,
+        path: &Path,
+        base: &PocketFile,
+        base_id: &str,
+        opts: &CodecOpts,
+    ) -> Result<(), Error> {
+        std::fs::write(path, self.delta_bytes(base, base_id, opts))
+            .map_err(|e| Error::io(path, e))
     }
 
     /// Serialize as the legacy streaming **POCKET01** blob (no TOC).  Kept
@@ -506,6 +641,18 @@ impl PocketFile {
                             e.offset as usize,
                         ));
                     }
+                }
+                SectionKind::GroupDelta | SectionKind::BaseRef => {
+                    // an eager parse has no base to resolve against
+                    return Err(Error::format(
+                        format!(
+                            "section {:?} is a delta against a base pocket; open this \
+                             container through a PocketReader with the base attached \
+                             (PocketReader::with_delta_base / PocketRegistry)",
+                            e.name
+                        ),
+                        e.offset as usize,
+                    ));
                 }
             }
         }
@@ -664,6 +811,142 @@ fn read_group_body(c: &mut Cursor) -> Result<GroupBody, Error> {
     Ok(GroupBody { codebook, indices, decoder, row_scales })
 }
 
+// -- delta-pocket payloads --------------------------------------------------
+
+/// [`SectionKind::GroupDelta`] payload modes (the leading byte).
+const DELTA_FULL: u8 = 0;
+const DELTA_XOR: u8 = 1;
+const DELTA_XOR_ELIDE_IDX: u8 = 2;
+
+/// One group's serialized body (what [`write_group_body`] emits) — the
+/// byte string delta payloads XOR against.
+fn group_body(g: &GroupRecord) -> Vec<u8> {
+    let mut v = Vec::new();
+    write_group_body(&mut v, g);
+    v
+}
+
+/// Byte extent of the index record (u64 length prefix + packed bytes)
+/// inside a group body whose codebook is `[k, d]`.
+fn index_run(k: usize, d: usize, idx_bytes: usize) -> std::ops::Range<usize> {
+    let cb_end = 16 + k * d * 2;
+    cb_end..cb_end + 8 + idx_bytes
+}
+
+/// Encode one [`SectionKind::GroupDelta`] payload: `g`'s body as a delta
+/// against `base`'s.  Identical index records (same codebook shape, same
+/// bit-packed indices) are elided; bodies of different lengths fall back
+/// to full storage — resolution stays byte-exact in every mode.
+fn delta_group_payload(g: &GroupRecord, base: &GroupRecord) -> Vec<u8> {
+    let sb = group_body(g);
+    let bb = group_body(base);
+    if sb.len() != bb.len() {
+        let mut p = Vec::with_capacity(1 + sb.len());
+        p.push(DELTA_FULL);
+        p.extend_from_slice(&sb);
+        return p;
+    }
+    if g.codebook.shape == base.codebook.shape && g.indices == base.indices {
+        let run = index_run(
+            g.codebook.shape[0],
+            g.codebook.shape[1],
+            g.indices.to_bytes().len(),
+        );
+        let mut p = Vec::with_capacity(1 + sb.len() - run.len());
+        p.push(DELTA_XOR_ELIDE_IDX);
+        p.extend(sb[..run.start].iter().zip(&bb[..run.start]).map(|(&a, &b)| a ^ b));
+        p.extend(sb[run.end..].iter().zip(&bb[run.end..]).map(|(&a, &b)| a ^ b));
+        p
+    } else {
+        let mut p = Vec::with_capacity(1 + sb.len());
+        p.push(DELTA_XOR);
+        p.extend(sb.iter().zip(&bb).map(|(&a, &b)| a ^ b));
+        p
+    }
+}
+
+/// Resolve one [`SectionKind::GroupDelta`] payload against the base
+/// pocket's same-named group record, reconstructing the second model's
+/// group **byte-exactly** (the XOR inverts against the base's serialized
+/// body, which re-serializes bit-identically — the f16 payloads are
+/// fixpoints).  Malformed payloads fail typed, never panic.
+pub(crate) fn resolve_delta_payload(
+    payload: &[u8],
+    e: &TocEntry,
+    base: &GroupRecord,
+) -> Result<GroupRecord, Error> {
+    let at = e.offset as usize;
+    let (&mode, stream) = payload
+        .split_first()
+        .ok_or_else(|| Error::format(format!("empty delta section {:?}", e.name), at))?;
+    let bb = group_body(base);
+    let body: Vec<u8> = match mode {
+        DELTA_FULL => stream.to_vec(),
+        DELTA_XOR => {
+            if stream.len() != bb.len() {
+                return Err(Error::format(
+                    format!(
+                        "delta section {:?} XOR stream is {} bytes, base body is {}",
+                        e.name,
+                        stream.len(),
+                        bb.len()
+                    ),
+                    at,
+                ));
+            }
+            stream.iter().zip(&bb).map(|(&a, &b)| a ^ b).collect()
+        }
+        DELTA_XOR_ELIDE_IDX => {
+            let run = index_run(
+                base.codebook.shape[0],
+                base.codebook.shape[1],
+                base.indices.to_bytes().len(),
+            );
+            if run.end > bb.len() || stream.len() + run.len() != bb.len() {
+                return Err(Error::format(
+                    format!(
+                        "delta section {:?} elided-index stream is {} bytes, base body \
+                         is {} with a {}-byte index run",
+                        e.name,
+                        stream.len(),
+                        bb.len(),
+                        run.len()
+                    ),
+                    at,
+                ));
+            }
+            let mut body = Vec::with_capacity(bb.len());
+            body.extend(stream[..run.start].iter().zip(&bb[..run.start]).map(|(&a, &b)| a ^ b));
+            body.extend_from_slice(&bb[run.clone()]);
+            body.extend(stream[run.start..].iter().zip(&bb[run.end..]).map(|(&a, &b)| a ^ b));
+            body
+        }
+        other => {
+            return Err(Error::format(
+                format!("unknown delta mode {other} in section {:?}", e.name),
+                at,
+            ));
+        }
+    };
+    let mut c = Cursor { b: &body, i: 0, base: at };
+    let gb = read_group_body(&mut c)?;
+    if c.i != body.len() {
+        return Err(Error::format(
+            format!("trailing bytes in delta section {:?}", e.name),
+            c.abs(),
+        ));
+    }
+    Ok(GroupRecord {
+        meta_cfg: e.meta_cfg.clone(),
+        rows: e.rows,
+        width: e.width,
+        codebook: gb.codebook,
+        indices: gb.indices,
+        decoder: gb.decoder,
+        row_scales: gb.row_scales,
+    })
+}
+
 /// Parse one POCKET02 group payload (the TOC entry supplies name, meta
 /// config, rows and width).
 pub(crate) fn parse_group_payload(payload: &[u8], e: &TocEntry) -> Result<GroupRecord, Error> {
@@ -768,6 +1051,9 @@ pub(crate) fn parse_header_v2(b: &[u8]) -> Result<(String, Vec<TocEntry>, usize)
         let kind = match c.u8("section kind")? {
             0 => SectionKind::Group,
             1 => SectionKind::Dense,
+            // delta sections only exist in POCKET03 delta containers
+            2 if v3 => SectionKind::GroupDelta,
+            3 if v3 => SectionKind::BaseRef,
             other => {
                 return Err(Error::format(format!("unknown section kind {other}"), c.i - 1));
             }
@@ -1017,6 +1303,86 @@ pub(crate) mod tests {
             assert_eq!(a.row_scales, b.row_scales);
         }
         assert_eq!(from_v1.dense["embed"], from_v2.dense["embed"]);
+    }
+
+    #[test]
+    fn delta_container_reconstructs_the_second_model_bit_exactly() {
+        use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+        use std::sync::Arc;
+        let mut rng = Pcg32::seeded(33);
+        let mut base = sample_file(21);
+        base.groups.insert("v".into(), sample_group(&mut rng, 512, 8, 64, 256));
+        // normalize through bytes so every f16 field is a fixpoint — the
+        // XOR delta is taken against the *serialized* base body
+        let base = PocketFile::from_bytes(&base.to_bytes()).unwrap();
+
+        let mut second = base.clone();
+        // q: codebook nudged one f16 ulp, indices untouched -> elided-index XOR
+        for v in second.groups.get_mut("q").unwrap().codebook.data.iter_mut() {
+            if v.is_finite() {
+                *v = f16_bits_to_f32(f32_to_f16_bits(*v) ^ 1);
+            }
+        }
+        // up: indices re-drawn at the same count and bit width -> whole-body XOR
+        {
+            let g = second.groups.get_mut("up").unwrap();
+            let idx: Vec<u32> = (0..g.indices.len()).map(|_| rng.below(1024)).collect();
+            g.indices = BitPacked::pack(&idx, 10);
+        }
+        // v: different row count -> serialized bodies differ in length -> full
+        second.groups.insert("v".into(), sample_group(&mut rng, 512, 8, 32, 256));
+        // extra: no counterpart in the base -> plain Group section
+        second.groups.insert("extra".into(), sample_group(&mut rng, 256, 4, 16, 128));
+        // dense residue is always stored in full
+        second.dense.insert("embed".into(), vec![0.5f32; 1000]);
+
+        assert_eq!(
+            delta_group_payload(&second.groups["q"], &base.groups["q"])[0],
+            DELTA_XOR_ELIDE_IDX
+        );
+        assert_eq!(delta_group_payload(&second.groups["up"], &base.groups["up"])[0], DELTA_XOR);
+        assert_eq!(delta_group_payload(&second.groups["v"], &base.groups["v"])[0], DELTA_FULL);
+
+        let delta = second.delta_bytes(&base, "first", &CodecOpts::rans());
+        assert_eq!(&delta[..8], MAGIC_V3.as_slice());
+        // the XOR streams are zero-dominant, so the coded delta container
+        // must undercut the standalone second pocket under the same codec
+        let standalone = second.to_bytes_with(&CodecOpts::rans());
+        assert!(
+            delta.len() < standalone.len(),
+            "delta {} !< standalone {}",
+            delta.len(),
+            standalone.len()
+        );
+
+        // a delta container refuses to parse standalone...
+        let e = PocketFile::from_bytes(&delta).unwrap_err();
+        match e {
+            crate::Error::Format { detail, .. } => {
+                assert!(detail.contains("delta against a base pocket"), "{detail}")
+            }
+            other => panic!("expected Format error, got {other:?}"),
+        }
+        // ...and a reader without the base attached fails typed per group
+        let dr = PocketReader::from_bytes(delta).unwrap();
+        assert_eq!(dr.delta_base_id(), Some("first"));
+        let e = dr.group_record("q").unwrap_err();
+        assert!(
+            matches!(e, crate::Error::UnknownConfig { kind: "delta base pocket", .. }),
+            "{e:?}"
+        );
+
+        // with the base attached, every group resolves byte-exactly: the
+        // reconstructed bodies re-serialize bit-identically to `second`'s
+        let base_reader = Arc::new(PocketReader::from_bytes(base.to_bytes()).unwrap());
+        let dr = dr.with_delta_base(base_reader);
+        for (name, want) in &second.groups {
+            let got = dr.group_record(name).unwrap();
+            assert_eq!(got.meta_cfg, want.meta_cfg, "group {name}");
+            assert_eq!(got.rows, want.rows, "group {name}");
+            assert_eq!(group_body(&got), group_body(want), "group {name} body drifted");
+        }
+        assert_eq!(dr.dense_tensor("embed").unwrap(), second.dense["embed"]);
     }
 
     #[test]

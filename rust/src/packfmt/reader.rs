@@ -46,14 +46,14 @@ use super::remote::{HttpOptions, HttpSource, PrefetchPlan};
 use super::source::{open_path, MemSource, SectionBytes, SectionSource, SourceStats};
 use super::{
     decode_stored_payload, decoded_bytes, parse_dense_payload, parse_group_payload,
-    parse_header_v2, verify_checksum, GroupRecord, PocketFile, SectionCoding, SectionKind,
-    TocEntry, MAGIC_V1, MAGIC_V2, MAGIC_V3,
+    parse_header_v2, resolve_delta_payload, verify_checksum, GroupRecord, PocketFile,
+    SectionCoding, SectionKind, TocEntry, MAGIC_V1, MAGIC_V2, MAGIC_V3,
 };
 
 /// Snapshot of a reader's I/O and decode counters.  The `cache` field is
 /// the *shared* [`DecodeCache`]'s view (other readers on the same cache
 /// contribute to it); the flat fields are this reader's own.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ReaderStats {
     /// Bytes pulled from the underlying source (header + fetched sections).
     pub bytes_read: u64,
@@ -118,6 +118,12 @@ pub struct PocketReader {
     /// Process-unique id namespacing this reader's keys in the (possibly
     /// shared) decode cache.
     pocket_id: u64,
+    /// Base pocket id named by this container's [`SectionKind::BaseRef`]
+    /// marker — `Some` only for delta containers.
+    base_id: Option<String>,
+    /// The attached base reader delta sections resolve against
+    /// ([`PocketReader::with_delta_base`]).
+    base: Option<Arc<PocketReader>>,
     cache: Arc<DecodeCache>,
     header_bytes: u64,
     bytes_read: AtomicU64,
@@ -294,6 +300,8 @@ impl PocketReader {
             lm_cfg: pf.lm_cfg.clone(),
             inner: Inner::Eager(pf),
             pocket_id: DecodeCache::next_pocket_id(),
+            base_id: None,
+            base: None,
             cache: DecodeCache::with_budget(Self::default_budget(max_group)),
             header_bytes: total_bytes,
             bytes_read: AtomicU64::new(total_bytes),
@@ -350,10 +358,20 @@ impl PocketReader {
         }
         let mut groups = BTreeMap::new();
         let mut dense = BTreeMap::new();
+        let mut base_id = None;
         for e in toc {
             let map = match e.kind {
-                SectionKind::Group => &mut groups,
+                SectionKind::Group | SectionKind::GroupDelta => &mut groups,
                 SectionKind::Dense => &mut dense,
+                SectionKind::BaseRef => {
+                    if base_id.replace(e.name.clone()).is_some() {
+                        return Err(Error::format(
+                            "multiple base references in TOC",
+                            header_len,
+                        ));
+                    }
+                    continue;
+                }
             };
             if map.insert(e.name.clone(), e).is_some() {
                 return Err(Error::format("duplicate section name in TOC", header_len));
@@ -365,6 +383,8 @@ impl PocketReader {
             lm_cfg,
             inner: Inner::Lazy { src, groups, dense },
             pocket_id: DecodeCache::next_pocket_id(),
+            base_id,
+            base: None,
             cache: DecodeCache::with_budget(Self::default_budget(max_group)),
             header_bytes: header_len as u64,
             bytes_read: AtomicU64::new(header_len as u64),
@@ -399,6 +419,32 @@ impl PocketReader {
     pub fn with_shared_cache(mut self, cache: Arc<DecodeCache>) -> PocketReader {
         self.cache = cache;
         self
+    }
+
+    /// Attach the base pocket this **delta container**'s
+    /// [`SectionKind::GroupDelta`] sections resolve against (builder
+    /// style).  [`PocketReader::delta_base_id`] names which pocket to
+    /// attach; resolution is transparent afterwards — every group API
+    /// (decode, chunks, packed records) serves the reconstructed second
+    /// model, byte-exactly.  Without a base, delta groups fail typed on
+    /// first access.
+    pub fn with_delta_base(mut self, base: Arc<PocketReader>) -> PocketReader {
+        self.base = Some(base);
+        self
+    }
+
+    /// Base pocket id named by this container's [`SectionKind::BaseRef`]
+    /// marker; `None` for ordinary (non-delta) containers.
+    pub fn delta_base_id(&self) -> Option<&str> {
+        self.base_id.as_deref()
+    }
+
+    /// Process-unique id namespacing this reader's keys in the (possibly
+    /// shared) decode cache — the `pocket_id` of its rows in
+    /// [`CacheStats::tenants`](crate::util::cache::CacheStats), what
+    /// fairness accounting and [`DecodeCache::purge_pocket`] key on.
+    pub fn pocket_id(&self) -> u64 {
+        self.pocket_id
     }
 
     /// Cap the decoded-group cache by *group count* (builder style).
@@ -541,8 +587,9 @@ impl PocketReader {
         self.bytes_read.fetch_add(e.length, Ordering::Relaxed);
         self.sections_read.fetch_add(1, Ordering::Relaxed);
         match e.kind {
-            SectionKind::Group => &self.group_sections_read,
-            SectionKind::Dense => &self.dense_sections_read,
+            SectionKind::Group | SectionKind::GroupDelta => &self.group_sections_read,
+            // BaseRef sections are zero-length markers, never fetched
+            SectionKind::Dense | SectionKind::BaseRef => &self.dense_sections_read,
         }
         .fetch_add(1, Ordering::Relaxed);
         if e.coding == SectionCoding::Raw {
@@ -567,6 +614,16 @@ impl PocketReader {
                     known: groups.keys().cloned().collect(),
                 })?;
                 let payload = self.fetch_section(src.as_ref(), e)?;
+                if e.kind == SectionKind::GroupDelta {
+                    let base = self.base.as_ref().ok_or_else(|| Error::UnknownConfig {
+                        kind: "delta base pocket",
+                        name: self.base_id.clone().unwrap_or_default(),
+                    })?;
+                    // the base's stored record is memoized (packed_record),
+                    // so resolving N delta groups re-reads nothing
+                    let base_rec = base.packed_record(group)?;
+                    return resolve_delta_payload(&payload, e, &base_rec);
+                }
                 parse_group_payload(&payload, e)
             }
             Inner::Eager(pf) => pf.groups.get(group).cloned().ok_or_else(|| {
@@ -825,6 +882,18 @@ impl PocketReader {
         match &self.inner {
             Inner::Lazy { groups, .. } => groups.get(group).map(|e| e.meta_cfg.clone()),
             Inner::Eager(pf) => pf.groups.get(group).map(|g| g.meta_cfg.clone()),
+        }
+    }
+
+    /// `(meta_cfg name, row width)` of one compressed group, straight from
+    /// the TOC (lazy) or the parsed record (eager) — enough to decide fused
+    /// separability *without* fetching the group's section bytes.
+    pub fn group_meta(&self, group: &str) -> Option<(String, usize)> {
+        match &self.inner {
+            Inner::Lazy { groups, .. } => {
+                groups.get(group).map(|e| (e.meta_cfg.clone(), e.width))
+            }
+            Inner::Eager(pf) => pf.groups.get(group).map(|g| (g.meta_cfg.clone(), g.width)),
         }
     }
 

@@ -1,0 +1,345 @@
+//! `PocketRegistry` — the multi-tenant fleet's id → pocket map.
+//!
+//! One serving process holds many compressed models: full pockets, delta
+//! pockets layered on a shared base, each addressed by a stable string id
+//! (the `pocket` parameter of a generate request).  The registry maps ids
+//! to *sources* (a path or URL), opens a [`PocketReader`] lazily on first
+//! use, attaches every reader to **one shared byte-budget**
+//! [`DecodeCache`], and resolves delta containers' base references
+//! against itself (recursively, with cycle detection).
+//!
+//! Idle readers are evictable: [`PocketRegistry::evict_idle`] drops the
+//! reader handle *and* purges its cache entries
+//! ([`DecodeCache::purge_pocket`]), so an idle tenant's budget returns to
+//! the active ones immediately instead of waiting for LRU pressure.  A
+//! re-request simply re-opens from the registered source.
+//!
+//! Fairness is observable: each reader's cache traffic is accounted per
+//! `pocket_id` in [`CacheStats::tenants`], and
+//! [`PocketRegistry::tenant_stats`] joins those rows back to registry ids
+//! — the counters `serve-bench --fleet` reports.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::Error;
+use crate::util::cache::{DecodeCache, TenantCacheStats};
+
+use super::PocketReader;
+
+/// Where a registered pocket's bytes come from when (re-)opened.
+#[derive(Clone, Debug)]
+enum PocketSource {
+    Path(PathBuf),
+    Url(String),
+}
+
+struct Entry {
+    source: PocketSource,
+    reader: Option<Arc<PocketReader>>,
+    /// Cache namespace of the *currently or last* open reader — what
+    /// eviction purges and what tenant stats key on.  0 = never opened.
+    pocket_id: u64,
+    last_used: Instant,
+    /// Times [`PocketRegistry::reader`] served this id.
+    uses: u64,
+}
+
+/// Id → pocket map with lazy open, shared decode cache, delta-base
+/// resolution and idle-reader eviction.  See the module docs.
+pub struct PocketRegistry {
+    cache: Arc<DecodeCache>,
+    entries: Mutex<BTreeMap<String, Entry>>,
+}
+
+impl PocketRegistry {
+    /// A registry whose readers share one fresh [`DecodeCache`] bounded by
+    /// `budget_bytes` — the *fleet* budget all tenants compete under.
+    pub fn new(budget_bytes: u64) -> PocketRegistry {
+        Self::with_cache(DecodeCache::with_budget(budget_bytes))
+    }
+
+    /// A registry over an existing shared cache (e.g. one a single-tenant
+    /// reader already uses).
+    pub fn with_cache(cache: Arc<DecodeCache>) -> PocketRegistry {
+        PocketRegistry { cache, entries: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The shared decode cache every opened reader is attached to.
+    pub fn cache(&self) -> &Arc<DecodeCache> {
+        &self.cache
+    }
+
+    /// Register a pocket file on disk under `id`.  Fails when the id is
+    /// taken; the file itself is not touched until the first
+    /// [`PocketRegistry::reader`] call.
+    pub fn register(&self, id: &str, path: impl Into<PathBuf>) -> Result<(), Error> {
+        self.insert(id, PocketSource::Path(path.into()))
+    }
+
+    /// Register a pocket served over HTTP (`http://host[:port]/path`)
+    /// under `id`; connected lazily like [`PocketRegistry::register`].
+    pub fn register_url(&self, id: &str, url: &str) -> Result<(), Error> {
+        self.insert(id, PocketSource::Url(url.to_string()))
+    }
+
+    fn insert(&self, id: &str, source: PocketSource) -> Result<(), Error> {
+        let mut entries = self.entries.lock().unwrap();
+        if entries.contains_key(id) {
+            return Err(Error::Other(anyhow::anyhow!(
+                "pocket id {id:?} is already registered"
+            )));
+        }
+        entries.insert(
+            id.to_string(),
+            Entry {
+                source,
+                reader: None,
+                pocket_id: 0,
+                last_used: Instant::now(),
+                uses: 0,
+            },
+        );
+        Ok(())
+    }
+
+    /// Registered ids, sorted.
+    pub fn ids(&self) -> Vec<String> {
+        self.entries.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Whether `id` currently holds an open reader (false after idle
+    /// eviction or before first use).
+    pub fn is_open(&self, id: &str) -> bool {
+        self.entries
+            .lock()
+            .unwrap()
+            .get(id)
+            .is_some_and(|e| e.reader.is_some())
+    }
+
+    /// The reader for `id`, opening it (and, for a delta container, its
+    /// registered base — recursively) on first use.  Every opened reader
+    /// shares the registry's cache; the returned `Arc` stays valid across
+    /// an idle eviction of the entry.
+    pub fn reader(&self, id: &str) -> Result<Arc<PocketReader>, Error> {
+        let mut entries = self.entries.lock().unwrap();
+        let mut visiting = Vec::new();
+        Self::open_entry(&mut entries, &self.cache, id, &mut visiting)
+    }
+
+    fn open_entry(
+        entries: &mut BTreeMap<String, Entry>,
+        cache: &Arc<DecodeCache>,
+        id: &str,
+        visiting: &mut Vec<String>,
+    ) -> Result<Arc<PocketReader>, Error> {
+        if visiting.iter().any(|v| v == id) {
+            visiting.push(id.to_string());
+            return Err(Error::Other(anyhow::anyhow!(
+                "delta base cycle: {}",
+                visiting.join(" -> ")
+            )));
+        }
+        let entry = entries.get_mut(id).ok_or_else(|| Error::UnknownConfig {
+            kind: "registered pocket",
+            name: id.to_string(),
+        })?;
+        entry.last_used = Instant::now();
+        entry.uses += 1;
+        if let Some(r) = &entry.reader {
+            return Ok(r.clone());
+        }
+        let source = entry.source.clone();
+        let mut reader = match &source {
+            PocketSource::Path(p) => PocketReader::open(p)?,
+            PocketSource::Url(u) => PocketReader::open_url(u)?,
+        }
+        .with_shared_cache(cache.clone());
+        if let Some(base_id) = reader.delta_base_id().map(str::to_string) {
+            visiting.push(id.to_string());
+            let base = Self::open_entry(entries, cache, &base_id, visiting)?;
+            visiting.pop();
+            reader = reader.with_delta_base(base);
+        }
+        let reader = Arc::new(reader);
+        let entry = entries.get_mut(id).expect("entry existed above");
+        entry.reader = Some(reader.clone());
+        entry.pocket_id = reader.pocket_id();
+        Ok(reader)
+    }
+
+    /// Evict every reader idle for at least `max_idle`, purging its
+    /// entries from the shared cache so the budget returns to active
+    /// tenants immediately.  Returns the evicted ids (sorted).  Handles
+    /// other holders still own keep working — their next decode simply
+    /// re-fetches; the registered source re-opens on the next
+    /// [`PocketRegistry::reader`] call.
+    pub fn evict_idle(&self, max_idle: Duration) -> Vec<String> {
+        let mut entries = self.entries.lock().unwrap();
+        let mut evicted = Vec::new();
+        for (id, e) in entries.iter_mut() {
+            if e.reader.is_some() && e.last_used.elapsed() >= max_idle {
+                e.reader = None;
+                self.cache.purge_pocket(e.pocket_id);
+                evicted.push(id.clone());
+            }
+        }
+        evicted
+    }
+
+    /// Per-tenant cache fairness counters joined back to registry ids:
+    /// `(id, uses, stats)` for every id that has been opened at least
+    /// once, sorted by id.  Ids with no cache traffic yet report a zeroed
+    /// row (the `pocket_id` field still identifies the namespace).
+    pub fn tenant_stats(&self) -> Vec<(String, u64, TenantCacheStats)> {
+        let entries = self.entries.lock().unwrap();
+        let cache_stats = self.cache.stats();
+        entries
+            .iter()
+            .filter(|(_, e)| e.pocket_id != 0)
+            .map(|(id, e)| {
+                let row = cache_stats.tenant(e.pocket_id).copied().unwrap_or(
+                    TenantCacheStats { pocket_id: e.pocket_id, ..Default::default() },
+                );
+                (id.clone(), e.uses, row)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packfmt::tests::sample_file;
+
+    fn write_sample(dir: &std::path::Path, name: &str, seed: u64) -> PathBuf {
+        let p = dir.join(name);
+        sample_file(seed).save(&p).unwrap();
+        p
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pocket_registry_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn lazy_open_shared_cache_and_duplicate_ids() {
+        let dir = temp_dir("lazy");
+        let pa = write_sample(&dir, "a.pocket", 41);
+        let reg = PocketRegistry::new(64 << 20);
+        reg.register("a", &pa).unwrap();
+        reg.register("b", write_sample(&dir, "b.pocket", 42)).unwrap();
+        assert!(matches!(reg.register("a", &pa), Err(Error::Other(_))));
+        assert_eq!(reg.ids(), vec!["a".to_string(), "b".to_string()]);
+        // nothing opened yet
+        assert!(!reg.is_open("a"));
+        let ra = reg.reader("a").unwrap();
+        assert!(reg.is_open("a") && !reg.is_open("b"));
+        // same handle on re-request; shared cache is the registry's
+        assert!(Arc::ptr_eq(&ra, &reg.reader("a").unwrap()));
+        assert!(Arc::ptr_eq(&ra.decode_cache(), reg.cache()));
+        assert!(matches!(
+            reg.reader("nope"),
+            Err(Error::UnknownConfig { kind: "registered pocket", .. })
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn idle_eviction_purges_the_shared_budget_and_reopens() {
+        let dir = temp_dir("evict");
+        let reg = PocketRegistry::new(64 << 20);
+        reg.register("a", write_sample(&dir, "a.pocket", 43)).unwrap();
+        let ra = reg.reader("a").unwrap();
+        // populate the cache under a's pocket_id
+        ra.dense_tensor("embed").unwrap();
+        assert!(reg.cache().stats().resident_bytes > 0);
+        // a zero idle threshold evicts everything not in flight
+        let evicted = reg.evict_idle(Duration::ZERO);
+        assert_eq!(evicted, vec!["a".to_string()]);
+        assert!(!reg.is_open("a"));
+        assert_eq!(reg.cache().stats().resident_bytes, 0, "purge must return the budget");
+        // the old handle still works (re-decodes through the shared cache)
+        assert_eq!(ra.dense_tensor("embed").unwrap().len(), 1000);
+        // and the registry re-opens a fresh reader from the source
+        let ra2 = reg.reader("a").unwrap();
+        assert!(!Arc::ptr_eq(&ra, &ra2));
+        assert_eq!(ra2.dense_tensor("embed").unwrap().len(), 1000);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn delta_pockets_resolve_their_base_through_the_registry() {
+        use crate::packfmt::{CodecOpts, PocketFile};
+        use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+        let dir = temp_dir("delta");
+        // fixpoint-normalize the base, then derive a second model one f16
+        // ulp away (indices shared -> the delta elides them)
+        let base = PocketFile::from_bytes(&sample_file(46).to_bytes()).unwrap();
+        let mut second = base.clone();
+        for v in second.groups.get_mut("q").unwrap().codebook.data.iter_mut() {
+            if v.is_finite() {
+                *v = f16_bits_to_f32(f32_to_f16_bits(*v) ^ 1);
+            }
+        }
+        let bp = dir.join("base.pocket");
+        base.save(&bp).unwrap();
+        let dp = dir.join("second.pocket");
+        second.save_delta(&dp, &base, "base", &CodecOpts::rans()).unwrap();
+
+        let reg = PocketRegistry::new(64 << 20);
+        reg.register("second", &dp).unwrap();
+        // a delta whose base is not registered fails typed on open
+        assert!(matches!(
+            reg.reader("second"),
+            Err(Error::UnknownConfig { kind: "registered pocket", .. })
+        ));
+        reg.register("base", &bp).unwrap();
+        let rd = reg.reader("second").unwrap();
+        assert_eq!(rd.delta_base_id(), Some("base"));
+        assert!(reg.is_open("base"), "opening the delta must open its base");
+        // the resolved record is the second model's, bit-exactly
+        let got = rd.group_record("q").unwrap();
+        let want = &second.groups["q"];
+        assert_eq!(got.codebook.data, want.codebook.data);
+        assert_eq!(got.indices, want.indices);
+        assert_eq!(got.row_scales, want.row_scales);
+
+        // a self-referential delta reports a cycle instead of recursing
+        let lp = dir.join("loop.pocket");
+        second.save_delta(&lp, &base, "loop", &CodecOpts::rans()).unwrap();
+        reg.register("loop", &lp).unwrap();
+        let e = reg.reader("loop").unwrap_err();
+        assert!(e.to_string().contains("cycle"), "{e:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tenant_stats_join_ids_to_cache_rows() {
+        let dir = temp_dir("stats");
+        let reg = PocketRegistry::new(64 << 20);
+        reg.register("a", write_sample(&dir, "a.pocket", 44)).unwrap();
+        reg.register("b", write_sample(&dir, "b.pocket", 45)).unwrap();
+        assert!(reg.tenant_stats().is_empty(), "no opens yet: no rows");
+        let ra = reg.reader("a").unwrap();
+        ra.dense_tensor("embed").unwrap(); // miss
+        ra.dense_tensor("embed").unwrap(); // hit
+        reg.reader("b").unwrap();
+        let stats = reg.tenant_stats();
+        assert_eq!(stats.len(), 2);
+        let (id, uses, row) = &stats[0];
+        assert_eq!(id, "a");
+        assert_eq!(*uses, 1);
+        assert_eq!((row.hits, row.misses), (1, 1));
+        assert!(row.resident_bytes > 0);
+        let (id_b, _, row_b) = &stats[1];
+        assert_eq!(id_b, "b");
+        assert_eq!((row_b.hits, row_b.misses), (0, 0), "b has no cache traffic");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

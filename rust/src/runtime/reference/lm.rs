@@ -1170,7 +1170,8 @@ pub fn seq_nll(cfg: &LmCfg, args: &[Arg]) -> Result<Vec<Out>> {
     Ok(vec![Out::F32(TensorF32::new(vec![bsz], out))])
 }
 
-const LORA_TARGETS: [&str; 7] = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
+/// The per-block matmul weights a LoRA adapter targets (every projection).
+pub const LORA_TARGETS: [&str; 7] = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
 
 fn lora_dims(cfg: &LmCfg, t: &str) -> (usize, usize) {
     let (d, h) = (cfg.d_model, cfg.ffn_hidden);
@@ -1199,6 +1200,37 @@ fn lora_effective(cfg: &LmCfg, params: &[f32], lora: &[f32]) -> Result<Vec<f32>>
         }
     }
     Ok(eff)
+}
+
+/// Per-tensor LoRA merge for the provider seam
+/// ([`LoraProvider`](crate::runtime::weights::LoraProvider)): fold
+/// `(alpha/rank) * A @ B` for one `b{block}.{target}` weight into `w` in
+/// place, running the exact per-slice op sequence of [`lora_effective`] —
+/// same [`matmul`], same accumulation order — so a provider-merged tensor
+/// is bit-identical to the same slice of a whole-vector `lora_merge`.
+pub fn lora_apply_tensor(
+    cfg: &LmCfg,
+    w: &mut [f32],
+    lora: &[f32],
+    block: usize,
+    target: &str,
+) -> Result<()> {
+    let scale = (cfg.lora_alpha / cfg.lora_rank as f64) as f32;
+    let key = format!("b{block}.{target}");
+    let (din, dout) = lora_dims(cfg, target);
+    ensure!(
+        w.len() == din * dout,
+        "lora_apply_tensor: {key} has {} values, expected {}",
+        w.len(),
+        din * dout
+    );
+    let a = cfg.lora_layout.slice(lora, &format!("{key}.A"))?;
+    let bm = cfg.lora_layout.slice(lora, &format!("{key}.B"))?;
+    let delta = matmul(a, bm, din, cfg.lora_rank, dout);
+    for (o, &x) in w.iter_mut().zip(&delta) {
+        *o += scale * x;
+    }
+    Ok(())
 }
 
 /// `lora_train_step_*`: one Adam step on LoRA params only.

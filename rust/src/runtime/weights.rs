@@ -33,6 +33,7 @@ use crate::packfmt::reader::split_block_name;
 use crate::packfmt::PocketReader;
 use crate::runtime::fused::{PackedGroup, PackedMatmul, WeightRepr};
 use crate::runtime::manifest::LmCfg;
+use crate::runtime::reference::lm::{lora_apply_tensor, LORA_TARGETS};
 use crate::runtime::Runtime;
 use crate::tensor::TensorF32;
 
@@ -135,6 +136,34 @@ pub trait WeightProvider: Send + Sync {
     /// [`WeightProvider::tensor`] will hit).  Default: false.
     fn wants_prefetch(&self) -> bool {
         false
+    }
+}
+
+/// A `&P` forwards every call — lets adapter providers (e.g.
+/// [`LoraProvider`]) borrow a shared inner provider instead of owning it.
+impl<P: WeightProvider + ?Sized> WeightProvider for &P {
+    fn cfg(&self) -> &LmCfg {
+        (**self).cfg()
+    }
+
+    fn tensor(&self, name: &str) -> Result<WeightView, Error> {
+        (**self).tensor(name)
+    }
+
+    fn resolve_packed(&self, name: &str) -> Result<Option<Arc<PackedMatmul>>, Error> {
+        (**self).resolve_packed(name)
+    }
+
+    fn prefetch_layer(&self, layer: usize) {
+        (**self).prefetch_layer(layer)
+    }
+
+    fn prefetch_layer_repr(&self, layer: usize, repr: WeightRepr) {
+        (**self).prefetch_layer_repr(layer, repr)
+    }
+
+    fn wants_prefetch(&self) -> bool {
+        (**self).wants_prefetch()
     }
 }
 
@@ -255,17 +284,25 @@ impl<'rt> PocketProvider<'rt> {
         if let Some(pg) = self.packed_groups.lock().unwrap().get(gname) {
             return Ok(pg.clone());
         }
-        let rec = self.reader.packed_record(gname)?;
+        // Decide separability from the TOC alone: a non-separable group
+        // ("rln" et al.) serves dense, so its packed section bytes must
+        // never be fetched — the dense fallback would not read them.
+        let (meta_name, width) =
+            self.reader.group_meta(gname).ok_or_else(|| Error::UnknownGroup {
+                group: gname.to_string(),
+                known: self.reader.group_names(),
+            })?;
         let mc = self
             .rt
             .manifest
-            .meta_cfg(&rec.meta_cfg)
+            .meta_cfg(&meta_name)
             .map_err(|_| Error::UnknownConfig {
                 kind: "meta config",
-                name: rec.meta_cfg.clone(),
+                name: meta_name.clone(),
             })?
             .clone();
-        let built = if mc.norm == "ln" && mc.w == rec.width {
+        let built = if mc.norm == "ln" && mc.w == width {
+            let rec = self.reader.packed_record(gname)?;
             let table = job::decode_codeword_table(self.rt, &mc, &rec.decoder, &rec.codebook)
                 .map_err(Error::from)?;
             Some(Arc::new(PackedGroup::new(
@@ -409,6 +446,109 @@ impl WeightProvider for PocketProvider<'_> {
 
     fn wants_prefetch(&self) -> bool {
         self.reader.decode_cache().budget() > 0
+    }
+}
+
+/// Per-tenant LoRA adapter applied at the provider seam: wraps any
+/// [`WeightProvider`] and serves the LoRA-target matmul weights
+/// (`b{b}.{wq,wk,wv,wo,wgate,wup,wdown}`, the
+/// [`LORA_TARGETS`](crate::runtime::reference::lm::LORA_TARGETS)) with
+/// `(alpha/rank) * A @ B` folded in — computed once per tensor with the
+/// exact op order of the `lora_merge_*` kernel
+/// ([`lora_apply_tensor`](crate::runtime::reference::lm::lora_apply_tensor)),
+/// so in the Exact path adapted logits are **bit-identical** to running
+/// the merged-dense model.  Every other tensor passes straight through to
+/// the inner provider (and its shared [`DecodeCache`](crate::DecodeCache)):
+/// thousands of tenants can share one resident base, each paying only for
+/// its merged target tensors.
+///
+/// Targets always resolve dense (`resolve_packed` → `Ok(None)`): the
+/// additive per-tenant delta has no packed (codebook-factored) form.
+/// Merged tensors are memoized outside the byte-budget cache — they are
+/// the tenant's private working set, sized by the adapter's reach, not by
+/// the base model.
+pub struct LoraProvider<P> {
+    inner: P,
+    lora: Vec<f32>,
+    merged: Mutex<HashMap<String, Arc<TensorF32>>>,
+}
+
+impl<P: WeightProvider> LoraProvider<P> {
+    /// Wrap `inner` with one adapter (a flat `cfg().lora_layout` vector,
+    /// e.g. out of [`init_lora`](crate::model::init_lora) or
+    /// `Session::lora_finetune`).  Fails typed when the vector does not
+    /// match the layout.
+    pub fn new(inner: P, lora: Vec<f32>) -> Result<LoraProvider<P>, Error> {
+        let total = inner.cfg().lora_layout.total;
+        if lora.len() != total {
+            return Err(Error::ShapeMismatch {
+                what: format!("lora adapter for {}", inner.cfg().name),
+                expected: format!("{total} values"),
+                got: format!("{} values", lora.len()),
+            });
+        }
+        Ok(LoraProvider { inner, lora, merged: Mutex::new(HashMap::new()) })
+    }
+
+    /// The wrapped provider.
+    pub fn inner(&self) -> &P {
+        &self.inner
+    }
+
+    /// `Some((block, target))` when `name` is a weight this adapter merges.
+    fn target(&self, name: &str) -> Option<(usize, &str)> {
+        let (block, tname) = split_block_name(name)?;
+        if block < self.inner.cfg().n_layers && LORA_TARGETS.contains(&tname) {
+            Some((block, tname))
+        } else {
+            None
+        }
+    }
+}
+
+impl<P: WeightProvider> WeightProvider for LoraProvider<P> {
+    fn cfg(&self) -> &LmCfg {
+        self.inner.cfg()
+    }
+
+    fn tensor(&self, name: &str) -> Result<WeightView, Error> {
+        let Some((block, tname)) = self.target(name) else {
+            return self.inner.tensor(name);
+        };
+        if let Some(buf) = self.merged.lock().unwrap().get(name) {
+            return Ok(WeightView::whole(buf.clone()));
+        }
+        let base = self.inner.tensor(name)?;
+        let mut w = base.as_slice().to_vec();
+        lora_apply_tensor(self.inner.cfg(), &mut w, &self.lora, block, tname)
+            .map_err(Error::from)?;
+        let buf = Arc::new(TensorF32::new(vec![w.len()], w));
+        let mut memo = self.merged.lock().unwrap();
+        // two threads may race the merge; keep the first insertion so every
+        // caller shares one allocation
+        let entry = memo.entry(name.to_string()).or_insert(buf);
+        Ok(WeightView::whole(entry.clone()))
+    }
+
+    fn resolve_packed(&self, name: &str) -> Result<Option<Arc<PackedMatmul>>, Error> {
+        if self.target(name).is_some() {
+            return Ok(None);
+        }
+        self.inner.resolve_packed(name)
+    }
+
+    fn prefetch_layer(&self, layer: usize) {
+        self.inner.prefetch_layer(layer)
+    }
+
+    fn prefetch_layer_repr(&self, layer: usize, _repr: WeightRepr) {
+        // every packable group tensor is a LoRA target here, and targets
+        // serve dense — warm the dense chunks the merge will read
+        self.inner.prefetch_layer(layer)
+    }
+
+    fn wants_prefetch(&self) -> bool {
+        self.inner.wants_prefetch()
     }
 }
 

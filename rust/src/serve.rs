@@ -84,7 +84,7 @@ pub enum ServeRequest {
 
 /// Outcome of one [`PocketServer::run`]: wall time plus the reader's
 /// counter snapshot (including the shared cache's stats).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServeReport {
     pub requests: usize,
     pub workers: usize,
@@ -292,8 +292,12 @@ pub struct GenServeStats {
     pub peak_batch: usize,
 }
 
-/// One queued request: prompt, sampling parameters and the token sink.
+/// One queued request: target tenant, prompt, sampling parameters and the
+/// token sink.
 struct EngineMsg {
+    /// Index into the engine's provider slice (0 for a single-tenant
+    /// server).  Resolved from the `pocket=` id before enqueueing.
+    tenant: usize,
     prompt: Vec<i32>,
     params: GenParams,
     tx: SyncSender<Result<i32, Error>>,
@@ -311,6 +315,9 @@ enum LaneExit {
 
 /// One in-flight request inside the engine.
 struct Lane {
+    /// Which tenant's provider steps this lane.  Lanes of different
+    /// tenants coexist in the batch; each step groups them per tenant.
+    tenant: usize,
     state: GenState,
     rng: Pcg32,
     prompt: Vec<i32>,
@@ -348,10 +355,20 @@ impl Lane {
     }
 }
 
-/// Validate one request against the model window; admit it as a fresh lane
-/// or answer with a typed rejection.
-fn admit_lane(cfg: &LmCfg, msg: EngineMsg, lanes: &mut Vec<Lane>, stats: &mut GenServeStats) {
-    let EngineMsg { prompt, params, tx } = msg;
+/// Validate one request against its tenant's model window; admit it as a
+/// fresh lane or answer with a typed rejection.
+fn admit_lane(cfgs: &[&LmCfg], msg: EngineMsg, lanes: &mut Vec<Lane>, stats: &mut GenServeStats) {
+    let EngineMsg { tenant, prompt, params, tx } = msg;
+    let Some(cfg) = cfgs.get(tenant).copied() else {
+        // the front ends resolve pocket ids before enqueueing, so this is
+        // a misuse guard, not a client-reachable path
+        stats.rejected += 1;
+        let _ = tx.try_send(Err(Error::UnknownConfig {
+            kind: "fleet tenant",
+            name: tenant.to_string(),
+        }));
+        return;
+    };
     let reject = |what: String, expected: String, got: String| {
         Err(Error::ShapeMismatch { what, expected, got })
     };
@@ -386,6 +403,7 @@ fn admit_lane(cfg: &LmCfg, msg: EngineMsg, lanes: &mut Vec<Lane>, stats: &mut Ge
     }
     stats.requests += 1;
     lanes.push(Lane {
+        tenant,
         state: GenState::new(cfg),
         rng: Pcg32::seeded(params.seed),
         prompt,
@@ -399,30 +417,35 @@ fn admit_lane(cfg: &LmCfg, msg: EngineMsg, lanes: &mut Vec<Lane>, stats: &mut Ge
     });
 }
 
-/// The continuous-batching engine loop.  Owns every lane; admits queued
-/// requests up to `max_batch`, advances all unparked lanes with one
-/// [`gen_step_batch_repr`] per iteration (one weight resolution per block for
-/// the whole batch), streams sampled tokens to per-request sinks, and
-/// retires lanes as they complete, fail, or lose their client.  Returns
-/// when the inbox disconnects and the last lane retires.
+/// The continuous-batching engine loop — multi-tenant: one provider per
+/// tenant, one shared lane pool.  Owns every lane; admits queued requests
+/// up to `max_batch` (lanes from different tenants mix freely in the
+/// pool), advances all unparked lanes with one [`gen_step_batch_repr`]
+/// **per tenant with work** per iteration (one weight resolution per block
+/// for that tenant's whole group), streams sampled tokens to per-request
+/// sinks, and retires lanes as they complete, fail, or lose their client.
+/// Returns when the inbox disconnects and the last lane retires.
 fn run_gen_engine(
-    provider: &dyn WeightProvider,
+    providers: &[&dyn WeightProvider],
     inbox: Receiver<EngineMsg>,
     opts: &GenEngineOpts,
 ) -> GenServeStats {
-    let cfg = provider.cfg();
-    let n_layers = cfg.n_layers;
+    let cfgs: Vec<&LmCfg> = providers.iter().map(|p| p.cfg()).collect();
     let max_batch = opts.max_batch.max(1);
     let repr = opts.repr;
+    let max_layers = cfgs.iter().map(|c| c.n_layers).max().unwrap_or(0);
     let mut stats = GenServeStats::default();
     std::thread::scope(|scope| {
         // advisory next-layer prefetch, same idiom as `generate_tokens`:
-        // a helper decodes layer i while the engine computes layer i-1
-        let (ptx, prx) = mpsc::sync_channel::<usize>(n_layers.max(1) + 1);
-        if provider.wants_prefetch() {
+        // a helper decodes layer i while the engine computes layer i-1.
+        // One helper serves the whole fleet — requests carry the tenant.
+        let (ptx, prx) = mpsc::sync_channel::<(usize, usize)>(max_layers.max(1) + 1);
+        if providers.iter().any(|p| p.wants_prefetch()) {
             scope.spawn(move || {
-                while let Ok(i) = prx.recv() {
-                    provider.prefetch_layer_repr(i, repr);
+                while let Ok((t, i)) = prx.recv() {
+                    if providers[t].wants_prefetch() {
+                        providers[t].prefetch_layer_repr(i, repr);
+                    }
                 }
             });
         } else {
@@ -455,7 +478,7 @@ fn run_gen_engine(
                         }
                     }
                 };
-                admit_lane(cfg, msg, &mut lanes, &mut stats);
+                admit_lane(&cfgs, msg, &mut lanes, &mut stats);
             }
             if lanes.is_empty() {
                 if inbox_open {
@@ -501,67 +524,85 @@ fn run_gen_engine(
                 continue;
             }
 
-            // one batched decode step over every unparked lane.  The three
+            // one batched decode step per tenant over its unparked lanes.
+            // Tenant groups are disjoint, so stepping one never disturbs
+            // another's wants_step() — and within a tenant the three
             // wants_step() passes agree: nothing between them mutates the
             // fields the predicate reads.
-            let toks: Vec<i32> =
-                lanes.iter().filter(|l| l.wants_step()).map(|l| l.next_input()).collect();
-            if toks.is_empty() {
+            let mut stepped_any = false;
+            for (ti, provider) in providers.iter().enumerate() {
+                let mine = |l: &Lane| l.tenant == ti && l.wants_step();
+                let toks: Vec<i32> =
+                    lanes.iter().filter(|l| mine(l)).map(|l| l.next_input()).collect();
+                if toks.is_empty() {
+                    continue;
+                }
+                stepped_any = true;
+                let n_layers = cfgs[ti].n_layers;
+                let mut refs: Vec<&mut GenState> =
+                    lanes.iter_mut().filter(|l| mine(l)).map(|l| &mut l.state).collect();
+                let step = gen_step_batch_repr(
+                    *provider,
+                    &mut refs,
+                    &toks,
+                    |b| {
+                        let _ = ptx.try_send((ti, (b + 1) % n_layers.max(1)));
+                    },
+                    repr,
+                );
+                drop(refs);
+                let rows = match step {
+                    Ok(rows) => rows,
+                    Err(e) => {
+                        // a failed batch poisons the stepped lanes (their KV
+                        // caches may be partially written): report and retire
+                        let msg = format!("{e:#}");
+                        for lane in lanes.iter_mut().filter(|l| mine(l)) {
+                            let _ =
+                                lane.tx.try_send(Err(Error::Other(anyhow::anyhow!("{msg}"))));
+                            lane.exit = LaneExit::Failed;
+                        }
+                        continue;
+                    }
+                };
+                stats.steps += 1;
+                stats.lane_steps += rows.len() as u64;
+                let mut rows_it = rows.into_iter();
+                for lane in lanes.iter_mut().filter(|l| mine(l)) {
+                    let row = rows_it.next().expect("one logits row per stepped lane");
+                    lane.fed += 1;
+                    if lane.fed < lane.prompt.len() {
+                        continue; // still consuming the prompt
+                    }
+                    let sampled = sample_logits(
+                        &row,
+                        lane.params.temperature,
+                        lane.params.top_k,
+                        &mut lane.rng,
+                    );
+                    match sampled {
+                        Ok(t) => {
+                            lane.emitted += 1;
+                            lane.last = t;
+                            match lane.tx.try_send(Ok(t)) {
+                                Ok(()) => {}
+                                Err(TrySendError::Full(_)) => lane.pending = Some(t),
+                                Err(TrySendError::Disconnected(_)) => {
+                                    lane.exit = LaneExit::Dropped
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            let _ = lane.tx.try_send(Err(e));
+                            lane.exit = LaneExit::Failed;
+                        }
+                    }
+                }
+            }
+            if !stepped_any {
                 // every lane is parked on a slow client: wait, don't spin
                 std::thread::sleep(Duration::from_micros(200));
                 continue;
-            }
-            let mut refs: Vec<&mut GenState> =
-                lanes.iter_mut().filter(|l| l.wants_step()).map(|l| &mut l.state).collect();
-            let step = gen_step_batch_repr(
-                provider,
-                &mut refs,
-                &toks,
-                |b| {
-                    let _ = ptx.try_send((b + 1) % n_layers.max(1));
-                },
-                repr,
-            );
-            drop(refs);
-            let rows = match step {
-                Ok(rows) => rows,
-                Err(e) => {
-                    // a failed batch poisons the stepped lanes (their KV
-                    // caches may be partially written): report and retire
-                    let msg = format!("{e:#}");
-                    for lane in lanes.iter_mut().filter(|l| l.wants_step()) {
-                        let _ = lane.tx.try_send(Err(Error::Other(anyhow::anyhow!("{msg}"))));
-                        lane.exit = LaneExit::Failed;
-                    }
-                    continue;
-                }
-            };
-            stats.steps += 1;
-            stats.lane_steps += rows.len() as u64;
-            let mut rows_it = rows.into_iter();
-            for lane in lanes.iter_mut().filter(|l| l.wants_step()) {
-                let row = rows_it.next().expect("one logits row per stepped lane");
-                lane.fed += 1;
-                if lane.fed < lane.prompt.len() {
-                    continue; // still consuming the prompt
-                }
-                let sampled =
-                    sample_logits(&row, lane.params.temperature, lane.params.top_k, &mut lane.rng);
-                match sampled {
-                    Ok(t) => {
-                        lane.emitted += 1;
-                        lane.last = t;
-                        match lane.tx.try_send(Ok(t)) {
-                            Ok(()) => {}
-                            Err(TrySendError::Full(_)) => lane.pending = Some(t),
-                            Err(TrySendError::Disconnected(_)) => lane.exit = LaneExit::Dropped,
-                        }
-                    }
-                    Err(e) => {
-                        let _ = lane.tx.try_send(Err(e));
-                        lane.exit = LaneExit::Failed;
-                    }
-                }
             }
         }
         drop(ptx);
@@ -577,6 +618,9 @@ pub struct GenServerHandle {
     addr: SocketAddr,
     tx: mpsc::Sender<EngineMsg>,
     stream_capacity: usize,
+    /// Tenant ids in engine order; index = the lane's tenant.  A
+    /// single-tenant server has exactly one entry.
+    tenants: Arc<Vec<String>>,
 }
 
 impl GenServerHandle {
@@ -590,15 +634,46 @@ impl GenServerHandle {
         format!("http://{}/generate", self.addr)
     }
 
-    /// Submit a request straight to the engine (no HTTP).  The receiver
-    /// streams one `Ok(token)` per generated token and closes at end of
-    /// stream; a rejected or failed request yields one `Err`.  Dropping
-    /// the receiver mid-stream retires the request (client drop).
+    /// The pocket ids this server routes on (`pocket=` query values), in
+    /// engine order.
+    pub fn tenants(&self) -> &[String] {
+        &self.tenants
+    }
+
+    /// Submit a request straight to the engine (no HTTP), addressed to the
+    /// **first** tenant — the whole server on a single-tenant
+    /// [`serve_generation`].  The receiver streams one `Ok(token)` per
+    /// generated token and closes at end of stream; a rejected or failed
+    /// request yields one `Err`.  Dropping the receiver mid-stream retires
+    /// the request (client drop).
     pub fn submit(&self, prompt: Vec<i32>, params: GenParams) -> Receiver<Result<i32, Error>> {
+        self.submit_tenant(0, prompt, params)
+    }
+
+    /// Submit a request to the tenant registered under `pocket`; unknown
+    /// ids fail typed before touching the engine.
+    pub fn submit_pocket(
+        &self,
+        pocket: &str,
+        prompt: Vec<i32>,
+        params: GenParams,
+    ) -> Result<Receiver<Result<i32, Error>>, Error> {
+        let tenant = self.tenants.iter().position(|t| t == pocket).ok_or_else(|| {
+            Error::UnknownConfig { kind: "registered pocket", name: pocket.to_string() }
+        })?;
+        Ok(self.submit_tenant(tenant, prompt, params))
+    }
+
+    fn submit_tenant(
+        &self,
+        tenant: usize,
+        prompt: Vec<i32>,
+        params: GenParams,
+    ) -> Receiver<Result<i32, Error>> {
         let (tx, rx) = mpsc::sync_channel(self.stream_capacity.max(1));
         // a send error means the engine already shut down; the dropped
         // sender then closes the stream immediately
-        let _ = self.tx.send(EngineMsg { prompt, params, tx });
+        let _ = self.tx.send(EngineMsg { tenant, prompt, params, tx });
         rx
     }
 }
@@ -629,7 +704,9 @@ fn parse_gen_query(req: &Request) -> Result<(Vec<i32>, GenParams), String> {
 }
 
 /// Answer one `GET /generate?prompt=1,2,3&max_new=8&temperature=0.8&
-/// top_k=5&seed=42` request by streaming newline-delimited token ids.
+/// top_k=5&seed=42[&pocket=id]` request by streaming newline-delimited
+/// token ids.  `pocket=` selects the tenant on a fleet server (default:
+/// the first registered tenant); an unknown id is a `400`.
 ///
 /// The first engine event picks the status line — `400` for a rejected
 /// request, `200` for an accepted one — after which tokens stream as they
@@ -642,6 +719,7 @@ fn handle_generate_request(
     stream: &mut TcpStream,
     engine_tx: &mpsc::Sender<EngineMsg>,
     stream_capacity: usize,
+    tenants: &[String],
 ) -> bool {
     fn simple(stream: &mut TcpStream, status: &str, body: &str) {
         let head = format!(
@@ -665,8 +743,22 @@ fn handle_generate_request(
             return false;
         }
     };
+    let tenant = match req.query_param("pocket") {
+        None => 0,
+        Some(id) => match tenants.iter().position(|t| t == id) {
+            Some(i) => i,
+            None => {
+                simple(
+                    stream,
+                    "400 Bad Request",
+                    &format!("error: unknown pocket {id:?} (serving: {})\n", tenants.join(", ")),
+                );
+                return false;
+            }
+        },
+    };
     let (rtx, rrx) = mpsc::sync_channel(stream_capacity.max(1));
-    if engine_tx.send(EngineMsg { prompt, params, tx: rtx }).is_err() {
+    if engine_tx.send(EngineMsg { tenant, prompt, params, tx: rtx }).is_err() {
         simple(stream, "503 Service Unavailable", "generation engine is shut down\n");
         return false;
     }
@@ -722,22 +814,56 @@ pub fn serve_generation<R>(
     opts: GenEngineOpts,
     f: impl FnOnce(&GenServerHandle) -> R,
 ) -> Result<(R, GenServeStats), Error> {
+    serve_generation_fleet(&[("default", provider)], opts, f)
+}
+
+/// [`serve_generation`] for a **fleet**: one server, one engine, one batch
+/// pool — many tenants.  Each `(pocket id, provider)` pair becomes an
+/// addressable tenant; requests pick theirs with the `pocket=` query
+/// parameter (HTTP) or [`GenServerHandle::submit_pocket`] (in-process),
+/// and lanes from different tenants advance in the same engine loop —
+/// each iteration runs one batched step per tenant with work.  Per-lane
+/// sampling state keeps every stream bit-identical to a solo run of its
+/// own model regardless of what the other tenants are doing.  Requests
+/// without a `pocket=` parameter go to the first tenant.
+///
+/// The providers typically share one byte-budget decode cache (open their
+/// readers through a [`PocketRegistry`](crate::packfmt::PocketRegistry)),
+/// making the cache's per-tenant fairness counters the observability story
+/// for the whole fleet.
+pub fn serve_generation_fleet<R>(
+    tenants: &[(&str, &dyn WeightProvider)],
+    opts: GenEngineOpts,
+    f: impl FnOnce(&GenServerHandle) -> R,
+) -> Result<(R, GenServeStats), Error> {
+    if tenants.is_empty() {
+        return Err(Error::Other(anyhow::anyhow!("fleet server needs at least one tenant")));
+    }
+    let ids: Vec<String> = tenants.iter().map(|(id, _)| id.to_string()).collect();
+    if let Some(dup) = ids.iter().enumerate().find(|(i, id)| ids[..*i].contains(id)) {
+        return Err(Error::Other(anyhow::anyhow!("duplicate fleet tenant id {:?}", dup.1)));
+    }
+    let ids = Arc::new(ids);
+    let providers: Vec<&dyn WeightProvider> = tenants.iter().map(|(_, p)| *p).collect();
     let (tx, rx) = mpsc::channel::<EngineMsg>();
     let opts_ref = &opts;
+    let providers_ref = &providers;
     std::thread::scope(|scope| {
-        let engine = scope.spawn(move || run_gen_engine(provider, rx, opts_ref));
+        let engine = scope.spawn(move || run_gen_engine(providers_ref, rx, opts_ref));
         let http_tx = tx.clone();
         let capacity = opts.stream_capacity;
+        let http_ids = ids.clone();
         // a short idle timeout bounds how long a silent connection can
         // keep the engine inbox alive after shutdown begins
         let server = HttpServer::bind(Duration::from_secs(2), move |req, stream| {
-            handle_generate_request(req, stream, &http_tx, capacity)
+            handle_generate_request(req, stream, &http_tx, capacity, &http_ids)
         })
         .map_err(|e| Error::Other(anyhow::anyhow!("bind generation server: {e}")))?;
         let handle = GenServerHandle {
             addr: server.addr(),
             tx: tx.clone(),
             stream_capacity: opts.stream_capacity,
+            tenants: ids.clone(),
         };
         let out = f(&handle);
         // teardown: stop accepting, then drop every inbox sender so the
@@ -758,12 +884,33 @@ pub fn http_generate(
     prompt: &[i32],
     params: &GenParams,
 ) -> Result<Vec<i32>, Error> {
+    http_generate_with(addr, prompt, params, None)
+}
+
+/// [`http_generate`] addressed to one tenant of a fleet server: adds
+/// `pocket=<id>` to the query so the request routes to that pocket's
+/// provider.
+pub fn http_generate_pocket(
+    addr: SocketAddr,
+    pocket: &str,
+    prompt: &[i32],
+    params: &GenParams,
+) -> Result<Vec<i32>, Error> {
+    http_generate_with(addr, prompt, params, Some(pocket))
+}
+
+fn http_generate_with(
+    addr: SocketAddr,
+    prompt: &[i32],
+    params: &GenParams,
+    pocket: Option<&str>,
+) -> Result<Vec<i32>, Error> {
     let wire = |e: std::io::Error| Error::Other(anyhow::anyhow!("generation request: {e}"));
     let mut stream = TcpStream::connect(addr).map_err(wire)?;
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(Duration::from_secs(60))).ok();
     let prompt_s: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
-    let path = format!(
+    let mut path = format!(
         "/generate?prompt={}&max_new={}&temperature={}&top_k={}&seed={}",
         prompt_s.join(","),
         params.max_new,
@@ -771,6 +918,9 @@ pub fn http_generate(
         params.top_k,
         params.seed
     );
+    if let Some(id) = pocket {
+        path.push_str(&format!("&pocket={id}"));
+    }
     let req = format!("GET {path} HTTP/1.1\r\nHost: pocket\r\nConnection: close\r\n\r\n");
     stream.write_all(req.as_bytes()).map_err(wire)?;
     let mut raw = Vec::new();

@@ -41,8 +41,9 @@ use crate::packfmt::{HttpOptions, PocketReader};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::fused::WeightRepr;
 use crate::runtime::reference::lm::{gen_step_repr, GenState};
-use crate::runtime::weights::{InMemoryProvider, PocketProvider, WeightProvider};
-use crate::runtime::Runtime;
+use crate::runtime::weights::{InMemoryProvider, LoraProvider, PocketProvider, WeightProvider};
+use crate::runtime::{Arg, Runtime};
+use crate::tensor::TensorF32;
 use crate::serve::PocketServer;
 use crate::util::prng::Pcg32;
 use std::sync::mpsc;
@@ -203,6 +204,48 @@ impl Session {
         seed: u64,
     ) -> Result<WeightStore, Error> {
         lm::lora_finetune(&self.rt, base, corpus, steps, seed).map_err(Error::from)
+    }
+
+    /// Merge a LoRA adapter into dense weights through the runtime's
+    /// `lora_merge_{cfg}` entry point (the same math
+    /// [`Session::lora_finetune`] ends with).  This is the **merged-dense
+    /// baseline** that the lazy per-tensor [`LoraProvider`] path is
+    /// bit-identical to — the fleet tests pin that equivalence.
+    pub fn lora_merge(&self, base: &WeightStore, lora: &[f32]) -> Result<WeightStore, Error> {
+        let cfg = base.cfg.clone();
+        let total = cfg.lora_layout.total;
+        if lora.len() != total {
+            return Err(Error::ShapeMismatch {
+                what: format!("lora adapter for {}", cfg.name),
+                expected: format!("{total} values"),
+                got: format!("{} values", lora.len()),
+            });
+        }
+        let merged = self
+            .rt
+            .exec(
+                &format!("lora_merge_{}", cfg.name),
+                &[
+                    Arg::F32(base.as_tensor()),
+                    Arg::F32(TensorF32::new(vec![lora.len()], lora.to_vec())),
+                ],
+            )
+            .map_err(Error::from)?
+            .remove(0)
+            .f32()
+            .map_err(Error::from)?;
+        Ok(WeightStore { cfg, flat: merged.data })
+    }
+
+    /// Wrap any [`WeightProvider`] with a per-tenant LoRA adapter applied
+    /// lazily at the weight seam — no merged copy of the model is ever
+    /// materialized.  See [`LoraProvider`].
+    pub fn lora_provider<P: WeightProvider>(
+        &self,
+        inner: P,
+        lora: Vec<f32>,
+    ) -> Result<LoraProvider<P>, Error> {
+        LoraProvider::new(inner, lora)
     }
 
     /// Eq. 14 (avg_bits, ratio) per group for a preset, without compressing.

@@ -18,6 +18,9 @@
 //! * Counters ([`CacheStats`]) for hits, misses (= computations), LRU
 //!   evictions, uncacheable inserts, resident bytes and entry count; folded
 //!   into [`crate::ReaderStats`] by the readers.
+//! * **Fairness accounting**: every counter is also kept per pocket id
+//!   ([`TenantCacheStats`]), so a fleet of readers sharing one budget can
+//!   see who hits, who decodes, and whose bytes get evicted to make room.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -32,7 +35,7 @@ pub type DecodeKey = (u64, String);
 /// Snapshot of a cache's counters.  `misses` counts actual decode
 /// computations — threads that waited on another thread's in-flight decode
 /// and then took the cached value count as hits.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
@@ -40,11 +43,39 @@ pub struct CacheStats {
     /// Values larger than the whole budget: served, never cached.
     pub uncacheable: u64,
     pub resident_bytes: u64,
-    /// High-water mark of `resident_bytes` over the cache's lifetime — the
-    /// number `gen-bench` checks against the budget to prove that layer
-    /// streaming really is memory-bounded.
+    /// High-water mark of `resident_bytes` since construction or the last
+    /// [`DecodeCache::reset_peak`] — the number `gen-bench` checks against
+    /// the budget to prove that layer streaming really is memory-bounded.
     pub peak_resident_bytes: u64,
     pub entries: u64,
+    /// Per-pocket fairness breakdown, sorted by pocket id.  When many
+    /// tenants share one budget this is the evidence of who is winning:
+    /// hits/misses say who the cache is serving, `evicted_bytes` says whose
+    /// residency is being sacrificed to admit the others.
+    pub tenants: Vec<TenantCacheStats>,
+}
+
+impl CacheStats {
+    /// The fairness row for one pocket id, if that pocket has ever touched
+    /// the decode path.
+    pub fn tenant(&self, pocket_id: u64) -> Option<&TenantCacheStats> {
+        self.tenants.iter().find(|t| t.pocket_id == pocket_id)
+    }
+}
+
+/// One pocket's share of a (possibly multi-tenant) cache's activity.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantCacheStats {
+    pub pocket_id: u64,
+    /// Decode-path requests answered from this pocket's cached entries.
+    pub hits: u64,
+    /// Decode computations run on this pocket's behalf.
+    pub misses: u64,
+    /// Bytes of this pocket's entries pushed out — by LRU pressure (from
+    /// any tenant) or by an explicit [`DecodeCache::purge_pocket`].
+    pub evicted_bytes: u64,
+    /// This pocket's currently resident decoded bytes.
+    pub resident_bytes: u64,
 }
 
 struct Entry {
@@ -53,15 +84,26 @@ struct Entry {
     bytes: u64,
 }
 
+/// Per-pocket running counters (interior, under the state lock).
+#[derive(Default)]
+struct Tenant {
+    hits: u64,
+    misses: u64,
+    evicted_bytes: u64,
+    resident: u64,
+}
+
 #[derive(Default)]
 struct State {
     /// Most-recently-used first.
     entries: Vec<Entry>,
     resident: u64,
-    /// High-water mark of `resident` (never decreases).
+    /// High-water mark of `resident` (resettable via `reset_peak`).
     peak_resident: u64,
     /// In-flight decodes, for single-flight coordination.
     flights: Vec<(DecodeKey, Arc<Mutex<()>>)>,
+    /// Fairness accounting per pocket id.
+    tenants: std::collections::BTreeMap<u64, Tenant>,
 }
 
 impl State {
@@ -160,6 +202,7 @@ impl DecodeCache {
                 let mut st = self.state.lock().unwrap();
                 if let Some(v) = st.get_mru(pocket, group) {
                     self.hits.fetch_add(1, Ordering::Relaxed);
+                    st.tenants.entry(pocket).or_default().hits += 1;
                     return Ok((v, true));
                 }
                 let in_flight = if coordinate {
@@ -186,6 +229,7 @@ impl DecodeCache {
                         let result = f();
                         self.misses.fetch_add(1, Ordering::Relaxed);
                         let mut st = self.state.lock().unwrap();
+                        st.tenants.entry(pocket).or_default().misses += 1;
                         if coordinate {
                             st.flights.retain(|(k, _)| *k != key);
                         }
@@ -215,15 +259,57 @@ impl DecodeCache {
         if let Some(pos) = st.entries.iter().position(|e| e.key == key) {
             let old = st.entries.remove(pos);
             st.resident -= old.bytes;
+            st.tenants.entry(old.key.0).or_default().resident -= old.bytes;
         }
         while st.resident + bytes > self.budget {
             let evicted = st.entries.pop().expect("resident bytes imply entries");
             st.resident -= evicted.bytes;
+            let t = st.tenants.entry(evicted.key.0).or_default();
+            t.resident -= evicted.bytes;
+            t.evicted_bytes += evicted.bytes;
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
         st.resident += bytes;
         st.peak_resident = st.peak_resident.max(st.resident);
+        st.tenants.entry(key.0).or_default().resident += bytes;
         st.entries.insert(0, Entry { key, value, bytes });
+    }
+
+    /// Reset the resident high-water mark to the *current* residency, so a
+    /// later [`DecodeCache::stats`] reports the peak of one phase rather
+    /// than the cache's whole lifetime.  Multi-phase benches call this at
+    /// phase boundaries.
+    pub fn reset_peak(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.peak_resident = st.resident;
+    }
+
+    /// Drop every resident entry belonging to `pocket` (a closed reader),
+    /// returning the bytes freed.  Freed bytes count into the pocket's
+    /// `evicted_bytes` (and the aggregate eviction counter): residency it
+    /// no longer holds, whoever caused it.  The registry calls this when it
+    /// evicts an idle reader so the shared budget is actually returned.
+    pub fn purge_pocket(&self, pocket: u64) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        let mut freed = 0u64;
+        let mut purged = 0u64;
+        st.entries.retain(|e| {
+            if e.key.0 == pocket {
+                freed += e.bytes;
+                purged += 1;
+                false
+            } else {
+                true
+            }
+        });
+        st.resident -= freed;
+        if freed > 0 || purged > 0 {
+            let t = st.tenants.entry(pocket).or_default();
+            t.resident -= freed;
+            t.evicted_bytes += freed;
+            self.evictions.fetch_add(purged, Ordering::Relaxed);
+        }
+        freed
     }
 
     /// Counter snapshot.
@@ -237,6 +323,17 @@ impl DecodeCache {
             resident_bytes: st.resident,
             peak_resident_bytes: st.peak_resident,
             entries: st.entries.len() as u64,
+            tenants: st
+                .tenants
+                .iter()
+                .map(|(&pocket_id, t)| TenantCacheStats {
+                    pocket_id,
+                    hits: t.hits,
+                    misses: t.misses,
+                    evicted_bytes: t.evicted_bytes,
+                    resident_bytes: t.resident,
+                })
+                .collect(),
         }
     }
 }
@@ -389,6 +486,58 @@ mod tests {
         assert_eq!(st.resident_bytes, 88);
         assert_eq!(st.peak_resident_bytes, 96);
         assert!(st.peak_resident_bytes <= 100, "peak must respect the budget");
+    }
+
+    #[test]
+    fn tenant_fairness_counters_split_by_pocket() {
+        let c = DecodeCache::with_budget(100); // room for 25 f32s
+        // tenant 1 fills most of the budget; tenant 2's insert evicts 1's
+        c.get_or_try_insert_with(1, "a", || Ok::<_, ()>(t(12))).unwrap(); // 48 B
+        c.get_or_try_insert_with(1, "b", || Ok::<_, ()>(t(12))).unwrap(); // 96 B
+        c.get_or_try_insert_with(1, "b", || Ok::<_, ()>(t(12))).unwrap(); // hit
+        c.get_or_try_insert_with(2, "z", || Ok::<_, ()>(t(12))).unwrap(); // evicts 1/"a"
+        let st = c.stats();
+        let t1 = *st.tenant(1).expect("tenant 1 accounted");
+        let t2 = *st.tenant(2).expect("tenant 2 accounted");
+        assert_eq!((t1.hits, t1.misses, t1.evicted_bytes, t1.resident_bytes), (1, 2, 48, 48));
+        assert_eq!((t2.hits, t2.misses, t2.evicted_bytes, t2.resident_bytes), (0, 1, 0, 48));
+        // per-tenant rows sum to the aggregates
+        assert_eq!(t1.hits + t2.hits, st.hits);
+        assert_eq!(t1.misses + t2.misses, st.misses);
+        assert_eq!(t1.resident_bytes + t2.resident_bytes, st.resident_bytes);
+    }
+
+    #[test]
+    fn reset_peak_scopes_the_high_water_mark_to_a_phase() {
+        let c = DecodeCache::with_budget(1000);
+        c.get_or_try_insert_with(1, "a", || Ok::<_, ()>(t(50))).unwrap(); // 200 B
+        c.get_or_try_insert_with(1, "a", || Ok::<_, ()>(t(10))).unwrap(); // hit, still 200
+        assert_eq!(c.stats().peak_resident_bytes, 200);
+        // phase boundary: peak falls back to current residency, then only
+        // new growth raises it
+        let mut st = c.state.lock().unwrap();
+        c.insert_locked(&mut st, k(1, "a"), t(10)); // shrink to 40 B
+        drop(st);
+        c.reset_peak();
+        assert_eq!(c.stats().peak_resident_bytes, 40);
+        c.get_or_try_insert_with(1, "b", || Ok::<_, ()>(t(20))).unwrap(); // +80 B
+        assert_eq!(c.stats().peak_resident_bytes, 120);
+    }
+
+    #[test]
+    fn purge_pocket_frees_budget_and_charges_the_tenant() {
+        let c = DecodeCache::with_budget(1000);
+        c.get_or_try_insert_with(1, "a", || Ok::<_, ()>(t(10))).unwrap(); // 40 B
+        c.get_or_try_insert_with(1, "b", || Ok::<_, ()>(t(10))).unwrap(); // 40 B
+        c.get_or_try_insert_with(2, "a", || Ok::<_, ()>(t(5))).unwrap(); // 20 B
+        assert_eq!(c.purge_pocket(1), 80);
+        let st = c.stats();
+        assert_eq!((st.resident_bytes, st.entries, st.evictions), (20, 1, 2));
+        let t1 = *st.tenant(1).unwrap();
+        assert_eq!((t1.resident_bytes, t1.evicted_bytes), (0, 80));
+        assert!(c.get(1, "a").is_none() && c.get(1, "b").is_none());
+        assert!(c.get(2, "a").is_some(), "other tenants' entries survive a purge");
+        assert_eq!(c.purge_pocket(1), 0, "purging an empty pocket is a no-op");
     }
 
     #[test]

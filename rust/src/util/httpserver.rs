@@ -23,8 +23,8 @@
 
 use std::io::{self, Read};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -79,16 +79,28 @@ struct Shared {
     /// head within this window is dropped, which also bounds how long a
     /// lingering connection can outlive the server.
     read_timeout: Duration,
+    /// Live connection sockets (`try_clone`d handles), keyed by a
+    /// per-connection id so each handler thread can retire its own entry.
+    /// `stop` walks this list and `Shutdown::Both`s every socket, so idle
+    /// keep-alive threads exit immediately instead of sitting out their
+    /// read timeout after the server is gone.
+    conns: Mutex<Vec<(u64, TcpStream)>>,
+    next_conn: AtomicU64,
 }
 
 /// A loopback HTTP/1.1 server on an ephemeral port.  The accept loop and
-/// every connection handler run on background threads; dropping the server
-/// stops the accept loop, unbinds the port and flags open connections to
-/// finish their current request and exit.
+/// every connection handler run on background threads; [`HttpServer::stop`]
+/// (also run on drop) stops the accept loop, unbinds the port and shuts
+/// down every live connection socket so the per-connection threads exit
+/// promptly instead of lingering until the peer closes or the idle timeout
+/// fires.
 pub struct HttpServer {
     shared: Arc<Shared>,
     addr: SocketAddr,
     accept: Option<JoinHandle<()>>,
+    /// Per-connection handler threads, joined on stop (finished handles
+    /// are reaped opportunistically by the accept loop).
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl HttpServer {
@@ -106,17 +118,30 @@ impl HttpServer {
             handler: Box::new(handler),
             stop: AtomicBool::new(false),
             read_timeout,
+            conns: Mutex::new(Vec::new()),
+            next_conn: AtomicU64::new(0),
         });
+        let workers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let accept_shared = shared.clone();
+        let accept_workers = workers.clone();
         let accept = std::thread::spawn(move || {
             while !accept_shared.stop.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let conn_shared = accept_shared.clone();
-                        // handlers are detached: they exit when the peer
-                        // closes, the handler declines keep-alive, or the
-                        // idle timeout fires
-                        std::thread::spawn(move || handle_connection(stream, &conn_shared));
+                        // track the socket so `stop` can shut it down, and
+                        // the thread handle so `stop` can join it
+                        let id = conn_shared.next_conn.fetch_add(1, Ordering::Relaxed);
+                        if let Ok(track) = stream.try_clone() {
+                            conn_shared.conns.lock().unwrap().push((id, track));
+                        }
+                        let worker = std::thread::spawn(move || {
+                            handle_connection(stream, &conn_shared);
+                            conn_shared.conns.lock().unwrap().retain(|(cid, _)| *cid != id);
+                        });
+                        let mut ws = accept_workers.lock().unwrap();
+                        ws.retain(|h| !h.is_finished());
+                        ws.push(worker);
                     }
                     Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                         std::thread::sleep(Duration::from_millis(2));
@@ -125,21 +150,38 @@ impl HttpServer {
                 }
             }
         });
-        Ok(HttpServer { shared, addr, accept: Some(accept) })
+        Ok(HttpServer { shared, addr, accept: Some(accept), workers })
     }
 
     /// The bound loopback address.
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }
-}
 
-impl Drop for HttpServer {
-    fn drop(&mut self) {
+    /// Stop the server: end the accept loop (unbinding the port), shut
+    /// down every live connection socket, and join every per-connection
+    /// thread.  Idle keep-alive connections see their blocking read fail
+    /// immediately rather than waiting out the peer or the idle timeout,
+    /// so back-to-back server instances leak neither threads nor sockets.
+    /// Idempotent; also runs on drop.
+    pub fn stop(&mut self) {
         self.shared.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.accept.take() {
             h.join().ok();
         }
+        for (_, s) in self.shared.conns.lock().unwrap().drain(..) {
+            s.shutdown(Shutdown::Both).ok();
+        }
+        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        for h in workers {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
     }
 }
 
@@ -266,5 +308,38 @@ mod tests {
         // dropping the server joins the accept loop and unbinds the port
         // (another test may immediately reuse it, so no connect assertion)
         drop(srv);
+    }
+
+    #[test]
+    fn stop_shuts_down_idle_keep_alive_connections_promptly() {
+        // a long idle timeout: without active shutdown the per-connection
+        // thread (and the peer's read) would sit here for the full minute
+        let mut srv = HttpServer::bind(Duration::from_secs(60), |_req, stream| {
+            stream
+                .write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\nok")
+                .is_ok()
+        })
+        .unwrap();
+
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.write_all(b"GET /r HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut buf = [0u8; 128];
+        let n = s.read(&mut buf).unwrap();
+        assert!(String::from_utf8_lossy(&buf[..n]).contains("ok"));
+
+        // the connection now idles in keep-alive; stop must tear it down
+        // (and join its thread) without waiting out the read timeout
+        let t0 = std::time::Instant::now();
+        srv.stop();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let eof = matches!(s.read(&mut buf), Ok(0) | Err(_));
+        assert!(eof, "peer socket must be shut down by stop");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "stop took {:?} — it must not wait for the idle timeout",
+            t0.elapsed()
+        );
+        // stop is idempotent and drop after stop is a no-op
+        srv.stop();
     }
 }

@@ -148,6 +148,23 @@ fn rln_pockets_fall_back_to_dense() {
         .unwrap();
     assert_eq!(out.continuation().len(), 4);
     assert!(reader.stats().chunk_decodes > 0, "fallback must ride the dense chunk path");
+    // the separability decision comes from the TOC alone: neither the
+    // resolve_packed probes above nor fused-repr prefetch may fetch a
+    // packed group section an identical dense-repr run wouldn't
+    let dense_reader = Arc::new(PocketReader::from_bytes(pocket.to_bytes()).unwrap());
+    let dense_provider = session.pocket_provider(dense_reader.clone()).unwrap();
+    let dense_out = session
+        .generate(&dense_provider)
+        .prompt(vec![1, 2, 3])
+        .max_new(4)
+        .run()
+        .unwrap();
+    assert_eq!(out.continuation(), dense_out.continuation());
+    assert_eq!(
+        reader.stats().group_sections_read,
+        dense_reader.stats().group_sections_read,
+        "fused repr on an rln pocket fetched packed sections the dense path never needed"
+    );
 }
 
 #[test]

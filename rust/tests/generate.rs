@@ -214,6 +214,61 @@ fn batched_gen_steps_are_bit_identical_to_single_lane() {
 }
 
 #[test]
+fn lora_provider_is_bit_identical_to_merged_dense_weights() {
+    let session = Session::reference();
+    let cfg = session.manifest().lm_cfg("tiny").unwrap().clone();
+    let ws = WeightStore::init(&cfg, &mut Pcg32::seeded(29));
+    // a synthetic nonzero adapter — a fresh init_lora zeroes the B
+    // matrices, which would make the equivalence vacuous
+    let lora: Vec<f32> = (0..cfg.lora_layout.total)
+        .map(|i| ((i * 37 + 11) % 97) as f32 / 970.0 - 0.05)
+        .collect();
+    let merged = session.lora_merge(&ws, &lora).unwrap();
+    assert_ne!(merged.flat, ws.flat, "the adapter must actually perturb the model");
+
+    let prompt = vec![5i32, 1, 30, 2];
+    let mem_merged = session.memory_provider(&merged);
+    let baseline = session
+        .generate(&mem_merged)
+        .prompt(prompt.clone())
+        .max_new(6)
+        .logits_trace(true)
+        .run()
+        .unwrap();
+    // the lazy per-tensor path: base weights stay unmerged, the adapter
+    // folds in at the provider seam with the same op order
+    let lp = session.lora_provider(session.memory_provider(&ws), lora.clone()).unwrap();
+    let via_lora = session
+        .generate(&lp)
+        .prompt(prompt.clone())
+        .max_new(6)
+        .logits_trace(true)
+        .run()
+        .unwrap();
+    assert_eq!(via_lora.tokens, baseline.tokens, "token streams diverged");
+    assert_eq!(via_lora.logits_trace, baseline.logits_trace, "adapted logits diverged");
+
+    // sampling rides the same seam deterministically
+    let sample = |p: &dyn WeightProvider| {
+        session
+            .generate(p)
+            .prompt(prompt.clone())
+            .max_new(6)
+            .temperature(0.9)
+            .top_k(4)
+            .seed(7)
+            .run()
+            .unwrap()
+    };
+    let (a, b) = (sample(&mem_merged), sample(&lp));
+    assert_eq!(a.tokens, b.tokens, "sampled streams diverged");
+
+    // a mis-sized adapter fails typed at construction
+    let e = session.lora_provider(session.memory_provider(&ws), vec![0.0; 3]).unwrap_err();
+    assert!(matches!(e, pocketllm::Error::ShapeMismatch { .. }), "{e:?}");
+}
+
+#[test]
 fn provider_perplexity_matches_backend_eval() {
     let session = Session::reference();
     let cfg = session.manifest().lm_cfg("tiny").unwrap().clone();
