@@ -12,6 +12,9 @@ cargo build --release
 echo "== cargo test (reference backend, hermetic) =="
 cargo test -q
 
+echo "== fused suites again with the SIMD lanes disabled (scalar kernel must stay bit-identical) =="
+POCKETLLM_FORCE_SCALAR=1 cargo test -q --test fused --test kernel_parity
+
 echo "== CLI smoke (reference backend) =="
 ./target/release/pocketllm info --backend reference >/dev/null
 
@@ -34,7 +37,7 @@ test -f ../BENCH_serve.json
 echo "BENCH_serve.json:"
 cat ../BENCH_serve.json
 
-echo "== gen-bench (layer-streaming generation: eager vs mmap vs loopback HTTP, plus dense-vs-fused index-GEMM on an ln pocket -> BENCH_gen.json) =="
+echo "== gen-bench (layer-streaming generation: eager vs mmap vs loopback HTTP, dense-vs-fused index-GEMM on an ln pocket, plus the kernel phase: scalar-vs-SIMD microkernels and packed-rln fused-vs-dense -> BENCH_gen.json) =="
 ./target/release/pocketllm gen-bench --backend reference --repr fused --check --json ../BENCH_gen.json
 test -f ../BENCH_gen.json
 echo "BENCH_gen.json:"

@@ -8,7 +8,8 @@
 //! compression -> POCKET02 packing -> lazy per-group device decode ->
 //! entropy-coded POCKET03 round trip (the CLI's `--codec rans`) ->
 //! pocket-native generation, the fused index-GEMM path that executes
-//! matmuls directly on the pocket, and finally a two-tenant fleet — one
+//! matmuls directly on the pocket (both the "ln" table-gather form and
+//! the packed-rln stats-replay form), and a two-tenant fleet — one
 //! process serving a base pocket and a LoRA-adapted tenant through a
 //! `PocketRegistry` over one shared decode-cache budget.
 
@@ -176,7 +177,39 @@ fn main() -> Result<(), pocketllm::Error> {
         ln_provider.packed_resident_bytes() / 1024
     );
 
-    // 11. multi-tenant fleet: one process serves many pockets.  A
+    // 11. packed-rln: the paper's default whole-row layernorm decoders pack
+    //     too.  No shared codeword table exists (subvectors couple through
+    //     the row norm), so the packed form replays the meta-decoder per
+    //     weight row with the norm reduced to per-row (mean, rstd) affines
+    //     captured at pack time — still bit-identical to dense, still no
+    //     dense W materialized.  `POCKETLLM_FORCE_SCALAR=1` pins the same
+    //     result on the scalar kernel lane.
+    let rln = session
+        .compress(&ws)
+        .meta_override("w{width}_d8_k1024_m1_rln")
+        .groups(["v"])
+        .steps(60)
+        .kmeans_iters(1)
+        .post_steps(10)
+        .run()?;
+    let rln_reader = std::sync::Arc::new(PocketReader::from_bytes(rln.pocket.to_bytes())?);
+    let rln_provider = session.pocket_provider(rln_reader)?;
+    let rln_dense = session.generate(&rln_provider).prompt(vec![1, 2, 3]).max_new(12).run()?;
+    let rln_fused = session
+        .generate(&rln_provider)
+        .prompt(vec![1, 2, 3])
+        .max_new(12)
+        .repr(pocketllm::WeightRepr::Fused)
+        .run()?;
+    assert_eq!(rln_fused.tokens, rln_dense.tokens, "rln replay must reproduce the dense stream");
+    println!(
+        "packed-rln ({} kernel): {:?} identical to dense; packed forms hold {} KiB",
+        pocketllm::Kernel::active().name(),
+        rln_fused.continuation(),
+        rln_provider.packed_resident_bytes() / 1024
+    );
+
+    // 12. multi-tenant fleet: one process serves many pockets.  A
     //     `PocketRegistry` maps ids to sources, opens readers lazily, and
     //     attaches every tenant to one shared decode-cache budget; a
     //     per-tenant LoRA adapter folds in at the provider seam without

@@ -314,6 +314,10 @@ def _build_meta_configs() -> Dict[str, MetaConfig]:
     # each tiny group width.
     add(MetaConfig(W=512, d=8, K=1024, m=3, norm="ln"))
     add(MetaConfig(W=256, d=8, K=1024, m=3, norm="ln"))
+    # Single-layer rln decoder for W=256 (W=512 m=1 exists via the depth
+    # sweep): the m=1 rln pair backs the rust runtime's packed-rln fused
+    # path at both tiny group widths.
+    add(MetaConfig(W=256, d=8, K=1024, m=1))
     return cfgs
 
 

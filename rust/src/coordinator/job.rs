@@ -570,3 +570,116 @@ pub fn decode_codeword_table(
     debug_assert_eq!(table.len(), mc.k * mc.d);
     Ok(table)
 }
+
+/// Build a group's fused execution form ([`fused::PackedGroup`]) from its
+/// stored pocket sections.  Dispatches on the config's norm family:
+///
+/// * `"ln"` — one meta-decoder pass over the K codewords
+///   ([`decode_codeword_table`]) yields the shared `[K, d]` table.
+/// * `"rln"` — no per-codeword table exists (subvectors couple through the
+///   whole-row layernorm), but the norm *statistics* are fully determined
+///   by the stored indices: replay the decoder forward once per `R`-chunk
+///   at pack time, capture each layer's per-row `(mean, rstd)`
+///   ([`meta::decode_rln_row_stats`]), and ship those scalars plus the raw
+///   codebook/decoder layers as the packed form.  The stats capture rides
+///   the reference forward directly (not `rt.exec`) because it needs the
+///   per-layer `NormCache` internals no exported kernel returns — and the
+///   reference backend is the bit-exactness oracle the fused path is
+///   pinned against.
+///
+/// Any other norm family is a typed `ShapeMismatch`, mirroring
+/// [`decode_codeword_table`]'s contract; callers fall back to dense.
+#[allow(clippy::too_many_arguments)]
+pub fn packed_group(
+    rt: &Runtime,
+    mc: &MetaCfg,
+    name: &str,
+    rows_total: usize,
+    decoder: &[f32],
+    codebook: &TensorF32,
+    indices: &crate::util::bitpack::BitPacked,
+    row_scales: &[f32],
+) -> Result<crate::runtime::fused::PackedGroup> {
+    use crate::runtime::fused::{PackedGroup, RlnLayer};
+    use crate::runtime::reference::meta;
+
+    match mc.norm.as_str() {
+        "ln" => {
+            let table = decode_codeword_table(rt, mc, decoder, codebook)?;
+            Ok(PackedGroup::new(
+                name,
+                mc.d,
+                mc.l,
+                mc.k,
+                rows_total,
+                table,
+                indices.clone(),
+                row_scales.to_vec(),
+            )?)
+        }
+        "rln" => {
+            if rows_total % mc.r != 0 {
+                return Err(crate::error::Error::ShapeMismatch {
+                    what: format!("packed rln group rows for {}", mc.name),
+                    expected: format!("a multiple of dispatch chunk R={}", mc.r),
+                    got: format!("{rows_total} rows"),
+                }
+                .into());
+            }
+            let theta = theta_from_decoder(mc, decoder);
+            let dims = mc.layer_dims();
+            let m = dims.len();
+            let mut layers = Vec::with_capacity(m);
+            for (i, &(din, dout)) in dims.iter().enumerate() {
+                let w = mc.theta.slice(&theta.data, &format!("dec.w{i}"))?;
+                let b = mc.theta.slice(&theta.data, &format!("dec.b{i}"))?;
+                layers.push(RlnLayer::new(
+                    w.to_vec(),
+                    b.to_vec(),
+                    din,
+                    dout,
+                    i > 0 && din == dout,
+                    i < m - 1,
+                )?);
+            }
+            let raw = indices.unpack_range(0, rows_total * mc.l);
+            let idx_i32: Vec<i32> = raw.iter().map(|&v| v as i32).collect();
+            let n_chunks = rows_total / mc.r;
+            let stat_chunks = scoped_map(
+                default_workers(n_chunks.max(1)),
+                (0..n_chunks).collect::<Vec<_>>(),
+                |chunk_i| {
+                    meta::decode_rln_row_stats(
+                        mc,
+                        &theta.data,
+                        &codebook.data,
+                        &idx_i32[chunk_i * mc.r * mc.l..(chunk_i + 1) * mc.r * mc.l],
+                        mc.r,
+                    )
+                },
+            );
+            let mut norm_stats = Vec::with_capacity(rows_total * 2 * m);
+            for chunk in stat_chunks {
+                norm_stats.extend_from_slice(&chunk?);
+            }
+            Ok(PackedGroup::new_rln(
+                name,
+                mc.d,
+                mc.l,
+                mc.k,
+                rows_total,
+                codebook.data.clone(),
+                layers,
+                norm_stats,
+                indices.clone(),
+                row_scales.to_vec(),
+            )?)
+        }
+        other => Err(crate::error::Error::ShapeMismatch {
+            what: format!("packed form for {}", mc.name),
+            expected: "a packable norm family (\"ln\" or \"rln\")".to_string(),
+            got: format!("norm == {other:?}"),
+        }
+        .into()),
+    }
+}

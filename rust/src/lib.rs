@@ -124,7 +124,8 @@ pub use packfmt::{
     CodecOpts, HttpOptions, HttpSource, PocketReader, PocketRegistry, PrefetchPlan, ReaderStats,
     RetryPolicy, SectionCoding, SectionSource, SourceStats,
 };
-pub use runtime::fused::{FusedAcc, PackedGroup, PackedMatmul, WeightRepr};
+pub use runtime::fused::kernels::Kernel;
+pub use runtime::fused::{FusedAcc, PackedGroup, PackedMatmul, RlnLayer, WeightRepr};
 pub use runtime::weights::{
     InMemoryProvider, LoraProvider, PocketProvider, WeightProvider, WeightView,
 };

@@ -1116,6 +1116,13 @@ fn cmd_generate(args: &Args) -> Result<()> {
                 st.cache.peak_resident_bytes / 1024,
                 r.decode_cache().budget() / 1024
             );
+            if repr == WeightRepr::Fused && st.fused_fallbacks > 0 {
+                eprintln!(
+                    "warning: {} weight(s) had no packed form and served dense \
+                     under --repr fused (timings are partly dense)",
+                    st.fused_fallbacks
+                );
+            }
         }
         Ok(())
     };
@@ -1305,11 +1312,10 @@ fn cmd_gen_bench(args: &Args) -> Result<()> {
     drop(server);
 
     // `--repr fused`: pocket-native execution — matmuls run directly on
-    // the pocket's (bitpacked indices, row scales, decoded-codeword table)
-    // with no dense weight matrix ever materialized.  Only per-subvector
-    // ("ln") decoders factor this way (an "rln" decoder layernorms the
-    // whole row, coupling subvectors), so a dedicated ln pocket is
-    // compressed from the same weights and dense-vs-fused compared on it.
+    // the pocket's packed form with no dense weight matrix ever
+    // materialized.  This phase measures the table-gather ("ln") form on a
+    // dedicated ln pocket compressed from the same weights; the kernel
+    // phase below covers the packed-rln (stats-replay) form.
     let repr = WeightRepr::parse(&args.str_or("repr", "dense"))?;
     let ln_missing: Vec<String> = {
         let mut widths: Vec<usize> = cfg
@@ -1381,6 +1387,149 @@ fn cmd_gen_bench(args: &Args) -> Result<()> {
         None
     };
 
+    /// The SIMD-lowering comparison (`--repr fused` only): (a) an explicit
+    /// scalar-vs-dispatched microbench of the fused gather-FMA loop on a
+    /// synthetic ln group — kernels compared inside one process via
+    /// `matmul_with_kernel`, so the env override is irrelevant; (b) the
+    /// packed-rln end-to-end — an m=1 rln pocket compressed from the same
+    /// weights, generated dense vs fused, bit-identity and the
+    /// two-layer peak-resident budget pinned.
+    struct KernelPhase {
+        active: &'static str,
+        lanes: usize,
+        scalar_mmacs: f64,
+        active_mmacs: f64,
+        rln: Option<FusedPhase>,
+    }
+    let kernel = if repr == WeightRepr::Fused {
+        use pocketllm::util::bitpack::BitPacked;
+        use pocketllm::{FusedAcc, Kernel, PackedGroup};
+        let (d, l, k, rows) = (8usize, 64usize, 1024usize, 512usize);
+        let mut seed = 0x1234_5678_9abc_def0u64;
+        let mut rnd = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            ((seed >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        };
+        let table: Vec<f32> = (0..k * d).map(|_| rnd()).collect();
+        let scales: Vec<f32> =
+            (0..2 * rows).map(|i| if i % 2 == 0 { rnd() } else { rnd().abs() + 0.5 }).collect();
+        let raw: Vec<u32> = (0..rows * l).map(|_| ((rnd().abs() * 4096.0) as u32) % k as u32).collect();
+        let group = Arc::new(PackedGroup::new(
+            "bench",
+            d,
+            l,
+            k,
+            rows,
+            table,
+            BitPacked::pack(&raw, 10),
+            scales,
+        )?);
+        let pm = group.slice(0, rows)?;
+        let x: Vec<f32> = (0..rows).map(|_| rnd()).collect();
+        let mmacs = (rows * l * d) as f64 / 1e6;
+        let best_of = |kern: Kernel| -> f64 {
+            let mut best = 0.0f64;
+            for _ in 0..5 {
+                let t0 = Instant::now();
+                let out = pm.matmul_with_kernel(&x, 1, FusedAcc::Exact, kern);
+                let dt = t0.elapsed().as_secs_f64();
+                std::hint::black_box(out);
+                best = best.max(mmacs / dt.max(1e-12));
+            }
+            best
+        };
+        let active = Kernel::active();
+        let scalar_mmacs = best_of(Kernel::Scalar);
+        let active_mmacs =
+            if active == Kernel::Scalar { scalar_mmacs } else { best_of(active) };
+
+        // packed-rln end-to-end on a single-layer rln pocket (the m=1
+        // replay is one affine + d x d matmul per touched row — cheap
+        // enough for generation; deeper rln decoders are covered at the
+        // single-matmul level in the fused test suite)
+        let rln_name = "w{width}_d8_k1024_m1_rln";
+        let rln_missing = {
+            let mut widths: Vec<usize> = cfg
+                .groups
+                .iter()
+                .filter(|(g, _)| probe.has_group(g.as_str()))
+                .map(|(_, gi)| gi.width)
+                .collect();
+            widths.sort_unstable();
+            widths.dedup();
+            widths
+                .into_iter()
+                .map(|w| format!("w{w}_d8_k1024_m1_rln"))
+                .any(|n| session.manifest().meta_cfg(&n).is_err())
+        };
+        let rln = if rln_missing {
+            eprintln!("[gen-bench] skipping rln phase: missing m=1 rln meta configs");
+            None
+        } else {
+            eprintln!(
+                "[gen-bench] rln phase: compressing an m=1 rln pocket (stats-replay packed form)"
+            );
+            let rln_res = session
+                .compress(&eager_ws)
+                .meta_override(rln_name)
+                .steps(25)
+                .kmeans_iters(1)
+                .post_steps(5)
+                .run()?;
+            let rln_buf: Arc<[u8]> = rln_res.pocket.to_bytes().into();
+            let rln_probe = PocketReader::from_bytes(rln_buf.clone())?;
+            let rln_per_layer: u64 = cfg
+                .groups
+                .iter()
+                .filter(|(g, _)| rln_probe.has_group(g.as_str()))
+                .map(|(_, gi)| (gi.tensors.len() * gi.rows_per_block * gi.width * 4) as u64)
+                .sum();
+            let rln_dense: u64 = rln_probe
+                .dense_names()
+                .iter()
+                .filter_map(|n| rln_probe.section_raw_length(n))
+                .sum();
+            let rln_budget = 2 * rln_per_layer + rln_dense;
+            let run_rln = |r: WeightRepr| -> Result<(f64, Vec<i32>, u64, u64)> {
+                let reader = Arc::new(
+                    PocketReader::from_bytes(rln_buf.clone())?.with_cache_budget(rln_budget),
+                );
+                let provider = session.pocket_provider(reader.clone())?;
+                let out = session
+                    .generate(&provider)
+                    .prompt(prompt.clone())
+                    .max_new(max_new)
+                    .repr(r)
+                    .run()?;
+                let peak = reader.stats().cache.peak_resident_bytes;
+                Ok((out.tokens_per_sec(), out.tokens, peak, provider.packed_resident_bytes()))
+            };
+            let (dense_tps, dense_tokens, dense_peak, _) = run_rln(WeightRepr::Dense)?;
+            let (fused_tps, fused_tokens, fused_cache_peak, packed_resident) =
+                run_rln(WeightRepr::Fused)?;
+            Some(FusedPhase {
+                dense_tps,
+                fused_tps,
+                dense_peak,
+                fused_cache_peak,
+                packed_resident,
+                budget: rln_budget,
+                tokens_match: fused_tokens == dense_tokens,
+            })
+        };
+        Some(KernelPhase {
+            active: active.name(),
+            lanes: active.lanes(),
+            scalar_mmacs,
+            active_mmacs,
+            rln,
+        })
+    } else {
+        None
+    };
+
     let mut t = Table::new(
         &format!("gen-bench ({} backend)", session.backend_name()),
         &["source", "cold tok/s", "warm tok/s", "bounded tok/s", "bounded peak", "warm hits"],
@@ -1427,6 +1576,31 @@ fn cmd_gen_bench(args: &Args) -> Result<()> {
             f.budget / 1024
         );
     }
+    if let Some(kp) = &kernel {
+        println!(
+            "kernel: active {} ({} lane{}), gather-FMA {:.0} MMAC/s vs scalar {:.0} MMAC/s \
+             ({:.2}x)",
+            kp.active,
+            kp.lanes,
+            if kp.lanes == 1 { "" } else { "s" },
+            kp.active_mmacs,
+            kp.scalar_mmacs,
+            kp.active_mmacs / kp.scalar_mmacs.max(1e-12)
+        );
+        if let Some(f) = &kp.rln {
+            println!(
+                "rln (m=1 pocket): dense {:.0} tok/s vs fused {:.0} tok/s; fused resident \
+                 {} KiB ({} cache + {} packed) vs dense peak {} KiB, budget {} KiB",
+                f.dense_tps,
+                f.fused_tps,
+                (f.fused_cache_peak + f.packed_resident) / 1024,
+                f.fused_cache_peak / 1024,
+                f.packed_resident / 1024,
+                f.dense_peak / 1024,
+                f.budget / 1024
+            );
+        }
+    }
 
     if let Some(path) = args.get("json") {
         let phase_obj = |p: &Phase| -> Json {
@@ -1469,6 +1643,34 @@ fn cmd_gen_bench(args: &Args) -> Result<()> {
                     ("tokens_match_dense", num(if f.tokens_match { 1.0 } else { 0.0 })),
                 ]),
             ));
+        }
+        if let Some(kp) = &kernel {
+            let mut kfields = vec![
+                ("active", s(kp.active)),
+                ("lanes", num(kp.lanes as f64)),
+                ("scalar_mmacs", num(kp.scalar_mmacs)),
+                ("simd_mmacs", num(kp.active_mmacs)),
+                ("speedup", num(kp.active_mmacs / kp.scalar_mmacs.max(1e-12))),
+            ];
+            if let Some(f) = &kp.rln {
+                kfields.push((
+                    "rln",
+                    obj(vec![
+                        ("dense_tok_s", num(f.dense_tps)),
+                        ("fused_tok_s", num(f.fused_tps)),
+                        ("dense_peak_resident_bytes", num(f.dense_peak as f64)),
+                        ("fused_cache_peak_bytes", num(f.fused_cache_peak as f64)),
+                        ("packed_resident_bytes", num(f.packed_resident as f64)),
+                        (
+                            "peak_resident_bytes",
+                            num((f.fused_cache_peak + f.packed_resident) as f64),
+                        ),
+                        ("bounded_budget_bytes", num(f.budget as f64)),
+                        ("tokens_match_dense", num(if f.tokens_match { 1.0 } else { 0.0 })),
+                    ]),
+                ));
+            }
+            fields.push(("kernel", obj(kfields)));
         }
         let j = obj(fields);
         pocketllm::util::benchlib::write_report(path, &j);
@@ -1517,6 +1719,31 @@ fn cmd_gen_bench(args: &Args) -> Result<()> {
                  strictly below the two-layer dense budget {}",
                 f.budget
             );
+        }
+        if let Some(kp) = &kernel {
+            // 2% slack: when dispatch resolves to scalar the two runs are
+            // the same kernel and only timing noise separates them
+            ensure!(
+                kp.active_mmacs >= kp.scalar_mmacs * 0.98,
+                "kernel: dispatched {} gather-FMA throughput {:.1} MMAC/s fell below \
+                 scalar {:.1}",
+                kp.active,
+                kp.active_mmacs,
+                kp.scalar_mmacs
+            );
+            if let Some(f) = &kp.rln {
+                ensure!(
+                    f.tokens_match,
+                    "rln: fused token stream diverged from dense on the m=1 rln pocket"
+                );
+                let fused_peak = f.fused_cache_peak + f.packed_resident;
+                ensure!(
+                    fused_peak < f.budget,
+                    "rln: peak resident {fused_peak} bytes (cache + packed) is not \
+                     strictly below the two-layer dense budget {}",
+                    f.budget
+                );
+            }
         }
         println!(
             "[gen-bench] checks passed: identical token streams on every source, \

@@ -83,6 +83,11 @@ pub struct ReaderStats {
     /// index-GEMM setup path) answered from the reader's record memo —
     /// i.e. without re-fetching or re-parsing the group section.
     pub packed_hits: u64,
+    /// Group-compressed matmul weights that were requested in packed
+    /// (fused) form but had none and silently degraded to dense serving.
+    /// Non-zero under `WeightRepr::Fused` means the "fused" numbers are
+    /// partly dense — the CLI prints a warning when it sees this.
+    pub fused_fallbacks: u64,
     /// Entropy-coded (POCKET03) sections fetched.  Zero for raw containers.
     pub coded_sections_read: u64,
     /// Stored (on-wire) bytes of those coded sections — what actually
@@ -136,6 +141,7 @@ pub struct PocketReader {
     chunk_decodes: AtomicU64,
     chunk_hits: AtomicU64,
     packed_hits: AtomicU64,
+    fused_fallbacks: AtomicU64,
     coded_sections_read: AtomicU64,
     coded_bytes_read: AtomicU64,
     coded_raw_bytes: AtomicU64,
@@ -314,6 +320,7 @@ impl PocketReader {
             chunk_decodes: AtomicU64::new(0),
             chunk_hits: AtomicU64::new(0),
             packed_hits: AtomicU64::new(0),
+            fused_fallbacks: AtomicU64::new(0),
             coded_sections_read: AtomicU64::new(0),
             coded_bytes_read: AtomicU64::new(0),
             coded_raw_bytes: AtomicU64::new(0),
@@ -397,6 +404,7 @@ impl PocketReader {
             chunk_decodes: AtomicU64::new(0),
             chunk_hits: AtomicU64::new(0),
             packed_hits: AtomicU64::new(0),
+            fused_fallbacks: AtomicU64::new(0),
             coded_sections_read: AtomicU64::new(0),
             coded_bytes_read: AtomicU64::new(0),
             coded_raw_bytes: AtomicU64::new(0),
@@ -559,6 +567,7 @@ impl PocketReader {
             chunk_decodes: self.chunk_decodes.load(Ordering::Relaxed),
             chunk_hits: self.chunk_hits.load(Ordering::Relaxed),
             packed_hits: self.packed_hits.load(Ordering::Relaxed),
+            fused_fallbacks: self.fused_fallbacks.load(Ordering::Relaxed),
             coded_sections_read: self.coded_sections_read.load(Ordering::Relaxed),
             coded_bytes_read: self.coded_bytes_read.load(Ordering::Relaxed),
             coded_raw_bytes: self.coded_raw_bytes.load(Ordering::Relaxed),
@@ -568,6 +577,13 @@ impl PocketReader {
                 Inner::Eager(_) => None,
             },
         }
+    }
+
+    /// Record one fused→dense degradation (a group-compressed weight with
+    /// no packed form served dense under `WeightRepr::Fused`) — bumped by
+    /// the weight provider, surfaced in [`ReaderStats::fused_fallbacks`].
+    pub(crate) fn note_fused_fallback(&self) {
+        self.fused_fallbacks.fetch_add(1, Ordering::Relaxed);
     }
 
     fn fetch_section<'s>(

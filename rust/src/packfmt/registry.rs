@@ -274,6 +274,39 @@ mod tests {
     }
 
     #[test]
+    fn register_url_streams_from_a_loopback_range_server() {
+        use crate::util::testserver::RangeServer;
+        let pocket = sample_file(47);
+        let bytes = pocket.to_bytes();
+        let server = RangeServer::serve(bytes.clone()).unwrap();
+        assert!(server.addr().ip().is_loopback(), "harness must stay on loopback");
+
+        let reg = PocketRegistry::new(64 << 20);
+        reg.register_url("r", &server.url()).unwrap();
+        assert!(matches!(reg.register_url("r", &server.url()), Err(Error::Other(_))));
+        // registration is lazy: no connection until the first reader() call
+        assert!(!reg.is_open("r"));
+        assert_eq!(server.request_count(), 0, "register_url must not touch the network");
+        let rr = reg.reader("r").unwrap();
+        assert!(reg.is_open("r"));
+        assert!(server.request_count() > 0, "open must fetch header + TOC over HTTP");
+        // remote decode is bit-identical to the in-memory container
+        let local = PocketReader::from_bytes(bytes).unwrap();
+        assert_eq!(rr.dense_tensor("embed").unwrap(), local.dense_tensor("embed").unwrap());
+        assert!(Arc::ptr_eq(&rr.decode_cache(), reg.cache()));
+
+        // idle eviction drops the reader; a re-request reconnects to the
+        // registered URL and re-fetches from the same loopback source
+        let before = server.request_count();
+        assert_eq!(reg.evict_idle(Duration::ZERO), vec!["r".to_string()]);
+        assert!(!reg.is_open("r"));
+        let rr2 = reg.reader("r").unwrap();
+        assert!(!Arc::ptr_eq(&rr, &rr2));
+        assert_eq!(rr2.dense_tensor("embed").unwrap(), local.dense_tensor("embed").unwrap());
+        assert!(server.request_count() > before, "re-open must re-fetch over HTTP");
+    }
+
+    #[test]
     fn delta_pockets_resolve_their_base_through_the_registry() {
         use crate::packfmt::{CodecOpts, PocketFile};
         use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};

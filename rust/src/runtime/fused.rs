@@ -2,46 +2,65 @@
 //!
 //! The pocket stores each weight-group row as `L` codeword indices plus a
 //! per-row `(mean, std)` pair.  The dense path reconstructs every row
-//! (decode + denormalize) before `x @ W`; this module instead decodes each
-//! of the `K` codewords through the meta-decoder **once per group** into a
-//! `[K, d]` table (`K*d*4` bytes — tens of KB, cache-resident) and executes
-//! the matmul as a gather-FMA over that table.  No dense `W` is ever
-//! materialized, so peak resident bytes follow the *stored* footprint
-//! (table + indices + scales), not the decompressed one.  DESIGN.md §14.
+//! (decode + denormalize) before `x @ W`; this module executes the matmul
+//! straight off the stored form instead.  No dense `W` is ever
+//! materialized, so peak resident bytes follow the *stored* footprint, not
+//! the decompressed one.  DESIGN.md §14 (ln), §16 (rln + SIMD).
 //!
-//! This factoring is exact only for per-subvector normalization
-//! (`norm == "ln"`): a decoded subvector then depends on nothing but its
-//! codeword, so decode(c) can be shared across every site that references
-//! `c`.  Reshaped LayerNorm ("rln") normalizes across the whole row and
-//! couples subvectors — those groups fall back to the dense path
-//! ([`crate::runtime::weights::WeightProvider::resolve_packed`] returns
-//! `None`).
+//! Two decode structures back the same [`PackedMatmul`] surface:
+//!
+//! * **ln** (per-subvector normalization): a decoded subvector depends on
+//!   nothing but its codeword, so each of the `K` codewords runs through
+//!   the meta-decoder **once per group** into a `[K, d]` table (`K*d*4`
+//!   bytes — tens of KB, cache-resident) and the matmul is a gather-FMA
+//!   over that table.
+//! * **rln** (Reshaped LayerNorm, the paper's flagship): subvectors couple
+//!   through whole-row layernorm *statistics* — but those statistics are
+//!   fully determined by the stored indices, so they are captured once at
+//!   pack time (per row, per decoder layer) and the serve path **replays**
+//!   the decoder per weight row with the norm reduced to a per-row affine
+//!   `(v - mean) * rstd`.  Exact for any decoder depth; a single-layer
+//!   decoder additionally folds into a shared table + per-row affine used
+//!   by the relaxed Partial path (§16 derivation).
+//!
+//! The inner loops run on the runtime-dispatched SIMD microkernels of
+//! [`kernels`] (AVX2/NEON with a scalar fallback, forced-scalar override
+//! via `POCKETLLM_FORCE_SCALAR`).
 //!
 //! ## Parity contract
 //!
 //! [`FusedAcc::Exact`] reproduces the dense pipeline bit-for-bit: the
 //! per-element reconstruction `w = t*sd + mu` uses `denormalize_rows`' op
-//! order, reduction rows run ascending, and the dense kernel's
-//! skip-on-zero activation short-circuit is replicated.  The parallel
-//! split (x-rows for GEMM, output subvector columns for GEMV) never
-//! reorders the adds that feed one output element, so parallelism does not
-//! perturb bits either.  The one measure-zero caveat: the codeword table
-//! is built by decoding with identity scales `(mu, sd) = (0, 1)`, which
-//! maps a decoded `-0.0` to `+0.0` (`-0.0 * 1.0 + 0.0 == +0.0`); a bit
-//! difference can only surface if an accumulator is exactly `±0.0`, and it
-//! never changes a comparison (greedy argmax included).
+//! order, reduction rows run ascending, the dense kernel's skip-on-zero
+//! activation short-circuit is replicated (in the serve-time reduction
+//! *and* inside the rln replay's layer matmuls), and the SIMD lanes issue
+//! explicit mul/add pairs — never a contracted FMA — so every element sees
+//! the scalar rounding sequence.  The parallel split (x-rows for GEMM,
+//! output subvector columns for GEMV) never reorders the adds that feed
+//! one output element, so parallelism does not perturb bits either.  The
+//! one measure-zero caveat (ln only): the codeword table is built by
+//! decoding with identity scales `(mu, sd) = (0, 1)`, which maps a decoded
+//! `-0.0` to `+0.0` (`-0.0 * 1.0 + 0.0 == +0.0`); a bit difference can
+//! only surface if an accumulator is exactly `±0.0`, and it never changes
+//! a comparison (greedy argmax included).  The rln replay consumes stored
+//! codebook values directly and has no such caveat.
 //!
 //! [`FusedAcc::Partial`] and [`FusedAcc::F16`] are opt-in and
 //! *reassociate*: Partial factors the reduction per distinct codeword
-//! (`out = sum_c coeff[c] * table[c] + bias`), F16 rounds the accumulator
-//! to half precision after every add.  Both are covered by tolerance
-//! tests, not bit-parity.
+//! (`out = sum_c coeff[c] * table[c] + bias`, with the rln single-layer
+//! fold generalizing `bias` to a per-row `d`-vector), F16 rounds the
+//! accumulator to half precision after every add.  Both are covered by
+//! tolerance tests, not bit-parity.
+
+pub mod kernels;
 
 use std::sync::Arc;
 
+use kernels::Kernel;
+
 use crate::error::Error;
+use crate::runtime::reference::ops::gelu;
 use crate::util::bitpack::BitPacked;
-use crate::util::f16;
 use crate::util::threadpool::{default_workers, in_scoped_worker, scoped_map};
 
 /// Weight representation selector for the generation/forward paths.
@@ -81,9 +100,11 @@ pub enum FusedAcc {
     #[default]
     Exact,
     /// Per-codeword partial products: fold each activation into `L * K`
-    /// codeword coefficients plus one mean-bias term, then expand through
-    /// the table once per distinct codeword.  Reassociates the reduction;
-    /// wins when distinct codewords per column < reduction rows.
+    /// codeword coefficients plus a bias term, then expand through the
+    /// table once per distinct codeword.  Reassociates the reduction; wins
+    /// when distinct codewords per column < reduction rows.  For rln this
+    /// form exists only for single-layer decoders (the §16 affine fold);
+    /// deeper rln decoders replay with FMA accumulation instead.
     Partial,
     /// Half-precision accumulators (rounded to f16 after every add) for
     /// memory-bound tiles.  Documented tolerance, not bit parity.
@@ -101,11 +122,81 @@ const FUSED_LC: usize = 256;
 const PAR_MACS: usize = 1 << 22;
 const PAR_CAP: usize = 8;
 
-/// One weight group in execution form: the decoded-codeword table, the
-/// bitpacked indices of **all** rows in the group (authoritative compact
-/// form), and the per-row scales.  Shared (`Arc`) by every
-/// [`PackedMatmul`] sliced out of it, so the table is decoded and held
-/// once per group no matter how many layers reference it.
+/// One decoder layer of an rln group, sliced out of the pocket's decoder
+/// parameters at pack time for serve-time replay.
+pub struct RlnLayer {
+    /// `[din, dout]` row-major weight.
+    w: Vec<f32>,
+    /// `[dout]` bias.
+    b: Vec<f32>,
+    din: usize,
+    dout: usize,
+    /// `i > 0 && din == dout` in the meta-MLP.
+    residual: bool,
+    /// `i < m - 1` (GELU on all but the last layer).
+    activate: bool,
+}
+
+impl RlnLayer {
+    pub fn new(
+        w: Vec<f32>,
+        b: Vec<f32>,
+        din: usize,
+        dout: usize,
+        residual: bool,
+        activate: bool,
+    ) -> Result<RlnLayer, Error> {
+        if w.len() != din * dout || b.len() != dout {
+            return Err(Error::ShapeMismatch {
+                what: "rln decoder layer".to_string(),
+                expected: format!("w {}x{} + b {}", din, dout, dout),
+                got: format!("w {} + b {}", w.len(), b.len()),
+            });
+        }
+        Ok(RlnLayer { w, b, din, dout, residual, activate })
+    }
+}
+
+/// The §16 single-layer fold: with one decoder layer the whole decode is
+/// affine in the codeword, so a shared `[K, d]` table plus per-row scalars
+/// replaces the replay — used by the relaxed Partial path only (the fold
+/// reassociates the layer's inner reduction).
+struct RlnFold {
+    /// `T[c][j] = sum_t codebook[c][t] * w0[t][j]`, `[K, d]`.
+    table: Vec<f32>,
+    /// Column sums `S1[j] = sum_t w0[t][j]`, `[d]`.
+    s1: Vec<f32>,
+    /// The layer bias, `[d]`.
+    b: Vec<f32>,
+}
+
+/// rln decode state: stored codebook + decoder layers + the pack-time
+/// per-row layernorm statistics that make subvectors independent again.
+struct RlnDecode {
+    /// Stored codebook, `[K, d]` row-major.
+    codebook: Vec<f32>,
+    layers: Vec<RlnLayer>,
+    /// Per-row, per-layer `(mean, rstd)` pairs: `[rows_total, 2 * m]`.
+    norm_stats: Vec<f32>,
+    fold: Option<RlnFold>,
+    /// Replay MACs per produced weight element (`sum_i din_i*dout_i / d`)
+    /// — scales the parallel-split cost estimate.
+    macs_per_elem: usize,
+}
+
+/// How a group's weights decode at serve time.
+enum GroupDecode {
+    /// Per-subvector decoder: one decoded `[K, d]` codeword table.
+    Ln { table: Vec<f32> },
+    /// Whole-row layernorm decoder: replay with captured statistics.
+    Rln(Box<RlnDecode>),
+}
+
+/// One weight group in execution form: the decode state (see
+/// [`GroupDecode`]), the bitpacked indices of **all** rows in the group
+/// (authoritative compact form), and the per-row scales.  Shared (`Arc`)
+/// by every [`PackedMatmul`] sliced out of it, so the decode state is
+/// built and held once per group no matter how many layers reference it.
 pub struct PackedGroup {
     /// Group name ("q", "down", ...) — diagnostics only.
     pub name: String,
@@ -117,15 +208,16 @@ pub struct PackedGroup {
     pub k: usize,
     /// Total rows stored in the group (all blocks).
     pub rows_total: usize,
-    /// Decoded codewords, `[K, d]` row-major.
-    pub table: Vec<f32>,
     /// Bitpacked codeword indices, `rows_total * l` entries.
     pub indices: BitPacked,
     /// Per-row `(mean, std)` pairs, `2 * rows_total` floats.
     pub row_scales: Vec<f32>,
+    decode: GroupDecode,
 }
 
 impl PackedGroup {
+    /// Build the **ln** (per-subvector) form from a decoded `[K, d]`
+    /// codeword table.
     pub fn new(
         name: &str,
         d: usize,
@@ -136,30 +228,124 @@ impl PackedGroup {
         indices: BitPacked,
         row_scales: Vec<f32>,
     ) -> Result<PackedGroup, Error> {
-        let shape = |what: &str, expected: String, got: String| Error::ShapeMismatch {
-            what: format!("{what} for packed group {name}"),
-            expected,
-            got,
-        };
         if table.len() != k * d {
-            let got = format!("{}", table.len());
-            return Err(shape("codeword table", format!("{} floats", k * d), got));
-        }
-        if indices.len() != rows_total * l {
-            return Err(shape(
-                "index stream",
-                format!("{} indices", rows_total * l),
-                format!("{}", indices.len()),
+            return Err(shape_err(
+                name,
+                "codeword table",
+                format!("{} floats", k * d),
+                format!("{}", table.len()),
             ));
         }
-        if row_scales.len() != 2 * rows_total {
-            return Err(shape(
-                "row scales",
-                format!("{} floats", 2 * rows_total),
-                format!("{}", row_scales.len()),
+        check_common(name, l, rows_total, &indices, &row_scales)?;
+        Ok(PackedGroup {
+            name: name.to_string(),
+            d,
+            l,
+            k,
+            rows_total,
+            indices,
+            row_scales,
+            decode: GroupDecode::Ln { table },
+        })
+    }
+
+    /// Build the **rln** (whole-row layernorm) form: the stored codebook,
+    /// the decoder layers, and the pack-time per-row `(mean, rstd)` pair
+    /// of every decoder layer (`norm_stats`, `[rows_total, 2 * m]`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_rln(
+        name: &str,
+        d: usize,
+        l: usize,
+        k: usize,
+        rows_total: usize,
+        codebook: Vec<f32>,
+        layers: Vec<RlnLayer>,
+        norm_stats: Vec<f32>,
+        indices: BitPacked,
+        row_scales: Vec<f32>,
+    ) -> Result<PackedGroup, Error> {
+        if codebook.len() != k * d {
+            return Err(shape_err(
+                name,
+                "codebook",
+                format!("{} floats", k * d),
+                format!("{}", codebook.len()),
             ));
         }
-        Ok(PackedGroup { name: name.to_string(), d, l, k, rows_total, table, indices, row_scales })
+        if layers.is_empty() {
+            return Err(shape_err(name, "rln decoder", "at least one layer".into(), "0".into()));
+        }
+        let mut prev = d;
+        for (i, layer) in layers.iter().enumerate() {
+            if layer.din != prev {
+                return Err(shape_err(
+                    name,
+                    "rln decoder layer chain",
+                    format!("layer {i} din == {prev}"),
+                    format!("{}", layer.din),
+                ));
+            }
+            prev = layer.dout;
+        }
+        if prev != d {
+            return Err(shape_err(
+                name,
+                "rln decoder output",
+                format!("final dout == d = {d}"),
+                format!("{prev}"),
+            ));
+        }
+        if norm_stats.len() != rows_total * 2 * layers.len() {
+            return Err(shape_err(
+                name,
+                "rln norm stats",
+                format!("{} floats (2 per row per layer)", rows_total * 2 * layers.len()),
+                format!("{}", norm_stats.len()),
+            ));
+        }
+        check_common(name, l, rows_total, &indices, &row_scales)?;
+        let macs_per_elem =
+            (layers.iter().map(|ly| ly.din * ly.dout).sum::<usize>() / d).max(1);
+        // single-layer decoders (no residual, no activation by
+        // construction) admit the §16 affine fold for the Partial path
+        let fold = match &layers[..] {
+            [only] if !only.residual && !only.activate => {
+                let mut table = vec![0.0f32; k * d];
+                for (c, trow) in table.chunks_exact_mut(d).enumerate() {
+                    for t in 0..d {
+                        let zv = codebook[c * d + t];
+                        for (j, o) in trow.iter_mut().enumerate() {
+                            *o += zv * only.w[t * d + j];
+                        }
+                    }
+                }
+                let mut s1 = vec![0.0f32; d];
+                for t in 0..d {
+                    for (j, o) in s1.iter_mut().enumerate() {
+                        *o += only.w[t * d + j];
+                    }
+                }
+                Some(RlnFold { table, s1, b: only.b.clone() })
+            }
+            _ => None,
+        };
+        Ok(PackedGroup {
+            name: name.to_string(),
+            d,
+            l,
+            k,
+            rows_total,
+            indices,
+            row_scales,
+            decode: GroupDecode::Rln(Box::new(RlnDecode {
+                codebook,
+                layers,
+                norm_stats,
+                fold,
+                macs_per_elem,
+            })),
+        })
     }
 
     /// Row width of the group (output columns of each matmul).
@@ -167,12 +353,45 @@ impl PackedGroup {
         self.l * self.d
     }
 
-    /// Bytes this group keeps resident while serving fused matmuls:
-    /// decoded table + bitpacked indices + row scales.  The per-tensor
-    /// unpacked index slices are accounted by [`PackedMatmul::resident_bytes`].
+    /// Which normalization family this group's decode uses.
+    pub fn norm(&self) -> &'static str {
+        match self.decode {
+            GroupDecode::Ln { .. } => "ln",
+            GroupDecode::Rln(_) => "rln",
+        }
+    }
+
+    /// Bytes this group keeps resident while serving fused matmuls: the
+    /// decode state (ln: decoded table; rln: codebook + decoder layers +
+    /// norm stats + optional fold) + bitpacked indices + row scales.  The
+    /// per-tensor unpacked index slices are accounted by
+    /// [`PackedMatmul::resident_bytes`].
     pub fn resident_bytes(&self) -> usize {
         let index_bytes = (self.indices.payload_bits() as usize).div_ceil(8);
-        self.table.len() * 4 + index_bytes + self.row_scales.len() * 4
+        let decode_bytes = match &self.decode {
+            GroupDecode::Ln { table } => table.len() * 4,
+            GroupDecode::Rln(rln) => {
+                let layer_f: usize =
+                    rln.layers.iter().map(|ly| ly.w.len() + ly.b.len()).sum();
+                let fold_f = rln
+                    .fold
+                    .as_ref()
+                    .map(|f| f.table.len() + f.s1.len() + f.b.len())
+                    .unwrap_or(0);
+                (rln.codebook.len() + layer_f + rln.norm_stats.len() + fold_f) * 4
+            }
+        };
+        decode_bytes + index_bytes + self.row_scales.len() * 4
+    }
+
+    /// Relative serve-time cost of producing one weight element (1 for the
+    /// ln table gather; the replay MAC count for rln) — used to scale the
+    /// parallel-split threshold.
+    fn cost_per_elem(&self) -> usize {
+        match &self.decode {
+            GroupDecode::Ln { .. } => 1,
+            GroupDecode::Rln(rln) => rln.macs_per_elem,
+        }
     }
 
     /// Slice one tensor's row range out of the group as an executable
@@ -201,8 +420,49 @@ impl PackedGroup {
     }
 }
 
+fn shape_err(name: &str, what: &str, expected: String, got: String) -> Error {
+    Error::ShapeMismatch { what: format!("{what} for packed group {name}"), expected, got }
+}
+
+fn check_common(
+    name: &str,
+    l: usize,
+    rows_total: usize,
+    indices: &BitPacked,
+    row_scales: &[f32],
+) -> Result<(), Error> {
+    if indices.len() != rows_total * l {
+        return Err(shape_err(
+            name,
+            "index stream",
+            format!("{} indices", rows_total * l),
+            format!("{}", indices.len()),
+        ));
+    }
+    if row_scales.len() != 2 * rows_total {
+        return Err(shape_err(
+            name,
+            "row scales",
+            format!("{} floats", 2 * rows_total),
+            format!("{}", row_scales.len()),
+        ));
+    }
+    Ok(())
+}
+
+/// Scratch buffers of the rln replay — allocated once per accumulate call,
+/// reused across weight rows.
+#[derive(Default)]
+struct ReplayBuf {
+    x: Vec<f32>,
+    xn: Vec<f32>,
+    pre: Vec<f32>,
+}
+
 /// One tensor (`b{N}.{name}`) of a packed group, ready to run `x @ W`
-/// without materializing `W`: `W[p, j] = table[idx[p, j/d]][j%d] * sd_p + mu_p`.
+/// without materializing `W`.  For ln groups
+/// `W[p, j] = table[idx[p, j/d]][j%d] * sd_p + mu_p`; for rln groups each
+/// row replays the decoder with its captured statistics.
 pub struct PackedMatmul {
     group: Arc<PackedGroup>,
     row0: usize,
@@ -237,22 +497,30 @@ impl PackedMatmul {
         self.matmul_with(x, m, FusedAcc::Exact)
     }
 
-    /// Fused matmul with an explicit accumulation policy.
+    /// Fused matmul with an explicit accumulation policy, on the
+    /// process-wide dispatched kernel.
     pub fn matmul_with(&self, x: &[f32], m: usize, acc: FusedAcc) -> Vec<f32> {
+        self.matmul_with_kernel(x, m, acc, Kernel::active())
+    }
+
+    /// Fused matmul on an explicit [`Kernel`] — benchmarks and parity
+    /// tests compare lowerings inside one process with this.
+    pub fn matmul_with_kernel(&self, x: &[f32], m: usize, acc: FusedAcc, kernel: Kernel) -> Vec<f32> {
         let n = self.width();
         let l = self.group.l;
         let d = self.group.d;
-        let macs = m * self.rows * n;
+        let macs = m * self.rows * n * self.group.cost_per_elem();
         let workers = default_workers(PAR_CAP);
         if workers <= 1 || macs < PAR_MACS || in_scoped_worker() {
-            return self.gemm_rows(x, 0, m, acc);
+            return self.gemm_rows(x, 0, m, acc, kernel);
         }
         if m >= 2 {
             // GEMM: fan out over x-rows; each output element stays with one
             // worker, so the add order per element is the serial order.
             let ranges = chunk_ranges(m, workers);
-            let parts =
-                scoped_map(workers, ranges.clone(), |(r0, r1)| self.gemm_rows(x, r0, r1, acc));
+            let parts = scoped_map(workers, ranges.clone(), |(r0, r1)| {
+                self.gemm_rows(x, r0, r1, acc, kernel)
+            });
             let mut out = vec![0.0f32; m * n];
             for ((r0, r1), part) in ranges.into_iter().zip(parts) {
                 out[r0 * n..r1 * n].copy_from_slice(&part);
@@ -267,7 +535,7 @@ impl PackedMatmul {
             let ranges = chunk_ranges(l, workers);
             let parts = scoped_map(workers, ranges.clone(), |(l0, l1)| {
                 let mut part = vec![0.0f32; (l1 - l0) * d];
-                self.accumulate_row(&x[..self.rows], l0, l1, &mut part, acc);
+                self.accumulate_row(&x[..self.rows], l0, l1, &mut part, acc, kernel);
                 part
             });
             let mut out = vec![0.0f32; n];
@@ -279,7 +547,7 @@ impl PackedMatmul {
     }
 
     /// x-rows `r0..r1`, all output columns, tiled over subvector columns.
-    fn gemm_rows(&self, x: &[f32], r0: usize, r1: usize, acc: FusedAcc) -> Vec<f32> {
+    fn gemm_rows(&self, x: &[f32], r0: usize, r1: usize, acc: FusedAcc, kernel: Kernel) -> Vec<f32> {
         let n = self.width();
         let l = self.group.l;
         let d = self.group.d;
@@ -290,7 +558,7 @@ impl PackedMatmul {
             let mut lb = 0usize;
             while lb < l {
                 let le = (lb + FUSED_LC).min(l);
-                self.accumulate_row(xrow, lb, le, &mut orow[lb * d..le * d], acc);
+                self.accumulate_row(xrow, lb, le, &mut orow[lb * d..le * d], acc, kernel);
                 lb = le;
             }
         }
@@ -299,17 +567,48 @@ impl PackedMatmul {
 
     /// Accumulate one x-row against subvector columns `l0..l1` into `out`
     /// (`(l1-l0)*d` zero-initialized floats).
-    fn accumulate_row(&self, xrow: &[f32], l0: usize, l1: usize, out: &mut [f32], acc: FusedAcc) {
-        match acc {
-            FusedAcc::Exact => self.acc_exact(xrow, l0, l1, out),
-            FusedAcc::Partial => self.acc_partial(xrow, l0, l1, out),
-            FusedAcc::F16 => self.acc_f16(xrow, l0, l1, out),
+    fn accumulate_row(
+        &self,
+        xrow: &[f32],
+        l0: usize,
+        l1: usize,
+        out: &mut [f32],
+        acc: FusedAcc,
+        kernel: Kernel,
+    ) {
+        match (&self.group.decode, acc) {
+            (GroupDecode::Ln { table }, FusedAcc::Exact) => {
+                self.ln_exact(table, xrow, l0, l1, out, kernel)
+            }
+            (GroupDecode::Ln { table }, FusedAcc::Partial) => {
+                self.ln_partial(table, xrow, l0, l1, out, kernel)
+            }
+            (GroupDecode::Ln { table }, FusedAcc::F16) => {
+                self.ln_f16(table, xrow, l0, l1, out, kernel)
+            }
+            (GroupDecode::Rln(rln), FusedAcc::Exact) => {
+                self.rln_replay(rln, xrow, l0, l1, out, kernel, ReplayAcc::Exact)
+            }
+            (GroupDecode::Rln(rln), FusedAcc::Partial) => match &rln.fold {
+                Some(fold) => self.rln_partial_fold(rln, fold, xrow, l0, l1, out, kernel),
+                None => self.rln_replay(rln, xrow, l0, l1, out, kernel, ReplayAcc::Fma),
+            },
+            (GroupDecode::Rln(rln), FusedAcc::F16) => {
+                self.rln_replay(rln, xrow, l0, l1, out, kernel, ReplayAcc::F16)
+            }
         }
     }
 
-    fn acc_exact(&self, xrow: &[f32], l0: usize, l1: usize, out: &mut [f32]) {
+    fn ln_exact(
+        &self,
+        table: &[f32],
+        xrow: &[f32],
+        l0: usize,
+        l1: usize,
+        out: &mut [f32],
+        kernel: Kernel,
+    ) {
         let g = &*self.group;
-        let d = g.d;
         for p in 0..self.rows {
             let av = xrow[p];
             if av == 0.0 {
@@ -319,19 +618,19 @@ impl PackedMatmul {
             let mu = g.row_scales[sp];
             let sd = g.row_scales[sp + 1];
             let irow = &self.idx[p * g.l + l0..p * g.l + l1];
-            for (bi, &c) in irow.iter().enumerate() {
-                let cw = &g.table[c as usize * d..(c as usize + 1) * d];
-                let dst = &mut out[bi * d..(bi + 1) * d];
-                for (o, &tv) in dst.iter_mut().zip(cw) {
-                    // denormalize op order (t*sd + mu), then the dense
-                    // kernel's mul-add — the exact dense f32 sequence.
-                    *o += av * (tv * sd + mu);
-                }
-            }
+            kernel.gather_axpy_exact(out, av, mu, sd, table, g.d, irow);
         }
     }
 
-    fn acc_partial(&self, xrow: &[f32], l0: usize, l1: usize, out: &mut [f32]) {
+    fn ln_partial(
+        &self,
+        table: &[f32],
+        xrow: &[f32],
+        l0: usize,
+        l1: usize,
+        out: &mut [f32],
+        kernel: Kernel,
+    ) {
         let g = &*self.group;
         let d = g.d;
         let k = g.k;
@@ -366,17 +665,21 @@ impl PackedMatmul {
                 if cf == 0.0 {
                     continue;
                 }
-                let cw = &g.table[c * d..(c + 1) * d];
-                for (o, &tv) in dst.iter_mut().zip(cw) {
-                    *o += cf * tv;
-                }
+                kernel.axpy_fma(dst, cf, &table[c * d..(c + 1) * d]);
             }
         }
     }
 
-    fn acc_f16(&self, xrow: &[f32], l0: usize, l1: usize, out: &mut [f32]) {
+    fn ln_f16(
+        &self,
+        table: &[f32],
+        xrow: &[f32],
+        l0: usize,
+        l1: usize,
+        out: &mut [f32],
+        kernel: Kernel,
+    ) {
         let g = &*self.group;
-        let d = g.d;
         for p in 0..self.rows {
             let av = xrow[p];
             if av == 0.0 {
@@ -386,16 +689,163 @@ impl PackedMatmul {
             let mu = g.row_scales[sp];
             let sd = g.row_scales[sp + 1];
             let irow = &self.idx[p * g.l + l0..p * g.l + l1];
-            for (bi, &c) in irow.iter().enumerate() {
-                let cw = &g.table[c as usize * d..(c as usize + 1) * d];
-                let dst = &mut out[bi * d..(bi + 1) * d];
-                for (o, &tv) in dst.iter_mut().zip(cw) {
-                    let v = *o + av * (tv * sd + mu);
-                    *o = f16::f16_bits_to_f32(f16::f32_to_f16_bits(v));
+            kernel.gather_axpy_f16(out, av, mu, sd, table, g.d, irow);
+        }
+    }
+
+    /// Replay the decoder for weight row `p`, subvector columns `l0..l1`,
+    /// into `buf.x` — the denormalized dense row slice, bit-identical to
+    /// the same columns of `decode_group_rows`.  Captured `(mean, rstd)`
+    /// turn each whole-row layernorm into a per-element affine, so the
+    /// sliced columns decode without the rest of the row.
+    fn replay_row(
+        &self,
+        rln: &RlnDecode,
+        p: usize,
+        l0: usize,
+        l1: usize,
+        kernel: Kernel,
+        buf: &mut ReplayBuf,
+    ) {
+        let g = &*self.group;
+        let d = g.d;
+        let lw = l1 - l0;
+        buf.x.clear();
+        for &c in &self.idx[p * g.l + l0..p * g.l + l1] {
+            buf.x.extend_from_slice(&rln.codebook[c as usize * d..(c as usize + 1) * d]);
+        }
+        let m = rln.layers.len();
+        let srow = &rln.norm_stats[(self.row0 + p) * 2 * m..(self.row0 + p + 1) * 2 * m];
+        for (i, layer) in rln.layers.iter().enumerate() {
+            let (mu, rs) = (srow[2 * i], srow[2 * i + 1]);
+            // layernorm_fwd's per-element op with the captured row stats
+            buf.xn.clear();
+            buf.xn.extend(buf.x.iter().map(|&v| (v - mu) * rs));
+            buf.pre.clear();
+            buf.pre.resize(lw * layer.dout, 0.0);
+            for sub in 0..lw {
+                let dst = &mut buf.pre[sub * layer.dout..(sub + 1) * layer.dout];
+                let xn = &buf.xn[sub * layer.din..(sub + 1) * layer.din];
+                for (t, &av) in xn.iter().enumerate() {
+                    if av == 0.0 {
+                        // the dense matmul's skip-on-zero, replicated
+                        continue;
+                    }
+                    kernel.axpy(dst, av, &layer.w[t * layer.dout..(t + 1) * layer.dout]);
                 }
+                for (o, &bv) in dst.iter_mut().zip(&layer.b) {
+                    *o += bv;
+                }
+            }
+            if layer.activate {
+                for v in buf.pre.iter_mut() {
+                    *v = gelu(*v);
+                }
+            }
+            if layer.residual {
+                for (o, &xv) in buf.pre.iter_mut().zip(&buf.x) {
+                    *o += xv;
+                }
+            }
+            std::mem::swap(&mut buf.x, &mut buf.pre);
+        }
+        // denormalize_rows' op order
+        let sp = 2 * (self.row0 + p);
+        let (dmu, dsd) = (g.row_scales[sp], g.row_scales[sp + 1]);
+        for v in buf.x.iter_mut() {
+            *v = *v * dsd + dmu;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn rln_replay(
+        &self,
+        rln: &RlnDecode,
+        xrow: &[f32],
+        l0: usize,
+        l1: usize,
+        out: &mut [f32],
+        kernel: Kernel,
+        acc: ReplayAcc,
+    ) {
+        let mut buf = ReplayBuf::default();
+        for p in 0..self.rows {
+            let av = xrow[p];
+            if av == 0.0 {
+                continue;
+            }
+            self.replay_row(rln, p, l0, l1, kernel, &mut buf);
+            match acc {
+                ReplayAcc::Exact => kernel.axpy(out, av, &buf.x),
+                ReplayAcc::Fma => kernel.axpy_fma(out, av, &buf.x),
+                ReplayAcc::F16 => kernel.axpy_f16(out, av, &buf.x),
             }
         }
     }
+
+    /// The §16 fold (single-layer rln decoders, Partial only):
+    /// `W[p, li*d+j] = (sd_p*rstd_p) * T[c][j]
+    ///               + sd_p*(b[j] - rstd_p*mean_p*S1[j]) + mu_p`,
+    /// so the reduction folds into per-(column, codeword) coefficients on
+    /// the shared table plus one per-element `d`-vector bias.
+    #[allow(clippy::too_many_arguments)]
+    fn rln_partial_fold(
+        &self,
+        rln: &RlnDecode,
+        fold: &RlnFold,
+        xrow: &[f32],
+        l0: usize,
+        l1: usize,
+        out: &mut [f32],
+        kernel: Kernel,
+    ) {
+        let g = &*self.group;
+        let d = g.d;
+        let k = g.k;
+        let lw = l1 - l0;
+        let mut coeff = vec![0.0f32; lw * k];
+        let mut bias = vec![0.0f32; d];
+        for p in 0..self.rows {
+            let av = xrow[p];
+            if av == 0.0 {
+                continue;
+            }
+            let sp = 2 * (self.row0 + p);
+            let mu = g.row_scales[sp];
+            let sd = g.row_scales[sp + 1];
+            let srow = &rln.norm_stats[(self.row0 + p) * 2..(self.row0 + p) * 2 + 2];
+            let (nmu, nrs) = (srow[0], srow[1]);
+            let ca = av * (sd * nrs);
+            for (j, o) in bias.iter_mut().enumerate() {
+                *o += av * (sd * (fold.b[j] - nrs * nmu * fold.s1[j]) + mu);
+            }
+            let irow = &self.idx[p * g.l + l0..p * g.l + l1];
+            for (bi, &c) in irow.iter().enumerate() {
+                coeff[bi * k + c as usize] += ca;
+            }
+        }
+        for bi in 0..lw {
+            let dst = &mut out[bi * d..(bi + 1) * d];
+            for (o, &bv) in dst.iter_mut().zip(&bias) {
+                *o += bv;
+            }
+            let crow = &coeff[bi * k..(bi + 1) * k];
+            for (c, &cf) in crow.iter().enumerate() {
+                if cf == 0.0 {
+                    continue;
+                }
+                kernel.axpy_fma(dst, cf, &fold.table[c * d..(c + 1) * d]);
+            }
+        }
+    }
+}
+
+/// Accumulation flavor of the rln replay's final `out += av * W[p]` step.
+#[derive(Clone, Copy)]
+enum ReplayAcc {
+    Exact,
+    Fma,
+    F16,
 }
 
 /// Split `0..count` into at most `parts` contiguous ranges.
@@ -467,6 +917,97 @@ mod tests {
         (group, dense)
     }
 
+    /// Build a random **rln** group plus the dense W it represents, where
+    /// the dense side runs the reference decode pipeline (`gather` →
+    /// per-layer `layernorm_fwd`/`matmul`/`add_bias`/`gelu`/residual →
+    /// `denormalize_rows`) over the whole group — an independent oracle
+    /// for the replay path, with the per-layer stats captured from the
+    /// oracle's own `NormCache`.
+    fn random_rln_group(
+        d: usize,
+        l: usize,
+        k: usize,
+        rows_total: usize,
+        m_layers: usize,
+        hidden: usize,
+        seed: u64,
+    ) -> (Arc<PackedGroup>, Vec<f32>) {
+        let mut rnd = seeded(seed);
+        let codebook: Vec<f32> = (0..k * d).map(|_| rnd()).collect();
+        let dims: Vec<(usize, usize)> = if m_layers == 1 {
+            vec![(d, d)]
+        } else {
+            let mut v = vec![(d, hidden)];
+            v.extend(std::iter::repeat((hidden, hidden)).take(m_layers - 2));
+            v.push((hidden, d));
+            v
+        };
+        let mut layers = Vec::new();
+        let mut lw = seeded(seed ^ 0x77);
+        for (i, &(din, dout)) in dims.iter().enumerate() {
+            let w: Vec<f32> = (0..din * dout).map(|_| lw() * 0.5).collect();
+            let b: Vec<f32> = (0..dout).map(|_| lw() * 0.1).collect();
+            layers.push(
+                RlnLayer::new(w, b, din, dout, i > 0 && din == dout, i < m_layers - 1).unwrap(),
+            );
+        }
+        let mut rs = seeded(seed ^ 0xabcd);
+        let row_scales: Vec<f32> = (0..2 * rows_total)
+            .map(|i| if i % 2 == 0 { rs() } else { rs().abs() + 0.25 })
+            .collect();
+        let mut ri = seeded(seed ^ 0x5a5a);
+        let raw: Vec<u32> = (0..rows_total * l)
+            .map(|_| ((ri().abs() * 4.0 * k as f32) as u32) % k as u32)
+            .collect();
+        let bits = 32 - (k as u32 - 1).leading_zeros();
+        let indices = BitPacked::pack(&raw, bits.max(1));
+
+        // dense oracle: the reference decode pipeline over all rows at once
+        let idx_i32: Vec<i32> = raw.iter().map(|&v| v as i32).collect();
+        let mut x = ops::gather(&codebook, d, &idx_i32);
+        let width = l * d;
+        let mut norm_stats = vec![0.0f32; rows_total * 2 * m_layers];
+        for (i, &(din, dout)) in dims.iter().enumerate() {
+            let nc = ops::layernorm_fwd(&x, rows_total, l * din);
+            for p in 0..rows_total {
+                norm_stats[p * 2 * m_layers + 2 * i] = nc.mean[p];
+                norm_stats[p * 2 * m_layers + 2 * i + 1] = nc.rstd[p];
+            }
+            let (w, b) = (&layers[i].w, &layers[i].b);
+            let mut pre = ops::matmul(&nc.y, w, rows_total * l, din, dout);
+            ops::add_bias(&mut pre, b, rows_total * l, dout);
+            let mut out: Vec<f32> = if i < m_layers - 1 {
+                pre.iter().map(|&v| ops::gelu(v)).collect()
+            } else {
+                pre
+            };
+            if i > 0 && din == dout {
+                for (o, &xv) in out.iter_mut().zip(&x) {
+                    *o += xv;
+                }
+            }
+            x = out;
+        }
+        ops::denormalize_rows(&mut x, &row_scales, rows_total, width);
+
+        let group = Arc::new(
+            PackedGroup::new_rln(
+                "trln",
+                d,
+                l,
+                k,
+                rows_total,
+                codebook,
+                layers,
+                norm_stats,
+                indices,
+                row_scales,
+            )
+            .unwrap(),
+        );
+        (group, x)
+    }
+
     #[test]
     fn exact_matches_dense_bitwise_gemm_and_gemv() {
         let (d, l, k, rows_total) = (8, 6, 17, 40);
@@ -488,18 +1029,85 @@ mod tests {
     }
 
     #[test]
+    fn rln_exact_matches_dense_bitwise_for_shallow_and_deep_decoders() {
+        for (m_layers, hidden, seed) in [(1usize, 8usize, 3u64), (3, 16, 9)] {
+            let (d, l, k, rows_total) = (8, 6, 17, 32);
+            let (group, dense) = random_rln_group(d, l, k, rows_total, m_layers, hidden, seed);
+            assert_eq!(group.norm(), "rln");
+            let (row0, rows) = (8, 16);
+            let pm = group.slice(row0, rows).unwrap();
+            let wslice = &dense[row0 * l * d..(row0 + rows) * l * d];
+            let mut rnd = seeded(seed ^ 0x1111);
+            for m in [1usize, 4] {
+                let mut x: Vec<f32> = (0..m * rows).map(|_| rnd()).collect();
+                for v in x.iter_mut().step_by(5) {
+                    *v = 0.0;
+                }
+                let want = ops::matmul(&x, wslice, m, rows, l * d);
+                let got = pm.matmul(&x, m, rows, l * d);
+                assert_eq!(want, got, "m_layers={m_layers} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn rln_exact_is_bit_identical_across_kernels_and_column_splits() {
+        let (d, l, k, rows_total) = (8, 9, 12, 16);
+        let (group, _) = random_rln_group(d, l, k, rows_total, 2, 12, 21);
+        let pm = group.slice(0, rows_total).unwrap();
+        let mut rnd = seeded(17);
+        let x: Vec<f32> = (0..rows_total).map(|_| rnd()).collect();
+        let want = pm.matmul_with_kernel(&x, 1, FusedAcc::Exact, Kernel::Scalar);
+        for kern in Kernel::all_supported() {
+            // emulate the column-parallel split with explicit ranges
+            let mut split = vec![0.0f32; l * d];
+            for (l0, l1) in chunk_ranges(l, 4) {
+                let mut part = vec![0.0f32; (l1 - l0) * d];
+                pm.accumulate_row(&x, l0, l1, &mut part, FusedAcc::Exact, kern);
+                split[l0 * d..l1 * d].copy_from_slice(&part);
+            }
+            assert_eq!(want, split, "{}", kern.name());
+        }
+    }
+
+    #[test]
+    fn rln_partial_and_f16_are_within_tolerance() {
+        for (m_layers, hidden, seed) in [(1usize, 8usize, 5u64), (3, 12, 13)] {
+            let (d, l, k, rows_total) = (8, 4, 9, 48);
+            let (group, dense) = random_rln_group(d, l, k, rows_total, m_layers, hidden, seed);
+            let pm = group.slice(0, rows_total).unwrap();
+            let mut rnd = seeded(seed ^ 0x2222);
+            let x: Vec<f32> = (0..rows_total).map(|_| rnd()).collect();
+            let want = ops::matmul(&x, &dense, 1, rows_total, l * d);
+            let scale: f32 = want.iter().fold(1.0f32, |a, &v| a.max(v.abs()));
+            let partial = pm.matmul_with(&x, 1, FusedAcc::Partial);
+            for (w, p) in want.iter().zip(&partial) {
+                assert!(
+                    (w - p).abs() <= 1e-4 * scale,
+                    "partial m_layers={m_layers}: {w} vs {p}"
+                );
+            }
+            let half = pm.matmul_with(&x, 1, FusedAcc::F16);
+            for (w, p) in want.iter().zip(&half) {
+                assert!((w - p).abs() <= 5e-2 * scale, "f16 m_layers={m_layers}: {w} vs {p}");
+            }
+        }
+    }
+
+    #[test]
     fn gemv_column_split_is_bit_identical_to_serial() {
         let (d, l, k, rows_total) = (4, 9, 12, 16);
         let (group, _) = random_group(d, l, k, rows_total, 3);
         let pm = group.slice(0, rows_total).unwrap();
         let mut rnd = seeded(17);
         let x: Vec<f32> = (0..rows_total).map(|_| rnd()).collect();
-        let serial = pm.gemm_rows(&x, 0, 1, FusedAcc::Exact);
+        let kernel = Kernel::active();
+        let serial = pm.gemm_rows(&x, 0, 1, FusedAcc::Exact, kernel);
         // emulate the column-parallel split with explicit ranges
         let mut split = vec![0.0f32; l * d];
         for (l0, l1) in chunk_ranges(l, 4) {
             let mut part = vec![0.0f32; (l1 - l0) * d];
-            pm.accumulate_row(&x, l0, l1, &mut part, FusedAcc::Exact);
+            pm.accumulate_row(&x, l0, l1, &mut part, FusedAcc::Exact, kernel);
             split[l0 * d..l1 * d].copy_from_slice(&part);
         }
         assert_eq!(serial, split);
@@ -538,5 +1146,44 @@ mod tests {
         assert!(matches!(err, Error::ShapeMismatch { .. }), "{err}");
         assert!(WeightRepr::parse("fused").is_ok());
         assert!(WeightRepr::parse("sparse").is_err());
+    }
+
+    #[test]
+    fn new_rln_validates_shapes() {
+        let mk_layer = || RlnLayer::new(vec![0.0; 16], vec![0.0; 4], 4, 4, false, false).unwrap();
+        let idx = BitPacked::pack(&[0, 1, 2, 3], 3);
+        // wrong stats length (needs 2 per row per layer)
+        let err = PackedGroup::new_rln(
+            "r",
+            4,
+            2,
+            8,
+            2,
+            vec![0.0; 32],
+            vec![mk_layer()],
+            vec![0.0; 3],
+            idx.clone(),
+            vec![0.0; 4],
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::ShapeMismatch { .. }), "{err}");
+        // broken layer chain
+        let l_bad = RlnLayer::new(vec![0.0; 20], vec![0.0; 4], 5, 4, false, false).unwrap();
+        let err = PackedGroup::new_rln(
+            "r",
+            4,
+            2,
+            8,
+            2,
+            vec![0.0; 32],
+            vec![l_bad],
+            vec![0.0; 4],
+            idx,
+            vec![0.0; 4],
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::ShapeMismatch { .. }), "{err}");
+        // layer w/b length mismatch is caught at layer construction
+        assert!(RlnLayer::new(vec![0.0; 15], vec![0.0; 4], 4, 4, false, false).is_err());
     }
 }

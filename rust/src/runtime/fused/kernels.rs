@@ -1,0 +1,564 @@
+//! Runtime-dispatched SIMD microkernels behind the fused index-GEMM and
+//! the shared `gemm_block` axpy path.
+//!
+//! One [`Kernel`] is selected process-wide on first use ([`Kernel::active`]):
+//! AVX2+FMA on x86_64, NEON on aarch64, with the historical scalar loops as
+//! the always-available fallback.  Setting `POCKETLLM_FORCE_SCALAR` (to
+//! anything but `"0"`) pins dispatch to [`Kernel::Scalar`] — CI runs the
+//! fused suite under both arms.
+//!
+//! ## Exactness contract (DESIGN.md §16)
+//!
+//! The `Exact` entry points ([`Kernel::axpy`], [`Kernel::gather_axpy_exact`])
+//! vectorize only **across independent output elements** — a reduction is
+//! never split over lanes, so every output element still accumulates its
+//! terms in the scalar order.  Per element the scalar code performs two
+//! roundings (`mul`, then `add`); the SIMD lanes issue the same explicit
+//! multiply and add instructions (never a fused multiply-add, which rounds
+//! once), so `Exact` results are bit-identical to the scalar kernel on
+//! every input, including `-0.0`, infinities and NaN payload propagation
+//! through IEEE addition.  Only the relaxed entry points
+//! ([`Kernel::axpy_fma`], the f16 accumulators) use real FMA/rounding
+//! shortcuts — they back `FusedAcc::Partial`/`FusedAcc::F16`, which are
+//! tolerance-tested, not bit-pinned.
+
+use std::sync::OnceLock;
+
+use crate::util::f16;
+
+/// Which lowering of the microkernels runs.  Obtain via [`Kernel::active`]
+/// (cached CPUID dispatch) or [`Kernel::all_supported`] (benchmarks /
+/// parity tests); every method falls back to the scalar loop if the
+/// variant's ISA extension is not actually available, so a mis-constructed
+/// value degrades instead of faulting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// The historical plain-Rust loops; always available, and the bit
+    /// reference the SIMD exact lanes are pinned against.
+    Scalar,
+    /// 8-lane AVX2 (+FMA for the relaxed paths) on x86_64.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 4-lane NEON on aarch64.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+
+fn detect() -> Kernel {
+    if forced_scalar() {
+        return Kernel::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if avx2_ok() {
+        return Kernel::Avx2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if neon_ok() {
+        return Kernel::Neon;
+    }
+    Kernel::Scalar
+}
+
+/// `POCKETLLM_FORCE_SCALAR` set (and not `"0"`) pins dispatch to scalar.
+fn forced_scalar() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        std::env::var("POCKETLLM_FORCE_SCALAR").map(|v| v != "0").unwrap_or(false)
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_ok() -> bool {
+    static OK: OnceLock<bool> = OnceLock::new();
+    // FMA is required even though the exact lanes never fuse: the relaxed
+    // (Partial) path compiles both features into one function.
+    *OK.get_or_init(|| is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"))
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_ok() -> bool {
+    static OK: OnceLock<bool> = OnceLock::new();
+    *OK.get_or_init(|| std::arch::is_aarch64_feature_detected!("neon"))
+}
+
+impl Kernel {
+    /// The process-wide kernel: detected once, honoring
+    /// `POCKETLLM_FORCE_SCALAR` (read once — flipping the variable after
+    /// first use has no effect; benchmarks compare kernels explicitly).
+    pub fn active() -> Kernel {
+        *ACTIVE.get_or_init(detect)
+    }
+
+    /// Every kernel that can run on this machine (scalar first).  Used by
+    /// the gen-bench `kernel` phase and the SIMD parity tests to compare
+    /// lowerings inside one process regardless of the env override.
+    pub fn all_supported() -> Vec<Kernel> {
+        #[allow(unused_mut)]
+        let mut out = vec![Kernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        if avx2_ok() {
+            out.push(Kernel::Avx2);
+        }
+        #[cfg(target_arch = "aarch64")]
+        if neon_ok() {
+            out.push(Kernel::Neon);
+        }
+        out
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => "neon",
+        }
+    }
+
+    /// SIMD width in f32 lanes (1 for scalar).
+    pub fn lanes(self) -> usize {
+        match self {
+            Kernel::Scalar => 1,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => 8,
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => 4,
+        }
+    }
+
+    /// `dst[i] += a * src[i]` — exact: two roundings per element, bit-equal
+    /// to the scalar loop.  The axpy form of `gemm_block` and the rln
+    /// replay run on this.
+    #[inline]
+    pub fn axpy(self, dst: &mut [f32], a: f32, src: &[f32]) {
+        debug_assert_eq!(dst.len(), src.len());
+        match self {
+            Kernel::Scalar => axpy_scalar(dst, a, src),
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => {
+                if avx2_ok() {
+                    unsafe { axpy_avx2(dst, a, src) }
+                } else {
+                    axpy_scalar(dst, a, src)
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => {
+                if neon_ok() {
+                    unsafe { axpy_neon(dst, a, src) }
+                } else {
+                    axpy_scalar(dst, a, src)
+                }
+            }
+        }
+    }
+
+    /// `dst[i] += a * src[i]` with a fused multiply-add (one rounding).
+    /// Relaxed: backs `FusedAcc::Partial`'s table expansion; the scalar arm
+    /// keeps the historical two-rounding loop, so forced-scalar runs stay
+    /// the historical Partial numerics (both inside the documented
+    /// tolerance).
+    #[inline]
+    pub fn axpy_fma(self, dst: &mut [f32], a: f32, src: &[f32]) {
+        debug_assert_eq!(dst.len(), src.len());
+        match self {
+            Kernel::Scalar => axpy_scalar(dst, a, src),
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => {
+                if avx2_ok() {
+                    unsafe { axpy_fma_avx2(dst, a, src) }
+                } else {
+                    axpy_scalar(dst, a, src)
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => {
+                if neon_ok() {
+                    unsafe { axpy_fma_neon(dst, a, src) }
+                } else {
+                    axpy_scalar(dst, a, src)
+                }
+            }
+        }
+    }
+
+    /// The ln-fused exact hot loop: for each subvector `bi` of `irow`,
+    /// `out[bi*d + e] += av * (table[irow[bi]*d + e] * sd + mu)` — the
+    /// denormalize op order (`t*sd + mu`) followed by the dense kernel's
+    /// mul-add, four roundings per element, bit-equal to the scalar loop.
+    /// Caller guarantees `out.len() == irow.len() * d` and every index
+    /// `< table.len() / d` (checked at `PackedGroup::slice` time).
+    #[inline]
+    pub fn gather_axpy_exact(
+        self,
+        out: &mut [f32],
+        av: f32,
+        mu: f32,
+        sd: f32,
+        table: &[f32],
+        d: usize,
+        irow: &[u32],
+    ) {
+        debug_assert_eq!(out.len(), irow.len() * d);
+        match self {
+            Kernel::Scalar => gather_axpy_exact_scalar(out, av, mu, sd, table, d, irow),
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => {
+                if avx2_ok() {
+                    unsafe { gather_axpy_exact_avx2(out, av, mu, sd, table, d, irow) }
+                } else {
+                    gather_axpy_exact_scalar(out, av, mu, sd, table, d, irow)
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => {
+                if neon_ok() {
+                    unsafe { gather_axpy_exact_neon(out, av, mu, sd, table, d, irow) }
+                } else {
+                    gather_axpy_exact_scalar(out, av, mu, sd, table, d, irow)
+                }
+            }
+        }
+    }
+
+    /// The f16-accumulator variant of [`Kernel::gather_axpy_exact`]: each
+    /// element is rounded to half precision after its add.  Relaxed
+    /// (tolerance-tested); lanes round with the same f32→f16→f32
+    /// round-to-nearest-even as the scalar helper.
+    #[inline]
+    pub fn gather_axpy_f16(
+        self,
+        out: &mut [f32],
+        av: f32,
+        mu: f32,
+        sd: f32,
+        table: &[f32],
+        d: usize,
+        irow: &[u32],
+    ) {
+        debug_assert_eq!(out.len(), irow.len() * d);
+        // conversion cost dominates and the scalar helper is already the
+        // documented rounding; every kernel shares one loop
+        let _ = self;
+        gather_axpy_f16_scalar(out, av, mu, sd, table, d, irow);
+    }
+
+    /// `dst[i] = f16_round(dst[i] + a * src[i])` — the rln replay's F16
+    /// accumulator (relaxed).
+    #[inline]
+    pub fn axpy_f16(self, dst: &mut [f32], a: f32, src: &[f32]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let _ = self;
+        for (o, &s) in dst.iter_mut().zip(src) {
+            let v = *o + a * s;
+            *o = f16::f16_bits_to_f32(f16::f32_to_f16_bits(v));
+        }
+    }
+}
+
+fn axpy_scalar(dst: &mut [f32], a: f32, src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += a * s;
+    }
+}
+
+fn gather_axpy_exact_scalar(
+    out: &mut [f32],
+    av: f32,
+    mu: f32,
+    sd: f32,
+    table: &[f32],
+    d: usize,
+    irow: &[u32],
+) {
+    for (bi, &c) in irow.iter().enumerate() {
+        let cw = &table[c as usize * d..(c as usize + 1) * d];
+        let dst = &mut out[bi * d..(bi + 1) * d];
+        for (o, &tv) in dst.iter_mut().zip(cw) {
+            // denormalize op order (t*sd + mu), then the dense kernel's
+            // mul-add — the exact dense f32 sequence.
+            *o += av * (tv * sd + mu);
+        }
+    }
+}
+
+fn gather_axpy_f16_scalar(
+    out: &mut [f32],
+    av: f32,
+    mu: f32,
+    sd: f32,
+    table: &[f32],
+    d: usize,
+    irow: &[u32],
+) {
+    for (bi, &c) in irow.iter().enumerate() {
+        let cw = &table[c as usize * d..(c as usize + 1) * d];
+        let dst = &mut out[bi * d..(bi + 1) * d];
+        for (o, &tv) in dst.iter_mut().zip(cw) {
+            let v = *o + av * (tv * sd + mu);
+            *o = f16::f16_bits_to_f32(f16::f32_to_f16_bits(v));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86_64: AVX2 (+FMA for the relaxed path).
+//
+// Rust never enables floating-point contraction, so the explicit
+// `_mm256_mul_ps` / `_mm256_add_ps` pairs below lower to separate vmulps /
+// vaddps instructions — two roundings per element, matching the scalar
+// loops bit-for-bit.  Only `axpy_fma_avx2` issues vfmadd.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(dst: &mut [f32], a: f32, src: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let va = _mm256_set1_ps(a);
+    let dp = dst.as_mut_ptr();
+    let sp = src.as_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let vs = _mm256_loadu_ps(sp.add(i));
+        let vd = _mm256_loadu_ps(dp.add(i));
+        _mm256_storeu_ps(dp.add(i), _mm256_add_ps(vd, _mm256_mul_ps(va, vs)));
+        i += 8;
+    }
+    while i < n {
+        *dp.add(i) += a * *sp.add(i);
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_fma_avx2(dst: &mut [f32], a: f32, src: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let va = _mm256_set1_ps(a);
+    let dp = dst.as_mut_ptr();
+    let sp = src.as_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let vs = _mm256_loadu_ps(sp.add(i));
+        let vd = _mm256_loadu_ps(dp.add(i));
+        _mm256_storeu_ps(dp.add(i), _mm256_fmadd_ps(va, vs, vd));
+        i += 8;
+    }
+    while i < n {
+        *dp.add(i) = a.mul_add(*sp.add(i), *dp.add(i));
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_axpy_exact_avx2(
+    out: &mut [f32],
+    av: f32,
+    mu: f32,
+    sd: f32,
+    table: &[f32],
+    d: usize,
+    irow: &[u32],
+) {
+    use std::arch::x86_64::*;
+    let va = _mm256_set1_ps(av);
+    let vmu = _mm256_set1_ps(mu);
+    let vsd = _mm256_set1_ps(sd);
+    let tp = table.as_ptr();
+    let op = out.as_mut_ptr();
+    for (bi, &c) in irow.iter().enumerate() {
+        let cw = tp.add(c as usize * d);
+        let dst = op.add(bi * d);
+        let mut e = 0usize;
+        while e + 8 <= d {
+            let tv = _mm256_loadu_ps(cw.add(e));
+            // w = tv*sd + mu, then o += av*w — explicit mul/add pairs keep
+            // the scalar double rounding.
+            let w = _mm256_add_ps(_mm256_mul_ps(tv, vsd), vmu);
+            let vo = _mm256_loadu_ps(dst.add(e));
+            _mm256_storeu_ps(dst.add(e), _mm256_add_ps(vo, _mm256_mul_ps(va, w)));
+            e += 8;
+        }
+        while e < d {
+            *dst.add(e) += av * (*cw.add(e) * sd + mu);
+            e += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64: NEON.  Same lane discipline — vmulq/vaddq pairs for the exact
+// entry points, vfmaq only in the relaxed one.  (Untested in this x86 CI;
+// the scalar fallback keeps every platform correct.)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(dst: &mut [f32], a: f32, src: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = dst.len();
+    let va = vdupq_n_f32(a);
+    let dp = dst.as_mut_ptr();
+    let sp = src.as_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let vs = vld1q_f32(sp.add(i));
+        let vd = vld1q_f32(dp.add(i));
+        vst1q_f32(dp.add(i), vaddq_f32(vd, vmulq_f32(va, vs)));
+        i += 4;
+    }
+    while i < n {
+        *dp.add(i) += a * *sp.add(i);
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_fma_neon(dst: &mut [f32], a: f32, src: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = dst.len();
+    let va = vdupq_n_f32(a);
+    let dp = dst.as_mut_ptr();
+    let sp = src.as_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let vs = vld1q_f32(sp.add(i));
+        let vd = vld1q_f32(dp.add(i));
+        vst1q_f32(dp.add(i), vfmaq_f32(vd, va, vs));
+        i += 4;
+    }
+    while i < n {
+        *dp.add(i) = a.mul_add(*sp.add(i), *dp.add(i));
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn gather_axpy_exact_neon(
+    out: &mut [f32],
+    av: f32,
+    mu: f32,
+    sd: f32,
+    table: &[f32],
+    d: usize,
+    irow: &[u32],
+) {
+    use std::arch::aarch64::*;
+    let va = vdupq_n_f32(av);
+    let vmu = vdupq_n_f32(mu);
+    let vsd = vdupq_n_f32(sd);
+    let tp = table.as_ptr();
+    let op = out.as_mut_ptr();
+    for (bi, &c) in irow.iter().enumerate() {
+        let cw = tp.add(c as usize * d);
+        let dst = op.add(bi * d);
+        let mut e = 0usize;
+        while e + 4 <= d {
+            let tv = vld1q_f32(cw.add(e));
+            let w = vaddq_f32(vmulq_f32(tv, vsd), vmu);
+            let vo = vld1q_f32(dst.add(e));
+            vst1q_f32(dst.add(e), vaddq_f32(vo, vmulq_f32(va, w)));
+            e += 4;
+        }
+        while e < d {
+            *dst.add(e) += av * (*cw.add(e) * sd + mu);
+            e += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vec_pattern(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(7);
+        (0..n)
+            .map(|i| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                match i % 11 {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => 1e-40, // subnormal territory after scaling
+                    _ => ((s >> 40) as f32 / (1u64 << 24) as f32) - 0.5,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exact_lanes_match_scalar_bitwise_on_all_supported_kernels() {
+        // odd lengths exercise the vector tail; the pattern includes ±0.0
+        // and tiny values
+        for n in [1usize, 7, 8, 9, 16, 37] {
+            let src = vec_pattern(n, n as u64);
+            let base = vec_pattern(n, 1000 + n as u64);
+            for a in [0.5f32, -1.25, 0.0, -0.0, 3.0e-3] {
+                let mut want = base.clone();
+                Kernel::Scalar.axpy(&mut want, a, &src);
+                for k in Kernel::all_supported() {
+                    let mut got = base.clone();
+                    k.axpy(&mut got, a, &src);
+                    let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                    let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(wb, gb, "axpy {} n={n} a={a}", k.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_exact_lanes_match_scalar_bitwise() {
+        for d in [3usize, 8, 11, 16] {
+            let k_cw = 13usize;
+            let table = vec_pattern(k_cw * d, d as u64);
+            let irow: Vec<u32> = (0..9).map(|i| (i * 5 % k_cw) as u32).collect();
+            let base = vec_pattern(irow.len() * d, 77);
+            let (av, mu, sd) = (0.75f32, -0.1, 1.3);
+            let mut want = base.clone();
+            Kernel::Scalar.gather_axpy_exact(&mut want, av, mu, sd, &table, d, &irow);
+            for k in Kernel::all_supported() {
+                let mut got = base.clone();
+                k.gather_axpy_exact(&mut got, av, mu, sd, &table, d, &irow);
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(wb, gb, "gather_axpy_exact {} d={d}", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fma_lanes_stay_within_relative_tolerance() {
+        let n = 33usize;
+        let src = vec_pattern(n, 5);
+        let base = vec_pattern(n, 6);
+        let a = 1.75f32;
+        let mut want = base.clone();
+        Kernel::Scalar.axpy_fma(&mut want, a, &src);
+        for k in Kernel::all_supported() {
+            let mut got = base.clone();
+            k.axpy_fma(&mut got, a, &src);
+            for (w, g) in want.iter().zip(&got) {
+                assert!((w - g).abs() <= 1e-5 * (1.0 + w.abs()), "{}: {w} vs {g}", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_reports_a_supported_kernel() {
+        let k = Kernel::active();
+        assert!(Kernel::all_supported().contains(&k) || k == Kernel::Scalar);
+        assert!(!k.name().is_empty());
+        assert!(k.lanes() >= 1);
+    }
+}

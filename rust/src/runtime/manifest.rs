@@ -404,10 +404,16 @@ impl Manifest {
             add(&mut meta, builtin_meta(512, 8, k, 3, "rln"));
         }
         // the "ln" (per-subvector) decoders also back the fused index-GEMM
-        // path (runtime::fused): only a per-subvector decoder factors into a
+        // path (runtime::fused): a per-subvector decoder factors into a
         // per-codeword table, so both tiny group widths get one
         add(&mut meta, builtin_meta(512, 8, 1024, 3, "ln"));
         add(&mut meta, builtin_meta(256, 8, 1024, 3, "ln"));
+        // a single-layer rln decoder for the w256 width (w512 m1 already
+        // exists from the depth sweep): the m=1 rln pair backs the
+        // packed-rln fused path — its serve-time replay is one affine +
+        // matmul per row, cheap enough for bit-parity generation at both
+        // tiny group widths
+        add(&mut meta, builtin_meta(256, 8, 1024, 1, "rln"));
 
         let hp = HyperParams {
             adam_b1: 0.9,
@@ -586,10 +592,14 @@ mod tests {
         assert_eq!(linear, tiny.n_layers * (4 * 256 * 256 + 3 * 256 * 512));
         // full grid: 2 widths x 4 presets (8) + 2 widths x 2 presets (4)
         // + 3 extra depths + 3 extra codebook sizes + 2 ln variants
-        assert_eq!(m.meta.len(), 20);
+        // + the w256 single-layer rln
+        assert_eq!(m.meta.len(), 21);
         // the per-subvector decoders that back the fused index-GEMM path
         assert_eq!(m.meta_cfg("w512_d8_k1024_m3_ln").unwrap().norm, "ln");
         assert_eq!(m.meta_cfg("w256_d8_k1024_m3_ln").unwrap().norm, "ln");
+        // the single-layer rln pair behind the packed-rln fused path
+        assert_eq!(m.meta_cfg("w256_d8_k1024_m1_rln").unwrap().norm, "rln");
+        assert_eq!(m.meta_cfg("w512_d8_k1024_m1_rln").unwrap().norm, "rln");
     }
 
     #[test]

@@ -375,6 +375,54 @@ pub fn decode(mc: &MetaCfg, args: &[Arg]) -> Result<Vec<Out>> {
     Ok(vec![Out::F32(TensorF32::new(vec![r, w], out))])
 }
 
+/// Pack-time capture of the per-row, per-layer layernorm statistics of an
+/// **rln** decoder pass: decode `r` rows' codeword indices through the
+/// meta-decoder and return `[r, 2*m]` `(mean, rstd)` pairs, layer-major
+/// per row.  The packed-rln serve path (DESIGN.md §16) replays the decoder
+/// per weight row with each whole-row layernorm reduced to the affine
+/// `(v - mean) * rstd` using exactly these scalars, which is what lets it
+/// decode column *slices* bit-identically without the rest of the row.
+///
+/// This rides the reference forward rather than an exported kernel because
+/// it needs the per-layer `NormCache` internals, and the reference backend
+/// is the bit-exactness oracle the fused path is pinned against.
+pub fn decode_rln_row_stats(
+    mc: &MetaCfg,
+    theta: &[f32],
+    codebook: &[f32],
+    idx: &[i32],
+    r: usize,
+) -> Result<Vec<f32>> {
+    ensure!(mc.norm == "rln", "decode_rln_row_stats: cfg {} is not rln", mc.name);
+    ensure!(
+        idx.len() == r * mc.l,
+        "decode_rln_row_stats: {} indices for {} rows of L={}",
+        idx.len(),
+        r,
+        mc.l
+    );
+    ensure!(
+        codebook.len() == mc.k * mc.d,
+        "decode_rln_row_stats: codebook length {} != {}",
+        codebook.len(),
+        mc.k * mc.d
+    );
+    for &i in idx {
+        ensure!((i as usize) < mc.k, "decode_rln_row_stats: index {i} out of range (K={})", mc.k);
+    }
+    let zq = gather(codebook, mc.d, idx);
+    let (_, caches) = mlp_forward(mc, theta, "dec", &zq, r, true)?;
+    let m = caches.len();
+    let mut out = vec![0.0f32; r * 2 * m];
+    for (i, cache) in caches.iter().enumerate() {
+        for p in 0..r {
+            out[p * 2 * m + 2 * i] = cache.norm.mean[p];
+            out[p * 2 * m + 2 * i + 1] = cache.norm.rstd[p];
+        }
+    }
+    Ok(out)
+}
+
 /// `meta_encode_*`: latent projection of one row chunk -> `[R*L, d]`
 /// (codebook initialization statistics).
 pub fn encode(mc: &MetaCfg, args: &[Arg]) -> Result<Vec<Out>> {

@@ -118,6 +118,7 @@ fn gemm_block(
     (b_red, b_col): (usize, usize),
     skip_zero_a: bool,
 ) -> Vec<f32> {
+    let kernel = crate::runtime::fused::kernels::Kernel::active();
     let mut out = vec![0.0f32; (r1 - r0) * n];
     let mut jb = 0usize;
     while jb < n {
@@ -129,20 +130,24 @@ fn gemm_block(
                 let dst = &mut out[(i - r0) * n + jb..(i - r0) * n + je];
                 if b_col == 1 {
                     // axpy form: B' rows are contiguous in j, so scale-add
-                    // whole row slices into the hot output panel
+                    // whole row slices into the hot output panel on the
+                    // dispatched SIMD kernel — its exact lanes issue
+                    // separate mul/add, preserving bit parity with the
+                    // historical scalar loop
                     for t in tb..te {
                         let av = a[i * a_row + t * a_red];
                         if skip_zero_a && av == 0.0 {
                             continue;
                         }
                         let brow = &b[t * b_red + jb..t * b_red + je];
-                        for (d, &bv) in dst.iter_mut().zip(brow) {
-                            *d += av * bv;
-                        }
+                        kernel.axpy(dst, av, brow);
                     }
                 } else {
                     // dot form: B' is contiguous in t (the NT layout), so
-                    // walk each output element's B column linearly
+                    // walk each output element's B column linearly; SIMD
+                    // across j would gather strided B and lane-splitting
+                    // the t reduction would break bit parity, so this form
+                    // stays scalar
                     for (j, d) in (jb..je).zip(dst.iter_mut()) {
                         for t in tb..te {
                             let av = a[i * a_row + t * a_red];
@@ -199,9 +204,13 @@ pub fn add_bias(out: &mut [f32], bias: &[f32], rows: usize, n: usize) {
     }
 }
 
-/// Saved forward state of a LayerNorm: normalized output + per-row 1/std.
+/// Saved forward state of a LayerNorm: normalized output + per-row mean
+/// and 1/std.  The backward pass only needs `y`/`rstd`; `mean` is captured
+/// for the packed-rln stats replay (DESIGN.md §16), which re-applies the
+/// norm as the per-row affine `(v - mean) * rstd`.
 pub struct NormCache {
     pub y: Vec<f32>,
+    pub mean: Vec<f32>,
     pub rstd: Vec<f32>,
 }
 
@@ -209,6 +218,7 @@ pub struct NormCache {
 pub fn layernorm_fwd(x: &[f32], rows: usize, width: usize) -> NormCache {
     debug_assert_eq!(x.len(), rows * width);
     let mut y = vec![0.0f32; rows * width];
+    let mut means = vec![0.0f32; rows];
     let mut rstd = vec![0.0f32; rows];
     let wf = width as f32;
     for r in 0..rows {
@@ -218,6 +228,7 @@ pub fn layernorm_fwd(x: &[f32], rows: usize, width: usize) -> NormCache {
             mean += v;
         }
         mean /= wf;
+        means[r] = mean;
         let mut var = 0.0f32;
         for &v in xr {
             let dv = v - mean;
@@ -230,7 +241,7 @@ pub fn layernorm_fwd(x: &[f32], rows: usize, width: usize) -> NormCache {
             *o = (v - mean) * rs;
         }
     }
-    NormCache { y, rstd }
+    NormCache { y, mean: means, rstd }
 }
 
 /// LayerNorm backward: dx = rstd * (g - mean(g) - y * mean(g*y)).

@@ -106,8 +106,9 @@ pub trait WeightProvider: Send + Sync {
     /// pocket's (table, indices, scales) without materializing dense rows.
     /// `Ok(None)` means "serve this one dense": the default for providers
     /// without a packed form, for dense residue tensors, and for groups
-    /// whose meta config couples subvectors across the row
-    /// (`norm != "ln"`, where the per-codeword factoring is not exact).
+    /// whose meta config has no packed decode — "ln" uses the per-codeword
+    /// table, "rln" the stats-capture replay (DESIGN.md §16); anything
+    /// else serves dense.
     fn resolve_packed(&self, name: &str) -> Result<Option<Arc<PackedMatmul>>, Error> {
         let _ = name;
         Ok(None)
@@ -276,17 +277,18 @@ impl<'rt> PocketProvider<'rt> {
     }
 
     /// The packed form of one group, built on first use: fetch the stored
-    /// record (never inflated to dense), run each of the K codewords
-    /// through the meta-decoder once, and keep (table, indices, scales)
-    /// behind an `Arc`.  `None` — memoized — when the group's meta config
-    /// is not separable per subvector.
+    /// record (never inflated to dense) and hand it to
+    /// [`job::packed_group`] — one codeword-table decode for "ln" groups,
+    /// a per-row stats-capture replay for "rln" groups — keeping the
+    /// result behind an `Arc`.  `None` — memoized — when the group's meta
+    /// config has no packed form.
     fn packed_group(&self, gname: &str) -> Result<Option<Arc<PackedGroup>>, Error> {
         if let Some(pg) = self.packed_groups.lock().unwrap().get(gname) {
             return Ok(pg.clone());
         }
-        // Decide separability from the TOC alone: a non-separable group
-        // ("rln" et al.) serves dense, so its packed section bytes must
-        // never be fetched — the dense fallback would not read them.
+        // Decide packability from the TOC alone: an unpackable group
+        // serves dense, so its packed section bytes must never be
+        // fetched — the dense fallback would not read them.
         let (meta_name, width) =
             self.reader.group_meta(gname).ok_or_else(|| Error::UnknownGroup {
                 group: gname.to_string(),
@@ -301,20 +303,21 @@ impl<'rt> PocketProvider<'rt> {
                 name: meta_name.clone(),
             })?
             .clone();
-        let built = if mc.norm == "ln" && mc.w == width {
+        let packable = (mc.norm == "ln" || mc.norm == "rln") && mc.w == width;
+        let built = if packable {
             let rec = self.reader.packed_record(gname)?;
-            let table = job::decode_codeword_table(self.rt, &mc, &rec.decoder, &rec.codebook)
-                .map_err(Error::from)?;
-            Some(Arc::new(PackedGroup::new(
+            let pg = job::packed_group(
+                self.rt,
+                &mc,
                 gname,
-                mc.d,
-                mc.l,
-                mc.k,
                 rec.rows,
-                table,
-                rec.indices.clone(),
-                rec.row_scales.clone(),
-            )?))
+                &rec.decoder,
+                &rec.codebook,
+                &rec.indices,
+                &rec.row_scales,
+            )
+            .map_err(Error::from)?;
+            Some(Arc::new(pg))
         } else {
             None
         };
@@ -341,6 +344,11 @@ impl<'rt> PocketProvider<'rt> {
                 continue;
             };
             let Some(pg) = self.packed_group(gname)? else {
+                // a group-compressed matmul weight with no packed form will
+                // silently serve dense under WeightRepr::Fused — count it so
+                // benchmarks and the CLI can surface the degradation (dense
+                // residue tensors above are dense *by design* and don't count)
+                self.reader.note_fused_fallback();
                 return Ok(None);
             };
             let pm = pg.slice(gi.block_row_start(block, ti), gi.rows_per_block)?;
@@ -420,9 +428,9 @@ impl WeightProvider for PocketProvider<'_> {
         if layer >= self.cfg.n_layers {
             return;
         }
-        // fused: warm the packed form (stored record + codeword table +
-        // index slices) — never dense chunks.  Groups that cannot pack
-        // fall back to the dense chunk decode the layer will actually use.
+        // fused: warm the packed form (stored record + decode state + index
+        // slices) — never dense chunks.  The rare group that cannot pack
+        // falls back to the dense chunk decode the layer will actually use.
         for (gname, gi) in &self.cfg.groups {
             if !self.reader.has_group(gname) {
                 continue;

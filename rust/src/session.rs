@@ -658,8 +658,11 @@ impl<'p> GenerateBuilder<'p> {
     /// Weight representation for the forward pass (default
     /// [`WeightRepr::Dense`]).  [`WeightRepr::Fused`] executes matmuls
     /// directly on the pocket via
-    /// [`WeightProvider::resolve_packed`](crate::runtime::weights::WeightProvider::resolve_packed),
-    /// falling back to dense per tensor when no packed form exists.
+    /// [`WeightProvider::resolve_packed`](crate::runtime::weights::WeightProvider::resolve_packed)
+    /// — the "ln" table-gather form or the packed-rln stats-replay form
+    /// (DESIGN.md §14/§16), both bit-identical to dense — falling back to
+    /// dense per tensor when no packed form exists (counted in
+    /// [`ReaderStats::fused_fallbacks`](crate::ReaderStats)).
     pub fn repr(mut self, repr: WeightRepr) -> Self {
         self.repr = repr;
         self

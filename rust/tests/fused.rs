@@ -10,8 +10,13 @@
 //!   `WeightRepr::Fused` streams the same tokens — and the same logits —
 //!   as the dense path, while the provider holds packed forms instead of
 //!   decoded rows;
-//! * **separability gate**: "rln" pockets (subvectors coupled through a
-//!   whole-row layernorm) refuse to pack and fall back to dense;
+//! * **packed-rln parity**: "rln" pockets (subvectors coupled through a
+//!   whole-row layernorm) pack via stats-replay — the decoder re-runs per
+//!   weight row with the norm reduced to stored per-row `(mean, rstd)`
+//!   affines — and the fused output is bit-identical to
+//!   decode-then-matmul under `FusedAcc::Exact`, both at the
+//!   single-matmul level (property over random decoders / chunk grids)
+//!   and end-to-end (greedy tokens + logits on an m=1 rln pocket);
 //! * **chunk-aligned decode**: `decode_group_rows` rejects non-R-aligned
 //!   and out-of-range row windows with typed `ShapeMismatch` errors at
 //!   every boundary case.
@@ -27,7 +32,7 @@ use pocketllm::runtime::reference::ops;
 use pocketllm::session::Session;
 use pocketllm::tensor::TensorF32;
 use pocketllm::util::bitpack::BitPacked;
-use pocketllm::util::quickcheck::{prop_assert, prop_close, property};
+use pocketllm::util::quickcheck::{prop_assert, prop_close, property, property_cases};
 use pocketllm::{Error, WeightProvider, WeightRepr};
 
 mod common;
@@ -130,41 +135,130 @@ fn fused_generation_is_bit_identical_to_dense_on_an_ln_pocket() {
 }
 
 #[test]
-fn rln_pockets_fall_back_to_dense() {
+fn rln_pockets_resolve_packed_and_match_dense_bitwise() {
     let session = Session::reference();
-    let pocket = compressed_pocket(&session); // p16x => rln decoders
+    let pocket = compressed_pocket(&session); // p16x => m=3 rln decoders
     let reader = Arc::new(PocketReader::from_bytes(pocket.to_bytes()).unwrap());
     let provider = session.pocket_provider(reader.clone()).unwrap();
-    // subvectors couple across the row: no packed form exists
-    assert!(provider.resolve_packed("b0.wq").unwrap().is_none());
-    assert_eq!(provider.packed_resident_bytes(), 0);
-    // fused generation still works — every tensor serves dense
-    let out = session
+    // whole-row coupling no longer gates packing: the stats-replay form
+    // resolves, and it holds real bytes
+    let pm = provider.resolve_packed("b0.wq").unwrap().expect("rln groups pack");
+    assert!(provider.packed_resident_bytes() > 0);
+    let cfg = session.manifest().lm_cfg("tiny").unwrap();
+    assert_eq!(pm.width(), cfg.groups["q"].width);
+    assert_eq!(pm.rows(), cfg.groups["q"].rows_per_block);
+    // single-matmul parity: exact replay is bit-identical to the dense
+    // rows the chunk decode path materializes
+    let dense = provider.tensor("b0.wq").unwrap();
+    let rows = pm.rows();
+    let cols = pm.width();
+    let mut x: Vec<f32> = (0..rows).map(|i| ((i * 37 + 11) % 19) as f32 * 0.25 - 2.0).collect();
+    for v in x.iter_mut().step_by(5) {
+        *v = 0.0; // exercise the zero-skip branch
+    }
+    let want = ops::matmul(&x, dense.as_slice(), 1, rows, cols);
+    let got = pm.matmul(&x, 1, rows, cols);
+    assert_eq!(want, got, "rln stats-replay diverged from decode-then-matmul");
+    // dense residue still never packs, and nothing fell back to dense
+    assert!(provider.resolve_packed("embed").unwrap().is_none());
+    assert_eq!(reader.stats().fused_fallbacks, 0, "rln pack must not count as a fallback");
+}
+
+#[test]
+fn fused_generation_is_bit_identical_to_dense_on_an_rln_pocket() {
+    // The m=1 rln pair exists at both tiny group widths (w256 / w512), so
+    // a two-group pocket serves every compressed tensor via stats-replay.
+    let session = Session::reference();
+    let corpus = pocketllm::data::Corpus::new(512, 79);
+    let (ws, _) =
+        pocketllm::coordinator::lm::train_lm(session.runtime(), "tiny", &corpus, 6, 3, 0)
+            .unwrap();
+    let pocket = session
+        .compress(&ws)
+        .meta_override("w{width}_d8_k1024_m1_rln")
+        .groups(["q", "up"])
+        .steps(25)
+        .kmeans_iters(1)
+        .post_steps(5)
+        .seed(3)
+        .run()
+        .unwrap()
+        .pocket;
+    let reader = Arc::new(PocketReader::from_bytes(pocket.to_bytes()).unwrap());
+    let provider = session.pocket_provider(reader.clone()).unwrap();
+    let prompt = vec![4i32, 2, 25, 7];
+    let dense = session
         .generate(&provider)
-        .prompt(vec![1, 2, 3])
-        .max_new(4)
+        .prompt(prompt.clone())
+        .max_new(6)
+        .logits_trace(true)
+        .run()
+        .unwrap();
+    let fused = session
+        .generate(&provider)
+        .prompt(prompt)
+        .max_new(6)
+        .logits_trace(true)
         .repr(WeightRepr::Fused)
         .run()
         .unwrap();
-    assert_eq!(out.continuation().len(), 4);
-    assert!(reader.stats().chunk_decodes > 0, "fallback must ride the dense chunk path");
-    // the separability decision comes from the TOC alone: neither the
-    // resolve_packed probes above nor fused-repr prefetch may fetch a
-    // packed group section an identical dense-repr run wouldn't
-    let dense_reader = Arc::new(PocketReader::from_bytes(pocket.to_bytes()).unwrap());
-    let dense_provider = session.pocket_provider(dense_reader.clone()).unwrap();
-    let dense_out = session
-        .generate(&dense_provider)
-        .prompt(vec![1, 2, 3])
-        .max_new(4)
-        .run()
-        .unwrap();
-    assert_eq!(out.continuation(), dense_out.continuation());
-    assert_eq!(
-        reader.stats().group_sections_read,
-        dense_reader.stats().group_sections_read,
-        "fused repr on an rln pocket fetched packed sections the dense path never needed"
-    );
+    assert_eq!(fused.tokens, dense.tokens, "greedy streams diverged");
+    assert_eq!(fused.logits_trace, dense.logits_trace, "exact rln replay logits diverged");
+    assert!(provider.packed_resident_bytes() > 0, "fused run must hold packed forms");
+    assert_eq!(reader.stats().fused_fallbacks, 0, "every compressed tensor must pack");
+}
+
+#[test]
+fn packed_rln_matches_decode_then_matmul_over_random_decoders() {
+    let session = Session::reference();
+    let rt = session.runtime();
+    let manifest = session.manifest();
+    // m=1 twice to bias toward the cheap config; the m=3 arm covers the
+    // full replay chain (hidden layers, gelu, residual) at debug speed
+    let names = [
+        "w256_d8_k1024_m1_rln",
+        "w256_d8_k1024_m1_rln",
+        "w256_d8_k512_m3_rln",
+    ];
+    property_cases("packed-rln exact parity", 12, |g| {
+        let mc = manifest.meta_cfg(g.choose(&names)).unwrap().clone();
+        let chunks = if mc.m == 1 { g.usize_in(1, 2) } else { 1 };
+        let total = chunks * mc.r;
+        let decoder = g.vec_f32(mc.decoder_params, mc.decoder_params, 0.3);
+        let codebook = TensorF32::new(vec![mc.k, mc.d], g.vec_f32(mc.k * mc.d, mc.k * mc.d, 1.0));
+        let raw = g.vec_u32_below(mc.k as u32, total * mc.l, total * mc.l);
+        let mut row_scales = Vec::with_capacity(2 * total);
+        for _ in 0..total {
+            row_scales.push(g.normal(0.5)); // mean
+            row_scales.push(g.f32_in(0.25, 2.0)); // std
+        }
+        let bits = (32 - (mc.k as u32 - 1).leading_zeros()).max(1);
+        let packed = BitPacked::pack(&raw, bits);
+        let group = Arc::new(
+            job::packed_group(rt, &mc, "prop-rln", total, &decoder, &codebook, &packed, &row_scales)
+                .map_err(|e| e.to_string())?,
+        );
+        // the dense oracle: the same sections through the chunk decode path
+        let dense =
+            job::decode_group_rows(rt, &mc, &decoder, &codebook, &raw, &row_scales, total, 0, total)
+                .map_err(|e| e.to_string())?;
+        // a random row window and a random x with zero-skip coverage
+        let row0 = g.usize_in(0, total - 1);
+        let rows = g.usize_in(1, total - row0);
+        let pm = group.slice(row0, rows).map_err(|e| e.to_string())?;
+        let m = g.usize_in(1, 2);
+        let mut x = g.vec_f32(m * rows, m * rows, 1.0);
+        for v in x.iter_mut().step_by(5) {
+            *v = 0.0;
+        }
+        let wslice = &dense.data[row0 * mc.w..(row0 + rows) * mc.w];
+        let want = ops::matmul(&x, wslice, m, rows, mc.w);
+        let got = pm.matmul(&x, m, rows, mc.w);
+        prop_assert(want == got, "exact rln replay must be bit-identical")?;
+        let scale = want.iter().fold(1.0f32, |a, &v| a.max(v.abs()));
+        prop_close(&pm.matmul_with(&x, m, FusedAcc::Partial), &want, 1e-3 * scale, "partial")?;
+        prop_close(&pm.matmul_with(&x, m, FusedAcc::F16), &want, 5e-2 * scale, "f16")
+    });
 }
 
 #[test]

@@ -123,6 +123,84 @@ fn gather_rows_matches_ref() {
     }
 }
 
+/// SIMD lanes of the fused microkernels against the scalar lane, bitwise,
+/// on fixed vectors — plus hand-computed golden values on dyadic-rational
+/// inputs where every intermediate is exactly representable, so the
+/// expected output is lane-independent by construction (no Python oracle
+/// needed).  Runs every kernel `all_supported()` reports, which includes
+/// the vector lane on AVX2/NEON hosts and degrades to scalar-only
+/// elsewhere (or under `POCKETLLM_FORCE_SCALAR=1`).
+#[test]
+fn fused_simd_lanes_match_scalar_and_golden() {
+    use pocketllm::Kernel;
+
+    // 37 elements: not a multiple of any lane width, so vector bodies and
+    // scalar tails both execute; values include zeros, negative zero and
+    // a denormal to pin sign/flush behavior.
+    let src: Vec<f32> = (0..37u32)
+        .map(|i| match i % 11 {
+            3 => 0.0,
+            7 => -0.0,
+            9 => 1e-40,
+            _ => {
+                let h = i.wrapping_mul(2654435761);
+                (h >> 9) as f32 / (1u32 << 22) as f32 - 1.0
+            }
+        })
+        .collect();
+    let base: Vec<f32> = src.iter().rev().cloned().collect();
+    let table: Vec<f32> = (0..6 * 37).map(|i| src[i % 37] * 1.5 - 0.25).collect();
+    let irow: Vec<u32> = (0..9).map(|i| (i * 5 + 2) % 6).collect();
+    let a = 0.8125f32;
+    let scalar = Kernel::Scalar;
+    for kern in Kernel::all_supported() {
+        // exact axpy: mul+add two-rounding semantics are lane-invariant
+        let mut want = base.clone();
+        scalar.axpy(&mut want, a, &src);
+        let mut got = base.clone();
+        kern.axpy(&mut got, a, &src);
+        assert_eq!(want, got, "axpy: {} diverged from scalar", kern.name());
+        // exact gather-axpy over a [6, 37] table
+        let mut want = vec![0.0f32; irow.len() * 37];
+        scalar.gather_axpy_exact(&mut want, a, -0.125, 0.75, &table, 37, &irow);
+        let mut got = vec![0.0f32; irow.len() * 37];
+        kern.gather_axpy_exact(&mut got, a, -0.125, 0.75, &table, 37, &irow);
+        assert_eq!(want, got, "gather_axpy_exact: {} diverged from scalar", kern.name());
+        // f16 accumulator: rounds through half precision identically
+        let mut want = base.clone();
+        scalar.axpy_f16(&mut want, a, &src);
+        let mut got = base.clone();
+        kern.axpy_f16(&mut got, a, &src);
+        assert_eq!(want, got, "axpy_f16: {} diverged from scalar", kern.name());
+        // relaxed fma lane: tolerance, not bit equality
+        let mut fma = base.clone();
+        kern.axpy_fma(&mut fma, a, &src);
+        let mut exact = base.clone();
+        scalar.axpy(&mut exact, a, &src);
+        for (i, (g, w)) in fma.iter().zip(&exact).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-5 * w.abs().max(1.0),
+                "axpy_fma: {} index {i}: {g} vs {w}",
+                kern.name()
+            );
+        }
+
+        // golden axpy: dst[i] = 1.0 + 0.75 * b[i], every product dyadic
+        let b = [2.0f32, -4.0, 0.5, 8.0, 1.25, -0.25, 16.0, 0.0, -2.5];
+        let mut dst = [1.0f32; 9];
+        kern.axpy(&mut dst, 0.75, &b);
+        let golden = [2.5f32, -2.0, 1.375, 7.0, 1.9375, 0.8125, 13.0, 1.0, -0.875];
+        assert_eq!(dst, golden, "axpy golden: {}", kern.name());
+        // golden gather-axpy: d=2, k=3 table, out += 2*(t*0.5 + 0.25)
+        let t = [1.0f32, -2.0, 0.5, 4.0, -1.5, 0.25];
+        let mut out = [0.0f32; 4];
+        kern.gather_axpy_exact(&mut out, 2.0, 0.25, 0.5, &t, 2, &[2, 0]);
+        assert_eq!(out, [-1.0f32, 0.75, 1.5, -1.5], "gather golden: {}", kern.name());
+    }
+    // the dispatcher always reports something this host supports
+    assert!(Kernel::all_supported().contains(&Kernel::active()));
+}
+
 /// The golden file covers every kernel family ref.py exports.
 #[test]
 fn golden_file_is_complete() {
